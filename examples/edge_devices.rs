@@ -1,0 +1,77 @@
+//! Edge devices (§5.1.2, Fig. 12): Bluetooth microcontrollers and
+//! accelerator-card offloading.
+//!
+//!  * Fig. 12a — HC-05 Bluetooth link: transfer delay vs payload size
+//!    (paper: 105 ms @64 B, 1039 ms @1 KB);
+//!  * Fig. 12b — U50-style device/server pipeline parallelism: the CNN
+//!    classifier's conv2/conv4 split executed for real through PJRT, with
+//!    activation sizes (what would cross the PCIe/network link);
+//!  * device registration: Jetson-class GPUs joining an edge server
+//!    (§3.2 "edge device participation") in simulation.
+//!
+//! Run with:  cargo run --release --example edge_devices
+
+use epara::cluster::{DeviceKind, EdgeCloud, Link};
+use epara::core::DeviceId;
+use epara::profile::zoo;
+use epara::sim::{simulate, PolicyConfig, SimConfig};
+use epara::workload::{generate, Mix, WorkloadSpec};
+
+fn main() -> anyhow::Result<()> {
+    println!("== Fig. 12a: Bluetooth (HC-05) transfer delay vs payload\n");
+    println!("{:>10} {:>12}", "payload", "delay (ms)");
+    for bytes in [64.0, 128.0, 256.0, 512.0, 1024.0] {
+        let kb = bytes / 1024.0;
+        println!("{:>9}B {:>12.0}", bytes, Link::BLUETOOTH.transfer_ms(kb));
+    }
+    println!("(paper anchors: 105 ms @64 B, 1039 ms @1 KB)");
+
+    // --- Fig. 12b: device/server split through real PJRT -----------------
+    let dir = epara::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        println!("\n== Fig. 12b: classifier offload points (real execution)\n");
+        let engine = epara::runtime::Engine::load(&dir)?;
+        let shape = [1usize, 32, 32, 3];
+        let image: Vec<f32> = (0..shape.iter().product::<usize>())
+            .map(|i| ((i * 41) % 255) as f32 / 255.0)
+            .collect();
+        let full = engine.classify(1, &image, &shape)?;
+        println!("{:>8} {:>14} {:>16} {:>10}",
+                 "split", "act bytes", "link time @100M", "matches");
+        for split in ["conv2", "conv4"] {
+            let (logits, act_bytes) = engine.classify_split(split, &image, &shape)?;
+            let diff = epara::runtime::max_abs_diff(&logits, &full);
+            let link_ms = Link::EDGE_100M.transfer_ms(act_bytes as f64 / 1024.0);
+            println!("{:>8} {:>14} {:>15.2}ms {:>10}",
+                     split, act_bytes, link_ms,
+                     if diff < 1e-4 { "yes" } else { "NO" });
+        }
+    } else {
+        println!("\n(skip Fig. 12b: run `make artifacts` first)");
+    }
+
+    // --- device registration in the simulator -----------------------------
+    println!("\n== Jetson-class device registration (§3.2)\n");
+    let table = zoo::paper_zoo();
+    let mut cloud = EdgeCloud::testbed();
+    // register four Jetson Nanos at server 4 (one of the GPU-less hosts)
+    for i in 0..4 {
+        cloud.add_device(DeviceId(100 + i), DeviceKind::JetsonNano,
+                         epara::core::ServerId(4));
+    }
+    let spec = WorkloadSpec {
+        mix: Mix::Production(0),
+        rps: 120.0,
+        duration_ms: 20_000.0,
+        ..Default::default()
+    };
+    let reqs = generate(&spec, &table, &cloud);
+    for (label, allow) in [("with devices", true), ("without devices", false)] {
+        let mut policy = PolicyConfig::epara();
+        policy.allow_device = allow;
+        let cfg = SimConfig { policy, duration_ms: 20_000.0, ..Default::default() };
+        let mut m = simulate(&table, cloud.clone(), reqs.clone(), cfg);
+        println!("  {}", m.report(label));
+    }
+    Ok(())
+}

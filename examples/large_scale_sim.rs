@@ -1,0 +1,80 @@
+//! Large-scale co-simulation (§5.2, Fig. 14/15): goodput across server
+//! counts and the GPU count needed to fully serve a fixed load.
+//!
+//! Run with:  cargo run --release --example large_scale_sim
+//! Optional env: EPARA_MAX_SERVERS (default 32).
+
+use epara::cluster::EdgeCloud;
+use epara::profile::zoo;
+use epara::sim::{simulate, PolicyConfig, SimConfig};
+use epara::workload::{generate, Mix, WorkloadSpec};
+
+fn main() -> anyhow::Result<()> {
+    let table = zoo::paper_zoo();
+    let max_servers: usize = std::env::var("EPARA_MAX_SERVERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+
+    println!("== Fig. 14: goodput vs cluster size (8×P100 per server)\n");
+    println!("{:>8} {:>12} {:>12} {:>12} {:>12}",
+             "servers", "EPARA", "InterEdge", "AlpaServe", "SERV-P");
+    let mut n = 4;
+    while n <= max_servers {
+        let mut row = format!("{n:>8}");
+        for policy in [
+            PolicyConfig::epara(),
+            PolicyConfig::interedge(),
+            PolicyConfig::alpaserve(),
+            PolicyConfig::servp(),
+        ] {
+            let cloud = EdgeCloud::large_scale(n);
+            let spec = WorkloadSpec {
+                mix: Mix::Mixed,
+                rps: 60.0 * n as f64,
+                streams: 40 * n,
+                duration_ms: 15_000.0,
+                ..Default::default()
+            };
+            let reqs = generate(&spec, &table, &cloud);
+            let cfg = SimConfig {
+                policy,
+                duration_ms: 15_000.0,
+                ..Default::default()
+            };
+            let m = simulate(&table, cloud, reqs, cfg);
+            row += &format!(" {:>12.1}", m.goodput_rps());
+        }
+        println!("{row}");
+        n *= 2;
+    }
+
+    println!("\n== Fig. 15: GPUs needed to satisfy a fixed load within SLO\n");
+    let target_ratio = 0.95;
+    println!("{:>14} {:>10}", "policy", "GPUs");
+    for policy in [PolicyConfig::epara(), PolicyConfig::interedge(),
+                   PolicyConfig::alpaserve()] {
+        let mut gpus_needed = None;
+        for gpus in [1usize, 2, 3, 4, 6, 8, 12, 16, 24, 32] {
+            let cloud = EdgeCloud::uniform(
+                8, gpus, epara::cluster::GpuSpec::P100,
+                epara::cluster::Link::SWITCH_10G);
+            let spec = WorkloadSpec {
+                mix: Mix::Production(3),
+                rps: 300.0,
+                duration_ms: 15_000.0,
+                ..Default::default()
+            };
+            let reqs = generate(&spec, &table, &cloud);
+            let cfg = SimConfig { policy, duration_ms: 15_000.0, ..Default::default() };
+            let m = simulate(&table, cloud, reqs, cfg);
+            if m.satisfaction_ratio() >= target_ratio {
+                gpus_needed = Some(8 * gpus);
+                break;
+            }
+        }
+        println!("{:>14} {:>10}", policy.name,
+                 gpus_needed.map(|g| g.to_string()).unwrap_or("->256+".into()));
+    }
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Case study 2 (§5.3.4, Fig. 20, Table 2): segmentation in EPARA.
+//!
+//! The paper picks segmentation because its models span all four task
+//! categories: UNet/DeeplabV3+/SCTNet fit one GPU, MaskFormer/OMG-Seg
+//! need several; images are latency-sensitive, 60-fps video streams are
+//! frequency-sensitive.  We print the Table-2 categorization, run the
+//! §4.1 adaptive deployment next to the paper's configs (BS8/BS4/...,
+//! TP2+BS8, MF4+DP2), simulate the four-P100 deployment, and run a real
+//! UNet-mini segmentation through the PJRT runtime.
+//!
+//! Run with:  cargo run --release --example segmentation_case_study
+
+use epara::allocator::{Allocator, Overrides};
+use epara::cluster::{EdgeCloud, GpuSpec, Link};
+use epara::core::{ServiceId, TaskCategory};
+use epara::profile::zoo::{self};
+use epara::sim::{simulate, PolicyConfig, SimConfig};
+use epara::workload::{generate, Mix, WorkloadSpec};
+
+fn main() -> anyhow::Result<()> {
+    let table = zoo::paper_zoo();
+    let alloc = Allocator::new(&table, GpuSpec::P100);
+    let services = zoo::segmentation_case_study_services();
+
+    println!("== Table 2: segmentation models by category\n");
+    for cat in TaskCategory::ALL {
+        let members: Vec<&str> = services
+            .iter()
+            .filter(|&&s| alloc.categorize(s) == cat)
+            .map(|&s| table.spec(s).name.as_str())
+            .collect();
+        println!("{:<18} {}", format!("{cat:?}"), members.join(", "));
+    }
+
+    println!("\n== §4.1 adaptive deployment (paper: UNet BS8 | DeeplabV3+ BS4 \
+              | SCTNet BS4 | MaskFormer TP2+BS8 | OMG-Seg TP2+BS4 | video: \
+              UNet MF4, Deeplab/SCTNet MF4+DP2)\n");
+    println!("{:<18} {:<16} {:>4} {:>4} {:>9} {:>4} {:>4}",
+             "service", "category", "BS", "MT", "MP", "MF", "DP");
+    for &s in &services {
+        let a = alloc.allocate(s, Overrides::default());
+        println!("{:<18} {:<16} {:>4} {:>4} {:>9} {:>4} {:>4}",
+                 table.spec(s).name, format!("{:?}", a.category),
+                 a.ops.bs, a.ops.mt, format!("{:?}", a.ops.mp),
+                 a.ops.mf, a.ops.dp);
+    }
+
+    println!("\n== Fig. 20: four P100 servers serving the segmentation mix");
+    let cloud = EdgeCloud::uniform(4, 1, GpuSpec::P100, Link::SWITCH_10G);
+    let spec = WorkloadSpec {
+        mix: Mix::Mixed,
+        services: services.clone(),
+        rps: 40.0,
+        duration_ms: 30_000.0,
+        ..Default::default()
+    };
+    let reqs = generate(&spec, &table, &cloud);
+    println!("workload: {} requests over 30 s", reqs.len());
+    for policy in [PolicyConfig::epara(), PolicyConfig::galaxy()] {
+        let cfg = SimConfig { policy, duration_ms: 30_000.0, ..Default::default() };
+        let mut m = simulate(&table, cloud.clone(), reqs.clone(), cfg);
+        println!("  {}", m.report(policy.name));
+        // per-service satisfaction (the Fig. 20 per-model bars)
+        let mut per: Vec<(ServiceId, f64)> =
+            m.per_service.iter().map(|(k, v)| (*k, *v)).collect();
+        per.sort_by_key(|(k, _)| *k);
+        for (svc, sat) in per {
+            let offered = reqs.iter().filter(|r| r.service == svc).count();
+            println!("      {:<18} {:>6.1}/{offered}", table.spec(svc).name, sat);
+        }
+    }
+
+    // --- real segmentation through PJRT ----------------------------------
+    let dir = epara::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        println!("\n== real UNet-mini segmentation (PJRT, batch 4)");
+        let engine = epara::runtime::Engine::load(&dir)?;
+        let shape = [4usize, 64, 64, 3];
+        let image: Vec<f32> = (0..shape.iter().product::<usize>())
+            .map(|i| ((i % 97) as f32) / 97.0)
+            .collect();
+        let t0 = std::time::Instant::now();
+        let out = engine.segment(4, &image, &shape)?;
+        let ms = t0.elapsed().as_secs_f64() * 1000.0;
+        // argmax per pixel of the first image, count class histogram
+        let classes = 8;
+        let mut hist = vec![0usize; classes];
+        for px in 0..64 * 64 {
+            let row = &out[px * classes..(px + 1) * classes];
+            let mut best = 0;
+            for (i, v) in row.iter().enumerate() {
+                if *v > row[best] {
+                    best = i;
+                }
+            }
+            hist[best] += 1;
+        }
+        println!("  batch of 4 segmented in {ms:.1} ms; class histogram {hist:?}");
+    } else {
+        println!("\n(skip real segmentation: run `make artifacts` first)");
+    }
+    Ok(())
+}

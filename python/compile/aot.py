@@ -1,0 +1,261 @@
+"""AOT driver: lower every registry variant to HLO text + weights + goldens.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published `xla` 0.1.6 rust crate links against) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs, all under ``--out`` (default ../artifacts):
+
+  <name>.hlo.txt          one per registry variant
+  weights/<blob>.bin      f32 little-endian concatenation, canonical order
+  golden/<name>.bin       raw input+output fixture data for rust tests
+  manifest.json           everything the Rust runtime needs to load these
+
+Python runs once at build time (``make artifacts``); it is never on the
+request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as registry
+from .kernels import matmul as matmul_kernel
+from .kernels import attention as attention_kernel
+from .models import tiny_llm
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _np_dtype(s: str):
+    return {"f32": np.float32, "i32": np.int32}[s]
+
+
+def write_weight_blobs(out_dir: str) -> dict:
+    os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+    blobs = {}
+    for blob_name, build in registry.WEIGHT_BLOBS.items():
+        spec, params = build()
+        tensors = []
+        offset = 0
+        chunks = []
+        for name, shape in spec:
+            arr = np.ascontiguousarray(params[name], dtype=np.float32)
+            assert tuple(arr.shape) == tuple(shape), (blob_name, name)
+            nbytes = arr.nbytes
+            tensors.append({"name": name, "shape": list(shape),
+                            "offset": offset, "nbytes": nbytes})
+            chunks.append(arr.tobytes())
+            offset += nbytes
+        path = os.path.join(out_dir, "weights", f"{blob_name}.bin")
+        with open(path, "wb") as f:
+            f.write(b"".join(chunks))
+        blobs[blob_name] = {"file": f"weights/{blob_name}.bin",
+                            "tensors": tensors, "total_bytes": offset}
+    return blobs
+
+
+def _example_inputs(v, seed: int):
+    """Deterministic concrete inputs for a variant's non-weight args."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, s in v.inputs:
+        if s.dtype == jnp.int32:
+            if "token" in name:
+                arr = rng.integers(0, registry.LLM.vocab,
+                                   size=s.shape).astype(np.int32)
+            elif name in ("cache_len", "pos0"):
+                arr = np.asarray(0, np.int32)
+            else:
+                arr = np.zeros(s.shape, np.int32)
+        else:
+            arr = rng.normal(scale=0.5, size=s.shape).astype(np.float32)
+        out.append(arr)
+    return out
+
+
+GOLDEN_ARTIFACTS = [
+    "llm.prefill.bs2", "llm.decode.bs2", "seg.bs1", "classify.bs1",
+    "classify.dev.conv2.bs1", "classify.srv.conv2.bs1",
+    "llm.tp2_block.decode.bs2", "llm.pp2.s0.decode.bs2",
+]
+
+
+def write_goldens(out_dir: str, variants) -> list:
+    """Run selected variants in python and dump (inputs, outputs) fixtures.
+
+    For decode-phase goldens the cache inputs are produced by a real
+    prefill first, so the fixture exercises a live cache, not zeros.
+    """
+    os.makedirs(os.path.join(out_dir, "golden"), exist_ok=True)
+    by_name = {v.name: v for v in variants}
+    goldens = []
+
+    for name in GOLDEN_ARTIFACTS:
+        v = by_name[name]
+        spec, params = registry.WEIGHT_BLOBS[v.weights_blob]()
+
+        def lookup(n):
+            # tp2_block variants name tensors without the layer/shard
+            # prefix; the golden fixture uses layer 0 / shard 0.
+            return params[n] if n in params else params[f"l0.s0.{n}"]
+
+        flat_params = [np.ascontiguousarray(lookup(n), np.float32)
+                       for n, _ in v.param_spec]
+        inputs = _example_inputs(v, seed=hash(name) % (2 ** 31))
+
+        if v.meta.get("phase") == "decode" and v.meta.get("mp") == "none":
+            # realistic cache: run the matching prefill first
+            pv = by_name[f"llm.prefill.bs{v.meta['batch']}"]
+            pf_inputs = _example_inputs(pv, seed=7)
+            _, kc, vc = pv.fn(*map(jnp.asarray, flat_params),
+                              *map(jnp.asarray, pf_inputs))
+            inputs[1] = np.asarray(registry.LLM.prefill_len, np.int32)
+            inputs[2] = np.asarray(kc)
+            inputs[3] = np.asarray(vc)
+
+        outputs = v.fn(*map(jnp.asarray, flat_params),
+                       *map(jnp.asarray, inputs))
+        outputs = [np.asarray(o) for o in outputs]
+
+        tensors, chunks, offset = [], [], 0
+        for role, arrs, specs in (
+            ("input", inputs, v.inputs),
+            ("output", outputs, [(n, None) for n, *_ in v.outputs]),
+        ):
+            for (tname, _), arr in zip(specs, arrs):
+                arr = np.ascontiguousarray(arr)
+                dt = "i32" if arr.dtype == np.int32 else "f32"
+                tensors.append({"role": role, "name": tname,
+                                "shape": list(arr.shape), "dtype": dt,
+                                "offset": offset, "nbytes": arr.nbytes})
+                chunks.append(arr.tobytes())
+                offset += arr.nbytes
+        path = os.path.join(out_dir, "golden", f"{name}.bin")
+        with open(path, "wb") as f:
+            f.write(b"".join(chunks))
+        goldens.append({"artifact": name, "file": f"golden/{name}.bin",
+                        "tensors": tensors})
+
+    # End-to-end greedy generation golden (prefill + 7 decode steps) used
+    # by the rust integration test to validate the full serving path.
+    cfg = registry.LLM
+    params = cfg.init_params(seed=0)
+    rng = np.random.default_rng(42)
+    prompt = rng.integers(0, cfg.vocab, size=(2, cfg.prefill_len)).astype(np.int32)
+    toks = tiny_llm.reference_generate(cfg, params, prompt, n_new=8,
+                                       use_pallas=True)
+    path = os.path.join(out_dir, "golden", "llm.generate.bs2.bin")
+    with open(path, "wb") as f:
+        f.write(prompt.tobytes() + toks.astype(np.int32).tobytes())
+    goldens.append({
+        "artifact": "llm.generate.bs2",
+        "file": "golden/llm.generate.bs2.bin",
+        "tensors": [
+            {"role": "input", "name": "prompt", "shape": list(prompt.shape),
+             "dtype": "i32", "offset": 0, "nbytes": prompt.nbytes},
+            {"role": "output", "name": "tokens", "shape": list(toks.shape),
+             "dtype": "i32", "offset": prompt.nbytes,
+             "nbytes": toks.astype(np.int32).nbytes},
+        ]})
+    return goldens
+
+
+def kernel_report() -> dict:
+    """Structural L1 perf report (interpret mode has no TPU wall-clock)."""
+    cfg = registry.LLM
+    return {
+        "matmul_prefill_qkv": matmul_kernel.vmem_report(
+            2 * cfg.prefill_len, cfg.d_model, cfg.d_model),
+        "matmul_mxu_native": matmul_kernel.vmem_report(128, 128, 128),
+        "matmul_mlp": matmul_kernel.vmem_report(
+            2 * cfg.prefill_len, cfg.d_ff, cfg.d_model),
+        "attention_prefill": attention_kernel.vmem_report(
+            cfg.prefill_len, cfg.prefill_len, cfg.d_head),
+        "attention_decode": attention_kernel.vmem_report(
+            1, cfg.max_seq, cfg.d_head),
+        "vmem_budget_bytes": 16 * 1024 * 1024,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names (debugging)")
+    ap.add_argument("--report", action="store_true",
+                    help="print the L1 structural perf report and exit")
+    ap.add_argument("--skip-goldens", action="store_true")
+    args = ap.parse_args()
+
+    if args.report:
+        print(json.dumps(kernel_report(), indent=2))
+        return
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    variants = registry.build_variants(use_pallas=True)
+    if args.only:
+        keep = set(args.only.split(","))
+        variants = [v for v in variants if v.name in keep]
+
+    entries = []
+    for v in variants:
+        lowered = jax.jit(v.fn).lower(*v.example_args())
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{v.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(registry.manifest_entry(v))
+        print(f"lowered {v.name}: {len(text)} chars", file=sys.stderr)
+
+    blobs = write_weight_blobs(out_dir)
+    goldens = [] if args.skip_goldens else write_goldens(out_dir, variants)
+
+    manifest = {
+        "version": 1,
+        "llm_config": {
+            "vocab": registry.LLM.vocab, "d_model": registry.LLM.d_model,
+            "n_heads": registry.LLM.n_heads,
+            "n_layers": registry.LLM.n_layers, "d_ff": registry.LLM.d_ff,
+            "max_seq": registry.LLM.max_seq,
+            "prefill_len": registry.LLM.prefill_len,
+        },
+        "unet_config": {
+            "size": registry.UNET.size, "in_ch": registry.UNET.in_ch,
+            "base": registry.UNET.base,
+            "n_classes": registry.UNET.n_classes,
+        },
+        "classifier_config": {
+            "size": registry.CLS.size, "in_ch": registry.CLS.in_ch,
+            "n_classes": registry.CLS.n_classes, "feat": registry.CLS.feat,
+        },
+        "kernel_report": kernel_report(),
+        "weight_blobs": blobs,
+        "artifacts": entries,
+        "golden": goldens,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest to {out_dir}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""L1: flash-style fused attention as a Pallas kernel.
+
+GPU flash attention streams K/V tiles through shared memory with an online
+softmax so the S x S score matrix never materializes.  The TPU adaptation
+(DESIGN.md §Hardware-Adaptation): K/V blocks stream HBM->VMEM via the
+innermost grid axis, the running (max, sum, acc) state lives in VMEM
+scratch, and every contraction is MXU-shaped.  The kernel serves both
+phases of LLM inference:
+
+  * prefill — q_len == kv capacity, causal mask, kv_len = q_len;
+  * decode  — q_len == 1 against a fixed-capacity KV cache, with the live
+    prefix length passed as a tiny dynamic operand (kv_len), mirroring how
+    the paper's serving path masks dead cache slots.
+
+``interpret=True`` (CPU PJRT cannot run Mosaic custom-calls; see matmul.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    kvlen_ref,  # [1] int32, replicated to every grid step
+    q_ref,      # [1, bq, D]
+    k_ref,      # [1, bk, D]
+    v_ref,      # [1, bk, D]
+    o_ref,      # [1, bq, D]
+    m_ref,      # scratch [bq] running max
+    l_ref,      # scratch [bq] running sum
+    acc_ref,    # scratch [bq, D] running weighted output
+    *,
+    bq: int,
+    bk: int,
+    nk: int,
+    causal: bool,
+    scale: float,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    # Mask: live-cache length plus (optionally) causality.
+    kpos = ki * bk + jnp.arange(bk)[None, :]
+    mask = kpos < kvlen_ref[0]
+    if causal:
+        qpos = qi * bq + jnp.arange(bq)[:, None]
+        mask = mask & (kpos <= qpos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    # Online softmax (flash) update.
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+    correction = jnp.exp(m_prev - m_cur)
+    # Re-mask after the shift: when a whole row is masked, s - m_cur == 0
+    # and exp would wrongly contribute 1 per dead position.
+    p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)
+    l_ref[...] = l_ref[...] * correction + p.sum(axis=-1)
+    acc_ref[...] = (
+        acc_ref[...] * correction[:, None]
+        + jnp.dot(p, v_ref[0].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        # Fully-masked rows (decode padding) have l == 0; emit zeros.
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    kv_len: jnp.ndarray | int | None = None,
+    *,
+    causal: bool = True,
+    bq: int | None = None,
+    bk: int | None = None,
+) -> jnp.ndarray:
+    """Fused attention: q [B, H, Sq, D], k/v [B, H, Sk, D] -> [B, H, Sq, D].
+
+    ``kv_len`` (dynamic, int32) masks key positions >= kv_len; defaults to
+    Sk.  Causal masking assumes q_offset == 0 (prefill).  Decode (Sq == 1)
+    callers pass causal=False and kv_len = cache_len + 1.
+    """
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    bq = bq or min(sq, 128)
+    bk = bk or min(sk, 128)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    nk = sk // bk
+    if kv_len is None:
+        kv_len = sk
+    kv_len = jnp.asarray(kv_len, jnp.int32).reshape(1)
+
+    bh = b * h
+    qf = q.reshape(bh, sq, d)
+    kf = k.reshape(bh, sk, d)
+    vf = v.reshape(bh, sk, d)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel,
+            bq=bq, bk=bk, nk=nk, causal=causal,
+            scale=1.0 / (d ** 0.5),
+        ),
+        grid=(bh, sq // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda g, i, j: (0,)),           # kv_len
+            pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=True,
+    )(kv_len, qf, kf, vf)
+    return out.reshape(b, h, sq, d)
+
+
+def vmem_report(sq: int, sk: int, d: int, dtype_bytes: int = 4) -> dict:
+    """Structural perf estimate per grid step (see DESIGN.md §Perf)."""
+    bq, bk = min(sq, 128), min(sk, 128)
+    tiles = {
+        "q_tile_bytes": bq * d * dtype_bytes,
+        "k_tile_bytes": bk * d * dtype_bytes,
+        "v_tile_bytes": bk * d * dtype_bytes,
+        "scratch_bytes": (bq + bq + bq * d) * 4,
+        "o_tile_bytes": bq * d * dtype_bytes,
+    }
+    total = sum(tiles.values())
+    return {
+        **tiles,
+        "vmem_per_step_bytes": total,
+        "vmem_double_buffered_bytes": total
+        + tiles["k_tile_bytes"] + tiles["v_tile_bytes"],
+        "block": [bq, bk, d],
+        "flops": 4 * sq * sk * d,  # qk^T + pv
+    }

@@ -1,0 +1,123 @@
+"""L1: MXU-shaped blocked matmul as a Pallas kernel.
+
+The hardware-adaptation story (DESIGN.md §Hardware-Adaptation): the paper's
+GPU kernels tile for CUDA shared memory / tensor cores; on TPU the same
+insight maps to VMEM-resident 128x128 tiles feeding the MXU systolic array.
+The K dimension is the innermost grid axis so each (m, n) output tile is
+revisited nk times and accumulated in f32 — the canonical Pallas TPU matmul
+schedule, compatible with double buffering of the x/w HBM->VMEM streams.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the Rust runtime
+(xla crate, PJRT CPU) runs verbatim.  Real-TPU performance is therefore
+estimated structurally (VMEM footprint, MXU shape) — see EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Preferred MXU tile edge.  Dims smaller than this fall back to the largest
+# power-of-two block that divides them (tiny-model dims are all multiples
+# of 8, so the fallback chain always terminates at >= 8 or the dim itself).
+MXU_TILE = 128
+
+
+def _pick_block(dim: int, preferred: int = MXU_TILE) -> int:
+    """Largest power-of-two block <= preferred that divides dim."""
+    b = preferred
+    while b > 1:
+        if dim % b == 0:
+            return b
+        b //= 2
+    return 1
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """One (bm, bn) output tile; grid axis 2 walks the K blocks."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+) -> jnp.ndarray:
+    """Blocked matmul: x [M, K] @ w [K, N] -> [M, N] (f32 accumulation).
+
+    Block sizes default to the largest power-of-two tile <= 128 dividing
+    each dim, which is exactly the MXU-friendly shape for the model dims
+    used in this repo (128 / 384 / 512).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    bm = bm or _pick_block(m)
+    bn = bn or _pick_block(n)
+    bk = bk or _pick_block(k)
+    nk = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w).astype(x.dtype)
+
+
+def linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Fused dense layer over the trailing axis of an arbitrary-rank x.
+
+    Collapses leading dims to one matmul (bigger M tile -> better MXU
+    occupancy than per-row calls), then broadcasts the bias.
+    """
+    lead = x.shape[:-1]
+    y = matmul(x.reshape(-1, x.shape[-1]), w)
+    return (y + b[None, :].astype(y.dtype)).reshape(*lead, w.shape[-1])
+
+
+def vmem_report(m: int, n: int, k: int, dtype_bytes: int = 4) -> dict:
+    """Structural perf estimate for one grid step (see DESIGN.md §Perf).
+
+    Returns the per-step VMEM working set and the MXU-shape flag used by
+    ``aot.py --report`` in place of wall-clock (interpret mode is not a
+    TPU proxy).
+    """
+    bm, bn, bk = _pick_block(m), _pick_block(n), _pick_block(k)
+    tiles = {
+        "x_tile_bytes": bm * bk * dtype_bytes,
+        "w_tile_bytes": bk * bn * dtype_bytes,
+        "o_tile_bytes": bm * bn * 4,  # f32 accumulator
+    }
+    total = sum(tiles.values())
+    return {
+        **tiles,
+        "vmem_per_step_bytes": total,
+        # double buffering doubles the streamed inputs, not the accumulator
+        "vmem_double_buffered_bytes": total + tiles["x_tile_bytes"] + tiles["w_tile_bytes"],
+        "mxu_shaped": bm == MXU_TILE and bn == MXU_TILE and bk == MXU_TILE,
+        "block": [bm, bn, bk],
+        "grid": [m // bm, n // bn, k // bk],
+        "flops": 2 * m * n * k,
+    }

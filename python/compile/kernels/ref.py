@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy only.  pytest asserts allclose between the
+kernel (interpret=True) and these functions across shape/dtype sweeps —
+this is the core L1 correctness signal for the whole stack, because the
+AOT-compiled HLO the Rust runtime executes is lowered from the same
+kernel code.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Reference for kernels.matmul.matmul: plain f32-accumulated matmul."""
+    return jnp.matmul(
+        x.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+def linear_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Reference for the fused linear (matmul + bias broadcast)."""
+    return matmul_ref(x, w) + b.astype(x.dtype)
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    kv_len: int | None = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Reference scaled-dot-product attention.
+
+    Shapes: q [B, H, Sq, D], k/v [B, H, Sk, D] -> out [B, H, Sq, D].
+
+    ``kv_len`` masks out key positions >= kv_len (used for decode against a
+    fixed-capacity KV cache).  ``q_offset`` is the absolute position of
+    q[..., 0, :], used by the causal mask during decode (query token i sits
+    at absolute position q_offset + i).
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+
+    sk = k.shape[2]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones(logits.shape[-2:], dtype=bool)
+    if causal:
+        qpos = q_offset + jnp.arange(q.shape[2])[:, None]
+        mask = mask & (kpos <= qpos)
+    if kv_len is not None:
+        mask = mask & (kpos < kv_len)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def layernorm_ref(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Reference layer norm over the trailing axis."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) / jnp.sqrt(var + 1e-5)
+    return (y * g.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,324 @@
+"""L2 registry: every AOT artifact the Rust runtime loads, in one table.
+
+Each `Variant` describes one compiled executable: the jax root function,
+its example argument shapes, which weight-blob tensors form its leading
+arguments, and metadata (service, phase, batch) the Rust manifest exposes
+to the coordinator.  `aot.py` walks this registry to emit
+``artifacts/<name>.hlo.txt`` + ``artifacts/manifest.json`` + weight blobs +
+golden input/output fixtures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .models import tiny_llm, unet, classifier
+from .models.common import unflatten_params
+
+LLM = tiny_llm.LlmConfig()
+UNET = unet.UnetConfig()
+CLS = classifier.ClassifierConfig()
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+@dataclasses.dataclass
+class Variant:
+    name: str                     # artifact name, e.g. "llm.decode.bs2"
+    service: str                  # logical service this executable belongs to
+    fn: Callable                  # fn(*params, *inputs) -> tuple of outputs
+    param_spec: list              # [(tensor_name, shape)] — leading args
+    weights_blob: str             # which .bin the tensors come from
+    inputs: list                  # [(name, ShapeDtypeStruct)]
+    outputs: list                 # [(name, shape, dtype_str)] (documentation)
+    meta: dict                    # batch, phase, etc. (copied into manifest)
+
+    def example_args(self):
+        return [spec(s) for _, s in self.param_spec] + \
+               [s for _, s in self.inputs]
+
+
+def _wrap(fn, param_spec, n_inputs):
+    """Adapt fn(params_dict, *inputs) to flat positional form."""
+    n_params = len(param_spec)
+
+    def flat(*args):
+        assert len(args) == n_params + n_inputs, \
+            (len(args), n_params, n_inputs)
+        params = unflatten_params(param_spec, args[:n_params])
+        out = fn(params, *args[n_params:])
+        return out if isinstance(out, tuple) else (out,)
+
+    return flat
+
+
+def _dtype_str(d):
+    d = jnp.dtype(d)
+    if d == jnp.float32:
+        return "f32"
+    if d == jnp.int32:
+        return "i32"
+    raise ValueError(d)
+
+
+# --------------------------------------------------------------------------
+# Weight blobs: blob name -> (param_spec, params_dict)
+# --------------------------------------------------------------------------
+
+def llm_tp2_blob_spec():
+    """TP shard-block tensors for all layers x shards, canonical order."""
+    out = []
+    for l in range(LLM.n_layers):
+        for s in (0, 1):
+            for name, shape in LLM.tp_block_spec():
+                out.append((f"l{l}.s{s}.{name}", shape))
+    return out
+
+
+def llm_tp2_blob_params():
+    full = LLM.init_params(seed=0)
+    out = {}
+    for l in range(LLM.n_layers):
+        for s in (0, 1):
+            blk = LLM.tp_shard_block(full, l, s)
+            for name, arr in blk.items():
+                out[f"l{l}.s{s}.{name}"] = arr
+    return out
+
+
+def llm_pp_blob(stage: int):
+    full = LLM.init_params(seed=0)
+    pspec = tiny_llm.pp_stage_spec(LLM, stage)
+    return pspec, {name: full[name] for name, _ in pspec}
+
+
+WEIGHT_BLOBS: dict[str, Callable[[], tuple[list, dict]]] = {
+    "llm": lambda: (LLM.param_spec(), LLM.init_params(seed=0)),
+    "llm_tp2": lambda: (llm_tp2_blob_spec(), llm_tp2_blob_params()),
+    "llm_pp2_s0": lambda: llm_pp_blob(0),
+    "llm_pp2_s1": lambda: llm_pp_blob(1),
+    "unet": lambda: (UNET.param_spec(), UNET.init_params(seed=1)),
+    "classifier": lambda: (CLS.param_spec(), CLS.init_params(seed=2)),
+}
+
+
+# --------------------------------------------------------------------------
+# Variant construction
+# --------------------------------------------------------------------------
+
+def _llm_cache_shape(b, layers=None, heads=None):
+    return ((layers or LLM.n_layers), b, (heads or LLM.n_heads),
+            LLM.max_seq, LLM.d_head)
+
+
+def build_variants(use_pallas: bool = True) -> list[Variant]:
+    v: list[Variant] = []
+    S, T, D, V = LLM.prefill_len, LLM.max_seq, LLM.d_model, LLM.vocab
+    lp = LLM.param_spec()
+
+    # ---- full-model LLM prefill / decode --------------------------------
+    for b in (1, 2, 4):
+        fn = _wrap(lambda p, toks: tiny_llm.prefill(
+            LLM, p, toks, use_pallas=use_pallas), lp, 1)
+        v.append(Variant(
+            name=f"llm.prefill.bs{b}", service="tiny_llm", fn=fn,
+            param_spec=lp, weights_blob="llm",
+            inputs=[("tokens", spec((b, S), I32))],
+            outputs=[("logits", (b, V), "f32"),
+                     ("k_cache", _llm_cache_shape(b), "f32"),
+                     ("v_cache", _llm_cache_shape(b), "f32")],
+            meta={"batch": b, "phase": "prefill", "mp": "none"}))
+    for b in (1, 2, 4, 8):
+        fn = _wrap(lambda p, tok, cl, kc, vc: tiny_llm.decode(
+            LLM, p, tok, cl, kc, vc, use_pallas=use_pallas), lp, 4)
+        v.append(Variant(
+            name=f"llm.decode.bs{b}", service="tiny_llm", fn=fn,
+            param_spec=lp, weights_blob="llm",
+            inputs=[("token", spec((b,), I32)),
+                    ("cache_len", spec((), I32)),
+                    ("k_cache", spec(_llm_cache_shape(b))),
+                    ("v_cache", spec(_llm_cache_shape(b)))],
+            outputs=[("logits", (b, V), "f32"),
+                     ("k_cache", _llm_cache_shape(b), "f32"),
+                     ("v_cache", _llm_cache_shape(b), "f32")],
+            meta={"batch": b, "phase": "decode", "mp": "none"}))
+
+    # ---- TP2 building blocks (bs2) ---------------------------------------
+    b = 2
+    embed_spec = [("embed", (V, D)), ("pos", (T, D))]
+    for phase, s in (("prefill", S), ("decode", 1)):
+        fn = _wrap(lambda p, toks, pos0: (
+            tiny_llm.embed_root(LLM, p, toks, pos0),), embed_spec, 2)
+        v.append(Variant(
+            name=f"llm.embed.{phase}.bs{b}", service="tiny_llm", fn=fn,
+            param_spec=embed_spec, weights_blob="llm",
+            inputs=[("tokens", spec((b, s), I32)), ("pos0", spec((), I32))],
+            outputs=[("x", (b, s, D), "f32")],
+            meta={"batch": b, "phase": phase, "mp": "tp2", "role": "embed"}))
+
+    blk_spec = LLM.tp_block_spec()
+    half_cache = (b, LLM.n_heads // 2, T, LLM.d_head)
+    for phase, s in (("prefill", S), ("decode", 1)):
+        # prefill never reads cache_len (writes start at 0) — XLA prunes
+        # unused params, so the arg list must omit it for that phase.
+        if phase == "prefill":
+            fn = _wrap(lambda p, x, kc, vc: tiny_llm.tp_block(
+                LLM, p, x, kc, vc, 0, phase="prefill",
+                use_pallas=use_pallas), blk_spec, 3)
+            ins = [("x", spec((b, s, D))),
+                   ("k_cache", spec(half_cache)),
+                   ("v_cache", spec(half_cache))]
+        else:
+            fn = _wrap(lambda p, x, kc, vc, cl: tiny_llm.tp_block(
+                LLM, p, x, kc, vc, cl, phase="decode",
+                use_pallas=use_pallas), blk_spec, 4)
+            ins = [("x", spec((b, s, D))),
+                   ("k_cache", spec(half_cache)),
+                   ("v_cache", spec(half_cache)),
+                   ("cache_len", spec((), I32))]
+        v.append(Variant(
+            name=f"llm.tp2_block.{phase}.bs{b}", service="tiny_llm", fn=fn,
+            param_spec=blk_spec, weights_blob="llm_tp2",
+            inputs=ins,
+            outputs=[("delta", (b, s, D), "f32"),
+                     ("k_cache", half_cache, "f32"),
+                     ("v_cache", half_cache, "f32")],
+            meta={"batch": b, "phase": phase, "mp": "tp2", "role": "block",
+                  "tensors_per_call": len(blk_spec)}))
+
+    head_spec = [("lnf_g", (D,)), ("lnf_b", (D,)), ("head", (D, V))]
+    for phase, s in (("prefill", S), ("decode", 1)):
+        fn = _wrap(lambda p, x: (tiny_llm.head_root(
+            LLM, p, x, use_pallas=use_pallas),), head_spec, 1)
+        v.append(Variant(
+            name=f"llm.head.{phase}.bs{b}", service="tiny_llm", fn=fn,
+            param_spec=head_spec, weights_blob="llm",
+            inputs=[("x", spec((b, s, D)))],
+            outputs=[("logits", (b, V), "f32")],
+            meta={"batch": b, "phase": phase, "mp": "tp2", "role": "head"}))
+
+    # ---- PP2 stages (bs2) -------------------------------------------------
+    half = LLM.n_layers // 2
+    stage_cache = (half, b, LLM.n_heads, T, LLM.d_head)
+    for stage in (0, 1):
+        pspec = tiny_llm.pp_stage_spec(LLM, stage)
+        for phase in ("prefill", "decode"):
+            s = S if phase == "prefill" else 1
+            if stage == 0:
+                ins = [("tokens", spec((b, S), I32) if phase == "prefill"
+                        else spec((b,), I32))]
+            else:
+                ins = [("x", spec((b, s, D)))]
+            if phase == "decode":
+                ins += [("cache_len", spec((), I32))]
+            ins += [("k_cache", spec(stage_cache)),
+                    ("v_cache", spec(stage_cache))]
+            if stage == 1:
+                outs = [("logits", (b, V), "f32")]
+            else:
+                outs = [("x", (b, s, D), "f32")]
+            outs += [("k_cache", stage_cache, "f32"),
+                     ("v_cache", stage_cache, "f32")]
+            if phase == "prefill":
+                # cache_len is dead in prefill graphs (see tp2 note above)
+                fn = _wrap(functools.partial(
+                    lambda p, xin, kc, vc, _stage: tiny_llm.pp_stage(
+                        LLM, p, _stage, xin, 0, kc, vc, phase="prefill",
+                        use_pallas=use_pallas),
+                    _stage=stage), pspec, 3)
+            else:
+                fn = _wrap(functools.partial(
+                    lambda p, xin, cl, kc, vc, _stage: tiny_llm.pp_stage(
+                        LLM, p, _stage, xin, cl, kc, vc, phase="decode",
+                        use_pallas=use_pallas),
+                    _stage=stage), pspec, 4)
+            v.append(Variant(
+                name=f"llm.pp2.s{stage}.{phase}.bs{b}", service="tiny_llm",
+                fn=fn, param_spec=pspec, weights_blob=f"llm_pp2_s{stage}",
+                inputs=ins, outputs=outs,
+                meta={"batch": b, "phase": phase, "mp": "pp2",
+                      "stage": stage}))
+
+    # ---- UNet segmentation -----------------------------------------------
+    up = UNET.param_spec()
+    for b in (1, 2, 4):
+        fn = _wrap(lambda p, x: (unet.forward(
+            UNET, p, x, use_pallas=use_pallas),), up, 1)
+        v.append(Variant(
+            name=f"seg.bs{b}", service="unet_seg", fn=fn,
+            param_spec=up, weights_blob="unet",
+            inputs=[("image", spec((b, UNET.size, UNET.size, UNET.in_ch)))],
+            outputs=[("logits",
+                      (b, UNET.size, UNET.size, UNET.n_classes), "f32")],
+            meta={"batch": b, "phase": "infer", "mp": "none"}))
+
+    # ---- CNN classifier + device splits -----------------------------------
+    cp = CLS.param_spec()
+    for b in (1, 4, 8):
+        fn = _wrap(lambda p, x: (classifier.forward(
+            CLS, p, x, use_pallas=use_pallas),), cp, 1)
+        v.append(Variant(
+            name=f"classify.bs{b}", service="classifier", fn=fn,
+            param_spec=cp, weights_blob="classifier",
+            inputs=[("image", spec((b, CLS.size, CLS.size, CLS.in_ch)))],
+            outputs=[("logits", (b, CLS.n_classes), "f32")],
+            meta={"batch": b, "phase": "infer", "mp": "none"}))
+    for split in classifier.SPLIT_POINTS:
+        b = 1
+        act = CLS.split_activation_shape(split, b)
+        hp = classifier.head_param_spec(CLS, split)
+        tp = classifier.tail_param_spec(CLS, split)
+        fn = _wrap(functools.partial(
+            lambda p, x, _s: (classifier.head(CLS, p, x, _s),), _s=split),
+            hp, 1)
+        v.append(Variant(
+            name=f"classify.dev.{split}.bs{b}", service="classifier", fn=fn,
+            param_spec=hp, weights_blob="classifier",
+            inputs=[("image", spec((b, CLS.size, CLS.size, CLS.in_ch)))],
+            outputs=[("act", act, "f32")],
+            meta={"batch": b, "phase": "infer", "mp": "device_pp",
+                  "split": split, "role": "device"}))
+        fn = _wrap(functools.partial(
+            lambda p, h, _s: (classifier.tail(
+                CLS, p, h, _s, use_pallas=use_pallas),), _s=split), tp, 1)
+        v.append(Variant(
+            name=f"classify.srv.{split}.bs{b}", service="classifier", fn=fn,
+            param_spec=tp, weights_blob="classifier",
+            inputs=[("act", spec(act))],
+            outputs=[("logits", (b, CLS.n_classes), "f32")],
+            meta={"batch": b, "phase": "infer", "mp": "device_pp",
+                  "split": split, "role": "server"}))
+    return v
+
+
+def variant_by_name(name: str, use_pallas: bool = True) -> Variant:
+    for v in build_variants(use_pallas):
+        if v.name == name:
+            return v
+    raise KeyError(name)
+
+
+def manifest_entry(v: Variant) -> dict:
+    return {
+        "name": v.name,
+        "service": v.service,
+        "hlo": f"{v.name}.hlo.txt",
+        "weights_blob": v.weights_blob,
+        "param_tensors": [{"name": n, "shape": list(s)}
+                          for n, s in v.param_spec],
+        "inputs": [{"name": n, "shape": list(s.shape),
+                    "dtype": _dtype_str(s.dtype)} for n, s in v.inputs],
+        "outputs": [{"name": n, "shape": list(s), "dtype": d}
+                    for n, s, d in v.outputs],
+        "meta": v.meta,
+    }

@@ -1,0 +1,15 @@
+"""L2 model zoo: the inference graphs EPARA's edge cloud actually serves.
+
+Three families, chosen to cover all four task categories of the paper's
+allocator (§3.1 / Table 1):
+
+* ``tiny_llm``    — GPT-style decoder (prefill + decode, TP2 / PP2 splits);
+                    stands in for the Llama/Qwen/DeepSeek text services.
+* ``unet``        — UNet-mini semantic segmentation (the paper's case
+                    study 2 family: UNet/DeeplabV3+/SCTNet/...).
+* ``classifier``  — small CNN with device/server split points (conv2,
+                    conv4), reproducing the Fig. 12b FPGA offload pattern.
+
+All dense compute routes through the L1 Pallas kernels so the lowered HLO
+artifacts exercise the kernels end-to-end from the Rust runtime.
+"""

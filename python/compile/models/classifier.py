@@ -1,0 +1,122 @@
+"""L2: small CNN classifier with device/server split points (Fig. 12b).
+
+The paper offloads the front of VGG16 to a Xilinx U50 at conv2 or conv4 and
+finishes on the edge server — device-server pipeline parallelism (§3.1's
+CLIO-style device participation).  We reproduce the pattern: ``head(x, k)``
+computes through conv-k and is compiled as the *device* artifact;
+``tail(h, k)`` resumes from that activation and is the *server* artifact.
+``forward`` is the single-GPU reference and equals tail(head(x)).
+
+Dense layers route through the L1 Pallas matmul.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..kernels.matmul import linear
+from ..kernels import ref
+from .common import glorot, init_rng
+
+SPLIT_POINTS = ("conv2", "conv4")
+
+
+class ClassifierConfig:
+    def __init__(self, size=32, in_ch=3, n_classes=10):
+        self.size = size
+        self.in_ch = in_ch
+        self.n_classes = n_classes
+        # feature map after conv4 + 3 pools: (size/8)^2 * 64
+        self.feat = (size // 8) * (size // 8) * 64
+
+    def param_spec(self) -> list[tuple[str, tuple[int, ...]]]:
+        i, n = self.in_ch, self.n_classes
+        return [
+            ("conv1.w", (3, 3, i, 16)), ("conv1.b", (16,)),
+            ("conv2.w", (3, 3, 16, 16)), ("conv2.b", (16,)),
+            ("conv3.w", (3, 3, 16, 32)), ("conv3.b", (32,)),
+            ("conv4.w", (3, 3, 32, 64)), ("conv4.b", (64,)),
+            ("fc1.w", (self.feat, 128)), ("fc1.b", (128,)),
+            ("fc2.w", (128, n)), ("fc2.b", (n,)),
+        ]
+
+    def init_params(self, seed: int = 2) -> dict[str, np.ndarray]:
+        rng = init_rng(seed)
+        return {name: (np.zeros(shape, np.float32) if name.endswith(".b")
+                       else glorot(rng, shape))
+                for name, shape in self.param_spec()}
+
+    def split_activation_shape(self, split: str, batch: int):
+        """Shape of the activation crossing the device->server link."""
+        s = self.size
+        if split == "conv2":
+            return (batch, s // 2, s // 2, 16)
+        if split == "conv4":
+            return (batch, s // 8, s // 8, 64)
+        raise ValueError(split)
+
+
+def head_param_spec(cfg: ClassifierConfig, split: str) -> list:
+    """Tensors the device half actually uses (XLA prunes unused params,
+    so the AOT arg list must match exactly)."""
+    convs = 2 if split == "conv2" else 4
+    return [(n, s) for n, s in cfg.param_spec()
+            if any(n.startswith(f"conv{i+1}.") for i in range(convs))]
+
+
+def tail_param_spec(cfg: ClassifierConfig, split: str) -> list:
+    """Tensors the server half actually uses."""
+    head = {n for n, _ in head_param_spec(cfg, split)}
+    if split == "conv2":
+        keep = {"conv3.w", "conv3.b", "conv4.w", "conv4.b",
+                "fc1.w", "fc1.b", "fc2.w", "fc2.b"}
+    else:
+        keep = {"fc1.w", "fc1.b", "fc2.w", "fc2.b"}
+    assert not (keep & head), "head/tail tensor sets must be disjoint"
+    return [(n, s) for n, s in cfg.param_spec() if n in keep]
+
+
+def _conv(x, w, b, pool: bool):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = jax.nn.relu(y + b)
+    if pool:
+        y = jax.lax.reduce_window(
+            y, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    return y
+
+
+def head(cfg: ClassifierConfig, p: dict, x: jnp.ndarray,
+         split: str) -> jnp.ndarray:
+    """Device part: input image through conv2 or conv4 (inclusive)."""
+    h = _conv(x, p["conv1.w"], p["conv1.b"], pool=False)
+    h = _conv(h, p["conv2.w"], p["conv2.b"], pool=True)      # S/2
+    if split == "conv2":
+        return h
+    h = _conv(h, p["conv3.w"], p["conv3.b"], pool=True)      # S/4
+    h = _conv(h, p["conv4.w"], p["conv4.b"], pool=True)      # S/8
+    assert split == "conv4", split
+    return h
+
+
+def tail(cfg: ClassifierConfig, p: dict, h: jnp.ndarray, split: str,
+         *, use_pallas: bool = True) -> jnp.ndarray:
+    """Server part: resume from the split activation, produce logits."""
+    if split == "conv2":
+        h = _conv(h, p["conv3.w"], p["conv3.b"], pool=True)
+        h = _conv(h, p["conv4.w"], p["conv4.b"], pool=True)
+    b = h.shape[0]
+    flat = h.reshape(b, -1)
+    dense = linear if use_pallas else ref.linear_ref
+    z = jax.nn.relu(dense(flat, p["fc1.w"], p["fc1.b"]))
+    return dense(z, p["fc2.w"], p["fc2.b"])
+
+
+def forward(cfg: ClassifierConfig, p: dict, x: jnp.ndarray,
+            *, use_pallas: bool = True) -> jnp.ndarray:
+    """Single-GPU reference: logits [B, n_classes]."""
+    return tail(cfg, p, head(cfg, p, x, "conv4"), "conv4",
+                use_pallas=use_pallas)

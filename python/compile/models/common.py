@@ -1,0 +1,48 @@
+"""Shared L2 building blocks: deterministic init, param flattening, norms."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def init_rng(seed: int) -> np.random.Generator:
+    """Deterministic weight RNG shared by python tests and rust (via .bin)."""
+    return np.random.default_rng(seed)
+
+
+def glorot(rng: np.random.Generator, shape: tuple[int, ...]) -> np.ndarray:
+    fan_in = int(np.prod(shape[:-1])) or 1
+    fan_out = shape[-1]
+    lim = float(np.sqrt(6.0 / (fan_in + fan_out)))
+    return rng.uniform(-lim, lim, size=shape).astype(np.float32)
+
+
+def layernorm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """LayerNorm over the trailing axis (matches kernels.ref.layernorm_ref)."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) / jnp.sqrt(var + 1e-5)
+    return (y * g + b).astype(x.dtype)
+
+
+def flatten_params(spec: list[tuple[str, tuple[int, ...]]],
+                   params: dict[str, np.ndarray]) -> list[np.ndarray]:
+    """Order params canonically (by spec) for AOT argument passing."""
+    out = []
+    for name, shape in spec:
+        arr = params[name]
+        assert tuple(arr.shape) == tuple(shape), (name, arr.shape, shape)
+        out.append(arr)
+    return out
+
+
+def unflatten_params(spec: list[tuple[str, tuple[int, ...]]],
+                     flat: tuple) -> dict:
+    assert len(flat) == len(spec), (len(flat), len(spec))
+    return {name: arr for (name, _), arr in zip(spec, flat)}
+
+
+def params_nbytes(spec: list[tuple[str, tuple[int, ...]]]) -> int:
+    return sum(int(np.prod(s)) * 4 for _, s in spec)

@@ -1,0 +1,337 @@
+"""L2: tiny GPT-style decoder with prefill/decode phases and TP2/PP2 splits.
+
+Architecture notes (DESIGN.md §Hardware-Adaptation):
+
+* **Parallel residual blocks** (GPT-J style): y = x + attn(ln(x)) + mlp(ln(x)).
+  Chosen deliberately so tensor parallelism needs exactly ONE cross-shard
+  combine per block — each TP shard computes attn over half the heads plus
+  half the MLP hidden and returns a delta; the Rust coordinator sums the
+  deltas (its "all-reduce", charged with the paper's inter-GPU transfer
+  cost in the simulator).  Megatron-style sequential blocks would need two
+  syncs per block, which the paper's P100-over-PCIe testbed also avoids.
+* **KV cache as explicit I/O**: caches [L, B, H, T, Dh] are arguments and
+  results of every artifact, so the Rust runtime owns cache state and can
+  schedule requests freely (the paper's request-level allocation needs
+  request state outside the model).
+* All matmuls route through the L1 Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..kernels.matmul import linear
+from ..kernels.attention import flash_attention
+from ..kernels import ref
+from .common import glorot, init_rng, layernorm, unflatten_params
+
+
+class LlmConfig:
+    """Static shape configuration for the tiny LLM."""
+
+    def __init__(self, vocab=512, d_model=128, n_heads=4, n_layers=4,
+                 d_ff=256, max_seq=64, prefill_len=32):
+        assert d_model % n_heads == 0
+        self.vocab = vocab
+        self.d_model = d_model
+        self.n_heads = n_heads
+        self.d_head = d_model // n_heads
+        self.n_layers = n_layers
+        self.d_ff = d_ff
+        self.max_seq = max_seq
+        self.prefill_len = prefill_len
+
+    # ---- parameter spec -------------------------------------------------
+
+    def param_spec(self) -> list[tuple[str, tuple[int, ...]]]:
+        d, dff, v, t = self.d_model, self.d_ff, self.vocab, self.max_seq
+        spec: list[tuple[str, tuple[int, ...]]] = [
+            ("embed", (v, d)),
+            ("pos", (t, d)),
+        ]
+        for l in range(self.n_layers):
+            spec += [
+                (f"l{l}.ln_g", (d,)), (f"l{l}.ln_b", (d,)),
+                (f"l{l}.wq", (d, d)), (f"l{l}.wk", (d, d)),
+                (f"l{l}.wv", (d, d)), (f"l{l}.wo", (d, d)),
+                (f"l{l}.w1", (d, dff)), (f"l{l}.b1", (dff,)),
+                (f"l{l}.w2", (dff, d)), (f"l{l}.b2", (d,)),
+            ]
+        spec += [("lnf_g", (d,)), ("lnf_b", (d,)), ("head", (d, v))]
+        return spec
+
+    def init_params(self, seed: int = 0) -> dict[str, np.ndarray]:
+        rng = init_rng(seed)
+        out: dict[str, np.ndarray] = {}
+        for name, shape in self.param_spec():
+            if name.endswith(("ln_g", "lnf_g")):
+                out[name] = np.ones(shape, np.float32)
+            elif name.endswith(("ln_b", "lnf_b", ".b1", ".b2")):
+                out[name] = np.zeros(shape, np.float32)
+            else:
+                out[name] = glorot(rng, shape) * (0.5 if ".w" in name else 1.0)
+        return out
+
+    # ---- TP2 shard spec -------------------------------------------------
+
+    def tp_block_spec(self) -> list[tuple[str, tuple[int, ...]]]:
+        """Per-shard parameters of ONE block (half heads + half MLP)."""
+        d, dff2 = self.d_model, self.d_ff // 2
+        dh2 = self.d_model // 2
+        return [
+            ("ln_g", (d,)), ("ln_b", (d,)),
+            ("wq", (d, dh2)), ("wk", (d, dh2)), ("wv", (d, dh2)),
+            ("wo", (dh2, d)),
+            ("w1", (d, dff2)), ("b1", (dff2,)),
+            ("w2", (dff2, d)), ("b2", (d,)),
+        ]
+
+    def tp_shard_block(self, params: dict, layer: int, shard: int) -> dict:
+        """Slice full-model params into a TP shard's block params.
+
+        Head shard s takes heads [s*H/2, (s+1)*H/2) — i.e. columns
+        [s*d/2, (s+1)*d/2) of wq/wk/wv and rows of wo; MLP shard s takes
+        hidden units [s*dff/2, ...).  The bias b2 is applied once (shard 0)
+        since deltas are summed.
+        """
+        d, dff = self.d_model, self.d_ff
+        c0, c1 = shard * d // 2, (shard + 1) * d // 2
+        f0, f1 = shard * dff // 2, (shard + 1) * dff // 2
+        p = {k.split(".", 1)[1]: v for k, v in params.items()
+             if k.startswith(f"l{layer}.")}
+        return {
+            "ln_g": p["ln_g"], "ln_b": p["ln_b"],
+            "wq": p["wq"][:, c0:c1], "wk": p["wk"][:, c0:c1],
+            "wv": p["wv"][:, c0:c1], "wo": p["wo"][c0:c1, :],
+            "w1": p["w1"][:, f0:f1], "b1": p["b1"][f0:f1],
+            "w2": p["w2"][f0:f1, :],
+            "b2": p["b2"] if shard == 0 else np.zeros_like(p["b2"]),
+        }
+
+
+# ---- forward pieces ------------------------------------------------------
+
+
+def _split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def _block_delta(cfg: LlmConfig, p: dict, x, k_cache, v_cache, pos,
+                 n_heads: int, *, phase: str, use_pallas: bool):
+    """delta = attn(ln(x)) + mlp(ln(x)) for one (possibly sharded) block.
+
+    Returns (delta, new_k_cache, new_v_cache) with caches [B, H, T, Dh].
+    ``pos``: int32 scalar — write position of the new K/V (0 for prefill).
+    """
+    h = layernorm(x, p["ln_g"], p["ln_b"])
+    if use_pallas:
+        dense = linear
+    else:
+        dense = ref.linear_ref
+    zeros = lambda n: jnp.zeros((n,), jnp.float32)
+    q = dense(h, p["wq"], zeros(p["wq"].shape[1]))
+    k = dense(h, p["wk"], zeros(p["wk"].shape[1]))
+    v = dense(h, p["wv"], zeros(p["wv"].shape[1]))
+    qh = _split_heads(q, n_heads)
+    kh = _split_heads(k, n_heads)
+    vh = _split_heads(v, n_heads)
+
+    if phase == "prefill":
+        s = x.shape[1]
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, kh, (0, 0, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, vh, (0, 0, 0, 0))
+        if use_pallas:
+            attn = flash_attention(qh, kh, vh, causal=True,
+                                   bq=min(s, 32), bk=min(s, 32))
+        else:
+            attn = ref.attention_ref(qh, kh, vh, causal=True)
+    else:  # decode: write new K/V at ``pos`` then attend over pos+1 entries
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, kh, (0, 0, pos, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, vh, (0, 0, pos, 0))
+        kv_len = pos + 1
+        if use_pallas:
+            attn = flash_attention(qh, k_cache, v_cache, kv_len=kv_len,
+                                   causal=False, bq=1,
+                                   bk=min(cfg.max_seq, 32))
+        else:
+            attn = ref.attention_ref(qh, k_cache, v_cache, causal=False,
+                                     kv_len=kv_len)
+
+    attn_out = dense(_merge_heads(attn), p["wo"],
+                     jnp.zeros((p["wo"].shape[1],), jnp.float32))
+    m = dense(h, p["w1"], p["b1"])
+    m = jax.nn.gelu(m)
+    mlp_out = dense(m, p["w2"], p["b2"])
+    return attn_out + mlp_out, k_cache, v_cache
+
+
+def _embed(cfg: LlmConfig, p: dict, tokens: jnp.ndarray, pos0) -> jnp.ndarray:
+    """tokens [B, S] int32, pos0 scalar — embedding + positional slice."""
+    s = tokens.shape[1]
+    x = jnp.take(p["embed"], tokens, axis=0)
+    posv = jax.lax.dynamic_slice(p["pos"], (pos0, 0), (s, cfg.d_model))
+    return x + posv[None]
+
+
+def _head(cfg: LlmConfig, p: dict, x: jnp.ndarray,
+          use_pallas: bool) -> jnp.ndarray:
+    """Final norm + LM head on the LAST position: x [B, S, d] -> [B, vocab]."""
+    h = layernorm(x[:, -1, :], p["lnf_g"], p["lnf_b"])
+    dense = linear if use_pallas else ref.linear_ref
+    return dense(h, p["head"], jnp.zeros((cfg.vocab,), jnp.float32))
+
+
+# ---- full-model entry points (AOT roots) ---------------------------------
+
+
+def prefill(cfg: LlmConfig, params: dict, tokens: jnp.ndarray,
+            *, use_pallas: bool = True):
+    """tokens [B, S] -> (logits [B, vocab], k_cache, v_cache [L,B,H,T,Dh])."""
+    b, s = tokens.shape
+    shape = (cfg.n_layers, b, cfg.n_heads, cfg.max_seq, cfg.d_head)
+    kc = jnp.zeros(shape, jnp.float32)
+    vc = jnp.zeros(shape, jnp.float32)
+    x = _embed(cfg, params, tokens, 0)
+    for l in range(cfg.n_layers):
+        p = {k.split(".", 1)[1]: v for k, v in params.items()
+             if k.startswith(f"l{l}.")}
+        delta, kl, vl = _block_delta(cfg, p, x, kc[l], vc[l], 0,
+                                     cfg.n_heads, phase="prefill",
+                                     use_pallas=use_pallas)
+        x = x + delta
+        kc = kc.at[l].set(kl)
+        vc = vc.at[l].set(vl)
+    return _head(cfg, params, x, use_pallas), kc, vc
+
+
+def decode(cfg: LlmConfig, params: dict, token: jnp.ndarray,
+           cache_len: jnp.ndarray, kc: jnp.ndarray, vc: jnp.ndarray,
+           *, use_pallas: bool = True):
+    """One decode step.
+
+    token [B] int32, cache_len scalar int32, caches [L,B,H,T,Dh]
+    -> (logits [B, vocab], new_kc, new_vc).
+    """
+    x = _embed(cfg, params, token[:, None], cache_len)
+    for l in range(cfg.n_layers):
+        p = {k.split(".", 1)[1]: v for k, v in params.items()
+             if k.startswith(f"l{l}.")}
+        delta, kl, vl = _block_delta(cfg, p, x, kc[l], vc[l], cache_len,
+                                     cfg.n_heads, phase="decode",
+                                     use_pallas=use_pallas)
+        x = x + delta
+        kc = kc.at[l].set(kl)
+        vc = vc.at[l].set(vl)
+    return _head(cfg, params, x, use_pallas), kc, vc
+
+
+# ---- TP2: one block per shard (Rust sums the deltas) ----------------------
+
+
+def tp_block(cfg: LlmConfig, shard_params: dict, x: jnp.ndarray,
+             k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+             cache_len: jnp.ndarray, *, phase: str,
+             use_pallas: bool = True):
+    """One TP shard of one block: x [B,S,d], caches [B, H/2, T, Dh].
+
+    Returns (delta [B,S,d], new_k, new_v).  The coordinator computes
+    x_next = x + delta_shard0 + delta_shard1 — its one combine per block.
+    """
+    return _block_delta(cfg, shard_params, x, k_cache, v_cache, cache_len,
+                        cfg.n_heads // 2, phase=phase, use_pallas=use_pallas)
+
+
+def embed_root(cfg: LlmConfig, params: dict, tokens: jnp.ndarray,
+               pos0: jnp.ndarray):
+    """AOT root: embedding only (TP path's first stage)."""
+    return _embed(cfg, params, tokens, pos0)
+
+
+def head_root(cfg: LlmConfig, params: dict, x: jnp.ndarray,
+              *, use_pallas: bool = True):
+    """AOT root: final norm + head only (TP path's last stage)."""
+    return _head(cfg, params, x, use_pallas)
+
+
+# ---- PP2: two stages ------------------------------------------------------
+
+
+def pp_stage(cfg: LlmConfig, params: dict, stage: int, x_or_tokens,
+             cache_len, kc, vc, *, phase: str, use_pallas: bool = True):
+    """Pipeline stage over layers [lo, hi); caches [L/2, B, H, T, Dh].
+
+    Stage 0 input is tokens [B, S] (prefill) / token [B] (decode); stage 1
+    input is the hidden state [B, S, d].  Stage 1 returns logits.
+    """
+    half = cfg.n_layers // 2
+    lo, hi = (0, half) if stage == 0 else (half, cfg.n_layers)
+    if stage == 0:
+        toks = x_or_tokens if phase == "prefill" else x_or_tokens[:, None]
+        x = _embed(cfg, params, toks, 0 if phase == "prefill" else cache_len)
+    else:
+        x = x_or_tokens
+    pos = 0 if phase == "prefill" else cache_len
+    for i, l in enumerate(range(lo, hi)):
+        p = {k.split(".", 1)[1]: v for k, v in params.items()
+             if k.startswith(f"l{l}.")}
+        delta, kl, vl = _block_delta(cfg, p, x, kc[i], vc[i], pos,
+                                     cfg.n_heads, phase=phase,
+                                     use_pallas=use_pallas)
+        x = x + delta
+        kc = kc.at[i].set(kl)
+        vc = vc.at[i].set(vl)
+    if stage == 1:
+        return _head(cfg, params, x, use_pallas), kc, vc
+    return x, kc, vc
+
+
+def pp_stage_spec(cfg: LlmConfig, stage: int) -> list[tuple[str, tuple]]:
+    """Parameter spec for one PP stage (subset of the full spec)."""
+    half = cfg.n_layers // 2
+    lo, hi = (0, half) if stage == 0 else (half, cfg.n_layers)
+    layers = {f"l{l}." for l in range(lo, hi)}
+    keep: list[tuple[str, tuple]] = []
+    for name, shape in cfg.param_spec():
+        if name in ("embed", "pos"):
+            if stage == 0:
+                keep.append((name, shape))
+        elif name in ("lnf_g", "lnf_b", "head"):
+            if stage == 1:
+                keep.append((name, shape))
+        elif any(name.startswith(pfx) for pfx in layers):
+            keep.append((name, shape))
+    return keep
+
+
+def reference_generate(cfg: LlmConfig, params: dict, prompt: np.ndarray,
+                       n_new: int, *, use_pallas: bool = False) -> np.ndarray:
+    """Greedy generation oracle used by python tests and the Rust runtime
+    golden files: prefill then n_new greedy decode steps."""
+    logits, kc, vc = prefill(cfg, params, jnp.asarray(prompt),
+                             use_pallas=use_pallas)
+    toks = []
+    cache_len = prompt.shape[1]
+    cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    toks.append(np.asarray(cur))
+    for _ in range(n_new - 1):
+        logits, kc, vc = decode(cfg, params, cur,
+                                jnp.asarray(cache_len, jnp.int32), kc, vc,
+                                use_pallas=use_pallas)
+        cache_len += 1
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        toks.append(np.asarray(cur))
+    return np.stack(toks, axis=1)

@@ -1,0 +1,88 @@
+"""L2: UNet-mini semantic segmentation (the paper's case-study-2 family).
+
+Encoder/decoder with skip connections on NHWC images.  Spatial 3x3 convs
+use lax.conv_general_dilated (XLA fuses these well); every 1x1 conv and the
+bottleneck channel-mixing route through the L1 Pallas matmul (a 1x1 conv IS
+a matmul over the channel axis — the classic im2col degenerate case), so
+the compiled artifact exercises the kernel.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..kernels.matmul import linear
+from ..kernels import ref
+from .common import glorot, init_rng
+
+
+class UnetConfig:
+    def __init__(self, size=64, in_ch=3, base=8, n_classes=8):
+        self.size = size
+        self.in_ch = in_ch
+        self.base = base
+        self.n_classes = n_classes
+
+    def param_spec(self) -> list[tuple[str, tuple[int, ...]]]:
+        c, i, n = self.base, self.in_ch, self.n_classes
+        return [
+            ("enc1.w", (3, 3, i, c)), ("enc1.b", (c,)),
+            ("enc2.w", (3, 3, c, 2 * c)), ("enc2.b", (2 * c,)),
+            ("mid.w", (3, 3, 2 * c, 4 * c)), ("mid.b", (4 * c,)),
+            # bottleneck channel mixer: 1x1 conv == matmul (Pallas)
+            ("mix.w", (4 * c, 4 * c)), ("mix.b", (4 * c,)),
+            ("dec2.w", (3, 3, 4 * c + 2 * c, 2 * c)), ("dec2.b", (2 * c,)),
+            ("dec1.w", (3, 3, 2 * c + c, c)), ("dec1.b", (c,)),
+            # classifier head: 1x1 conv == matmul (Pallas)
+            ("out.w", (c, n)), ("out.b", (n,)),
+        ]
+
+    def init_params(self, seed: int = 1) -> dict[str, np.ndarray]:
+        rng = init_rng(seed)
+        out = {}
+        for name, shape in self.param_spec():
+            out[name] = (np.zeros(shape, np.float32) if name.endswith(".b")
+                         else glorot(rng, shape))
+        return out
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def _upsample(x):
+    b, h, w, c = x.shape
+    return jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
+
+
+def _pointwise(x, w, b, use_pallas: bool):
+    """1x1 conv as a Pallas matmul over the channel axis."""
+    bsz, h, wd, c = x.shape
+    dense = linear if use_pallas else ref.linear_ref
+    y = dense(x.reshape(-1, c), w, b)
+    return y.reshape(bsz, h, wd, w.shape[-1])
+
+
+def forward(cfg: UnetConfig, params: dict, x: jnp.ndarray,
+            *, use_pallas: bool = True) -> jnp.ndarray:
+    """x [B, S, S, in_ch] -> per-pixel logits [B, S, S, n_classes]."""
+    p = params
+    e1 = jax.nn.relu(_conv(x, p["enc1.w"], p["enc1.b"]))          # S
+    e2 = jax.nn.relu(_conv(_pool(e1), p["enc2.w"], p["enc2.b"]))  # S/2
+    m = jax.nn.relu(_conv(_pool(e2), p["mid.w"], p["mid.b"]))     # S/4
+    m = jax.nn.relu(_pointwise(m, p["mix.w"], p["mix.b"], use_pallas))
+    d2 = jnp.concatenate([_upsample(m), e2], axis=-1)             # S/2
+    d2 = jax.nn.relu(_conv(d2, p["dec2.w"], p["dec2.b"]))
+    d1 = jnp.concatenate([_upsample(d2), e1], axis=-1)            # S
+    d1 = jax.nn.relu(_conv(d1, p["dec1.w"], p["dec1.b"]))
+    return _pointwise(d1, p["out.w"], p["out.b"], use_pallas)

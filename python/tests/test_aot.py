@@ -1,0 +1,118 @@
+"""AOT pipeline tests: registry integrity, HLO lowering, manifest shape.
+
+These guard the python->rust interchange contract: tensor ordering in the
+weight blobs, manifest entries, and that lowering produces parseable HLO
+text (the format xla_extension 0.5.1's text parser accepts).
+"""
+
+import json
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from compile import aot
+from compile import model as registry
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_registry_names_unique():
+    names = [v.name for v in registry.build_variants()]
+    assert len(names) == len(set(names))
+    assert len(names) >= 20
+
+
+def test_registry_param_tensors_exist_in_blob():
+    """Every variant's leading args must be resolvable from its blob."""
+    for v in registry.build_variants():
+        spec, params = registry.WEIGHT_BLOBS[v.weights_blob]()
+        have = set(params)
+        for n, shape in v.param_spec:
+            key = n if n in have else f"l0.s0.{n}"
+            assert key in have, (v.name, n)
+            src = params[key]
+            assert tuple(src.shape) == tuple(shape), (v.name, n)
+
+
+def test_weight_blob_offsets_contiguous(tmp_path):
+    blobs = aot.write_weight_blobs(str(tmp_path))
+    for name, blob in blobs.items():
+        off = 0
+        for t in blob["tensors"]:
+            assert t["offset"] == off
+            assert t["nbytes"] == int(np.prod(t["shape"])) * 4
+            off += t["nbytes"]
+        assert blob["total_bytes"] == off
+        path = tmp_path / blob["file"]
+        assert path.stat().st_size == off
+
+
+def test_lower_one_variant_produces_hlo_text():
+    v = registry.variant_by_name("classify.bs1")
+    lowered = jax.jit(v.fn).lower(*v.example_args())
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ROOT" in text
+    # return_tuple=True: root computation yields a tuple
+    assert "tuple(" in text or ") tuple" in text or "(f32" in text
+
+
+def test_manifest_entry_schema():
+    v = registry.variant_by_name("llm.decode.bs2")
+    e = registry.manifest_entry(v)
+    assert e["hlo"] == "llm.decode.bs2.hlo.txt"
+    assert e["weights_blob"] == "llm"
+    names = [i["name"] for i in e["inputs"]]
+    assert names == ["token", "cache_len", "k_cache", "v_cache"]
+    assert e["inputs"][0]["dtype"] == "i32"
+    assert e["outputs"][0]["name"] == "logits"
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run make artifacts)")
+class TestBuiltArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_every_artifact_file_exists(self, manifest):
+        for e in manifest["artifacts"]:
+            p = os.path.join(ART, e["hlo"])
+            assert os.path.exists(p), e["name"]
+            with open(p) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), e["name"]
+
+    def test_weight_blob_sizes(self, manifest):
+        for name, blob in manifest["weight_blobs"].items():
+            p = os.path.join(ART, blob["file"])
+            assert os.path.getsize(p) == blob["total_bytes"], name
+
+    def test_golden_fixture_sizes(self, manifest):
+        for g in manifest["golden"]:
+            p = os.path.join(ART, g["file"])
+            want = sum(t["nbytes"] for t in g["tensors"])
+            assert os.path.getsize(p) == want, g["artifact"]
+
+    def test_golden_outputs_are_finite(self, manifest):
+        for g in manifest["golden"]:
+            if g["artifact"] == "llm.generate.bs2":
+                continue
+            p = os.path.join(ART, g["file"])
+            raw = open(p, "rb").read()
+            for t in g["tensors"]:
+                if t["role"] != "output" or t["dtype"] != "f32":
+                    continue
+                arr = np.frombuffer(
+                    raw[t["offset"]:t["offset"] + t["nbytes"]], np.float32)
+                assert np.isfinite(arr).all(), (g["artifact"], t["name"])
+
+    def test_kernel_report_within_vmem_budget(self, manifest):
+        r = manifest["kernel_report"]
+        budget = r["vmem_budget_bytes"]
+        for k, v in r.items():
+            if isinstance(v, dict) and "vmem_double_buffered_bytes" in v:
+                assert v["vmem_double_buffered_bytes"] <= budget, k

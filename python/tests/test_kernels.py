@@ -1,0 +1,171 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+This is the core correctness signal for the compiled artifacts: the HLO the
+Rust runtime executes is lowered from exactly these kernels, so
+kernel==oracle here plus the Rust golden tests closes the loop end-to-end.
+Hypothesis sweeps shapes; fixed cases pin the shapes the AOT registry uses.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import flash_attention
+from compile.kernels.matmul import _pick_block, linear, matmul, vmem_report
+
+RTOL, ATOL = 1e-4, 1e-4
+
+
+def _arr(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(scale=scale, size=shape), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# matmul
+# --------------------------------------------------------------------------
+
+dims = st.sampled_from([8, 16, 24, 32, 64, 128, 256])
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2 ** 16))
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _arr(rng, (m, k)), _arr(rng, (k, n))
+    np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w),
+                               rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(bm=st.sampled_from([8, 16, 32, 64]),
+       bk=st.sampled_from([8, 16, 32, 64]),
+       bn=st.sampled_from([8, 16, 32, 64]),
+       seed=st.integers(0, 2 ** 16))
+def test_matmul_block_size_invariant(bm, bk, bn, seed):
+    """Result must not depend on the chosen tiling."""
+    rng = np.random.default_rng(seed)
+    x, w = _arr(rng, (64, 64)), _arr(rng, (64, 64))
+    got = matmul(x, w, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_matmul_registry_shapes():
+    """The exact shapes the AOT LLM variants feed the kernel."""
+    rng = np.random.default_rng(0)
+    for m, k, n in [(64, 128, 128), (64, 128, 256), (2, 128, 512),
+                    (8, 128, 128), (1, 128, 512)]:
+        if m % _pick_block(m) != 0:
+            continue
+        x, w = _arr(rng, (m, k)), _arr(rng, (k, n))
+        np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w),
+                                   rtol=RTOL, atol=ATOL)
+
+
+def test_linear_bias_broadcast_rank3():
+    rng = np.random.default_rng(1)
+    x = _arr(rng, (2, 32, 128))
+    w, b = _arr(rng, (128, 256)), _arr(rng, (256,))
+    np.testing.assert_allclose(linear(x, w, b), ref.linear_ref(x, w, b),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_matmul_large_values_f32_accumulation():
+    """Accumulation must be f32: large-magnitude inputs stay accurate."""
+    rng = np.random.default_rng(2)
+    x, w = _arr(rng, (128, 128), scale=100.0), _arr(rng, (128, 128), scale=100.0)
+    np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w),
+                               rtol=1e-5)
+
+
+def test_vmem_report_structure():
+    r = vmem_report(256, 256, 256)
+    assert r["mxu_shaped"] is True  # 256 tiles as 2x2 grid of 128-blocks
+    r = vmem_report(24, 24, 24)
+    assert r["mxu_shaped"] is False  # falls back to 8-blocks
+    r = vmem_report(128, 128, 128)
+    assert r["mxu_shaped"] is True
+    assert r["vmem_per_step_bytes"] == 3 * 128 * 128 * 4
+    assert r["vmem_double_buffered_bytes"] < 16 * 1024 * 1024
+
+
+def test_pick_block_divides():
+    for d in [8, 24, 40, 64, 128, 384, 512, 1000]:
+        b = _pick_block(d)
+        assert d % b == 0
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.sampled_from([1, 2]), h=st.sampled_from([1, 2, 4]),
+       s=st.sampled_from([8, 16, 32, 64]),
+       d=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 2 ** 16))
+def test_attention_prefill_causal(b, h, s, d, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (_arr(rng, (b, h, s, d)) for _ in range(3))
+    got = flash_attention(q, k, v, causal=True, bq=min(s, 16), bk=min(s, 16))
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(kv_len=st.integers(1, 64), seed=st.integers(0, 2 ** 16),
+       bk=st.sampled_from([8, 16, 32, 64]))
+def test_attention_decode_kv_len_mask(kv_len, seed, bk):
+    """Decode: q_len=1 against a 64-slot cache with kv_len live entries."""
+    rng = np.random.default_rng(seed)
+    q = _arr(rng, (2, 4, 1, 16))
+    k, v = _arr(rng, (2, 4, 64, 16)), _arr(rng, (2, 4, 64, 16))
+    got = flash_attention(q, k, v, kv_len=kv_len, causal=False, bq=1, bk=bk)
+    want = ref.attention_ref(q, k, v, causal=False, kv_len=kv_len)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_attention_block_split_invariant():
+    """Online softmax must be exact regardless of how K is blocked."""
+    rng = np.random.default_rng(3)
+    q, k, v = (_arr(rng, (1, 2, 32, 16)) for _ in range(3))
+    full = flash_attention(q, k, v, causal=True, bq=32, bk=32)
+    split = flash_attention(q, k, v, causal=True, bq=32, bk=8)
+    np.testing.assert_allclose(full, split, rtol=1e-5, atol=1e-5)
+
+
+def test_attention_kv_len_zero_rows_are_zero():
+    """Fully-masked rows must not NaN (the l==0 guard)."""
+    rng = np.random.default_rng(4)
+    q = _arr(rng, (1, 1, 1, 8))
+    k, v = _arr(rng, (1, 1, 16, 8)), _arr(rng, (1, 1, 16, 8))
+    got = flash_attention(q, k, v, kv_len=0, causal=False, bq=1, bk=8)
+    assert not np.any(np.isnan(np.asarray(got)))
+    np.testing.assert_allclose(got, np.zeros_like(got), atol=1e-6)
+
+
+def test_attention_extreme_logits_stable():
+    """Large-scale q/k stress the online-softmax max tracking."""
+    rng = np.random.default_rng(5)
+    q = _arr(rng, (1, 1, 8, 8), scale=30.0)
+    k = _arr(rng, (1, 1, 8, 8), scale=30.0)
+    v = _arr(rng, (1, 1, 8, 8))
+    got = flash_attention(q, k, v, causal=True, bq=8, bk=8)
+    want = ref.attention_ref(q, k, v, causal=True)
+    assert not np.any(np.isnan(np.asarray(got)))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_attention_causality():
+    """Perturbing future keys must not change earlier outputs."""
+    rng = np.random.default_rng(6)
+    q, k, v = (_arr(rng, (1, 2, 16, 8)) for _ in range(3))
+    base = np.asarray(flash_attention(q, k, v, causal=True, bq=8, bk=8))
+    k2 = k.at[:, :, 12:].set(99.0)
+    v2 = v.at[:, :, 12:].set(-99.0)
+    pert = np.asarray(flash_attention(q, k2, v2, causal=True, bq=8, bk=8))
+    np.testing.assert_allclose(base[:, :, :12], pert[:, :, :12],
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(base[:, :, 12:], pert[:, :, 12:])

@@ -1,0 +1,249 @@
+"""L2 correctness: model graphs, pallas-vs-ref paths, and MP compositions.
+
+The MP composition tests are the critical ones for the Rust coordinator:
+TP2 (sum of shard deltas) and PP2 (stage piping) must equal the full model
+bit-for-bit-ish, because the Rust runtime re-implements exactly those
+compositions over separate HLO executables.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as registry
+from compile.models import tiny_llm, unet, classifier
+
+CFG = registry.LLM
+RTOL, ATOL = 2e-4, 2e-4
+
+
+@pytest.fixture(scope="module")
+def llm_params():
+    return {k: jnp.asarray(v) for k, v in CFG.init_params(seed=0).items()}
+
+
+@pytest.fixture(scope="module")
+def prompt():
+    rng = np.random.default_rng(11)
+    return jnp.asarray(
+        rng.integers(0, CFG.vocab, size=(2, CFG.prefill_len)), jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# pallas path == ref path
+# --------------------------------------------------------------------------
+
+def test_prefill_pallas_matches_ref(llm_params, prompt):
+    lp, kp, vp = tiny_llm.prefill(CFG, llm_params, prompt, use_pallas=True)
+    lr, kr, vr = tiny_llm.prefill(CFG, llm_params, prompt, use_pallas=False)
+    np.testing.assert_allclose(lp, lr, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(kp, kr, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(vp, vr, rtol=RTOL, atol=ATOL)
+
+
+def test_decode_pallas_matches_ref(llm_params, prompt):
+    _, kc, vc = tiny_llm.prefill(CFG, llm_params, prompt, use_pallas=False)
+    tok = jnp.asarray([3, 7], jnp.int32)
+    cl = jnp.asarray(CFG.prefill_len, jnp.int32)
+    lp, kp, vp = tiny_llm.decode(CFG, llm_params, tok, cl, kc, vc,
+                                 use_pallas=True)
+    lr, kr, vr = tiny_llm.decode(CFG, llm_params, tok, cl, kc, vc,
+                                 use_pallas=False)
+    np.testing.assert_allclose(lp, lr, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(kp, kr, rtol=RTOL, atol=ATOL)
+
+
+# --------------------------------------------------------------------------
+# decode chain consistency: decode(t) after prefill(1..t-1) == prefill(1..t)
+# --------------------------------------------------------------------------
+
+def test_decode_consistent_with_prefill(llm_params):
+    rng = np.random.default_rng(12)
+    toks = rng.integers(0, CFG.vocab, size=(1, 8)).astype(np.int32)
+
+    # full prefill of 8 tokens (padded into the standard prefill window is
+    # not possible here: prefill length is static) — so compare prefill(8)
+    # against prefill(7) + decode of token 8 using a custom small config.
+    cfg = tiny_llm.LlmConfig(vocab=64, d_model=32, n_heads=2, n_layers=2,
+                             d_ff=64, max_seq=16, prefill_len=8)
+    params = {k: jnp.asarray(v) for k, v in cfg.init_params(seed=3).items()}
+    logits_full, _, _ = tiny_llm.prefill(cfg, params, jnp.asarray(toks),
+                                         use_pallas=False)
+
+    cfg7 = tiny_llm.LlmConfig(vocab=64, d_model=32, n_heads=2, n_layers=2,
+                              d_ff=64, max_seq=16, prefill_len=7)
+    logits7, kc, vc = tiny_llm.prefill(cfg7, params,
+                                       jnp.asarray(toks[:, :7]),
+                                       use_pallas=False)
+    logits_step, _, _ = tiny_llm.decode(cfg7, params,
+                                        jnp.asarray(toks[:, 7]),
+                                        jnp.asarray(7, jnp.int32), kc, vc,
+                                        use_pallas=False)
+    np.testing.assert_allclose(logits_full, logits_step, rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# TP2 composition == full model (what the Rust coordinator implements)
+# --------------------------------------------------------------------------
+
+def _tp2_forward(params_np, prompt, phase, state=None):
+    """Re-implement the Rust TP2 orchestration in python for validation."""
+    full = CFG.init_params(seed=0)
+    if phase == "prefill":
+        x = tiny_llm.embed_root(CFG, params_np, prompt,
+                                jnp.asarray(0, jnp.int32))
+        cl = jnp.asarray(0, jnp.int32)
+        b = prompt.shape[0]
+        caches = {
+            (l, s): (jnp.zeros((b, CFG.n_heads // 2, CFG.max_seq,
+                                CFG.d_head), jnp.float32),
+                     jnp.zeros((b, CFG.n_heads // 2, CFG.max_seq,
+                                CFG.d_head), jnp.float32))
+            for l in range(CFG.n_layers) for s in (0, 1)}
+    else:
+        x, cl, caches = state
+        x = tiny_llm.embed_root(CFG, params_np, x, cl)
+
+    for l in range(CFG.n_layers):
+        deltas = []
+        for s in (0, 1):
+            blk = {k: jnp.asarray(v)
+                   for k, v in CFG.tp_shard_block(full, l, s).items()}
+            kc, vc = caches[(l, s)]
+            d, kc, vc = tiny_llm.tp_block(CFG, blk, x, kc, vc, cl,
+                                          phase=phase, use_pallas=False)
+            caches[(l, s)] = (kc, vc)
+            deltas.append(d)
+        x = x + deltas[0] + deltas[1]  # the coordinator's one combine/block
+    logits = tiny_llm.head_root(CFG, params_np, x, use_pallas=False)
+    return logits, caches, cl
+
+
+def test_tp2_composition_matches_full(llm_params, prompt):
+    logits_full, _, _ = tiny_llm.prefill(CFG, llm_params, prompt,
+                                         use_pallas=False)
+    logits_tp, caches, _ = _tp2_forward(llm_params, prompt, "prefill")
+    np.testing.assert_allclose(logits_tp, logits_full, rtol=1e-3, atol=1e-3)
+
+
+def test_tp2_decode_composition_matches_full(llm_params, prompt):
+    # full-model reference path
+    _, kc, vc = tiny_llm.prefill(CFG, llm_params, prompt, use_pallas=False)
+    tok = jnp.asarray([5, 9], jnp.int32)
+    cl = jnp.asarray(CFG.prefill_len, jnp.int32)
+    logits_full, _, _ = tiny_llm.decode(CFG, llm_params, tok, cl, kc, vc,
+                                        use_pallas=False)
+    # TP path: prefill to build shard caches, then one decode step
+    _, caches, _ = _tp2_forward(llm_params, prompt, "prefill")
+    logits_tp, _, _ = _tp2_forward(
+        llm_params, None, "decode", state=(tok[:, None], cl, caches))
+    np.testing.assert_allclose(logits_tp, logits_full, rtol=1e-3, atol=1e-3)
+
+
+def test_tp_shard_block_shapes():
+    full = CFG.init_params(seed=0)
+    blk = CFG.tp_shard_block(full, 0, 1)
+    want = dict(CFG.tp_block_spec())
+    assert set(blk) == set(want)
+    for k, v in blk.items():
+        assert tuple(v.shape) == tuple(want[k]), k
+
+
+# --------------------------------------------------------------------------
+# PP2 composition == full model
+# --------------------------------------------------------------------------
+
+def test_pp2_composition_matches_full(llm_params, prompt):
+    logits_full, _, _ = tiny_llm.prefill(CFG, llm_params, prompt,
+                                         use_pallas=False)
+    half = CFG.n_layers // 2
+    b = prompt.shape[0]
+    zc = lambda: jnp.zeros((half, b, CFG.n_heads, CFG.max_seq, CFG.d_head),
+                           jnp.float32)
+    cl = jnp.asarray(0, jnp.int32)
+    x, k0, v0 = tiny_llm.pp_stage(CFG, llm_params, 0, prompt, cl, zc(), zc(),
+                                  phase="prefill", use_pallas=False)
+    logits_pp, k1, v1 = tiny_llm.pp_stage(CFG, llm_params, 1, x, cl, zc(),
+                                          zc(), phase="prefill",
+                                          use_pallas=False)
+    np.testing.assert_allclose(logits_pp, logits_full, rtol=1e-3, atol=1e-3)
+
+    # and one decode step through the pipe
+    _, kc, vc = tiny_llm.prefill(CFG, llm_params, prompt, use_pallas=False)
+    tok = jnp.asarray([1, 2], jnp.int32)
+    dcl = jnp.asarray(CFG.prefill_len, jnp.int32)
+    logits_ref, _, _ = tiny_llm.decode(CFG, llm_params, tok, dcl, kc, vc,
+                                       use_pallas=False)
+    x, k0, v0 = tiny_llm.pp_stage(CFG, llm_params, 0, tok, dcl, k0, v0,
+                                  phase="decode", use_pallas=False)
+    logits_pp, _, _ = tiny_llm.pp_stage(CFG, llm_params, 1, x, dcl, k1, v1,
+                                        phase="decode", use_pallas=False)
+    np.testing.assert_allclose(logits_pp, logits_ref, rtol=1e-3, atol=1e-3)
+
+
+def test_pp_stage_spec_partition():
+    """Stage specs must partition the full spec exactly."""
+    s0 = set(n for n, _ in tiny_llm.pp_stage_spec(CFG, 0))
+    s1 = set(n for n, _ in tiny_llm.pp_stage_spec(CFG, 1))
+    full = set(n for n, _ in CFG.param_spec())
+    assert s0 | s1 == full
+    assert not (s0 & s1)
+
+
+# --------------------------------------------------------------------------
+# vision models
+# --------------------------------------------------------------------------
+
+def test_unet_pallas_matches_ref():
+    cfg = registry.UNET
+    params = {k: jnp.asarray(v) for k, v in cfg.init_params(seed=1).items()}
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.normal(size=(2, cfg.size, cfg.size, cfg.in_ch)),
+                    jnp.float32)
+    got = unet.forward(cfg, params, x, use_pallas=True)
+    want = unet.forward(cfg, params, x, use_pallas=False)
+    assert got.shape == (2, cfg.size, cfg.size, cfg.n_classes)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_classifier_pallas_matches_ref():
+    cfg = registry.CLS
+    params = {k: jnp.asarray(v) for k, v in cfg.init_params(seed=2).items()}
+    rng = np.random.default_rng(14)
+    x = jnp.asarray(rng.normal(size=(4, cfg.size, cfg.size, cfg.in_ch)),
+                    jnp.float32)
+    got = classifier.forward(cfg, params, x, use_pallas=True)
+    want = classifier.forward(cfg, params, x, use_pallas=False)
+    assert got.shape == (4, cfg.n_classes)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("split", classifier.SPLIT_POINTS)
+def test_classifier_device_split_composition(split):
+    """head(x) |> tail == forward — the Fig 12b device-server pipeline."""
+    cfg = registry.CLS
+    params = {k: jnp.asarray(v) for k, v in cfg.init_params(seed=2).items()}
+    rng = np.random.default_rng(15)
+    x = jnp.asarray(rng.normal(size=(1, cfg.size, cfg.size, cfg.in_ch)),
+                    jnp.float32)
+    act = classifier.head(cfg, params, x, split)
+    assert act.shape == cfg.split_activation_shape(split, 1)
+    got = classifier.tail(cfg, params, act, split, use_pallas=False)
+    want = classifier.forward(cfg, params, x, use_pallas=False)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# greedy generation oracle (shared with the Rust golden)
+# --------------------------------------------------------------------------
+
+def test_reference_generate_deterministic(llm_params):
+    rng = np.random.default_rng(42)
+    prompt = rng.integers(0, CFG.vocab,
+                          size=(2, CFG.prefill_len)).astype(np.int32)
+    params = CFG.init_params(seed=0)
+    a = tiny_llm.reference_generate(CFG, params, prompt, n_new=4)
+    b = tiny_llm.reference_generate(CFG, params, prompt, n_new=4)
+    assert a.shape == (2, 4)
+    assert (a == b).all()
+    assert (a >= 0).all() and (a < CFG.vocab).all()

@@ -1,0 +1,77 @@
+//! Ablations over EPARA's design-choice parameters (DESIGN.md §Design):
+//!
+//! * maximum offloading count (§4.1: default 5 — "each offloading attempt
+//!   has a high likelihood of being processed");
+//! * placement refresh interval (§3.4 coarse granularity vs Fig. 3f
+//!   model-load cost);
+//! * the ε-stage (cross-server parallelism) on/off;
+//! * device registration on/off.
+//!
+//! Regenerate with:  cargo bench --bench ablation_params
+
+use epara::cluster::EdgeCloud;
+use epara::handler::HandlerConfig;
+use epara::profile::zoo;
+use epara::sim::{simulate, PolicyConfig, SimConfig};
+use epara::workload::{generate, Mix, WorkloadSpec};
+
+fn run(cfg: SimConfig, rps: f64, seed: u64) -> epara::metrics::Metrics {
+    let table = zoo::paper_zoo();
+    let spec = WorkloadSpec {
+        mix: Mix::Production(0),
+        rps,
+        seed,
+        duration_ms: 15_000.0,
+        ..Default::default()
+    };
+    let reqs = generate(&spec, &table, &EdgeCloud::testbed());
+    simulate(&table, EdgeCloud::testbed(), reqs, cfg)
+}
+
+fn main() {
+    println!("## Ablation — maximum offloading count (§4.1, default 5)");
+    println!("{:>6} {:>12} {:>12} {:>10}", "max", "goodput", "satisfied", "offloads");
+    for max_offloads in [0u32, 1, 2, 5, 10] {
+        let cfg = SimConfig {
+            handler: HandlerConfig { max_offloads },
+            duration_ms: 15_000.0,
+            ..Default::default()
+        };
+        let m = run(cfg, 250.0, 3);
+        println!("{max_offloads:>6} {:>12.1} {:>12.1} {:>10.3}",
+                 m.goodput_rps(), m.satisfied, m.mean_offloads());
+    }
+    println!();
+
+    println!("## Ablation — placement refresh interval (§3.4)");
+    println!("{:>12} {:>12} {:>12}", "interval", "goodput", "satisfied");
+    for interval in [None, Some(1_000.0), Some(2_000.0), Some(5_000.0)] {
+        let cfg = SimConfig {
+            replacement_interval_ms: interval,
+            duration_ms: 15_000.0,
+            ..Default::default()
+        };
+        let m = run(cfg, 250.0, 3);
+        let label = interval
+            .map(|v| format!("{v:.0} ms"))
+            .unwrap_or_else(|| "offline".into());
+        println!("{label:>12} {:>12.1} {:>12.1}", m.goodput_rps(), m.satisfied);
+    }
+    println!();
+
+    println!("## Ablation — ε-stage (cross-server parallelism) and devices");
+    println!("{:>24} {:>12} {:>12}", "config", "goodput", "satisfied");
+    for (label, cross, device) in [
+        ("full EPARA", true, true),
+        ("no cross-server MP", false, true),
+        ("no device GPUs", true, false),
+        ("neither", false, false),
+    ] {
+        let mut policy = PolicyConfig::epara();
+        policy.allow_cross_server = cross;
+        policy.allow_device = device;
+        let cfg = SimConfig { policy, duration_ms: 15_000.0, ..Default::default() };
+        let m = run(cfg, 250.0, 3);
+        println!("{label:>24} {:>12.1} {:>12.1}", m.goodput_rps(), m.satisfied);
+    }
+}

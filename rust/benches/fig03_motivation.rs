@@ -1,0 +1,116 @@
+//! Fig. 3 — motivation micro-benchmarks.
+//!
+//! (a) DP round-robin frame-rate scaling (49 → ~97 fps with 2 GPUs);
+//! (b) MP fps gains for heavy segmentation (paper: up to 4.8×);
+//! (c) multi-task GPU throughput (paper: 1.7×);
+//! (d) batching throughput (paper: 6.9×);
+//! (e) centralized scheduling latency vs server count (>100 ms @10,
+//!     >750 ms @30+) vs EPARA's decentralized handler;
+//! (f) model placement vs single-task processing time (≥2.5×).
+//!
+//! Regenerate with:  cargo bench --bench fig03_motivation
+
+use epara::core::MpKind;
+use epara::profile::zoo::{self, ids};
+use epara::sim::PolicyConfig;
+
+fn main() {
+    let t = zoo::paper_zoo();
+
+    println!("## Fig 3a — DP round-robin fps scaling (DeeplabV3+ video)");
+    println!("{:>6} {:>10}", "GPUs", "fps");
+    let one = t.throughput(ids::DEEPLABV3P, 1, MpKind::None, 1);
+    for k in 1..=4u32 {
+        println!("{k:>6} {:>10.1}", one * k as f64);
+    }
+    println!("(paper: 49 -> 97 fps at 2 GPUs)\n");
+
+    println!("## Fig 3b — MP strategies, heavy model fps (OMG-Seg)");
+    println!("{:>10} {:>10} {:>8}", "MP", "fps", "gain");
+    let base = t.throughput(ids::OMG_SEG, 1, MpKind::Pp(2), 1); // min config that fits
+    for (label, mp) in [("PP2", MpKind::Pp(2)), ("TP2", MpKind::Tp(2)),
+                        ("TP2+PP2", MpKind::TpPp(2, 2)), ("PP4", MpKind::Pp(4)),
+                        ("TP2+PP4", MpKind::TpPp(2, 4))] {
+        let fps = t.throughput(ids::OMG_SEG, 1, mp, 1);
+        println!("{label:>10} {fps:>10.2} {:>7.1}x", fps / base);
+    }
+    println!("(paper: optimized MP up to 4.8x fps)\n");
+
+    println!("## Fig 3c — multi-task throughput (ResNet50, MPS slices)");
+    println!("{:>6} {:>12} {:>8}", "MT", "items/s", "gain");
+    let base = t.throughput(ids::RESNET50, 4, MpKind::None, 1);
+    for mt in [1u32, 2, 4, 8] {
+        let tp = t.throughput(ids::RESNET50, 4, MpKind::None, mt);
+        println!("{mt:>6} {tp:>12.1} {:>7.1}x", tp / base);
+    }
+    println!("(paper: superior multi-task 1.7x)\n");
+
+    println!("## Fig 3d — batching throughput (MobileNetV2)");
+    println!("{:>6} {:>12} {:>8}", "BS", "items/s", "gain");
+    let base = t.throughput(ids::MOBILENET_V2, 1, MpKind::None, 1);
+    for bs in [1u32, 2, 4, 8, 16, 32, 64] {
+        let tp = t.throughput(ids::MOBILENET_V2, bs, MpKind::None, 1);
+        println!("{bs:>6} {tp:>12.1} {:>7.1}x", tp / base);
+    }
+    println!("(paper: batching up to 6.9x)\n");
+
+    println!("## Fig 3e — per-request scheduling latency vs servers");
+    println!("{:>8} {:>14} {:>14}", "servers", "SERV-P (ms)", "EPARA (ms)");
+    let servp = PolicyConfig::servp();
+    for n in [5usize, 10, 20, 30, 50, 100] {
+        // EPARA's decentralized handler cost: measured below in Fig 17,
+        // bounded by the O(candidates) scan — microseconds. Report the
+        // measured per-decision wall time.
+        let epara_ms = measure_handler_decision_ms(n);
+        println!("{n:>8} {:>14.0} {epara_ms:>14.3}", servp.central_latency_ms(n));
+    }
+    println!("(paper: >100 ms at 10 nodes, >750 ms beyond 30)\n");
+
+    println!("## Fig 3f — model placement vs single-task time");
+    println!("{:>14} {:>10} {:>10} {:>8}", "model", "load ms", "infer ms", "ratio");
+    for id in [ids::RESNET50, ids::YOLOV10, ids::UNET, ids::QWEN_1_5B] {
+        let spec = t.spec(id);
+        let infer = t.latency_ms(id, 1, MpKind::None, 1);
+        println!("{:>14} {:>10.0} {:>10.1} {:>7.1}x",
+                 spec.name, spec.model_load_ms, infer,
+                 spec.model_load_ms / infer);
+    }
+    println!("(paper: ResNet50 550/60 ms — placement >= 2.5x processing)");
+}
+
+fn measure_handler_decision_ms(n: usize) -> f64 {
+    use epara::core::{Request, RequestId, ServerId, ServiceId};
+    use epara::handler::{decide, HandlerConfig, LocalCapacity, StateView};
+    use epara::util::Rng;
+
+    struct V {
+        n: usize,
+        theo: Vec<f64>,
+    }
+    impl StateView for V {
+        fn n_servers(&self) -> usize { self.n }
+        fn local_capacity(&self, _: ServerId, _: ServiceId) -> LocalCapacity {
+            LocalCapacity::None
+        }
+        fn theoretical_goodput(&self, s: ServerId, _: ServiceId) -> f64 {
+            self.theo[s.0 as usize]
+        }
+        fn actual_goodput(&self, _: ServerId, _: ServiceId) -> f64 { 0.1 }
+        fn queued_ms(&self, _: ServerId, _: ServiceId) -> f64 { 5.0 }
+        fn sync_delay_ms(&self, _: ServerId) -> f64 { 50.0 }
+        fn slo_ms(&self, _: ServiceId) -> f64 { 500.0 }
+    }
+    let view = V { n, theo: (0..n).map(|i| (i % 7) as f64 + 1.0).collect() };
+    let req = Request {
+        id: RequestId(0), service: ServiceId(0), arrival_ms: 0.0,
+        origin: ServerId(0), frames: 1, path: vec![], offloads: 0,
+    };
+    let mut rng = Rng::new(5);
+    let cfg = HandlerConfig::default();
+    let reps = 2000;
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        let _ = decide(&req, ServerId(0), 1.0, &view, &cfg, &mut rng);
+    }
+    t0.elapsed().as_secs_f64() * 1000.0 / reps as f64
+}

@@ -1,0 +1,60 @@
+//! Fig. 10 — testbed goodput (reqs/sec) across five production workloads
+//! and five schemes.  Paper headline: EPARA up to 2.1× / 2.2× / 2.5× /
+//! 3.2× over InterEdge / AlpaServe / Galaxy / SERV-P on mixed traffic.
+//!
+//! Regenerate with:  cargo bench --bench fig10_testbed_goodput
+
+use epara::cluster::EdgeCloud;
+use epara::profile::zoo;
+use epara::sim::{simulate, PolicyConfig, SimConfig};
+use epara::workload::{generate, Mix, WorkloadSpec};
+
+fn main() {
+    let table = zoo::paper_zoo();
+    let policies = PolicyConfig::testbed_baselines();
+    let rps = 250.0; // saturating load on the 4-P100 testbed
+
+    println!("## Fig 10 — goodput (req/s) on the 6-server/4-P100 testbed, \
+              load {rps} req/s");
+    print!("{:>10}", "workload");
+    for p in &policies {
+        print!(" {:>12}", p.name);
+    }
+    println!(" {:>10}", "best gain");
+
+    let mut avg = vec![0.0f64; policies.len()];
+    for w in 0..5u8 {
+        let spec = WorkloadSpec {
+            mix: Mix::Production(w),
+            rps,
+            duration_ms: 20_000.0,
+            seed: 100 + w as u64,
+            ..Default::default()
+        };
+        let reqs = generate(&spec, &table, &EdgeCloud::testbed());
+        print!("{:>10}", format!("W{w}"));
+        let mut row = Vec::new();
+        for p in &policies {
+            let cfg = SimConfig { policy: *p, duration_ms: 20_000.0, ..Default::default() };
+            let m = simulate(&table, EdgeCloud::testbed(), reqs.clone(), cfg);
+            row.push(m.goodput_rps());
+            print!(" {:>12.1}", m.goodput_rps());
+        }
+        for (a, v) in avg.iter_mut().zip(&row) {
+            *a += v / 5.0;
+        }
+        let worst_base = row[1..].iter().cloned().fold(f64::INFINITY, f64::min);
+        println!(" {:>9.1}x", row[0] / worst_base.max(1e-9));
+    }
+
+    print!("{:>10}", "avg");
+    for v in &avg {
+        print!(" {:>12.1}", v);
+    }
+    println!();
+    for (i, p) in policies.iter().enumerate().skip(1) {
+        println!("EPARA / {:<12} = {:.2}x  (paper: up to {})",
+                 p.name, avg[0] / avg[i].max(1e-9),
+                 ["", "2.1x", "2.2x", "2.5x", "3.2x"][i]);
+    }
+}

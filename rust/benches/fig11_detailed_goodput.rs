@@ -1,0 +1,56 @@
+//! Fig. 11 — detailed per-workload goodput and the §5.1.1 stability
+//! claims: below max goodput EPARA fulfils requests with >99.4%
+//! probability; above it, goodput holds at >= 98.1% of max.
+//!
+//! Regenerate with:  cargo bench --bench fig11_detailed_goodput
+
+use epara::cluster::EdgeCloud;
+use epara::profile::zoo;
+use epara::sim::{simulate, PolicyConfig, SimConfig};
+use epara::workload::{generate, Mix, WorkloadSpec};
+
+fn run(w: u8, rps: f64) -> epara::metrics::Metrics {
+    let table = zoo::paper_zoo();
+    let spec = WorkloadSpec {
+        mix: Mix::Production(w),
+        rps,
+        duration_ms: 20_000.0,
+        seed: 42 + w as u64,
+        ..Default::default()
+    };
+    let reqs = generate(&spec, &table, &EdgeCloud::testbed());
+    let cfg = SimConfig {
+        policy: PolicyConfig::epara(),
+        duration_ms: 20_000.0,
+        ..Default::default()
+    };
+    simulate(&table, EdgeCloud::testbed(), reqs, cfg)
+}
+
+fn main() {
+    println!("## Fig 11 — EPARA goodput vs offered load per workload");
+    println!("{:>9} {:>10} {:>12} {:>12} {:>10}",
+             "workload", "load", "goodput", "satisfied", "ratio");
+    for w in 0..5u8 {
+        for rps in [25.0, 100.0, 250.0, 500.0] {
+            let m = run(w, rps);
+            println!("{:>9} {rps:>10.0} {:>12.1} {:>12.1} {:>10.3}",
+                     format!("W{w}"), m.goodput_rps(), m.satisfied,
+                     m.satisfaction_ratio());
+        }
+    }
+
+    println!("\n## §5.1.1 stability claims");
+    // find (roughly) max goodput, then check below/above behaviour
+    let mut max_goodput = 0.0f64;
+    for rps in [100.0, 200.0, 300.0, 400.0, 600.0, 800.0] {
+        max_goodput = max_goodput.max(run(0, rps).goodput_rps());
+    }
+    let light = run(0, 15.0);
+    let over = run(0, 1200.0);
+    println!("light-load fulfilment ratio : {:.4}  (paper: > 0.994)",
+             light.satisfaction_ratio());
+    println!("max goodput observed        : {max_goodput:.1} req/s");
+    println!("overload goodput retention  : {:.3}  (paper: >= 0.981)",
+             over.goodput_rps() / max_goodput.max(1e-9));
+}

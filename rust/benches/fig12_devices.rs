@@ -1,0 +1,48 @@
+//! Fig. 12 — embedded devices in the real testbed.
+//!
+//! (a) Bluetooth HC-05 transfer delay vs file size (105 ms @64 B,
+//!     1039 ms @1 KB);
+//! (b) VGG-style device/server PP offloading at conv2/conv4 — executed
+//!     for real through the PJRT runtime when artifacts are present.
+//!
+//! Regenerate with:  cargo bench --bench fig12_devices
+
+use epara::cluster::Link;
+
+fn main() {
+    println!("## Fig 12a — Bluetooth transfer delay (HC-05 + Basys3)");
+    println!("{:>10} {:>12}", "size", "delay (ms)");
+    for bytes in [64.0f64, 128.0, 256.0, 512.0, 1024.0, 2048.0] {
+        println!("{:>9}B {:>12.0}", bytes,
+                 Link::BLUETOOTH.transfer_ms(bytes / 1024.0));
+    }
+    println!("(paper anchors: 105 ms @64 B, 1039 ms @1 KB)\n");
+
+    println!("## Fig 12b — classifier offload points (U50-style device PP)");
+    let dir = epara::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts not built — run `make artifacts`)");
+        return;
+    }
+    let engine = epara::runtime::Engine::load(&dir).expect("engine");
+    let shape = [1usize, 32, 32, 3];
+    let image: Vec<f32> = (0..shape.iter().product::<usize>())
+        .map(|i| ((i * 29) % 253) as f32 / 253.0)
+        .collect();
+    let t0 = std::time::Instant::now();
+    let full = engine.classify(1, &image, &shape).expect("classify");
+    let full_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    println!("{:>8} {:>12} {:>12} {:>16} {:>8}",
+             "split", "dev+srv ms", "act bytes", "act link @100M", "correct");
+    for split in ["conv2", "conv4"] {
+        let t0 = std::time::Instant::now();
+        let (logits, act_bytes) =
+            engine.classify_split(split, &image, &shape).expect(split);
+        let ms = t0.elapsed().as_secs_f64() * 1000.0;
+        let ok = epara::runtime::max_abs_diff(&logits, &full) < 1e-4;
+        println!("{split:>8} {ms:>12.2} {act_bytes:>12} {:>14.2}ms {:>8}",
+                 Link::EDGE_100M.transfer_ms(act_bytes as f64 / 1024.0),
+                 if ok { "yes" } else { "NO" });
+    }
+    println!("single-GPU reference: {full_ms:.2} ms");
+}

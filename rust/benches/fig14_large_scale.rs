@@ -1,0 +1,66 @@
+//! Fig. 14 — large-scale simulation goodput: latency-only (EPARA
+//! 1.5–2.0×), frequency-only (2.8–3.1×), mixed (1.6–2.4×) vs baselines,
+//! over clusters of N servers × 8 P100.
+//!
+//! Regenerate with:  cargo bench --bench fig14_large_scale
+//! (EPARA_MAX_SERVERS bounds the sweep; default 16 keeps the run short.)
+
+use epara::cluster::EdgeCloud;
+use epara::profile::zoo;
+use epara::sim::{simulate, PolicyConfig, SimConfig};
+use epara::workload::{generate, Mix, WorkloadSpec};
+
+fn main() {
+    let table = zoo::paper_zoo();
+    let max_servers: usize = std::env::var("EPARA_MAX_SERVERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16);
+    let policies = [
+        PolicyConfig::epara(),
+        PolicyConfig::interedge(),
+        PolicyConfig::alpaserve(),
+        PolicyConfig::galaxy(),
+        PolicyConfig::servp(),
+        PolicyConfig::usher(),
+        PolicyConfig::detransformer(),
+    ];
+
+    for (mix, label, claim) in [
+        (Mix::LatencyOnly, "latency-sensitive", "1.5-2.0x"),
+        (Mix::FrequencyOnly, "frequency-sensitive", "2.8-3.1x"),
+        (Mix::Mixed, "mixed", "1.6-2.4x"),
+    ] {
+        println!("## Fig 14 — {label} requests (paper claim: EPARA {claim})");
+        print!("{:>8}", "servers");
+        for p in &policies {
+            print!(" {:>13}", p.name);
+        }
+        println!();
+        let mut n = 4usize;
+        while n <= max_servers {
+            let load = 50.0 * n as f64;
+            print!("{n:>8}");
+            let mut vals = Vec::new();
+            for p in &policies {
+                let cloud = EdgeCloud::large_scale(n);
+                let spec = WorkloadSpec {
+                    mix,
+                    rps: load,
+                    streams: 30 * n,
+                    duration_ms: 12_000.0,
+                    ..Default::default()
+                };
+                let reqs = generate(&spec, &table, &cloud);
+                let cfg = SimConfig { policy: *p, duration_ms: 12_000.0,
+                                      ..Default::default() };
+                let m = simulate(&table, cloud, reqs, cfg);
+                vals.push(m.goodput_rps());
+                print!(" {:>13.1}", m.goodput_rps());
+            }
+            println!();
+            n *= 2;
+        }
+        println!();
+    }
+}

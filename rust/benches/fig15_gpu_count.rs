@@ -1,0 +1,52 @@
+//! Fig. 15 — GPUs needed to complete all inference requests within SLO
+//! (paper: EPARA requires 1.5–2.6× fewer GPUs than the baselines because
+//! it schedules across servers and parallelizes by category).
+//!
+//! Regenerate with:  cargo bench --bench fig15_gpu_count
+
+use epara::cluster::{EdgeCloud, GpuSpec, Link};
+use epara::profile::zoo;
+use epara::sim::{simulate, PolicyConfig, SimConfig};
+use epara::workload::{generate, Mix, WorkloadSpec};
+
+fn gpus_needed(policy: PolicyConfig, rps: f64, target: f64) -> Option<usize> {
+    let table = zoo::paper_zoo();
+    for per_server in [1usize, 2, 3, 4, 6, 8, 12, 16, 24, 32] {
+        let cloud = EdgeCloud::uniform(8, per_server, GpuSpec::P100,
+                                       Link::SWITCH_10G);
+        let spec = WorkloadSpec {
+            mix: Mix::Production(3),
+            rps,
+            duration_ms: 12_000.0,
+            ..Default::default()
+        };
+        let reqs = generate(&spec, &table, &cloud);
+        let cfg = SimConfig { policy, duration_ms: 12_000.0, ..Default::default() };
+        let m = simulate(&table, cloud, reqs, cfg);
+        if m.satisfaction_ratio() >= target {
+            return Some(8 * per_server);
+        }
+    }
+    None
+}
+
+fn main() {
+    println!("## Fig 15 — GPUs required to serve the load within SLO \
+              (8 servers, scale-up per server)");
+    println!("{:>10} {:>14} {:>10}", "load", "scheme", "GPUs");
+    let mut epara_gpus = Vec::new();
+    for rps in [150.0, 300.0, 600.0] {
+        for policy in [PolicyConfig::epara(), PolicyConfig::interedge(),
+                       PolicyConfig::alpaserve(), PolicyConfig::galaxy()] {
+            let g = gpus_needed(policy, rps, 0.95);
+            if policy.name == "EPARA" {
+                epara_gpus.push(g);
+            }
+            println!("{rps:>10.0} {:>14} {:>10}",
+                     policy.name,
+                     g.map(|v| v.to_string()).unwrap_or(">256".into()));
+        }
+        println!();
+    }
+    println!("(paper: EPARA needs 1.5-2.6x fewer GPUs)");
+}

@@ -1,0 +1,57 @@
+//! Fig. 16 — effect of the task-categorized parallelism allocator:
+//! per-GPU goodput of the allocated configuration vs non-parallelism
+//! deployment (BS1/MT1/MP-None/MF1/DP1), per category.
+//!
+//! Paper: ≤1 GPU frequency 5.9–12.4×; >1 GPU frequency 1.3–2.5×;
+//! ≤1 GPU latency 2.3–9.1×; >1 GPU latency 2.9–4.5×.
+//!
+//! Regenerate with:  cargo bench --bench fig16_allocator
+
+use epara::allocator::{Allocator, Overrides};
+use epara::cluster::GpuSpec;
+use epara::core::{OperatorConfig, TaskCategory};
+use epara::profile::zoo;
+
+fn main() {
+    let table = zoo::paper_zoo();
+    let alloc = Allocator::new(&table, GpuSpec::P100);
+    let naive = OperatorConfig::default();
+
+    let claims = [
+        (TaskCategory::FrequencySingle, "5.9-12.4x"),
+        (TaskCategory::FrequencyMulti, "1.3-2.5x"),
+        (TaskCategory::LatencySingle, "2.3-9.1x"),
+        (TaskCategory::LatencyMulti, "2.9-4.5x"),
+    ];
+
+    for (cat, claim) in claims {
+        println!("## Fig 16 — {cat:?} (paper: {claim} per-GPU goodput)");
+        println!("{:>20} {:>8} {:>4} {:>4} {:>9} {:>4} {:>4} {:>12} {:>12} {:>7}",
+                 "service", "", "BS", "MT", "MP", "MF", "DP",
+                 "epara/GPU", "naive/GPU", "gain");
+        let mut services: Vec<_> = table
+            .services()
+            .filter(|s| alloc.categorize(s.id) == cat)
+            .collect();
+        services.sort_by_key(|s| s.id);
+        for s in services {
+            let al = alloc.allocate(s.id, Overrides::default());
+            let ours = alloc.per_gpu_goodput(s.id, &al.ops);
+            // naive cannot run multi-GPU models at all: report n/a
+            let base = if s.fits_single_gpu(GpuSpec::P100.vram_mb) {
+                alloc.per_gpu_goodput(s.id, &naive)
+            } else {
+                // smallest feasible MP config, still BS1/MT1/no request-level
+                let min_mp = alloc.default_mp(s.id, al.category);
+                alloc.per_gpu_goodput(s.id, &OperatorConfig {
+                    mp: min_mp, ..naive
+                })
+            };
+            println!("{:>20} {:>8} {:>4} {:>4} {:>9} {:>4} {:>4} {:>12.1} {:>12.1} {:>6.1}x",
+                     s.name, "", al.ops.bs, al.ops.mt,
+                     format!("{:?}", al.ops.mp), al.ops.mf, al.ops.dp,
+                     ours, base, ours / base.max(1e-9));
+        }
+        println!();
+    }
+}

@@ -1,0 +1,125 @@
+//! Fig. 17 — effectiveness and overhead of EPARA's design components.
+//!
+//! (a) request handling effect (paper: 2.2–2.4× for ≤1 GPU, 2.9–3.1× for
+//!     >1 GPU tasks);
+//! (b) placement vs LRU/LFU/MFU (paper: up to 1.9×);
+//! (c) placement scheduling latency vs server count (<200 ms @10k);
+//! (d) information-sync delay vs (bandwidth, servers) (≤10 s at the
+//!     paper's two anchor points);
+//! (e) offloading count vs sync overhead (<1 below 100 ms, rising).
+//!
+//! Regenerate with:  cargo bench --bench fig17_components
+
+use std::collections::HashMap;
+
+use epara::allocator::{Allocator, Overrides};
+use epara::cluster::{EdgeCloud, GpuSpec};
+use epara::core::ServiceId;
+use epara::placement::cache_baselines::CachePolicy;
+use epara::placement::{sssp, FluidEval};
+use epara::profile::zoo;
+use epara::sim::{simulate, PolicyConfig, SimConfig};
+use epara::sync::SyncConfig;
+use epara::workload::{generate, Mix, WorkloadSpec};
+
+fn goodput(policy: PolicyConfig, mix: Mix, rps: f64, sync_interval: f64) -> f64 {
+    let table = zoo::paper_zoo();
+    let spec = WorkloadSpec { mix, rps, duration_ms: 15_000.0, ..Default::default() };
+    let reqs = generate(&spec, &table, &EdgeCloud::testbed());
+    let cfg = SimConfig {
+        policy,
+        duration_ms: 15_000.0,
+        sync: SyncConfig { interval_ms: sync_interval, ..Default::default() },
+        ..Default::default()
+    };
+    simulate(&table, EdgeCloud::testbed(), reqs, cfg).satisfied
+}
+
+fn main() {
+    println!("## Fig 17a — effect of request handling (offloading)");
+    println!("{:>12} {:>12} {:>12} {:>7}", "workload", "EPARA", "no-offload", "gain");
+    for (label, mix) in [("W0 (<=1GPU)", Mix::Production(0)),
+                         ("W4 (>1GPU)", Mix::Production(4))] {
+        let with = goodput(PolicyConfig::epara(), mix, 250.0, 1000.0);
+        let without = goodput(PolicyConfig::epara_no_offload(), mix, 250.0, 1000.0);
+        println!("{label:>12} {with:>12.1} {without:>12.1} {:>6.1}x",
+                 with / without.max(1e-9));
+    }
+    println!("(paper: 2.2-2.4x <=1 GPU, 2.9-3.1x >1 GPU)\n");
+
+    println!("## Fig 17b — placement strategy vs cache policies");
+    println!("{:>12} {:>12} {:>7}", "strategy", "goodput", "vs EPARA");
+    let epara = goodput(PolicyConfig::epara(), Mix::Production(2), 200.0, 1000.0);
+    println!("{:>12} {epara:>12.1} {:>7}", "EPARA", "1.00");
+    for policy in [CachePolicy::Lru, CachePolicy::Lfu, CachePolicy::Mfu] {
+        let v = goodput(PolicyConfig::epara_cache_placement(policy),
+                        Mix::Production(2), 200.0, 1000.0);
+        println!("{:>12} {v:>12.1} {:>7.2}", format!("{policy:?}"),
+                 epara / v.max(1e-9));
+    }
+    println!("(paper: up to 1.9x)\n");
+
+    println!("## Fig 17c — placement scheduling latency vs servers");
+    println!("{:>9} {:>12} {:>12}", "servers", "solve (ms)", "items");
+    let table = zoo::paper_zoo();
+    for n in [100usize, 1000, 10_000] {
+        let cloud = EdgeCloud::large_scale(n);
+        let spec = WorkloadSpec {
+            rps: 20.0 * n as f64,
+            streams: (4 * n).min(40_000),
+            duration_ms: 10_000.0,
+            ..Default::default()
+        };
+        let reqs = generate(&spec, &table, &cloud);
+        let services: Vec<ServiceId> = {
+            let mut s: Vec<_> = reqs.iter().map(|r| r.service).collect();
+            s.sort();
+            s.dedup();
+            s
+        };
+        let allocator = Allocator::new(&table, GpuSpec::P100);
+        let allocs: HashMap<ServiceId, _> = services
+            .iter()
+            .map(|&id| (id, allocator.allocate(id, Overrides::default())))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let mut eval = FluidEval::from_requests(&table, &allocs, &cloud,
+                                                &reqs, 10_000.0);
+        let placement = sssp(&[], &services, n, &mut eval);
+        let ms = t0.elapsed().as_secs_f64() * 1000.0;
+        println!("{n:>9} {ms:>12.1} {:>12}", placement.len());
+    }
+    println!("(paper: < 200 ms below 10k servers)\n");
+
+    println!("## Fig 17d — information sync delay");
+    println!("{:>12} {:>9} {:>12}", "bandwidth", "servers", "delay (ms)");
+    for (bw, n) in [(50.0, 100usize), (100.0, 300), (500.0, 1000),
+                    (500.0, 10_000)] {
+        let cfg = SyncConfig { bandwidth_mbps: bw, ..Default::default() };
+        println!("{:>10}Mb {n:>9} {:>12.1}", bw, cfg.full_sync_delay_ms(n));
+    }
+    println!("(paper: within 10 s at (50 Mbps,100) and (500 Mbps,1000))\n");
+
+    println!("## Fig 17e — offload count vs sync overhead");
+    println!("{:>14} {:>14}", "interval (ms)", "avg offloads");
+    for interval in [50.0, 100.0, 500.0, 2000.0, 5000.0] {
+        let table = zoo::paper_zoo();
+        let spec = WorkloadSpec {
+            mix: Mix::Production(0),
+            rps: 250.0,
+            duration_ms: 15_000.0,
+            ..Default::default()
+        };
+        let reqs = generate(&spec, &table, &EdgeCloud::testbed());
+        let cfg = SimConfig {
+            policy: PolicyConfig::epara(),
+            duration_ms: 15_000.0,
+            sync: SyncConfig { interval_ms: interval, ..Default::default() },
+            ..Default::default()
+        };
+        let mut m = simulate(&table, EdgeCloud::testbed(), reqs, cfg);
+        println!("{interval:>14.0} {:>14.3}", m.mean_offloads());
+        let _ = m.report("");
+    }
+    println!("(paper: < 1 when sync overhead < 100 ms, rising after)");
+}

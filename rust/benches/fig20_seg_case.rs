@@ -1,0 +1,75 @@
+//! Fig. 20 — case study 2: segmentation in EPARA (§5.3.4, Table 2).
+//!
+//! Per-service goodput on four P100 servers for the segmentation roster,
+//! EPARA vs Galaxy (the MP-centric edge baseline), plus real UNet-mini
+//! latency through PJRT when artifacts are present.
+//!
+//! Regenerate with:  cargo bench --bench fig20_seg_case
+
+use epara::allocator::{Allocator, Overrides};
+use epara::cluster::{EdgeCloud, GpuSpec, Link};
+use epara::core::ServiceId;
+use epara::profile::zoo;
+use epara::sim::{simulate, PolicyConfig, SimConfig};
+use epara::workload::{generate, Mix, WorkloadSpec};
+
+fn main() {
+    let table = zoo::paper_zoo();
+    let alloc = Allocator::new(&table, GpuSpec::P100);
+    let services = zoo::segmentation_case_study_services();
+
+    println!("## Fig 20 — adaptive deployment for segmentation (§5.3.4)");
+    println!("{:>18} {:>6} {:>4} {:>9} {:>4} {:>4}",
+             "service", "BS", "MT", "MP", "MF", "DP");
+    for &s in &services {
+        let a = alloc.allocate(s, Overrides::default());
+        println!("{:>18} {:>6} {:>4} {:>9} {:>4} {:>4}",
+                 table.spec(s).name, a.ops.bs, a.ops.mt,
+                 format!("{:?}", a.ops.mp), a.ops.mf, a.ops.dp);
+    }
+    println!("(paper: UNet BS8 | Deeplab BS4 | SCTNet BS4 | MaskFormer \
+              TP2+BS8 | OMG-Seg TP2+BS4; video: MF4 / MF4+DP2)\n");
+
+    println!("## Fig 20 — per-service goodput on 4 P100 servers");
+    let cloud = EdgeCloud::uniform(4, 1, GpuSpec::P100, Link::SWITCH_10G);
+    let spec = WorkloadSpec {
+        mix: Mix::Mixed,
+        services: services.clone(),
+        rps: 50.0,
+        duration_ms: 20_000.0,
+        ..Default::default()
+    };
+    let reqs = generate(&spec, &table, &cloud);
+    for policy in [PolicyConfig::epara(), PolicyConfig::galaxy()] {
+        let cfg = SimConfig { policy, duration_ms: 20_000.0, ..Default::default() };
+        let m = simulate(&table, cloud.clone(), reqs.clone(), cfg);
+        println!("{}: total satisfied {:.1}/{}", policy.name, m.satisfied,
+                 m.offered);
+        let mut rows: Vec<(ServiceId, f64)> =
+            m.per_service.iter().map(|(k, v)| (*k, *v)).collect();
+        rows.sort_by_key(|(k, _)| *k);
+        for (svc, sat) in rows {
+            let offered = reqs.iter().filter(|r| r.service == svc).count();
+            println!("    {:>18} {:>8.1}/{offered}", table.spec(svc).name, sat);
+        }
+    }
+
+    let dir = epara::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        println!("\n## real UNet-mini latency (PJRT CPU)");
+        let engine = epara::runtime::Engine::load(&dir).expect("engine");
+        for bs in [1usize, 2, 4] {
+            let shape = [bs, 64, 64, 3];
+            let img = vec![0.3f32; shape.iter().product()];
+            let _ = engine.segment(bs, &img, &shape); // warm-up compile
+            let t0 = std::time::Instant::now();
+            let reps = 5;
+            for _ in 0..reps {
+                let _ = engine.segment(bs, &img, &shape).expect("segment");
+            }
+            let ms = t0.elapsed().as_secs_f64() * 1000.0 / reps as f64;
+            println!("  bs{bs}: {ms:.1} ms/batch ({:.1} frames/s)",
+                     bs as f64 * 1000.0 / ms);
+        }
+    }
+}

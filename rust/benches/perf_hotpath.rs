@@ -1,0 +1,134 @@
+//! Perf microbenches for the L3 hot paths (DESIGN.md §Perf).
+//!
+//! Targets:
+//!  * handler decision   — <20 ms at 10k servers (paper §5.3.1; we aim µs);
+//!  * placement solve    — <200 ms at 10k servers (Fig. 17c);
+//!  * simulator          — >= 100k events/s;
+//!  * fluid gain query   — O(1), tens of ns.
+//!
+//! Regenerate with:  cargo bench --bench perf_hotpath
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use epara::allocator::{Allocator, Overrides};
+use epara::cluster::{EdgeCloud, GpuSpec};
+use epara::core::{Request, RequestId, ServerId, ServiceId};
+use epara::handler::{decide, HandlerConfig, LocalCapacity, StateView};
+use epara::placement::{sssp, FluidEval, PhiEval, PlacementItem};
+use epara::profile::zoo;
+use epara::sim::{simulate, PolicyConfig, SimConfig};
+use epara::util::Rng;
+use epara::workload::{generate, Mix, WorkloadSpec};
+
+struct FlatView {
+    n: usize,
+    theo: Vec<f64>,
+}
+
+impl StateView for FlatView {
+    fn n_servers(&self) -> usize { self.n }
+    fn local_capacity(&self, _: ServerId, _: ServiceId) -> LocalCapacity {
+        LocalCapacity::None
+    }
+    fn theoretical_goodput(&self, s: ServerId, _: ServiceId) -> f64 {
+        self.theo[s.0 as usize]
+    }
+    fn actual_goodput(&self, _: ServerId, _: ServiceId) -> f64 { 0.3 }
+    fn queued_ms(&self, _: ServerId, _: ServiceId) -> f64 { 3.0 }
+    fn sync_delay_ms(&self, _: ServerId) -> f64 { 40.0 }
+    fn slo_ms(&self, _: ServiceId) -> f64 { 500.0 }
+}
+
+fn bench_handler(n: usize) -> f64 {
+    let view = FlatView { n, theo: (0..n).map(|i| 1.0 + (i % 5) as f64).collect() };
+    let req = Request {
+        id: RequestId(0), service: ServiceId(0), arrival_ms: 0.0,
+        origin: ServerId(0), frames: 1, path: vec![], offloads: 0,
+    };
+    let cfg = HandlerConfig::default();
+    let mut rng = Rng::new(3);
+    let reps = if n >= 10_000 { 200 } else { 5000 };
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let _ = decide(&req, ServerId(0), 1.0, &view, &cfg, &mut rng);
+    }
+    t0.elapsed().as_secs_f64() * 1000.0 / reps as f64
+}
+
+fn main() {
+    println!("## L3 hot-path microbenchmarks\n");
+
+    println!("handler decision latency (paper: <20 ms @10k servers):");
+    for n in [10usize, 100, 1000, 10_000] {
+        println!("  {n:>6} servers: {:>10.4} ms/decision", bench_handler(n));
+    }
+
+    println!("\nplacement solve (Fig 17c target <200 ms @10k servers):");
+    let table = zoo::paper_zoo();
+    for n in [100usize, 1000, 10_000] {
+        let cloud = EdgeCloud::large_scale(n);
+        let spec = WorkloadSpec {
+            rps: 20.0 * n as f64,
+            streams: (4 * n).min(40_000),
+            duration_ms: 10_000.0,
+            ..Default::default()
+        };
+        let reqs = generate(&spec, &table, &cloud);
+        let services: Vec<ServiceId> = {
+            let mut s: Vec<_> = reqs.iter().map(|r| r.service).collect();
+            s.sort();
+            s.dedup();
+            s
+        };
+        let allocator = Allocator::new(&table, GpuSpec::P100);
+        let allocs: HashMap<ServiceId, _> = services
+            .iter()
+            .map(|&id| (id, allocator.allocate(id, Overrides::default())))
+            .collect();
+        let t0 = Instant::now();
+        let mut eval =
+            FluidEval::from_requests(&table, &allocs, &cloud, &reqs, 10_000.0);
+        let build_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        let t0 = Instant::now();
+        let placement = sssp(&[], &services, n, &mut eval);
+        let solve_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        println!("  {n:>6} servers: build {build_ms:>8.1} ms, solve \
+                  {solve_ms:>8.1} ms, {} items", placement.len());
+
+        // fluid gain query cost
+        let item = PlacementItem { service: services[0], server: ServerId(0) };
+        let t0 = Instant::now();
+        let reps = 100_000;
+        let mut acc = 0.0;
+        for _ in 0..reps {
+            acc += eval.gain(item);
+        }
+        let ns = t0.elapsed().as_secs_f64() * 1e9 / reps as f64;
+        println!("          gain query: {ns:.0} ns (acc {acc:.1})");
+    }
+
+    println!("\nsimulator event throughput:");
+    let cloud = EdgeCloud::testbed();
+    let spec = WorkloadSpec {
+        mix: Mix::Production(0),
+        rps: 400.0,
+        duration_ms: 30_000.0,
+        ..Default::default()
+    };
+    let reqs = generate(&spec, &table, &cloud);
+    let n_reqs = reqs.len();
+    let cfg = SimConfig {
+        policy: PolicyConfig::epara(),
+        duration_ms: 30_000.0,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let m = simulate(&table, cloud, reqs, cfg);
+    let wall = t0.elapsed().as_secs_f64();
+    // every request generates >= 2 events (arrive + finish) + hops
+    let events = (m.offered * 2) as f64 * (1.0 + m.mean_offloads());
+    println!("  {n_reqs} requests / {wall:.3} s wall = {:.0} req/s, \
+              ~{:.0} events/s",
+             n_reqs as f64 / wall, events / wall);
+}

@@ -1,0 +1,87 @@
+//! Comparison baselines (Table 3) — re-exported policy configurations
+//! plus the feature matrix the paper tabulates.
+//!
+//! The actual behavioural knobs live in [`crate::sim::policy`]; this
+//! module adds the Table 3 summary used by tests and docs to assert each
+//! baseline exposes exactly the paper's capability set.
+
+pub use crate::sim::policy::{OffloadMode, PlacementMode, PolicyConfig};
+
+/// Table 3 row: allocation level capabilities of one scheme.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FeatureRow {
+    pub name: &'static str,
+    /// Request-level allocation (DP+MF / queue / network / No).
+    pub request_level: &'static str,
+    /// Service-level allocation (MP+ / MP / 3D / No).
+    pub service_level: &'static str,
+    /// Distributed / Centralized / Mixed.
+    pub mode: &'static str,
+}
+
+/// The Table 3 matrix for the schemes we implement.
+pub fn feature_matrix() -> Vec<FeatureRow> {
+    vec![
+        FeatureRow { name: "InterEdge", request_level: "No", service_level: "No",
+                     mode: "Distr." },
+        FeatureRow { name: "Galaxy", request_level: "No", service_level: "MP+",
+                     mode: "Cent." },
+        FeatureRow { name: "DeTransformer", request_level: "No", service_level: "MP+",
+                     mode: "Cent." },
+        FeatureRow { name: "SERV-P", request_level: "No", service_level: "No",
+                     mode: "Cent." },
+        FeatureRow { name: "AlpaServe", request_level: "No", service_level: "MP+",
+                     mode: "Cent." },
+        FeatureRow { name: "USHER", request_level: "No", service_level: "MP+",
+                     mode: "Cent." },
+        FeatureRow { name: "EPARA", request_level: "DP+MF", service_level: "MP+",
+                     mode: "Mixed" },
+    ]
+}
+
+/// Map a feature row to the policy config implementing it.
+pub fn policy_for(name: &str) -> Option<PolicyConfig> {
+    Some(match name {
+        "EPARA" => PolicyConfig::epara(),
+        "InterEdge" => PolicyConfig::interedge(),
+        "AlpaServe" => PolicyConfig::alpaserve(),
+        "Galaxy" => PolicyConfig::galaxy(),
+        "SERV-P" => PolicyConfig::servp(),
+        "USHER" => PolicyConfig::usher(),
+        "DeTransformer" => PolicyConfig::detransformer(),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_consistent_with_policies() {
+        for row in feature_matrix() {
+            let p = policy_for(row.name).expect(row.name);
+            // request level ⇔ DP+MF enabled
+            assert_eq!(
+                row.request_level != "No",
+                p.request_level,
+                "{}", row.name
+            );
+            // only EPARA mixes decentralized handling with central placement
+            if row.name == "EPARA" {
+                assert_eq!(p.offload, OffloadMode::Eq1);
+                assert_eq!(p.placement, PlacementMode::Sssp);
+            }
+        }
+    }
+
+    #[test]
+    fn epara_is_the_only_request_level_scheme() {
+        let rl: Vec<_> = feature_matrix()
+            .into_iter()
+            .filter(|r| r.request_level != "No")
+            .collect();
+        assert_eq!(rl.len(), 1);
+        assert_eq!(rl[0].name, "EPARA");
+    }
+}

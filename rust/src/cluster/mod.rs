@@ -1,0 +1,300 @@
+//! Edge-cloud substrate: servers, GPUs, edge devices, links, ring topology.
+//!
+//! Mirrors the paper's testbed (§5.1, Table 4): six Dell R750 servers of
+//! which four carry one Tesla P100 each, an AS4610 10 Gb/s switch between
+//! servers, plus Raspberry Pi microcomputers and Xilinx embedded devices
+//! (U50 accelerator, Basys3 over Bluetooth HC-05).  Large-scale builders
+//! reproduce the §5.2 simulation clusters (N servers × 8 P100).
+
+use crate::core::{DeviceId, GpuId, ServerId};
+
+/// GPU hardware class.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GpuSpec {
+    /// VRAM in MB.
+    pub vram_mb: f64,
+    /// Compute relative to a Tesla P100 (1.0).
+    pub compute: f64,
+}
+
+impl GpuSpec {
+    pub const P100: GpuSpec = GpuSpec { vram_mb: 16_000.0, compute: 1.0 };
+    /// Jetson-Nano-class device GPU (§3.2 "edge device participation").
+    pub const JETSON: GpuSpec = GpuSpec { vram_mb: 4_000.0, compute: 0.05 };
+}
+
+/// One GPU in a server.
+#[derive(Clone, Debug)]
+pub struct Gpu {
+    pub id: GpuId,
+    pub spec: GpuSpec,
+    /// Failure-injection flag (§5.3.3 "handling server error").
+    pub failed: bool,
+}
+
+/// A network link model: latency + bandwidth.
+///
+/// `transfer_ms(kb)` = base latency + serialized payload time.  Calibrated
+/// so the Bluetooth class reproduces Fig. 12a (105 ms @64 B, 1039 ms @1 KB).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Link {
+    pub bandwidth_mbps: f64,
+    pub base_latency_ms: f64,
+}
+
+impl Link {
+    /// 10 Gb/s edge switch (AS4610-54T, Table 4).
+    pub const SWITCH_10G: Link = Link { bandwidth_mbps: 10_000.0, base_latency_ms: 0.15 };
+    /// 100 Gb/s NIC pair (CX6, Table 4).
+    pub const NIC_100G: Link = Link { bandwidth_mbps: 100_000.0, base_latency_ms: 0.05 };
+    /// Commodity 100 Mb/s edge uplink (§5.3.1: <5 ms above 100 Mb/s).
+    pub const EDGE_100M: Link = Link { bandwidth_mbps: 100.0, base_latency_ms: 1.0 };
+    /// WLAN to microcomputers.
+    pub const WIFI: Link = Link { bandwidth_mbps: 50.0, base_latency_ms: 3.0 };
+    /// HC-05 Bluetooth serial (Fig. 12a calibration).
+    pub const BLUETOOTH: Link = Link { bandwidth_mbps: 0.008_03, base_latency_ms: 42.7 };
+
+    /// Milliseconds to move `kb` kilobytes across this link.
+    pub fn transfer_ms(&self, kb: f64) -> f64 {
+        self.base_latency_ms + kb * 8.0 / self.bandwidth_mbps
+    }
+}
+
+/// Edge device classes used in the paper's testbed (Fig. 9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    RaspberryPi3,
+    RaspberryPi4,
+    JetsonNano,
+    AlveoU50,
+    Basys3,
+}
+
+impl DeviceKind {
+    /// GPU capacity the device can register with its edge server (§3.2).
+    pub fn gpu(self) -> Option<GpuSpec> {
+        match self {
+            DeviceKind::JetsonNano => Some(GpuSpec::JETSON),
+            // U50 acts as a PP accelerator (Fig. 12b), modeled as a weak GPU
+            DeviceKind::AlveoU50 => Some(GpuSpec { vram_mb: 8_000.0, compute: 0.15 }),
+            _ => None,
+        }
+    }
+
+    pub fn link(self) -> Link {
+        match self {
+            DeviceKind::Basys3 => Link::BLUETOOTH,
+            DeviceKind::AlveoU50 => Link::NIC_100G, // PCIe-attached card
+            _ => Link::WIFI,
+        }
+    }
+}
+
+/// A registered edge device.
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub id: DeviceId,
+    pub kind: DeviceKind,
+    /// Edge server managing this device (§4.2).
+    pub home: ServerId,
+    pub registered: bool,
+}
+
+/// One edge server.
+#[derive(Clone, Debug)]
+pub struct Server {
+    pub id: ServerId,
+    pub gpus: Vec<Gpu>,
+    pub devices: Vec<DeviceId>,
+}
+
+impl Server {
+    pub fn healthy_gpus(&self) -> impl Iterator<Item = &Gpu> {
+        self.gpus.iter().filter(|g| !g.failed)
+    }
+}
+
+/// The whole edge cloud.
+#[derive(Clone, Debug)]
+pub struct EdgeCloud {
+    pub servers: Vec<Server>,
+    pub devices: Vec<Device>,
+    /// Inter-server link (uniform; the paper's switch fabric).
+    pub inter_server: Link,
+    /// User→server access link.
+    pub access: Link,
+}
+
+impl EdgeCloud {
+    /// Build a cluster of `n` servers with `gpus_per_server` GPUs each.
+    pub fn uniform(n: usize, gpus_per_server: usize, spec: GpuSpec, inter: Link) -> Self {
+        let servers = (0..n)
+            .map(|i| Server {
+                id: ServerId(i as u32),
+                gpus: (0..gpus_per_server)
+                    .map(|g| Gpu {
+                        id: GpuId { server: ServerId(i as u32), index: g as u8 },
+                        spec,
+                        failed: false,
+                    })
+                    .collect(),
+                devices: Vec::new(),
+            })
+            .collect();
+        EdgeCloud { servers, devices: Vec::new(), inter_server: inter, access: Link::EDGE_100M }
+    }
+
+    /// The paper's testbed: six servers, four with one P100, plus the
+    /// Fig. 9 device set.
+    pub fn testbed() -> Self {
+        let mut cloud = EdgeCloud::uniform(6, 0, GpuSpec::P100, Link::SWITCH_10G);
+        for i in 0..4 {
+            let sid = ServerId(i as u32);
+            cloud.servers[i].gpus.push(Gpu {
+                id: GpuId { server: sid, index: 0 },
+                spec: GpuSpec::P100,
+                failed: false,
+            });
+        }
+        for (i, (kind, home)) in [
+            (DeviceKind::RaspberryPi3, 4u32),
+            (DeviceKind::RaspberryPi4, 4),
+            (DeviceKind::AlveoU50, 5),
+            (DeviceKind::Basys3, 5),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            cloud.add_device(DeviceId(i as u32), kind, ServerId(home));
+        }
+        cloud
+    }
+
+    /// §5.2 large-scale cluster: `n` servers × 8 P100.
+    pub fn large_scale(n: usize) -> Self {
+        EdgeCloud::uniform(n, 8, GpuSpec::P100, Link::SWITCH_10G)
+    }
+
+    pub fn add_device(&mut self, id: DeviceId, kind: DeviceKind, home: ServerId) {
+        self.devices.push(Device { id, kind, home, registered: true });
+        self.servers[home.0 as usize].devices.push(id);
+    }
+
+    pub fn server(&self, id: ServerId) -> &Server {
+        &self.servers[id.0 as usize]
+    }
+
+    pub fn server_mut(&mut self, id: ServerId) -> &mut Server {
+        &mut self.servers[id.0 as usize]
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.servers.iter().map(|s| s.gpus.len()).sum()
+    }
+
+    pub fn healthy_gpus(&self) -> usize {
+        self.servers.iter().flat_map(|s| s.gpus.iter()).filter(|g| !g.failed).count()
+    }
+
+    /// Ring neighbours for the §3.4 synchronization topology.
+    pub fn ring_neighbors(&self, id: ServerId) -> (ServerId, ServerId) {
+        let n = self.servers.len() as u32;
+        let i = id.0;
+        (ServerId((i + n - 1) % n), ServerId((i + 1) % n))
+    }
+
+    /// Device→server link class.
+    pub fn device_link(&self, dev: DeviceId) -> Link {
+        self.devices
+            .iter()
+            .find(|d| d.id == dev)
+            .map(|d| d.kind.link())
+            .unwrap_or(Link::WIFI)
+    }
+
+    /// Inject a GPU failure (§5.3.3); returns false if ids are invalid.
+    pub fn fail_gpu(&mut self, gpu: GpuId) -> bool {
+        if let Some(srv) = self.servers.get_mut(gpu.server.0 as usize) {
+            if let Some(g) = srv.gpus.iter_mut().find(|g| g.id == gpu) {
+                g.failed = true;
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn testbed_matches_paper() {
+        let c = EdgeCloud::testbed();
+        assert_eq!(c.n_servers(), 6);
+        assert_eq!(c.total_gpus(), 4);
+        assert_eq!(c.devices.len(), 4);
+        assert_eq!(c.inter_server, Link::SWITCH_10G);
+    }
+
+    #[test]
+    fn bluetooth_reproduces_fig12a() {
+        // 105 ms @ 64 B and 1039 ms @ 1 KB (Fig. 12a)
+        let bt = Link::BLUETOOTH;
+        let t64 = bt.transfer_ms(64.0 / 1024.0);
+        let t1k = bt.transfer_ms(1.0);
+        assert!((t64 - 105.0).abs() < 5.0, "64B: {t64}");
+        assert!((t1k - 1039.0).abs() < 15.0, "1KB: {t1k}");
+    }
+
+    #[test]
+    fn fast_network_is_sub_5ms_at_100mbps() {
+        // §5.3.1: transmission < 5 ms when bandwidth >= 100 Mb/s
+        let l = Link::EDGE_100M;
+        assert!(l.transfer_ms(40.0) < 5.0);
+    }
+
+    #[test]
+    fn ring_wraps() {
+        let c = EdgeCloud::large_scale(5);
+        assert_eq!(c.ring_neighbors(ServerId(0)), (ServerId(4), ServerId(1)));
+        assert_eq!(c.ring_neighbors(ServerId(4)), (ServerId(3), ServerId(0)));
+    }
+
+    #[test]
+    fn gpu_failure_flag() {
+        let mut c = EdgeCloud::large_scale(2);
+        assert_eq!(c.healthy_gpus(), 16);
+        let gid = c.servers[0].gpus[3].id;
+        assert!(c.fail_gpu(gid));
+        assert_eq!(c.healthy_gpus(), 15);
+        assert!(!c.fail_gpu(GpuId { server: ServerId(9), index: 0 }));
+    }
+
+    #[test]
+    fn transfer_monotone_in_payload_and_bandwidth() {
+        for l in [Link::SWITCH_10G, Link::EDGE_100M, Link::WIFI, Link::BLUETOOTH] {
+            assert!(l.transfer_ms(2.0) > l.transfer_ms(1.0));
+        }
+        assert!(Link::EDGE_100M.transfer_ms(100.0) > Link::SWITCH_10G.transfer_ms(100.0));
+    }
+
+    #[test]
+    fn device_gpu_classes() {
+        assert!(DeviceKind::JetsonNano.gpu().is_some());
+        assert!(DeviceKind::AlveoU50.gpu().is_some());
+        assert!(DeviceKind::RaspberryPi3.gpu().is_none());
+        assert!(DeviceKind::Basys3.gpu().is_none());
+    }
+
+    #[test]
+    fn device_links() {
+        let c = EdgeCloud::testbed();
+        let basys = c.devices.iter().find(|d| d.kind == DeviceKind::Basys3).unwrap();
+        assert_eq!(c.device_link(basys.id), Link::BLUETOOTH);
+    }
+}

@@ -1,0 +1,325 @@
+//! Core vocabulary of the paper: tasks, categories, SLOs, operators.
+//!
+//! §2.1: "When a user *request* specifies a *service* as its target, such
+//! combination constitutes a *task*."  Everything else in the crate speaks
+//! these types.
+
+/// Logical AI service (a model deployment), e.g. "llama3-8b-chat".
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct ServiceId(pub u32);
+
+/// Edge server (one node of the edge cloud).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct ServerId(pub u32);
+
+/// One GPU within a server.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct GpuId {
+    pub server: ServerId,
+    pub index: u8,
+}
+
+/// Registered edge device (Raspberry Pi / Jetson / FPGA card).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct DeviceId(pub u32);
+
+/// A user request instance.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct RequestId(pub u64);
+
+/// §3.1: sensitivity axis of the task taxonomy.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Sensitivity {
+    /// Non-continuous requests; latency is the sole SLO (chat, images).
+    Latency,
+    /// Continuous/periodic requests; rate (fps / tokens-per-sec) is the
+    /// binding SLO, latency a baseline expectation (video, HCI).
+    Frequency,
+}
+
+/// §3.1: resource axis — does the service fit one GPU?
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum GpuDemand {
+    /// ≤ 1 GPU: packing operators (BS, MT, MF) suffice.
+    Single,
+    /// > 1 GPU: parallelism operators (MP, DP) required.
+    Multi,
+}
+
+/// The four task categories of Fig. 5.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum TaskCategory {
+    LatencySingle,
+    LatencyMulti,
+    FrequencySingle,
+    FrequencyMulti,
+}
+
+impl TaskCategory {
+    pub fn of(sens: Sensitivity, demand: GpuDemand) -> Self {
+        match (sens, demand) {
+            (Sensitivity::Latency, GpuDemand::Single) => TaskCategory::LatencySingle,
+            (Sensitivity::Latency, GpuDemand::Multi) => TaskCategory::LatencyMulti,
+            (Sensitivity::Frequency, GpuDemand::Single) => TaskCategory::FrequencySingle,
+            (Sensitivity::Frequency, GpuDemand::Multi) => TaskCategory::FrequencyMulti,
+        }
+    }
+
+    pub fn sensitivity(self) -> Sensitivity {
+        match self {
+            TaskCategory::LatencySingle | TaskCategory::LatencyMulti => Sensitivity::Latency,
+            _ => Sensitivity::Frequency,
+        }
+    }
+
+    pub fn demand(self) -> GpuDemand {
+        match self {
+            TaskCategory::LatencySingle | TaskCategory::FrequencySingle => GpuDemand::Single,
+            _ => GpuDemand::Multi,
+        }
+    }
+
+    pub const ALL: [TaskCategory; 4] = [
+        TaskCategory::LatencySingle,
+        TaskCategory::LatencyMulti,
+        TaskCategory::FrequencySingle,
+        TaskCategory::FrequencyMulti,
+    ];
+}
+
+/// Service-level objective.
+///
+/// Latency-sensitive tasks: complete within `latency_ms`.
+/// Frequency-sensitive tasks: additionally sustain `min_rate` (fps or
+/// tokens/s); §3.3 grants fractional credit — achieving 30 of a 60 fps
+/// target on a 120-frame request satisfies 120·30/60 = 60 requests.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Slo {
+    pub latency_ms: f64,
+    pub min_rate: Option<f64>,
+}
+
+impl Slo {
+    pub fn latency(ms: f64) -> Self {
+        Slo { latency_ms: ms, min_rate: None }
+    }
+
+    pub fn rate(ms: f64, rate: f64) -> Self {
+        Slo { latency_ms: ms, min_rate: Some(rate) }
+    }
+}
+
+/// §3.1: model parallelism configuration (the MP operator).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum MpKind {
+    /// Single GPU, no model parallelism.
+    None,
+    /// Tensor parallelism over k GPUs.
+    Tp(u8),
+    /// Pipeline parallelism over k stages.
+    Pp(u8),
+    /// Combined TP×PP (e.g. TP2+PP2 for Qwen2.5-32B in §4.3).
+    TpPp(u8, u8),
+}
+
+impl MpKind {
+    /// Number of GPUs one replica occupies.
+    pub fn gpus(self) -> u32 {
+        match self {
+            MpKind::None => 1,
+            MpKind::Tp(k) | MpKind::Pp(k) => k as u32,
+            MpKind::TpPp(t, p) => t as u32 * p as u32,
+        }
+    }
+}
+
+/// §3.1: the full operator assignment the allocator produces per service.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OperatorConfig {
+    /// Batching: requests of the same service grouped per execution.
+    pub bs: u32,
+    /// Multi-task: replicas of this service packed on one GPU (MPS-style).
+    pub mt: u32,
+    /// Model parallelism (TP/PP) across GPUs.
+    pub mp: MpKind,
+    /// Multi-frame: frames of homogeneous tasks grouped in one batch
+    /// (request-level; 1 = disabled).
+    pub mf: u32,
+    /// Data parallelism: DP group count for round-robin frame dispatch
+    /// (request-level; 1 = disabled).
+    pub dp: u32,
+}
+
+impl Default for OperatorConfig {
+    fn default() -> Self {
+        OperatorConfig { bs: 1, mt: 1, mp: MpKind::None, mf: 1, dp: 1 }
+    }
+}
+
+impl OperatorConfig {
+    /// GPUs required by one full deployment of this config (Eq. 4's DP
+    /// groups × the MP footprint).
+    pub fn gpus(&self) -> u32 {
+        self.dp * self.mp.gpus()
+    }
+
+    /// §4.1 Eq. (5): inter-request count = floor(BS / max(MF, 1)).
+    pub fn inter_request_count(&self) -> u32 {
+        (self.bs / self.mf.max(1)).max(1)
+    }
+}
+
+/// Static description of a deployable service.
+#[derive(Clone, Debug)]
+pub struct ServiceSpec {
+    pub id: ServiceId,
+    pub name: String,
+    pub sensitivity: Sensitivity,
+    /// VRAM one replica needs at MP=None (MB) — `b_l` in Eq. 3.
+    pub vram_mb: f64,
+    /// Fraction of one GPU's compute an MPS slice consumes — `a_l` in Eq. 3.
+    pub compute_slice: f64,
+    /// Time to transfer + load the model onto a GPU (Fig. 3f).
+    pub model_load_ms: f64,
+    /// Request payload (KB) crossing the network on offload.
+    pub payload_kb: f64,
+    /// SLO for this service's tasks.
+    pub slo: Slo,
+    /// Frames per frequency-sensitive request (1 for latency tasks).
+    pub frames_per_request: u32,
+}
+
+impl ServiceSpec {
+    /// Whether one replica fits a single GPU of `gpu_vram_mb`.
+    pub fn fits_single_gpu(&self, gpu_vram_mb: f64) -> bool {
+        self.vram_mb <= gpu_vram_mb
+    }
+
+    pub fn demand(&self, gpu_vram_mb: f64) -> GpuDemand {
+        if self.fits_single_gpu(gpu_vram_mb) {
+            GpuDemand::Single
+        } else {
+            GpuDemand::Multi
+        }
+    }
+
+    pub fn category(&self, gpu_vram_mb: f64) -> TaskCategory {
+        TaskCategory::of(self.sensitivity, self.demand(gpu_vram_mb))
+    }
+}
+
+/// A user request (the paper's r / r_{tln}).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub service: ServiceId,
+    /// Arrival time at the first edge server (ms, virtual time).
+    pub arrival_ms: f64,
+    /// Server the user contacted.
+    pub origin: ServerId,
+    /// Frames carried (frequency tasks; 1 otherwise).
+    pub frames: u32,
+    /// Offload hop trail (§3.2 "offloading paths": loop prevention).
+    pub path: Vec<ServerId>,
+    /// Offload count so far (bounded by max_offloads, §4.1).
+    pub offloads: u32,
+}
+
+/// Terminal outcome of request handling (Fig. 6's four exits).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Outcome {
+    /// Fully processed within SLO; completion latency in ms.
+    Completed { latency_ms: f64 },
+    /// Frequency task partially satisfied: `satisfied` of `total` frames
+    /// met the rate SLO (fractional credit, §3.3).
+    Partial { satisfied: f64, total: u32 },
+    /// SLO violation — dropped.
+    Timeout,
+    /// Max offload count reached.
+    OffloadExceeded,
+    /// No feasible server (Fig. 6 "resource insufficiency").
+    ResourceInsufficient,
+}
+
+impl Outcome {
+    /// Goodput credit this outcome contributes (satisfied request count).
+    pub fn credit(&self) -> f64 {
+        match self {
+            Outcome::Completed { .. } => 1.0,
+            Outcome::Partial { satisfied, total } => {
+                if *total == 0 { 0.0 } else { satisfied / *total as f64 }
+            }
+            _ => 0.0,
+        }
+    }
+
+    pub fn is_success(&self) -> bool {
+        self.credit() > 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn category_axes() {
+        assert_eq!(
+            TaskCategory::of(Sensitivity::Frequency, GpuDemand::Multi),
+            TaskCategory::FrequencyMulti
+        );
+        for c in TaskCategory::ALL {
+            assert_eq!(TaskCategory::of(c.sensitivity(), c.demand()), c);
+        }
+    }
+
+    #[test]
+    fn mp_gpu_counts() {
+        assert_eq!(MpKind::None.gpus(), 1);
+        assert_eq!(MpKind::Tp(2).gpus(), 2);
+        assert_eq!(MpKind::Pp(4).gpus(), 4);
+        assert_eq!(MpKind::TpPp(2, 2).gpus(), 4);
+    }
+
+    #[test]
+    fn operator_footprint() {
+        let cfg = OperatorConfig { dp: 2, mp: MpKind::Tp(2), ..Default::default() };
+        assert_eq!(cfg.gpus(), 4);
+    }
+
+    #[test]
+    fn inter_request_count_eq5() {
+        // Eq. (5): floor(BS / max(MF))
+        let cfg = OperatorConfig { bs: 8, mf: 4, ..Default::default() };
+        assert_eq!(cfg.inter_request_count(), 2);
+        let cfg = OperatorConfig { bs: 4, mf: 8, ..Default::default() };
+        assert_eq!(cfg.inter_request_count(), 1); // clamped to >= 1
+    }
+
+    #[test]
+    fn outcome_credit() {
+        assert_eq!(Outcome::Completed { latency_ms: 1.0 }.credit(), 1.0);
+        let p = Outcome::Partial { satisfied: 60.0, total: 120 };
+        assert!((p.credit() - 0.5).abs() < 1e-12);
+        assert_eq!(Outcome::Timeout.credit(), 0.0);
+        assert!(!Outcome::ResourceInsufficient.is_success());
+    }
+
+    #[test]
+    fn service_demand_vs_vram() {
+        let spec = ServiceSpec {
+            id: ServiceId(0),
+            name: "llama3-70b".into(),
+            sensitivity: Sensitivity::Latency,
+            vram_mb: 40_000.0,
+            compute_slice: 1.0,
+            model_load_ms: 20_000.0,
+            payload_kb: 8.0,
+            slo: Slo::latency(4000.0),
+            frames_per_request: 1,
+        };
+        assert_eq!(spec.demand(16_000.0), GpuDemand::Multi);
+        assert_eq!(spec.category(16_000.0), TaskCategory::LatencyMulti);
+        assert_eq!(spec.demand(80_000.0), GpuDemand::Single);
+    }
+}

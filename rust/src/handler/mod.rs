@@ -1,0 +1,298 @@
+//! Distributed request handler (§3.2, Fig. 6).
+//!
+//! Each edge server decides, per request and in real time:
+//!
+//! 1. timed out? → return Timeout;
+//! 2. locally placed capacity sufficient? → solve locally;
+//! 3. cross-server-parallel deployment reachable? → treat as local with
+//!    lower priority; registered edge-device GPU? → lower still;
+//! 4. offload-count limit reached? → OffloadExceeded; otherwise pick a
+//!    destination probabilistically by **idle goodput** (Eq. 1):
+//!        P(ṅ) = p̃_ṅ / Σ_m p̃_m,  p̃_n = p̂_n(t_n) − p_n(ẗ_n)
+//!    over candidates whose queued compute ≤ t_n + SLO_r, excluding every
+//!    server already on the request's path (loop freedom);
+//! 5. no candidate → ResourceInsufficient.
+//!
+//! The handler sees the world only through [`StateView`] — the periodically
+//! synchronized, possibly stale information of §3.4 — never global truth.
+
+use crate::core::{DeviceId, Request, ServerId, ServiceId};
+use crate::util::Rng;
+
+/// How a server can serve a request right now, in §3.2 priority order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LocalCapacity {
+    /// Plain local GPUs can take it.
+    Ready,
+    /// Only via a parallel deployment spanning servers (lower priority).
+    CrossServerParallel,
+    /// Only via a registered edge-device GPU (lowest local priority).
+    Device(DeviceId),
+    /// Cannot be served here at the moment.
+    None,
+}
+
+/// The handler's view of synchronized state (implemented by the simulator
+/// and the live coordinator; mocked in tests).
+pub trait StateView {
+    fn n_servers(&self) -> usize;
+
+    /// Local real-time capacity check at `server` (fine-grained, always
+    /// fresh — it is the server's own state).
+    fn local_capacity(&self, server: ServerId, service: ServiceId) -> LocalCapacity;
+
+    /// Theoretical goodput p̂ of `service` on `server` (req/s the placed
+    /// replicas could sustain), from state synced t_n ago.
+    fn theoretical_goodput(&self, server: ServerId, service: ServiceId) -> f64;
+
+    /// Actual goodput p over the stale window ẗ = [−2t_n, −t_n] (req/s).
+    fn actual_goodput(&self, server: ServerId, service: ServiceId) -> f64;
+
+    /// Expected compute time of `server`'s queued requests (ms), synced.
+    fn queued_ms(&self, server: ServerId, service: ServiceId) -> f64;
+
+    /// Sync delay t_n of `server` (ms).
+    fn sync_delay_ms(&self, server: ServerId) -> f64;
+
+    /// Latency SLO of the request's service (ms).
+    fn slo_ms(&self, service: ServiceId) -> f64;
+}
+
+/// Handler configuration (§4.1).
+#[derive(Clone, Copy, Debug)]
+pub struct HandlerConfig {
+    /// Maximum offloading count (default 5, Table 4).
+    pub max_offloads: u32,
+}
+
+impl Default for HandlerConfig {
+    fn default() -> Self {
+        HandlerConfig { max_offloads: 5 }
+    }
+}
+
+/// The routing decision for one request at one server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    Timeout,
+    Local,
+    CrossServerParallel,
+    Device(DeviceId),
+    Offload(ServerId),
+    OffloadExceeded,
+    ResourceInsufficient,
+}
+
+/// Eq. (1): idle goodput p̃ of a candidate server for a service.
+pub fn idle_goodput(view: &dyn StateView, server: ServerId, service: ServiceId) -> f64 {
+    (view.theoretical_goodput(server, service) - view.actual_goodput(server, service))
+        .max(0.0)
+}
+
+/// One §3.2 handling step for request `req` arriving at server `at`.
+///
+/// `now_ms` is the current virtual/wall time; `rng` drives the Eq. (1)
+/// probabilistic draw (deterministic under a seed).
+pub fn decide(
+    req: &Request,
+    at: ServerId,
+    now_ms: f64,
+    view: &dyn StateView,
+    cfg: &HandlerConfig,
+    rng: &mut Rng,
+) -> Decision {
+    // 1. timeout check
+    let slo = view.slo_ms(req.service);
+    if now_ms - req.arrival_ms > slo {
+        return Decision::Timeout;
+    }
+
+    // 2–3. local capacity in priority order
+    match view.local_capacity(at, req.service) {
+        LocalCapacity::Ready => return Decision::Local,
+        LocalCapacity::CrossServerParallel => return Decision::CrossServerParallel,
+        LocalCapacity::Device(d) => return Decision::Device(d),
+        LocalCapacity::None => {}
+    }
+
+    // 4. offload bound
+    if req.offloads >= cfg.max_offloads {
+        return Decision::OffloadExceeded;
+    }
+
+    // candidate destinations: every other server not already on the path
+    // whose queued compute fits t_n + SLO (Eq. 1's feasibility filter)
+    let n = view.n_servers();
+    let mut weights = vec![0.0f64; n];
+    let mut any = false;
+    for m in 0..n {
+        let mid = ServerId(m as u32);
+        if mid == at || req.path.contains(&mid) {
+            continue;
+        }
+        let t_n = view.sync_delay_ms(mid);
+        if view.queued_ms(mid, req.service) > t_n + slo {
+            continue; // would violate the latency SLO after transfer
+        }
+        let w = idle_goodput(view, mid, req.service);
+        if w > 0.0 {
+            weights[m] = w;
+            any = true;
+        }
+    }
+    if !any {
+        return Decision::ResourceInsufficient;
+    }
+    match rng.weighted_index(&weights) {
+        Some(m) => Decision::Offload(ServerId(m as u32)),
+        None => Decision::ResourceInsufficient,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::RequestId;
+    use std::collections::HashMap;
+
+    /// Scriptable mock view.
+    #[derive(Default)]
+    struct Mock {
+        n: usize,
+        local: HashMap<u32, LocalCapacity>,
+        theo: HashMap<u32, f64>,
+        act: HashMap<u32, f64>,
+        queued: HashMap<u32, f64>,
+        slo: f64,
+    }
+
+    impl StateView for Mock {
+        fn n_servers(&self) -> usize {
+            self.n
+        }
+        fn local_capacity(&self, s: ServerId, _l: ServiceId) -> LocalCapacity {
+            *self.local.get(&s.0).unwrap_or(&LocalCapacity::None)
+        }
+        fn theoretical_goodput(&self, s: ServerId, _l: ServiceId) -> f64 {
+            *self.theo.get(&s.0).unwrap_or(&0.0)
+        }
+        fn actual_goodput(&self, s: ServerId, _l: ServiceId) -> f64 {
+            *self.act.get(&s.0).unwrap_or(&0.0)
+        }
+        fn queued_ms(&self, s: ServerId, _l: ServiceId) -> f64 {
+            *self.queued.get(&s.0).unwrap_or(&0.0)
+        }
+        fn sync_delay_ms(&self, _s: ServerId) -> f64 {
+            10.0
+        }
+        fn slo_ms(&self, _l: ServiceId) -> f64 {
+            self.slo
+        }
+    }
+
+    fn req(offloads: u32, path: Vec<u32>) -> Request {
+        Request {
+            id: RequestId(0),
+            service: ServiceId(0),
+            arrival_ms: 0.0,
+            origin: ServerId(0),
+            frames: 1,
+            path: path.into_iter().map(ServerId).collect(),
+            offloads,
+        }
+    }
+
+    #[test]
+    fn timeout_first() {
+        let view = Mock { n: 2, slo: 100.0, ..Default::default() };
+        let d = decide(&req(0, vec![]), ServerId(0), 150.0, &view,
+                       &HandlerConfig::default(), &mut Rng::new(1));
+        assert_eq!(d, Decision::Timeout);
+    }
+
+    #[test]
+    fn local_priority_order() {
+        let mut view = Mock { n: 2, slo: 100.0, ..Default::default() };
+        view.local.insert(0, LocalCapacity::Ready);
+        let d = decide(&req(0, vec![]), ServerId(0), 1.0, &view,
+                       &HandlerConfig::default(), &mut Rng::new(1));
+        assert_eq!(d, Decision::Local);
+
+        view.local.insert(0, LocalCapacity::CrossServerParallel);
+        let d = decide(&req(0, vec![]), ServerId(0), 1.0, &view,
+                       &HandlerConfig::default(), &mut Rng::new(1));
+        assert_eq!(d, Decision::CrossServerParallel);
+
+        view.local.insert(0, LocalCapacity::Device(DeviceId(3)));
+        let d = decide(&req(0, vec![]), ServerId(0), 1.0, &view,
+                       &HandlerConfig::default(), &mut Rng::new(1));
+        assert_eq!(d, Decision::Device(DeviceId(3)));
+    }
+
+    #[test]
+    fn offload_count_enforced() {
+        let mut view = Mock { n: 3, slo: 100.0, ..Default::default() };
+        view.theo.insert(1, 10.0);
+        let cfg = HandlerConfig { max_offloads: 5 };
+        let d = decide(&req(5, vec![]), ServerId(0), 1.0, &view, &cfg,
+                       &mut Rng::new(1));
+        assert_eq!(d, Decision::OffloadExceeded);
+        let d = decide(&req(4, vec![]), ServerId(0), 1.0, &view, &cfg,
+                       &mut Rng::new(1));
+        assert_eq!(d, Decision::Offload(ServerId(1)));
+    }
+
+    #[test]
+    fn loop_freedom_path_excluded() {
+        let mut view = Mock { n: 3, slo: 100.0, ..Default::default() };
+        view.theo.insert(1, 10.0);
+        view.theo.insert(2, 10.0);
+        // server 1 already visited: only 2 is eligible
+        for seed in 0..20 {
+            let d = decide(&req(1, vec![1]), ServerId(0), 1.0, &view,
+                           &HandlerConfig::default(), &mut Rng::new(seed));
+            assert_eq!(d, Decision::Offload(ServerId(2)));
+        }
+    }
+
+    #[test]
+    fn eq1_weights_proportional() {
+        // p̃: server1 = 9-0 = 9, server2 = 6-3 = 3 → 3:1 draw ratio
+        let mut view = Mock { n: 3, slo: 100.0, ..Default::default() };
+        view.theo.insert(1, 9.0);
+        view.theo.insert(2, 6.0);
+        view.act.insert(2, 3.0);
+        let mut rng = Rng::new(7);
+        let mut counts = [0usize; 3];
+        for _ in 0..4000 {
+            match decide(&req(0, vec![]), ServerId(0), 1.0, &view,
+                         &HandlerConfig::default(), &mut rng) {
+                Decision::Offload(ServerId(m)) => counts[m as usize] += 1,
+                d => panic!("unexpected {d:?}"),
+            }
+        }
+        let ratio = counts[1] as f64 / counts[2] as f64;
+        assert!((ratio - 3.0).abs() < 0.4, "ratio {ratio}");
+    }
+
+    #[test]
+    fn queued_slo_filter() {
+        let mut view = Mock { n: 2, slo: 100.0, ..Default::default() };
+        view.theo.insert(1, 10.0);
+        // queue exceeds t_n + SLO = 110 → infeasible
+        view.queued.insert(1, 200.0);
+        let d = decide(&req(0, vec![]), ServerId(0), 1.0, &view,
+                       &HandlerConfig::default(), &mut Rng::new(1));
+        assert_eq!(d, Decision::ResourceInsufficient);
+    }
+
+    #[test]
+    fn saturated_everywhere_is_insufficient() {
+        let mut view = Mock { n: 3, slo: 100.0, ..Default::default() };
+        view.theo.insert(1, 5.0);
+        view.act.insert(1, 5.0); // idle goodput 0
+        let d = decide(&req(0, vec![]), ServerId(0), 1.0, &view,
+                       &HandlerConfig::default(), &mut Rng::new(1));
+        assert_eq!(d, Decision::ResourceInsufficient);
+    }
+}

@@ -1,0 +1,60 @@
+//! # EPARA — Parallelizing Categorized AI Inference in Edge Clouds
+//!
+//! Reproduction of the EPARA paper (CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas stack.  This crate is Layer 3: the paper's entire
+//! coordination contribution plus every substrate it depends on.
+//!
+//! Architecture (see `DESIGN.md` for the full inventory):
+//!
+//! * [`core`] — task/request/service vocabulary: the four task categories
+//!   (§3.1), SLOs, the five allocation operators (BS/MT/MP/MF/DP).
+//! * [`allocator`] — task-categorized parallelism allocator (§3.1, §4.1).
+//! * [`handler`] — distributed request handler with probabilistic
+//!   idle-goodput offloading (§3.2, Eq. 1).
+//! * [`placement`] — state-aware submodular service placement
+//!   (§3.3, Algorithms 1–2, the 1/(1+P) bound of Eq. 3 / Appendix A).
+//! * [`sync`] — ring-reduce information synchronization (§3.4).
+//! * [`cluster`], [`profile`], [`workload`] — the edge-cloud substrate:
+//!   servers/GPUs/devices/links, offline profiling tables, and the
+//!   Azure-trace-shaped workload generator.
+//! * [`sim`] — the event-driven simulator of §5.2 (virtual time, goodput
+//!   accounting with fractional frequency credit).
+//! * [`baselines`] — InterEdge, AlpaServe, Galaxy, SERV-P, USHER,
+//!   DeTransformer comparison policies behind one trait.
+//! * [`runtime`] — PJRT CPU engine loading the AOT artifacts
+//!   (`artifacts/*.hlo.txt`); TP2 combine and PP2 piping live here.
+//! * [`coordinator`] — the real (wall-clock) serving path built on
+//!   [`runtime`]: per-GPU workers, BS/MF batching, DP dispatch.
+//! * [`util`], [`configjson`], [`metrics`] — in-crate substrates required
+//!   by the offline registry (RNG, stats, property-test harness, JSON,
+//!   metrics registry).
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`); this
+//! crate is self-contained afterwards — nothing on the request path ever
+//! calls Python.
+
+pub mod allocator;
+pub mod baselines;
+pub mod cluster;
+pub mod configjson;
+pub mod coordinator;
+pub mod core;
+pub mod handler;
+pub mod metrics;
+pub mod placement;
+pub mod profile;
+pub mod runtime;
+pub mod sim;
+pub mod sync;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Locate the `artifacts/` directory: `$EPARA_ARTIFACTS` or ./artifacts.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("EPARA_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,274 @@
+//! `epara` — CLI entrypoint for the EPARA edge-cloud serving framework.
+//!
+//! Subcommands (own arg parsing; no clap in the offline registry):
+//!
+//!   epara serve     [--requests N] [--rps R] [--artifacts DIR]
+//!       Live serving: load AOT artifacts, run the coordinator on a
+//!       synthetic mixed workload, print throughput/latency.
+//!   epara simulate  [--servers N] [--gpus G] [--rps R] [--duration S]
+//!                   [--mix mixed|latency|frequency|prodK] [--policy P]
+//!       Event-driven simulation (§5.2) with any policy:
+//!       epara|interedge|alpaserve|galaxy|servp|usher|detransformer.
+//!   epara place     [--servers N] [--gpus G] [--rps R]
+//!       Run the submodular placement alone; print φ, bound, wall time.
+//!   epara golden    [--artifacts DIR]
+//!       Execute every golden fixture through PJRT and verify numerics.
+//!   epara report    [--artifacts DIR]
+//!       Print the manifest inventory.
+
+use std::collections::HashMap;
+
+use epara::allocator::{Allocator, Overrides};
+use epara::cluster::{EdgeCloud, GpuSpec};
+use epara::coordinator::{synthetic_workload, BatchConfig, Coordinator};
+use epara::core::ServiceId;
+use epara::placement::{approximation_bound, approximation_p, sssp, FluidEval, PhiEval};
+use epara::profile::zoo;
+use epara::sim::{simulate, PolicyConfig, SimConfig};
+use epara::workload::{generate, Mix, WorkloadSpec};
+
+/// Minimal flag parser: --key value pairs after the subcommand.
+struct Args(HashMap<String, String>);
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut m = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                let val = argv.get(i + 1).cloned().unwrap_or_default();
+                m.insert(key.to_string(), val);
+                i += 2;
+            } else {
+                i += 1;
+            }
+        }
+        Args(m)
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.0
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.0.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn parse_mix(s: &str) -> Mix {
+    match s {
+        "latency" => Mix::LatencyOnly,
+        "frequency" => Mix::FrequencyOnly,
+        "mixed" => Mix::Mixed,
+        other => {
+            if let Some(k) = other.strip_prefix("prod") {
+                Mix::Production(k.parse().unwrap_or(0))
+            } else {
+                Mix::Production(0)
+            }
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+
+    match cmd {
+        "serve" => cmd_serve(&args),
+        "simulate" => cmd_simulate(&args),
+        "place" => cmd_place(&args),
+        "golden" => cmd_golden(&args),
+        "report" => cmd_report(&args),
+        _ => {
+            eprintln!(
+                "usage: epara <serve|simulate|place|golden|report> [--flags]\n\
+                 see `rust/src/main.rs` docs for flags"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> std::path::PathBuf {
+    let s = args.str("artifacts", "");
+    if s.is_empty() {
+        epara::artifacts_dir()
+    } else {
+        s.into()
+    }
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let n: usize = args.get("requests", 60);
+    let rps: f64 = args.get("rps", 40.0);
+    let coord = Coordinator::new(artifacts_dir(args), BatchConfig::default())?;
+    println!("epara serve: {n} requests at ~{rps} req/s (real PJRT inference)");
+    let workload = synthetic_workload(n, rps, 42);
+    let mut stats = coord.serve(workload)?;
+    println!("{}", stats.report("serve"));
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    // --config file.json describes the whole run (see sim::runcfg docs)
+    let cfg_path = args.str("config", "");
+    if !cfg_path.is_empty() {
+        let rc = epara::sim::RunConfig::from_file(std::path::Path::new(&cfg_path))?;
+        let table = zoo::paper_zoo();
+        let reqs = generate(&rc.workload, &table, &rc.cloud);
+        println!(
+            "simulate[{}]: {} servers / {} GPUs, {} requests, policy {}",
+            cfg_path, rc.cloud.n_servers(), rc.cloud.total_gpus(),
+            reqs.len(), rc.sim.policy.name
+        );
+        let name = rc.sim.policy.name;
+        let mut m = simulate(&table, rc.cloud, reqs, rc.sim);
+        println!("{}", m.report(name));
+        return Ok(());
+    }
+    let servers: usize = args.get("servers", 6);
+    let gpus: usize = args.get("gpus", 0);
+    let rps: f64 = args.get("rps", 50.0);
+    let duration_s: f64 = args.get("duration", 30.0);
+    let mix = parse_mix(&args.str("mix", "prod0"));
+    let policy_name = args.str("policy", "epara");
+    let policy = match policy_name.as_str() {
+        "epara" => PolicyConfig::epara(),
+        other => epara::baselines::policy_for(&canonical(other))
+            .ok_or_else(|| anyhow::anyhow!("unknown policy {other}"))?,
+    };
+
+    let table = zoo::paper_zoo();
+    let cloud = if gpus == 0 {
+        EdgeCloud::testbed()
+    } else {
+        EdgeCloud::uniform(servers, gpus, GpuSpec::P100,
+                           epara::cluster::Link::SWITCH_10G)
+    };
+    let spec = WorkloadSpec {
+        mix,
+        rps,
+        duration_ms: duration_s * 1000.0,
+        ..Default::default()
+    };
+    let reqs = generate(&spec, &table, &cloud);
+    println!(
+        "simulate: {} servers / {} GPUs, {} requests, policy {}",
+        cloud.n_servers(),
+        cloud.total_gpus(),
+        reqs.len(),
+        policy.name
+    );
+    let cfg = SimConfig { policy, duration_ms: spec.duration_ms, ..Default::default() };
+    let mut m = simulate(&table, cloud, reqs, cfg);
+    println!("{}", m.report(policy.name));
+    Ok(())
+}
+
+fn canonical(name: &str) -> String {
+    match name {
+        "interedge" => "InterEdge".into(),
+        "alpaserve" => "AlpaServe".into(),
+        "galaxy" => "Galaxy".into(),
+        "servp" => "SERV-P".into(),
+        "usher" => "USHER".into(),
+        "detransformer" => "DeTransformer".into(),
+        other => other.into(),
+    }
+}
+
+fn cmd_place(args: &Args) -> anyhow::Result<()> {
+    let servers: usize = args.get("servers", 100);
+    let gpus: usize = args.get("gpus", 8);
+    let rps: f64 = args.get("rps", 500.0);
+
+    let table = zoo::paper_zoo();
+    let cloud = EdgeCloud::uniform(servers, gpus, GpuSpec::P100,
+                                   epara::cluster::Link::SWITCH_10G);
+    let spec = WorkloadSpec { rps, ..Default::default() };
+    let reqs = generate(&spec, &table, &cloud);
+    let services: Vec<ServiceId> = {
+        let mut s: Vec<ServiceId> = reqs.iter().map(|r| r.service).collect();
+        s.sort();
+        s.dedup();
+        s
+    };
+    let allocator = Allocator::new(&table, GpuSpec::P100);
+    let allocs: HashMap<ServiceId, _> = services
+        .iter()
+        .map(|&id| (id, allocator.allocate(id, Overrides::default())))
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let mut eval =
+        FluidEval::from_requests(&table, &allocs, &cloud, &reqs, spec.duration_ms);
+    let placement = sssp(&[], &services, cloud.n_servers(), &mut eval);
+    let elapsed = t0.elapsed().as_secs_f64() * 1000.0;
+
+    let p = approximation_p(&allocs, &table);
+    println!(
+        "placement: {} items over {} servers in {:.1} ms; φ = {:.2} req/s; \
+         Eq.3 P = {p}, guaranteed ≥ {:.4}·OPT",
+        placement.len(),
+        servers,
+        elapsed,
+        eval.phi(),
+        approximation_bound(p)
+    );
+    Ok(())
+}
+
+fn cmd_golden(args: &Args) -> anyhow::Result<()> {
+    let engine = epara::runtime::Engine::load(&artifacts_dir(args))?;
+    let mut failures = 0;
+    for name in engine.golden_artifacts() {
+        match engine.verify_golden(&name) {
+            Ok(diff) if diff <= 2e-3 => {
+                println!("golden {name}: OK (max |diff| {diff:.2e})")
+            }
+            Ok(diff) => {
+                println!("golden {name}: FAIL (max |diff| {diff:.2e})");
+                failures += 1;
+            }
+            Err(e) => {
+                println!("golden {name}: ERROR {e:#}");
+                failures += 1;
+            }
+        }
+    }
+    match engine.verify_generate_golden() {
+        Ok(()) => println!("golden llm.generate.bs2: OK (exact token match)"),
+        Err(e) => {
+            println!("golden llm.generate.bs2: FAIL {e:#}");
+            failures += 1;
+        }
+    }
+    anyhow::ensure!(failures == 0, "{failures} golden checks failed");
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let manifest = epara::runtime::Manifest::load(&artifacts_dir(args))?;
+    println!("artifacts: {}", manifest.artifacts.len());
+    for a in &manifest.artifacts {
+        println!(
+            "  {:32} blob={:12} params={:3} inputs={} outputs={}",
+            a.name,
+            a.weights_blob,
+            a.param_tensors.len(),
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    println!("weight blobs:");
+    for (name, b) in &manifest.weight_blobs {
+        println!("  {:12} {} tensors, {} bytes", name, b.tensors.len(), b.total_bytes);
+    }
+    println!("goldens: {}", manifest.golden.len());
+    Ok(())
+}

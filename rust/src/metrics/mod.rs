@@ -1,0 +1,163 @@
+//! Goodput and resource accounting shared by the simulator, the live
+//! coordinator, and the benches.
+//!
+//! Goodput follows §3.3: latency tasks count 1 when completed in-SLO;
+//! frequency tasks earn fractional credit (achieved/target rate, e.g.
+//! 120 frames × 30/60 fps = 60 satisfied requests).  Resource metrics
+//! reproduce Fig. 13 (compute occupancy + VRAM utilization).
+
+use std::collections::HashMap;
+
+use crate::core::{Outcome, ServiceId};
+use crate::util::stats::Summary;
+
+/// Aggregated run metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    /// Total requests observed.
+    pub offered: u64,
+    /// Goodput credit earned (fractional; §3.3 accounting).
+    pub satisfied: f64,
+    /// Outcome counters.
+    pub completed: u64,
+    pub partial: u64,
+    pub timeout: u64,
+    pub offload_exceeded: u64,
+    pub resource_insufficient: u64,
+    /// Completion latencies (ms) of successful requests.
+    pub latency: Summary,
+    /// Offload hops per handled request (Fig. 17e).
+    pub offload_counts: Summary,
+    /// Per-service goodput credit.
+    pub per_service: HashMap<ServiceId, f64>,
+    /// Virtual duration covered (ms).
+    pub duration_ms: f64,
+    /// GPU busy-time integral (gpu·ms) and capacity (gpu·ms).
+    pub gpu_busy_ms: f64,
+    pub gpu_capacity_ms: f64,
+    /// VRAM in use (MB·ms integral) and capacity.
+    pub vram_used_mb_ms: f64,
+    pub vram_capacity_mb_ms: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one terminal request outcome.
+    pub fn record(&mut self, service: ServiceId, outcome: &Outcome, offloads: u32) {
+        self.offered += 1;
+        self.offload_counts.add(offloads as f64);
+        let credit = outcome.credit();
+        self.satisfied += credit;
+        *self.per_service.entry(service).or_insert(0.0) += credit;
+        match outcome {
+            Outcome::Completed { latency_ms } => {
+                self.completed += 1;
+                self.latency.add(*latency_ms);
+            }
+            Outcome::Partial { .. } => self.partial += 1,
+            Outcome::Timeout => self.timeout += 1,
+            Outcome::OffloadExceeded => self.offload_exceeded += 1,
+            Outcome::ResourceInsufficient => self.resource_insufficient += 1,
+        }
+    }
+
+    /// Goodput in satisfied requests per second.
+    pub fn goodput_rps(&self) -> f64 {
+        if self.duration_ms <= 0.0 {
+            0.0
+        } else {
+            self.satisfied * 1000.0 / self.duration_ms
+        }
+    }
+
+    /// Fraction of offered requests satisfied (fractional credit).
+    pub fn satisfaction_ratio(&self) -> f64 {
+        if self.offered == 0 {
+            1.0
+        } else {
+            self.satisfied / self.offered as f64
+        }
+    }
+
+    /// Fig. 13's compute occupancy (clamped: the batch-window share model
+    /// can slightly overcount under cross-server 1.25× service times).
+    pub fn gpu_utilization(&self) -> f64 {
+        if self.gpu_capacity_ms <= 0.0 {
+            0.0
+        } else {
+            (self.gpu_busy_ms / self.gpu_capacity_ms).min(1.0)
+        }
+    }
+
+    /// Fig. 13's VRAM utilization.
+    pub fn vram_utilization(&self) -> f64 {
+        if self.vram_capacity_mb_ms <= 0.0 {
+            0.0
+        } else {
+            self.vram_used_mb_ms / self.vram_capacity_mb_ms
+        }
+    }
+
+    /// Mean offload hops (Fig. 17e).
+    pub fn mean_offloads(&self) -> f64 {
+        self.offload_counts.mean()
+    }
+
+    /// One-line report for benches.
+    pub fn report(&mut self, label: &str) -> String {
+        format!(
+            "{label}: goodput={:.2} req/s satisfied={:.1}/{} (ratio {:.3}) \
+             p50={:.1}ms p99={:.1}ms offloads={:.2} util(gpu {:.1}%, vram {:.1}%)",
+            self.goodput_rps(),
+            self.satisfied,
+            self.offered,
+            self.satisfaction_ratio(),
+            self.latency.p50(),
+            self.latency.p99(),
+            self.mean_offloads(),
+            self.gpu_utilization() * 100.0,
+            self.vram_utilization() * 100.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractional_credit_accounting() {
+        let mut m = Metrics::new();
+        m.duration_ms = 1000.0;
+        m.record(ServiceId(0), &Outcome::Completed { latency_ms: 5.0 }, 0);
+        m.record(ServiceId(0), &Outcome::Partial { satisfied: 60.0, total: 120 }, 1);
+        m.record(ServiceId(1), &Outcome::Timeout, 2);
+        assert_eq!(m.offered, 3);
+        assert!((m.satisfied - 1.5).abs() < 1e-12);
+        assert!((m.goodput_rps() - 1.5).abs() < 1e-12);
+        assert!((m.per_service[&ServiceId(0)] - 1.5).abs() < 1e-12);
+        assert!((m.mean_offloads() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_ratios() {
+        let mut m = Metrics::new();
+        m.gpu_busy_ms = 950.0;
+        m.gpu_capacity_ms = 1000.0;
+        m.vram_used_mb_ms = 98.0;
+        m.vram_capacity_mb_ms = 100.0;
+        assert!((m.gpu_utilization() - 0.95).abs() < 1e-12);
+        assert!((m.vram_utilization() - 0.98).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_are_sane() {
+        let mut m = Metrics::new();
+        assert_eq!(m.goodput_rps(), 0.0);
+        assert_eq!(m.satisfaction_ratio(), 1.0);
+        assert!(!m.report("x").is_empty());
+    }
+}

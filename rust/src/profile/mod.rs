@@ -1,0 +1,257 @@
+//! Offline profiling tables (§4.1): latency/VRAM per (service, BS, MP).
+//!
+//! The paper precomputes "computational latency ... from lookup tables
+//! indexed by GPU and AI service ... from our real-world experimental
+//! results" (§5.2).  We do the same: the Table-1 model zoo carries
+//! paper-scale P100 numbers; the three artifact-backed tiny services are
+//! calibrated from real PJRT runs (`ProfileTable::calibrate`).
+//!
+//! Scaling model (documented in DESIGN.md substitutions):
+//!   latency(bs)   = lat_bs1 · (1 + batch_alpha · (bs − 1))    (sub-linear)
+//!   TP k          : compute/k + tp_comm_ms·(k−1) per step; VRAM/k
+//!   PP k          : latency·(1+pp_overhead), VRAM/k, throughput ~k· for
+//!                   saturated pipelines (bubble-free steady state)
+//!   MT m          : m MPS slices share the GPU; per-slice slowdown
+//!                   max(1, m·compute_slice) (§4.1's interference model)
+
+use std::collections::HashMap;
+
+use crate::core::{MpKind, Sensitivity, ServiceId, ServiceSpec, Slo};
+
+pub mod zoo;
+
+/// Per-service base measurements everything else scales from.
+#[derive(Clone, Debug)]
+pub struct BaseProfile {
+    /// Latency of one item (image / frame / generated token) at BS=1,
+    /// MP=None, on the reference GPU class, in ms.
+    pub lat_bs1_ms: f64,
+    /// Marginal batch cost: latency(bs) = lat_bs1 · (1 + α·(bs−1)).
+    pub batch_alpha: f64,
+    /// TP per-step synchronization cost (ms per extra GPU).
+    pub tp_comm_ms: f64,
+    /// PP latency overhead fraction (stage hop cost).
+    pub pp_overhead: f64,
+    /// Items per request: generated tokens for LLMs, 1 for vision.
+    pub items_per_request: f64,
+}
+
+/// The lookup table: service → base profile (plus the service spec).
+#[derive(Clone, Debug, Default)]
+pub struct ProfileTable {
+    base: HashMap<ServiceId, BaseProfile>,
+    specs: HashMap<ServiceId, ServiceSpec>,
+}
+
+impl ProfileTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, spec: ServiceSpec, base: BaseProfile) {
+        self.base.insert(spec.id, base);
+        self.specs.insert(spec.id, spec);
+    }
+
+    pub fn spec(&self, id: ServiceId) -> &ServiceSpec {
+        &self.specs[&id]
+    }
+
+    pub fn get_spec(&self, id: ServiceId) -> Option<&ServiceSpec> {
+        self.specs.get(&id)
+    }
+
+    pub fn base(&self, id: ServiceId) -> &BaseProfile {
+        &self.base[&id]
+    }
+
+    pub fn services(&self) -> impl Iterator<Item = &ServiceSpec> {
+        self.specs.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Batch-execution latency in ms for `bs` items under `mp`,
+    /// with `mt` co-resident MPS slices on each GPU.
+    pub fn latency_ms(&self, id: ServiceId, bs: u32, mp: MpKind, mt: u32) -> f64 {
+        let b = &self.base[&id];
+        let spec = &self.specs[&id];
+        let batch = b.lat_bs1_ms * (1.0 + b.batch_alpha * (bs.max(1) - 1) as f64);
+        let mp_lat = match mp {
+            MpKind::None => batch,
+            MpKind::Tp(k) => batch / k as f64 + b.tp_comm_ms * (k as f64 - 1.0),
+            MpKind::Pp(k) => batch * (1.0 + b.pp_overhead * (k as f64 - 1.0)),
+            MpKind::TpPp(t, p) => {
+                let tp = batch / t as f64 + b.tp_comm_ms * (t as f64 - 1.0);
+                tp * (1.0 + b.pp_overhead * (p as f64 - 1.0))
+            }
+        };
+        // MT interference: m slices each claiming `compute_slice` of the
+        // GPU slow down once the GPU is oversubscribed.
+        let pressure = (mt as f64 * spec.compute_slice).max(1.0);
+        mp_lat * pressure
+    }
+
+    /// Items/second one deployment sustains (bs·mt per latency window,
+    /// PP pipelining multiplies steady-state throughput).
+    pub fn throughput(&self, id: ServiceId, bs: u32, mp: MpKind, mt: u32) -> f64 {
+        let lat = self.latency_ms(id, bs, mp, mt);
+        let pipeline = match mp {
+            MpKind::Pp(k) => k as f64 * 0.9, // steady state, 10% bubble
+            MpKind::TpPp(_, p) => p as f64 * 0.9,
+            _ => 1.0,
+        };
+        (bs as f64 * mt as f64 * pipeline) * 1000.0 / lat
+    }
+
+    /// Requests/second (items/s ÷ items-per-request).
+    pub fn request_rate(&self, id: ServiceId, bs: u32, mp: MpKind, mt: u32) -> f64 {
+        self.throughput(id, bs, mp, mt) / self.base[&id].items_per_request
+    }
+
+    /// Per-GPU VRAM of one replica under `mp` (MB).
+    pub fn vram_per_gpu(&self, id: ServiceId, mp: MpKind) -> f64 {
+        let v = self.specs[&id].vram_mb;
+        v / mp.gpus() as f64
+    }
+
+    /// End-to-end latency of one request (items_per_request items at BS).
+    pub fn request_latency_ms(&self, id: ServiceId, bs: u32, mp: MpKind, mt: u32) -> f64 {
+        let b = &self.base[&id];
+        // items beyond the first batch ride subsequent batch windows
+        let batches = (b.items_per_request / bs.max(1) as f64).ceil().max(1.0);
+        self.latency_ms(id, bs, mp, mt) * batches
+    }
+
+    /// Replace a service's measured base latency (runtime calibration).
+    pub fn calibrate(&mut self, id: ServiceId, lat_bs1_ms: f64, batch_alpha: f64) {
+        if let Some(b) = self.base.get_mut(&id) {
+            b.lat_bs1_ms = lat_bs1_ms;
+            b.batch_alpha = batch_alpha;
+        }
+    }
+}
+
+/// Convenience constructor for specs in zoo/tests.
+#[allow(clippy::too_many_arguments)]
+pub fn make_service(
+    id: u32,
+    name: &str,
+    sens: Sensitivity,
+    vram_mb: f64,
+    compute_slice: f64,
+    load_ms: f64,
+    payload_kb: f64,
+    slo: Slo,
+    frames: u32,
+) -> ServiceSpec {
+    ServiceSpec {
+        id: ServiceId(id),
+        name: name.into(),
+        sensitivity: sens,
+        vram_mb,
+        compute_slice,
+        model_load_ms: load_ms,
+        payload_kb,
+        slo,
+        frames_per_request: frames,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Sensitivity::*;
+
+    fn table() -> ProfileTable {
+        let mut t = ProfileTable::new();
+        t.insert(
+            make_service(0, "resnet50", Latency, 400.0, 0.25, 550.0, 150.0,
+                         Slo::latency(200.0), 1),
+            BaseProfile {
+                lat_bs1_ms: 60.0,
+                batch_alpha: 0.15,
+                tp_comm_ms: 4.0,
+                pp_overhead: 0.1,
+                items_per_request: 1.0,
+            },
+        );
+        t
+    }
+
+    #[test]
+    fn batching_is_sublinear() {
+        let t = table();
+        let id = ServiceId(0);
+        let l1 = t.latency_ms(id, 1, MpKind::None, 1);
+        let l8 = t.latency_ms(id, 8, MpKind::None, 1);
+        assert!(l8 > l1);
+        assert!(l8 < 8.0 * l1, "batching must beat serial execution");
+        // throughput grows with batch size
+        assert!(t.throughput(id, 8, MpKind::None, 1) > t.throughput(id, 1, MpKind::None, 1));
+    }
+
+    #[test]
+    fn tp_cuts_latency_with_comm_cost() {
+        let t = table();
+        let id = ServiceId(0);
+        let l1 = t.latency_ms(id, 1, MpKind::None, 1);
+        let l2 = t.latency_ms(id, 1, MpKind::Tp(2), 1);
+        assert!(l2 < l1);
+        assert!(l2 > l1 / 2.0, "comm overhead must show");
+    }
+
+    #[test]
+    fn pp_divides_vram() {
+        let t = table();
+        let id = ServiceId(0);
+        assert_eq!(t.vram_per_gpu(id, MpKind::None), 400.0);
+        assert_eq!(t.vram_per_gpu(id, MpKind::Pp(2)), 200.0);
+        assert_eq!(t.vram_per_gpu(id, MpKind::TpPp(2, 2)), 100.0);
+    }
+
+    #[test]
+    fn mt_oversubscription_slows_down() {
+        let t = table();
+        let id = ServiceId(0);
+        // compute_slice 0.25: 4 slices fit without slowdown, 8 oversubscribe
+        let l4 = t.latency_ms(id, 1, MpKind::None, 4);
+        let l8 = t.latency_ms(id, 1, MpKind::None, 8);
+        assert_eq!(l4, t.latency_ms(id, 1, MpKind::None, 1));
+        assert!(l8 > l4);
+        // but aggregate throughput still improves up to saturation
+        assert!(t.throughput(id, 1, MpKind::None, 4) > t.throughput(id, 1, MpKind::None, 1));
+    }
+
+    #[test]
+    fn request_latency_spans_batches() {
+        let t = table();
+        let id = ServiceId(0);
+        // items_per_request = 1 → one batch window regardless of bs
+        let l = t.request_latency_ms(id, 8, MpKind::None, 1);
+        assert_eq!(l, t.latency_ms(id, 8, MpKind::None, 1));
+    }
+
+    #[test]
+    fn throughput_scales_with_pp_pipelining() {
+        let t = table();
+        let id = ServiceId(0);
+        let no_pp = t.throughput(id, 4, MpKind::None, 1);
+        let pp2 = t.throughput(id, 4, MpKind::Pp(2), 1);
+        // steady-state pipeline nearly doubles items/s (0.9 bubble factor)
+        assert!(pp2 > no_pp * 1.3, "pp2 {pp2} vs {no_pp}");
+    }
+
+    #[test]
+    fn calibration_overrides() {
+        let mut t = table();
+        t.calibrate(ServiceId(0), 30.0, 0.1);
+        assert_eq!(t.latency_ms(ServiceId(0), 1, MpKind::None, 1), 30.0);
+    }
+}

@@ -1,0 +1,277 @@
+//! Typed view of `artifacts/manifest.json` (produced by python/compile/aot.py).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::configjson::{from_file, Json};
+
+/// Tensor dtype in the interchange (all weights are f32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => Err(anyhow!("unknown dtype {other}")),
+        }
+    }
+
+    pub fn size(self) -> usize {
+        4
+    }
+}
+
+/// Shape+dtype of one named tensor.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.elements() * self.dtype.size()
+    }
+}
+
+/// One tensor inside a weight blob (offset into the .bin).
+#[derive(Clone, Debug)]
+pub struct BlobTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// A weight blob file.
+#[derive(Clone, Debug)]
+pub struct WeightBlob {
+    pub file: PathBuf,
+    pub tensors: Vec<BlobTensor>,
+    pub total_bytes: usize,
+}
+
+/// One AOT artifact (compiled executable).
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo: PathBuf,
+    pub weights_blob: String,
+    /// Leading arguments: tensor names resolved against the blob.
+    pub param_tensors: Vec<TensorSpec>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: HashMap<String, String>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+/// One golden fixture tensor.
+#[derive(Clone, Debug)]
+pub struct GoldenTensor {
+    pub role: String,
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// One golden fixture file.
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub artifact: String,
+    pub file: PathBuf,
+    pub tensors: Vec<GoldenTensor>,
+}
+
+/// LLM static configuration (mirrors python LlmConfig).
+#[derive(Clone, Copy, Debug)]
+pub struct LlmConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub prefill_len: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub llm: LlmConfig,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub weight_blobs: HashMap<String, WeightBlob>,
+    pub golden: Vec<Golden>,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected array of tensors"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t.req("name")?.as_str().unwrap_or_default().to_string(),
+                shape: t
+                    .req("shape")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect(),
+                dtype: Dtype::parse(
+                    t.get("dtype").and_then(|d| d.as_str()).unwrap_or("f32"),
+                )?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = from_file(&dir.join("manifest.json"))
+            .context("loading artifacts manifest (run `make artifacts`)")?;
+
+        let lc = j.req("llm_config")?;
+        let u = |k: &str| -> Result<usize> {
+            lc.req(k)?.as_usize().ok_or_else(|| anyhow!("bad {k}"))
+        };
+        let llm = LlmConfig {
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_heads: u("n_heads")?,
+            n_layers: u("n_layers")?,
+            d_ff: u("d_ff")?,
+            max_seq: u("max_seq")?,
+            prefill_len: u("prefill_len")?,
+        };
+
+        let mut artifacts = Vec::new();
+        for a in j.req("artifacts")?.as_arr().unwrap_or(&[]) {
+            let mut meta = HashMap::new();
+            if let Some(m) = a.get("meta") {
+                for (k, v) in m.members() {
+                    let s = match v {
+                        Json::Str(s) => s.clone(),
+                        Json::Num(n) => format!("{n}"),
+                        other => other.to_string(),
+                    };
+                    meta.insert(k.clone(), s);
+                }
+            }
+            artifacts.push(ArtifactSpec {
+                name: a.req("name")?.as_str().unwrap_or_default().to_string(),
+                hlo: dir.join(a.req("hlo")?.as_str().unwrap_or_default()),
+                weights_blob: a
+                    .req("weights_blob")?
+                    .as_str()
+                    .unwrap_or_default()
+                    .to_string(),
+                param_tensors: tensor_specs(a.req("param_tensors")?)?,
+                inputs: tensor_specs(a.req("inputs")?)?,
+                outputs: tensor_specs(a.req("outputs")?)?,
+                meta,
+            });
+        }
+
+        let mut weight_blobs = HashMap::new();
+        for (name, b) in j.req("weight_blobs")?.members() {
+            let tensors = b
+                .req("tensors")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|t| {
+                    Ok(BlobTensor {
+                        name: t.req("name")?.as_str().unwrap_or_default().into(),
+                        shape: t
+                            .req("shape")?
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|d| d.as_usize())
+                            .collect(),
+                        offset: t.req("offset")?.as_usize().unwrap_or(0),
+                        nbytes: t.req("nbytes")?.as_usize().unwrap_or(0),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            weight_blobs.insert(
+                name.clone(),
+                WeightBlob {
+                    file: dir.join(b.req("file")?.as_str().unwrap_or_default()),
+                    tensors,
+                    total_bytes: b
+                        .req("total_bytes")?
+                        .as_usize()
+                        .unwrap_or(0),
+                },
+            );
+        }
+
+        let mut golden = Vec::new();
+        for g in j.req("golden")?.as_arr().unwrap_or(&[]) {
+            let tensors = g
+                .req("tensors")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|t| {
+                    Ok(GoldenTensor {
+                        role: t.req("role")?.as_str().unwrap_or_default().into(),
+                        name: t.req("name")?.as_str().unwrap_or_default().into(),
+                        shape: t
+                            .req("shape")?
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|d| d.as_usize())
+                            .collect(),
+                        dtype: Dtype::parse(
+                            t.get("dtype").and_then(|d| d.as_str()).unwrap_or("f32"),
+                        )?,
+                        offset: t.req("offset")?.as_usize().unwrap_or(0),
+                        nbytes: t.req("nbytes")?.as_usize().unwrap_or(0),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            golden.push(Golden {
+                artifact: g.req("artifact")?.as_str().unwrap_or_default().into(),
+                file: dir.join(g.req("file")?.as_str().unwrap_or_default()),
+                tensors,
+            });
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), llm, artifacts, weight_blobs, golden })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts.iter().any(|a| a.name == name)
+    }
+}

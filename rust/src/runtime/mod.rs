@@ -1,0 +1,592 @@
+//! PJRT runtime: load the AOT artifacts and run them on the request path.
+//!
+//! This is the rust half of the interchange (see python/compile/aot.py):
+//! HLO **text** → `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile` → `execute`.  Weights ship as raw f32 blobs and
+//! are materialized once as Literals; Python never runs after
+//! `make artifacts`.
+//!
+//! The engine also owns the **MP compositions the paper places in the
+//! coordinator**: TP2 (run both shard-block executables, sum the deltas —
+//! the Rust-side "all-reduce") and PP2 (pipe stage-0 hidden states into
+//! stage-1), plus the Fig. 12b device/server classifier split.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`): one engine per thread.  The
+//! live coordinator therefore runs a dedicated engine thread fed by
+//! channels (see [`crate::coordinator`]).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+pub mod manifest;
+pub mod tensor;
+
+pub use manifest::{ArtifactSpec, Dtype, LlmConfig, Manifest};
+pub use tensor::{argmax_rows, f32_literal, i32_literal, i32_scalar, max_abs_diff, Host};
+
+/// The PJRT engine: compiled executables + resident weights.
+pub struct Engine {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    /// Lazily compiled executables by artifact name.
+    exes: RefCell<HashMap<String, PjRtLoadedExecutable>>,
+    /// Weight blob bytes (sliced into Literals on demand, then cached).
+    blob_bytes: HashMap<String, Vec<u8>>,
+    /// Cached per-artifact parameter literals (canonical order).
+    params: RefCell<HashMap<String, Vec<Literal>>>,
+}
+
+impl Engine {
+    /// Load the manifest and weight blobs; compilation is lazy per
+    /// artifact (first execution compiles).
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu()?;
+        let mut blob_bytes = HashMap::new();
+        for (name, blob) in &manifest.weight_blobs {
+            let bytes = std::fs::read(&blob.file)
+                .with_context(|| format!("reading weight blob {name}"))?;
+            if bytes.len() != blob.total_bytes {
+                return Err(anyhow!(
+                    "blob {name}: {} bytes on disk, manifest says {}",
+                    bytes.len(),
+                    blob.total_bytes
+                ));
+            }
+            blob_bytes.insert(name.clone(), bytes);
+        }
+        Ok(Engine {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            blob_bytes,
+            params: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Load from the default artifacts dir.
+    pub fn load_default() -> Result<Engine> {
+        Engine::load(&crate::artifacts_dir())
+    }
+
+    /// Compile (or fetch) an artifact's executable.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.exes.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let proto = HloModuleProto::from_text_file(
+            spec.hlo
+                .to_str()
+                .ok_or_else(|| anyhow!("bad path {:?}", spec.hlo))?,
+        )?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.exes.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Compile just the live-serving artifacts (coordinator warm-up):
+    /// prefill/decode/seg/classify batch variants, not the MP splits.
+    pub fn warm_serving_artifacts(&self) -> Result<()> {
+        for name in [
+            "llm.prefill.bs1", "llm.prefill.bs2", "llm.prefill.bs4",
+            "llm.decode.bs1", "llm.decode.bs2", "llm.decode.bs4",
+            "seg.bs1", "seg.bs2", "seg.bs4",
+            "classify.bs1", "classify.bs4", "classify.bs8",
+        ] {
+            if self.manifest.has_artifact(name) {
+                self.ensure_compiled(name)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Eagerly compile every artifact (benches / serving warm-up).
+    pub fn compile_all(&self) -> Result<()> {
+        let names: Vec<String> =
+            self.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        for n in names {
+            self.ensure_compiled(&n)?;
+        }
+        Ok(())
+    }
+
+    /// Resolve one named weight tensor from a blob into a Literal.
+    fn blob_tensor(&self, blob: &str, tensor: &str) -> Result<Literal> {
+        let b = self
+            .manifest
+            .weight_blobs
+            .get(blob)
+            .ok_or_else(|| anyhow!("no blob {blob}"))?;
+        let t = b
+            .tensors
+            .iter()
+            .find(|t| t.name == tensor)
+            .ok_or_else(|| anyhow!("tensor {tensor} not in blob {blob}"))?;
+        let bytes = &self.blob_bytes[blob][t.offset..t.offset + t.nbytes];
+        Host::from_bytes(Dtype::F32, &t.shape, bytes)?.to_literal()
+    }
+
+    /// Cache parameter literals for (artifact, prefix).
+    fn params_for(&self, name: &str, prefix: &str) -> Result<()> {
+        let key = format!("{name}/{prefix}");
+        if self.params.borrow().contains_key(&key) {
+            return Ok(());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let mut lits = Vec::with_capacity(spec.param_tensors.len());
+        for t in &spec.param_tensors {
+            let resolved = if prefix.is_empty() {
+                t.name.clone()
+            } else {
+                format!("{prefix}{}", t.name)
+            };
+            lits.push(self.blob_tensor(&spec.weights_blob, &resolved)?);
+        }
+        self.params.borrow_mut().insert(key, lits);
+        Ok(())
+    }
+
+    /// Execute an artifact: weights are prepended automatically.
+    pub fn execute(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        self.execute_prefixed(name, "", inputs)
+    }
+
+    /// Execute with a weight-name prefix (TP block layer/shard selection).
+    pub fn execute_prefixed(
+        &self,
+        name: &str,
+        prefix: &str,
+        inputs: &[Literal],
+    ) -> Result<Vec<Literal>> {
+        self.ensure_compiled(name)?;
+        self.params_for(name, prefix)?;
+        let key = format!("{name}/{prefix}");
+        let exes = self.exes.borrow();
+        let params = self.params.borrow();
+        let exe = &exes[name];
+        let plits = &params[&key];
+        let mut args: Vec<&Literal> = Vec::with_capacity(plits.len() + inputs.len());
+        args.extend(plits.iter());
+        args.extend(inputs.iter());
+        let result = exe.execute::<&Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+
+    // ---------------------------------------------------------------------
+    // LLM serving paths
+    // ---------------------------------------------------------------------
+
+    /// Greedy generation with the single-GPU artifacts: prefill + decode
+    /// loop, argmax in rust.  `prompts` is [bs][prefill_len]; returns
+    /// [bs][n_new] token ids.
+    pub fn llm_generate(&self, bs: usize, prompts: &[Vec<i32>], n_new: usize)
+                        -> Result<Vec<Vec<i32>>> {
+        let cfg = self.manifest.llm;
+        anyhow::ensure!(prompts.len() == bs, "prompt count != bs");
+        let flat: Vec<i32> = prompts.iter().flatten().copied().collect();
+        let tokens = i32_literal(&flat, &[bs, cfg.prefill_len])?;
+
+        let pre = self.execute(&format!("llm.prefill.bs{bs}"), &[tokens])?;
+        let (logits, mut kc, mut vc) = match <[Literal; 3]>::try_from(pre) {
+            Ok([a, b, c]) => (a, b, c),
+            Err(v) => return Err(anyhow!("prefill returned {} outputs", v.len())),
+        };
+
+        let mut out = vec![Vec::with_capacity(n_new); bs];
+        let mut cur = argmax_rows(&logits.to_vec::<f32>()?, bs, cfg.vocab);
+        for (b, t) in cur.iter().enumerate() {
+            out[b].push(*t);
+        }
+        let mut cache_len = cfg.prefill_len as i32;
+        let decode = format!("llm.decode.bs{bs}");
+        for _ in 1..n_new {
+            let args = [i32_literal(&cur, &[bs])?, i32_scalar(cache_len)?, kc, vc];
+            let res = self.execute(&decode, &args)?;
+            let (logits, nkc, nvc) = match <[Literal; 3]>::try_from(res) {
+                Ok([a, b, c]) => (a, b, c),
+                Err(v) => return Err(anyhow!("decode returned {} outputs", v.len())),
+            };
+            kc = nkc;
+            vc = nvc;
+            cache_len += 1;
+            cur = argmax_rows(&logits.to_vec::<f32>()?, bs, cfg.vocab);
+            for (b, t) in cur.iter().enumerate() {
+                out[b].push(*t);
+            }
+        }
+        Ok(out)
+    }
+
+    /// TP2 generation (bs=2): the coordinator drives per-block shard
+    /// executables and performs the combine (delta0 + delta1) itself —
+    /// the Rust-side all-reduce of DESIGN.md §Hardware-Adaptation.
+    pub fn llm_generate_tp2(&self, prompts: &[Vec<i32>], n_new: usize)
+                            -> Result<Vec<Vec<i32>>> {
+        let cfg = self.manifest.llm;
+        let bs = 2usize;
+        anyhow::ensure!(prompts.len() == bs);
+        let half_heads = cfg.n_heads / 2;
+        let d_head = cfg.d_model / cfg.n_heads;
+        let cache_shape = [bs, half_heads, cfg.max_seq, d_head];
+        let zeros = vec![0f32; cache_shape.iter().product()];
+
+        // per (layer, shard) caches
+        let mut caches: Vec<(Literal, Literal)> = (0..cfg.n_layers * 2)
+            .map(|_| {
+                Ok::<_, anyhow::Error>((
+                    f32_literal(&zeros, &cache_shape)?,
+                    f32_literal(&zeros, &cache_shape)?,
+                ))
+            })
+            .collect::<Result<_>>()?;
+
+        let mut out = vec![Vec::with_capacity(n_new); bs];
+        let mut cache_len: i32 = 0;
+        let mut cur: Vec<i32> = Vec::new();
+
+        for step in 0..n_new {
+            let phase = if step == 0 { "prefill" } else { "decode" };
+            let seq = if step == 0 { cfg.prefill_len } else { 1 };
+            let tok_lit = if step == 0 {
+                let flat: Vec<i32> = prompts.iter().flatten().copied().collect();
+                i32_literal(&flat, &[bs, cfg.prefill_len])?
+            } else {
+                i32_literal(&cur, &[bs, 1])?
+            };
+            let pos0 = i32_scalar(if step == 0 { 0 } else { cache_len })?;
+            let embed = self
+                .execute(&format!("llm.embed.{phase}.bs{bs}"), &[tok_lit, pos0])?;
+            let mut x: Vec<f32> = embed[0].to_vec::<f32>()?;
+
+            for l in 0..cfg.n_layers {
+                let mut delta_sum = vec![0f32; x.len()];
+                for s in 0..2usize {
+                    let idx = l * 2 + s;
+                    let (kc, vc) = std::mem::replace(
+                        &mut caches[idx],
+                        (Literal::vec1(&[0f32]), Literal::vec1(&[0f32])),
+                    );
+                    let mut args = vec![
+                        f32_literal(&x, &[bs, seq, cfg.d_model])?,
+                        kc,
+                        vc,
+                    ];
+                    if phase == "decode" {
+                        // prefill graphs have no cache_len operand (it
+                        // would be dead and XLA prunes dead params)
+                        args.push(i32_scalar(cache_len)?);
+                    }
+                    let res = self.execute_prefixed(
+                        &format!("llm.tp2_block.{phase}.bs{bs}"),
+                        &format!("l{l}.s{s}."),
+                        &args,
+                    )?;
+                    let (delta, nkc, nvc) = match <[Literal; 3]>::try_from(res) {
+                        Ok([a, b, c]) => (a, b, c),
+                        Err(v) => {
+                            return Err(anyhow!("tp block returned {}", v.len()))
+                        }
+                    };
+                    caches[idx] = (nkc, nvc);
+                    for (acc, d) in delta_sum.iter_mut().zip(delta.to_vec::<f32>()?)
+                    {
+                        *acc += d;
+                    }
+                }
+                // x = x + delta0 + delta1 — the one combine per block
+                for (xi, d) in x.iter_mut().zip(&delta_sum) {
+                    *xi += d;
+                }
+            }
+
+            let logits = self.execute(
+                &format!("llm.head.{phase}.bs{bs}"),
+                &[f32_literal(&x, &[bs, seq, cfg.d_model])?],
+            )?;
+            cur = argmax_rows(&logits[0].to_vec::<f32>()?, bs, cfg.vocab);
+            for (b, t) in cur.iter().enumerate() {
+                out[b].push(*t);
+            }
+            cache_len = if step == 0 {
+                cfg.prefill_len as i32
+            } else {
+                cache_len + 1
+            };
+        }
+        Ok(out)
+    }
+
+    /// PP2 generation (bs=2): stage-0 output pipes into stage-1; the hop
+    /// is where the simulator charges inter-GPU transfer.
+    pub fn llm_generate_pp2(&self, prompts: &[Vec<i32>], n_new: usize)
+                            -> Result<Vec<Vec<i32>>> {
+        let cfg = self.manifest.llm;
+        let bs = 2usize;
+        anyhow::ensure!(prompts.len() == bs);
+        let half = cfg.n_layers / 2;
+        let d_head = cfg.d_model / cfg.n_heads;
+        let cache_shape = [half, bs, cfg.n_heads, cfg.max_seq, d_head];
+        let zeros = vec![0f32; cache_shape.iter().product()];
+        let mut k0 = f32_literal(&zeros, &cache_shape)?;
+        let mut v0 = f32_literal(&zeros, &cache_shape)?;
+        let mut k1 = f32_literal(&zeros, &cache_shape)?;
+        let mut v1 = f32_literal(&zeros, &cache_shape)?;
+
+        let mut out = vec![Vec::with_capacity(n_new); bs];
+        let mut cache_len: i32 = 0;
+        let mut cur: Vec<i32> = Vec::new();
+
+        for step in 0..n_new {
+            let phase = if step == 0 { "prefill" } else { "decode" };
+            let tok_lit = if step == 0 {
+                let flat: Vec<i32> = prompts.iter().flatten().copied().collect();
+                i32_literal(&flat, &[bs, cfg.prefill_len])?
+            } else {
+                i32_literal(&cur, &[bs])?
+            };
+            let mut a0 = vec![tok_lit];
+            if phase == "decode" {
+                a0.push(i32_scalar(cache_len)?);
+            }
+            a0.extend([k0, v0]);
+            let s0 = self.execute(
+                &format!("llm.pp2.s0.{phase}.bs{bs}"),
+                &a0,
+            )?;
+            let (x, nk0, nv0) = match <[Literal; 3]>::try_from(s0) {
+                Ok([a, b, c]) => (a, b, c),
+                Err(v) => return Err(anyhow!("pp s0 returned {}", v.len())),
+            };
+            k0 = nk0;
+            v0 = nv0;
+            let mut a1 = vec![x];
+            if phase == "decode" {
+                a1.push(i32_scalar(cache_len)?);
+            }
+            a1.extend([k1, v1]);
+            let s1 = self.execute(
+                &format!("llm.pp2.s1.{phase}.bs{bs}"),
+                &a1,
+            )?;
+            let (logits, nk1, nv1) = match <[Literal; 3]>::try_from(s1) {
+                Ok([a, b, c]) => (a, b, c),
+                Err(v) => return Err(anyhow!("pp s1 returned {}", v.len())),
+            };
+            k1 = nk1;
+            v1 = nv1;
+            cur = argmax_rows(&logits.to_vec::<f32>()?, bs, cfg.vocab);
+            for (b, t) in cur.iter().enumerate() {
+                out[b].push(*t);
+            }
+            cache_len = if step == 0 {
+                cfg.prefill_len as i32
+            } else {
+                cache_len + 1
+            };
+        }
+        Ok(out)
+    }
+
+    // ---------------------------------------------------------------------
+    // vision serving paths
+    // ---------------------------------------------------------------------
+
+    /// UNet segmentation: images [bs, S, S, C] flat — returns logits.
+    pub fn segment(&self, bs: usize, images: &[f32], shape: &[usize])
+                   -> Result<Vec<f32>> {
+        let lit = f32_literal(images, shape)?;
+        let out = self.execute(&format!("seg.bs{bs}"), &[lit])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// CNN classification — returns [bs, n_classes] logits.
+    pub fn classify(&self, bs: usize, images: &[f32], shape: &[usize])
+                    -> Result<Vec<f32>> {
+        let lit = f32_literal(images, shape)?;
+        let out = self.execute(&format!("classify.bs{bs}"), &[lit])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Fig. 12b device/server pipeline: run the device head, "transfer"
+    /// the activation, finish on the server tail.  Returns (logits,
+    /// activation bytes crossing the link).
+    pub fn classify_split(&self, split: &str, image: &[f32], shape: &[usize])
+                          -> Result<(Vec<f32>, usize)> {
+        let lit = f32_literal(image, shape)?;
+        let act = self.execute(&format!("classify.dev.{split}.bs1"), &[lit])?;
+        let act_bytes = act[0].size_bytes();
+        let out = self.execute(
+            &format!("classify.srv.{split}.bs1"),
+            &[act.into_iter().next().unwrap()],
+        )?;
+        Ok((out[0].to_vec::<f32>()?, act_bytes))
+    }
+
+    // ---------------------------------------------------------------------
+    // golden verification + calibration
+    // ---------------------------------------------------------------------
+
+    /// Run one golden fixture: execute the artifact on the stored inputs
+    /// and compare against the stored outputs.  Returns max |diff|.
+    pub fn verify_golden(&self, artifact: &str) -> Result<f32> {
+        let g = self
+            .manifest
+            .golden
+            .iter()
+            .find(|g| g.artifact == artifact)
+            .ok_or_else(|| anyhow!("no golden for {artifact}"))?;
+        let raw = std::fs::read(&g.file)?;
+        let mut inputs = Vec::new();
+        let mut expected = Vec::new();
+        for t in &g.tensors {
+            let host = Host::from_bytes(
+                t.dtype,
+                &t.shape,
+                &raw[t.offset..t.offset + t.nbytes],
+            )?;
+            if t.role == "input" {
+                inputs.push(host.to_literal()?);
+            } else {
+                expected.push(host);
+            }
+        }
+        // TP block fixtures were generated with layer-0/shard-0 weights
+        let spec = self.manifest.artifact(artifact)?;
+        let prefix = if spec.meta.get("role").map(|r| r == "block").unwrap_or(false) {
+            "l0.s0."
+        } else {
+            ""
+        };
+        let got = self.execute_prefixed(artifact, prefix, &inputs)?;
+        anyhow::ensure!(
+            got.len() == expected.len(),
+            "{artifact}: {} outputs, golden has {}",
+            got.len(),
+            expected.len()
+        );
+        let mut worst = 0f32;
+        for (lit, want) in got.iter().zip(&expected) {
+            let have = lit.to_vec::<f32>()?;
+            let diff = max_abs_diff(&have, want.as_f32()?);
+            worst = worst.max(diff);
+        }
+        Ok(worst)
+    }
+
+    /// Names of all single-artifact goldens in the manifest.
+    pub fn golden_artifacts(&self) -> Vec<String> {
+        self.manifest
+            .golden
+            .iter()
+            .filter(|g| g.artifact != "llm.generate.bs2")
+            .map(|g| g.artifact.clone())
+            .collect()
+    }
+
+    /// Verify the end-to-end greedy-generation golden: the rust
+    /// prefill+decode loop must reproduce python's token sequence exactly.
+    pub fn verify_generate_golden(&self) -> Result<()> {
+        let g = self
+            .manifest
+            .golden
+            .iter()
+            .find(|g| g.artifact == "llm.generate.bs2")
+            .ok_or_else(|| anyhow!("no generate golden"))?;
+        let raw = std::fs::read(&g.file)?;
+        let prompt_t = &g.tensors[0];
+        let tokens_t = &g.tensors[1];
+        let prompt = Host::from_bytes(
+            Dtype::I32,
+            &prompt_t.shape,
+            &raw[prompt_t.offset..prompt_t.offset + prompt_t.nbytes],
+        )?;
+        let want = Host::from_bytes(
+            Dtype::I32,
+            &tokens_t.shape,
+            &raw[tokens_t.offset..tokens_t.offset + tokens_t.nbytes],
+        )?;
+        let bs = prompt_t.shape[0];
+        let plen = prompt_t.shape[1];
+        let pv = prompt.as_i32()?;
+        let prompts: Vec<Vec<i32>> =
+            (0..bs).map(|b| pv[b * plen..(b + 1) * plen].to_vec()).collect();
+        let n_new = tokens_t.shape[1];
+        let got = self.llm_generate(bs, &prompts, n_new)?;
+        let flat: Vec<i32> = got.into_iter().flatten().collect();
+        anyhow::ensure!(
+            flat == want.as_i32()?,
+            "generation mismatch: {flat:?} vs {:?}",
+            want.as_i32()?
+        );
+        Ok(())
+    }
+
+    /// Measure a tiny service's real latency and write it into the
+    /// profile table (§4.1 offline profiling, done for real here).
+    pub fn calibrate_profile(&self, table: &mut crate::profile::ProfileTable)
+                             -> Result<()> {
+        use crate::profile::zoo::ids;
+
+        // tiny_llm: per-token decode latency at bs1 vs bs4
+        let t1 = self.time_decode(1, 8)?;
+        let t4 = self.time_decode(4, 8)?;
+        let alpha = ((t4 / t1) - 1.0) / 3.0;
+        table.calibrate(ids::TINY_LLM, t1, alpha.clamp(0.0, 1.0));
+
+        // classifier bs1 vs bs4
+        let c1 = self.time_classify(1)?;
+        let c4 = self.time_classify(4)?;
+        let alpha = ((c4 / c1) - 1.0) / 3.0;
+        table.calibrate(ids::TINY_CLS, c1, alpha.clamp(0.0, 1.0));
+
+        // unet seg bs1 vs bs2
+        let s1 = self.time_segment(1)?;
+        let s2 = self.time_segment(2)?;
+        let alpha = (s2 / s1) - 1.0;
+        table.calibrate(ids::TINY_SEG, s1, alpha.clamp(0.0, 1.0));
+        Ok(())
+    }
+
+    fn time_decode(&self, bs: usize, reps: usize) -> Result<f64> {
+        let cfg = self.manifest.llm;
+        let prompts: Vec<Vec<i32>> =
+            (0..bs).map(|b| vec![(b as i32) % 7; cfg.prefill_len]).collect();
+        // warm-up compiles
+        self.llm_generate(bs, &prompts, 2)?;
+        let t0 = Instant::now();
+        self.llm_generate(bs, &prompts, reps)?;
+        Ok(t0.elapsed().as_secs_f64() * 1000.0 / reps as f64)
+    }
+
+    fn time_classify(&self, bs: usize) -> Result<f64> {
+        let shape = [bs, 32, 32, 3];
+        let img = vec![0.1f32; shape.iter().product()];
+        self.classify(bs, &img, &shape)?;
+        let t0 = Instant::now();
+        let reps = 5;
+        for _ in 0..reps {
+            self.classify(bs, &img, &shape)?;
+        }
+        Ok(t0.elapsed().as_secs_f64() * 1000.0 / reps as f64)
+    }
+
+    fn time_segment(&self, bs: usize) -> Result<f64> {
+        let shape = [bs, 64, 64, 3];
+        let img = vec![0.1f32; shape.iter().product()];
+        self.segment(bs, &img, &shape)?;
+        let t0 = Instant::now();
+        let reps = 3;
+        for _ in 0..reps {
+            self.segment(bs, &img, &shape)?;
+        }
+        Ok(t0.elapsed().as_secs_f64() * 1000.0 / reps as f64)
+    }
+}

@@ -1,0 +1,159 @@
+//! Host-side tensor helpers bridging raw blob bytes and xla Literals.
+
+use anyhow::{anyhow, Result};
+use xla::Literal;
+
+use super::manifest::Dtype;
+
+/// Host tensor (row-major) as read from blobs / golden fixtures.
+#[derive(Clone, Debug)]
+pub enum Host {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Host {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Host::F32(_, s) | Host::I32(_, s) => s,
+        }
+    }
+
+    pub fn from_bytes(dtype: Dtype, shape: &[usize], bytes: &[u8]) -> Result<Host> {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        if bytes.len() != n * 4 {
+            return Err(anyhow!(
+                "tensor bytes {} != expected {} for shape {shape:?}",
+                bytes.len(),
+                n * 4
+            ));
+        }
+        match dtype {
+            Dtype::F32 => {
+                let v: Vec<f32> = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Ok(Host::F32(v, shape.to_vec()))
+            }
+            Dtype::I32 => {
+                let v: Vec<i32> = bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Ok(Host::I32(v, shape.to_vec()))
+            }
+        }
+    }
+
+    /// Convert to an xla Literal with the right shape.
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64>;
+        let lit = match self {
+            Host::F32(v, s) => {
+                dims = s.iter().map(|&d| d as i64).collect();
+                Literal::vec1(v)
+            }
+            Host::I32(v, s) => {
+                dims = s.iter().map(|&d| d as i64).collect();
+                Literal::vec1(v)
+            }
+        };
+        if dims.is_empty() {
+            // scalar: vec1 of len 1 reshaped to rank-0
+            Ok(lit.reshape(&[])?)
+        } else {
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Host::F32(v, _) => Ok(v),
+            _ => Err(anyhow!("expected f32 tensor")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Host::I32(v, _) => Ok(v),
+            _ => Err(anyhow!("expected i32 tensor")),
+        }
+    }
+}
+
+/// f32 literal from data + shape.
+pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    Host::F32(data.to_vec(), shape.to_vec()).to_literal()
+}
+
+/// i32 literal from data + shape.
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    Host::I32(data.to_vec(), shape.to_vec()).to_literal()
+}
+
+/// i32 scalar literal (cache_len / pos0 arguments).
+pub fn i32_scalar(v: i32) -> Result<Literal> {
+    Ok(Literal::vec1(&[v]).reshape(&[])?)
+}
+
+/// Row-wise argmax over a [rows, cols] f32 buffer.
+pub fn argmax_rows(data: &[f32], rows: usize, cols: usize) -> Vec<i32> {
+    (0..rows)
+        .map(|r| {
+            let row = &data[r * cols..(r + 1) * cols];
+            let mut best = 0usize;
+            for (i, v) in row.iter().enumerate() {
+                if *v > row[best] {
+                    best = i;
+                }
+            }
+            best as i32
+        })
+        .collect()
+}
+
+/// Max |a-b| between two f32 slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_roundtrip_f32() {
+        let vals = [1.5f32, -2.25, 0.0, 3.0e10, -1.0e-20, f32::MIN_POSITIVE];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let h = Host::from_bytes(Dtype::F32, &[2, 3], &bytes).unwrap();
+        assert_eq!(h.as_f32().unwrap(), &vals);
+        assert_eq!(h.shape(), &[2, 3]);
+    }
+
+    #[test]
+    fn bytes_size_mismatch_rejected() {
+        assert!(Host::from_bytes(Dtype::F32, &[4], &[0u8; 12]).is_err());
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let data = [0.1, 0.9, 0.5, 7.0, -1.0, 2.0];
+        assert_eq!(argmax_rows(&data, 2, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn argmax_first_wins_ties() {
+        let data = [1.0, 1.0, 1.0];
+        assert_eq!(argmax_rows(&data, 1, 3), vec![0]);
+    }
+
+    #[test]
+    fn max_abs_diff_basic() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+}

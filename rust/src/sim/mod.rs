@@ -1,0 +1,1098 @@
+//! Event-driven edge-cloud simulator (§5.2).
+//!
+//! The paper: "an event-driven simulation architecture ... fully executes
+//! the request scheduling process but bypasses the actual execution of
+//! packet transmission and model computations.  Transmission latency is
+//! simulated based on service-specific data volumes and network bandwidth,
+//! while computational latency is derived from lookup tables".  Identical
+//! here: virtual time, a binary-heap event queue, the §3.2 handler making
+//! every routing decision against *synced (stale)* state, deployments as
+//! batch-amortized processors with rates from [`crate::profile`].
+//!
+//! Policies (EPARA + the six baselines) parameterize the same engine via
+//! [`PolicyConfig`] so comparisons isolate scheduling, not bookkeeping.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use crate::allocator::{Allocation, Allocator, Overrides};
+use crate::cluster::{EdgeCloud, GpuSpec};
+use crate::core::{
+    DeviceId, Outcome, Request, Sensitivity, ServerId, ServiceId,
+};
+use crate::handler::{
+    decide, Decision, HandlerConfig, LocalCapacity, StateView,
+};
+use crate::metrics::Metrics;
+use crate::placement::{sssp, FluidEval, PhiEval, PlacementItem, EPSILON_SERVER};
+use crate::profile::ProfileTable;
+use crate::sync::{SyncConfig, SyncNet};
+use crate::util::Rng;
+
+pub mod policy;
+pub mod runcfg;
+
+pub use runcfg::RunConfig;
+pub use policy::{OffloadMode, PlacementMode, PolicyConfig};
+
+// --------------------------------------------------------------------------
+// events
+// --------------------------------------------------------------------------
+
+#[derive(Debug)]
+enum EventKind {
+    /// Request reaches a server (user arrival or offload landing).
+    Arrive(Box<Request>, ServerId),
+    /// A deployment finishes its current job.
+    Finish { server: ServerId, dep: usize },
+    /// Periodic sync round completes.
+    SyncRound,
+    /// Periodic service re-placement (§3.4 coarse granularity).
+    PlacementRound,
+}
+
+struct Event {
+    at_ms: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.at_ms == other.at_ms && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by time (then seq for determinism)
+        other
+            .at_ms
+            .partial_cmp(&self.at_ms)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+// --------------------------------------------------------------------------
+// deployments: batch-amortized processors
+// --------------------------------------------------------------------------
+
+/// One placed deployment of a service on a server (one MPS slice, all DP
+/// groups), modeled as a **batch-window processor**:
+///
+/// * every `window_ms` the deployment completes one batch of `bs` items;
+/// * a request owns `mf` slots of each batch (Eq. 5), so it advances
+///   `mf` items per window and `cap = ⌊bs/mf⌋` requests ride concurrently;
+/// * a request of F frames therefore takes ⌈F/mf⌉ windows — which is
+///   exactly why frequency tasks need MF (mf=1 means a 120-frame stream
+///   needs 120 windows and misses its fps SLO even at low utilization,
+///   the §2.3 motivation).
+#[derive(Debug)]
+struct Deployment {
+    service: ServiceId,
+    /// Model still loading until this time (Fig. 3f: placement takes
+    /// >= 2.5x a single task; fresh deployments are not yet servable).
+    available_at_ms: f64,
+    /// Retired by a re-placement round: drains its queue, accepts no more.
+    retired: bool,
+    /// One batch window (ms): profiled latency at (bs, mp, mt=1).
+    window_ms: f64,
+    /// Multi-frame slots this service's requests occupy per batch.
+    mf: u32,
+    /// Concurrent requests per Eq. (5): max(1, bs/mf).
+    cap: u32,
+    /// Requests/s this slice sustains (for the synced theoretical p̂).
+    req_rate: f64,
+    /// Cross-server (ε) deployment: per-window hop overhead.
+    cross_server: bool,
+    /// Requests currently executing.
+    in_flight: u32,
+    /// Sum of queued work (ms) — the §3.2 queued-compute signal.
+    queued_ms: f64,
+    queue: VecDeque<Request>,
+}
+
+impl Deployment {
+    /// Service time of one request of `frames` items (ms).
+    fn service_ms(&self, frames: u32) -> f64 {
+        let cross = if self.cross_server { 1.25 } else { 1.0 };
+        let windows = (frames as f64 / self.mf as f64).ceil().max(1.0);
+        windows * self.window_ms * cross
+    }
+
+    /// Expected wait before a new request starts (ms), relative to `now`.
+    fn wait_from(&self, now_ms: f64) -> f64 {
+        let loading = (self.available_at_ms - now_ms).max(0.0);
+        let queue = if self.in_flight < self.cap {
+            0.0
+        } else {
+            self.queued_ms / self.cap as f64
+        };
+        loading + queue
+    }
+}
+
+/// Per-server live state.
+#[derive(Debug, Default)]
+struct SimServer {
+    deployments: Vec<Deployment>,
+    /// Device-backed deployments (single-GPU services on registered
+    /// device GPUs, §3.2 "edge device participation").
+    device_deps: Vec<(DeviceId, Deployment)>,
+}
+
+/// Snapshot of one (server, service): what the sync protocol distributed.
+#[derive(Clone, Copy, Debug, Default)]
+struct SyncedEntry {
+    theoretical: f64,
+    actual: f64,
+    queued_ms: f64,
+}
+
+// --------------------------------------------------------------------------
+// the state view handed to the handler
+// --------------------------------------------------------------------------
+
+struct SimView<'a> {
+    snap: &'a HashMap<(u32, u32), SyncedEntry>,
+    servers: &'a [SimServer],
+    sync: &'a SyncNet,
+    table: &'a ProfileTable,
+    now_ms: f64,
+    n: usize,
+    /// Policy knob: offloading disabled (AlpaServe) etc.
+    allow_cross_server: bool,
+    allow_device: bool,
+}
+
+impl<'a> SimView<'a> {
+    fn entry(&self, s: ServerId, l: ServiceId) -> SyncedEntry {
+        self.snap.get(&(s.0, l.0)).copied().unwrap_or_default()
+    }
+}
+
+impl<'a> StateView for SimView<'a> {
+    fn n_servers(&self) -> usize {
+        self.n
+    }
+
+    fn local_capacity(&self, server: ServerId, service: ServiceId) -> LocalCapacity {
+        let srv = &self.servers[server.0 as usize];
+        let spec = self.table.spec(service);
+        let typical = spec.frames_per_request.max(1);
+        // Deadline a typical request must meet end-to-end: the latency
+        // SLO for latency tasks; the rate-implied session budget for
+        // frequency tasks (F frames at >= R fps means finishing within
+        // F/R seconds — §3.3's satisfaction criterion).
+        // Frequency sessions earn fractional credit below target rate
+        // (§3.3), so admission accepts anything that can still earn at
+        // least ~25% credit rather than dropping it outright.
+        let budget = match spec.slo.min_rate {
+            None => spec.slo.latency_ms,
+            Some(rate) => typical as f64 / rate * 1000.0 * 4.0,
+        };
+        let now = self.now_ms;
+        let fits = |d: &Deployment| !d.retired
+            && d.wait_from(now) + d.service_ms(typical) <= budget;
+
+        // plain local deployments first (§3.2 priority 1)
+        for d in &srv.deployments {
+            if d.service == service && !d.cross_server && fits(d) {
+                return LocalCapacity::Ready;
+            }
+        }
+        // cross-server parallel deployments (priority 2)
+        if self.allow_cross_server {
+            for d in &srv.deployments {
+                if d.service == service && d.cross_server && fits(d) {
+                    return LocalCapacity::CrossServerParallel;
+                }
+            }
+        }
+        // registered device GPUs (priority 3)
+        if self.allow_device {
+            for (dev, d) in &srv.device_deps {
+                if d.service == service && fits(d) {
+                    return LocalCapacity::Device(*dev);
+                }
+            }
+        }
+        // saturated or absent: fall through to offloading (§2.2)
+        LocalCapacity::None
+    }
+
+    fn theoretical_goodput(&self, server: ServerId, service: ServiceId) -> f64 {
+        if self.sync.is_down(server) {
+            return 0.0;
+        }
+        self.entry(server, service).theoretical
+    }
+
+    fn actual_goodput(&self, server: ServerId, service: ServiceId) -> f64 {
+        let e = self.entry(server, service);
+        // silent sync errors distort the view (§5.3.3 / Fig. 19a)
+        e.actual * self.sync.state_distortion(server)
+    }
+
+    fn queued_ms(&self, server: ServerId, service: ServiceId) -> f64 {
+        self.entry(server, service).queued_ms
+    }
+
+    fn sync_delay_ms(&self, server: ServerId) -> f64 {
+        self.sync.staleness_ms(server, self.now_ms)
+    }
+
+    fn slo_ms(&self, service: ServiceId) -> f64 {
+        self.table.spec(service).slo.latency_ms
+    }
+}
+
+// --------------------------------------------------------------------------
+// simulator
+// --------------------------------------------------------------------------
+
+/// Simulation configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub seed: u64,
+    pub handler: HandlerConfig,
+    pub sync: SyncConfig,
+    pub policy: PolicyConfig,
+    /// Virtual horizon (ms); requests beyond it are not injected.
+    pub duration_ms: f64,
+    /// Periodic re-placement interval (§3.4 coarse granularity); None =
+    /// place once from the whole trace (the paper's offline mode).
+    pub replacement_interval_ms: Option<f64>,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            seed: 7,
+            handler: HandlerConfig::default(),
+            sync: SyncConfig::default(),
+            policy: PolicyConfig::epara(),
+            duration_ms: 60_000.0,
+            replacement_interval_ms: None,
+        }
+    }
+}
+
+/// The simulator.
+pub struct Simulator<'a> {
+    pub table: &'a ProfileTable,
+    pub cloud: EdgeCloud,
+    pub cfg: SimConfig,
+    pub allocs: HashMap<ServiceId, Allocation>,
+    pub placement: Vec<PlacementItem>,
+    servers: Vec<SimServer>,
+    snap: HashMap<(u32, u32), SyncedEntry>,
+    sync: SyncNet,
+    events: BinaryHeap<Event>,
+    seq: u64,
+    pub metrics: Metrics,
+    rng: Rng,
+    /// Completed items per (server, service) since last sync (actual p).
+    window_done: HashMap<(u32, u32), f64>,
+    last_sync_ms: f64,
+    /// When the current placement was applied (0 = offline pre-placement).
+    placement_applied_at_ms: f64,
+    /// Arrivals since the last placement round (the next round's R^T).
+    window_requests: Vec<Request>,
+}
+
+impl<'a> Simulator<'a> {
+    /// Build: allocate operators per policy, place services, materialize
+    /// deployments.
+    pub fn new(
+        table: &'a ProfileTable,
+        cloud: EdgeCloud,
+        requests: &[Request],
+        cfg: SimConfig,
+    ) -> Self {
+        let services: Vec<ServiceId> = {
+            let mut s: Vec<ServiceId> =
+                requests.iter().map(|r| r.service).collect();
+            s.sort();
+            s.dedup();
+            s
+        };
+        let allocator = Allocator::new(table, GpuSpec::P100);
+        let allocs: HashMap<ServiceId, Allocation> = services
+            .iter()
+            .map(|&id| {
+                let mut al = allocator.allocate(id, Overrides::default());
+                cfg.policy.adjust_allocation(&mut al);
+                (id, al)
+            })
+            .collect();
+
+        // ---- placement ---------------------------------------------------
+        let placement = match cfg.policy.placement {
+            PlacementMode::Sssp => {
+                let mut eval = FluidEval::from_requests(
+                    table, &allocs, &cloud, requests, cfg.duration_ms);
+                sssp(&[], &services, cloud.n_servers(), &mut eval);
+                // VRAM-fill pass: keep packing replicas of demanded
+                // services into leftover slots/VRAM (zero marginal fluid
+                // gain, real burst headroom) — this is how the paper's
+                // testbed reaches 98%+ VRAM residency (Fig. 13).
+                let mut by_demand: Vec<ServiceId> = services.clone();
+                by_demand.sort_by(|a, b| {
+                    eval.demand_of(*b).partial_cmp(&eval.demand_of(*a)).unwrap()
+                });
+                'fill: for _round in 0..64 {
+                    let mut placed = false;
+                    for &svc in &by_demand {
+                        if eval.demand_of(svc) <= 0.0 {
+                            continue;
+                        }
+                        for n in 0..cloud.n_servers() {
+                            let item = PlacementItem {
+                                service: svc,
+                                server: ServerId(n as u32),
+                            };
+                            if eval.feasible(item) {
+                                eval.push(item);
+                                placed = true;
+                                break;
+                            }
+                        }
+                    }
+                    if !placed {
+                        break 'fill;
+                    }
+                }
+                eval.placement().to_vec()
+            }
+            PlacementMode::Cache(policy) => {
+                let mut eval = FluidEval::from_requests(
+                    table, &allocs, &cloud, requests, cfg.duration_ms);
+                crate::placement::cache_baselines::place(
+                    policy, requests, cloud.n_servers(), &mut eval)
+            }
+            PlacementMode::LocalOnly => {
+                // AlpaServe-style: place by local demand only, no ε stage
+                let mut eval = FluidEval::from_requests(
+                    table, &allocs, &cloud, requests, cfg.duration_ms);
+                let all: Vec<PlacementItem> = services
+                    .iter()
+                    .flat_map(|&l| {
+                        (0..cloud.n_servers()).map(move |n| PlacementItem {
+                            service: l,
+                            server: ServerId(n as u32),
+                        })
+                    })
+                    .collect();
+                crate::placement::spf_lazy(&all, &mut eval);
+                eval.placement().to_vec()
+            }
+        };
+
+        let n = cloud.n_servers();
+        let mut sim = Simulator {
+            table,
+            cloud,
+            servers: (0..n).map(|_| SimServer::default()).collect(),
+            snap: HashMap::new(),
+            sync: SyncNet::new(n, cfg.sync),
+            events: BinaryHeap::new(),
+            seq: 0,
+            metrics: Metrics::new(),
+            rng: Rng::new(cfg.seed),
+            window_done: HashMap::new(),
+            last_sync_ms: 0.0,
+            placement_applied_at_ms: 0.0,
+            window_requests: Vec::new(),
+            allocs,
+            placement: placement.clone(),
+            cfg,
+        };
+        sim.materialize_placement(&placement);
+        sim.install_devices();
+        sim.prime_snapshot();
+        sim
+    }
+
+    /// Turn placement items into live deployments.
+    fn materialize_placement(&mut self, placement: &[PlacementItem]) {
+        // ε deployments land on the server with most free GPUs, round-robin
+        let mut eps_cursor = 0usize;
+        for item in placement {
+            // one placement = one MPS slice (mt=1); MT packing emerges
+            // from multiple placements landing on the same server
+            let al = &self.allocs[&item.service];
+            let window = self.table.latency_ms(item.service, al.ops.bs, al.ops.mp, 1)
+                / al.ops.dp.max(1) as f64; // DP groups halve the window share
+            let mf = al.ops.mf.max(1);
+            let cap = al.ops.inter_request_count().max(1);
+            let req_rate = self.table
+                .request_rate(item.service, al.ops.bs, al.ops.mp, 1)
+                * al.ops.dp as f64;
+            let cross = item.server == EPSILON_SERVER;
+            let server = if cross {
+                let s = ServerId((eps_cursor % self.servers.len()) as u32);
+                eps_cursor += 1;
+                s
+            } else {
+                item.server
+            };
+            self.servers[server.0 as usize].deployments.push(Deployment {
+                service: item.service,
+                available_at_ms: self.placement_applied_at_ms
+                    + if self.placement_applied_at_ms > 0.0 {
+                        self.table.spec(item.service).model_load_ms
+                    } else {
+                        0.0 // initial pre-placement happens before t=0 (§2.3)
+                    },
+                retired: false,
+                window_ms: window.max(1e-3),
+                mf,
+                cap,
+                req_rate,
+                cross_server: cross,
+                in_flight: 0,
+                queued_ms: 0.0,
+                queue: VecDeque::new(),
+            });
+        }
+    }
+
+    /// Register device GPUs as single-GPU deployments at their home server.
+    fn install_devices(&mut self) {
+        if !self.cfg.policy.allow_device {
+            return;
+        }
+        let devices: Vec<(DeviceId, ServerId, GpuSpec)> = self
+            .cloud
+            .devices
+            .iter()
+            .filter(|d| d.registered)
+            .filter_map(|d| d.kind.gpu().map(|g| (d.id, d.home, g)))
+            .collect();
+        for (dev, home, gpu) in devices {
+            // pick the lightest single-GPU service with demand
+            let candidate = self
+                .allocs
+                .iter()
+                .filter(|(id, _)| {
+                    let spec = self.table.spec(**id);
+                    spec.fits_single_gpu(gpu.vram_mb)
+                        && spec.vram_mb <= gpu.vram_mb
+                })
+                .min_by(|a, b| {
+                    let va = self.table.spec(*a.0).vram_mb;
+                    let vb = self.table.spec(*b.0).vram_mb;
+                    va.partial_cmp(&vb).unwrap()
+                });
+            if let Some((&svc, al)) = candidate {
+                let slow = 1.0 / gpu.compute.max(1e-3);
+                let link = self.cloud.device_link(dev);
+                // device window: compute slowdown + request shipping cost
+                let window = self.table.latency_ms(svc, al.ops.bs, al.ops.mp, 1)
+                    * slow
+                    + link.transfer_ms(self.table.spec(svc).payload_kb);
+                let req_rate = self.table.request_rate(svc, al.ops.bs, al.ops.mp, 1)
+                    / slow;
+                self.servers[home.0 as usize].device_deps.push((
+                    dev,
+                    Deployment {
+                        service: svc,
+                        available_at_ms: 0.0,
+                        retired: false,
+                        window_ms: window.max(1e-3),
+                        mf: al.ops.mf.max(1),
+                        cap: al.ops.inter_request_count().max(1),
+                        req_rate,
+                        cross_server: false,
+                        in_flight: 0,
+                        queued_ms: 0.0,
+                        queue: VecDeque::new(),
+                    },
+                ));
+            }
+        }
+    }
+
+    /// Fill the synced snapshot with theoretical rates (placement known
+    /// cloud-wide after each placement round).
+    fn prime_snapshot(&mut self) {
+        for (si, srv) in self.servers.iter().enumerate() {
+            let mut per_service: HashMap<u32, f64> = HashMap::new();
+            for d in &srv.deployments {
+                if !d.retired {
+                    *per_service.entry(d.service.0).or_insert(0.0) += d.req_rate;
+                }
+            }
+            for (svc, theo) in per_service {
+                self.snap.insert(
+                    (si as u32, svc),
+                    SyncedEntry { theoretical: theo, actual: 0.0, queued_ms: 0.0 },
+                );
+            }
+        }
+    }
+
+    fn push_event(&mut self, at_ms: f64, kind: EventKind) {
+        self.seq += 1;
+        self.events.push(Event { at_ms, seq: self.seq, kind });
+    }
+
+    /// Run the trace to completion; returns final metrics.
+    pub fn run(&mut self, requests: Vec<Request>) -> &mut Metrics {
+        for r in requests {
+            if r.arrival_ms <= self.cfg.duration_ms {
+                let origin = r.origin;
+                self.push_event(r.arrival_ms, EventKind::Arrive(Box::new(r), origin));
+            }
+        }
+        let interval = self.cfg.sync.interval_ms;
+        self.push_event(interval, EventKind::SyncRound);
+        if let Some(p) = self.cfg.replacement_interval_ms {
+            self.push_event(p, EventKind::PlacementRound);
+        }
+
+        while let Some(ev) = self.events.pop() {
+            let now = ev.at_ms;
+            match ev.kind {
+                EventKind::Arrive(req, at) => self.handle_arrival(*req, at, now),
+                EventKind::Finish { server, dep } => self.handle_finish(server, dep, now),
+                EventKind::SyncRound => {
+                    self.run_sync_round(now);
+                    if now < self.cfg.duration_ms * 1.5 {
+                        self.push_event(now + interval, EventKind::SyncRound);
+                    }
+                }
+                EventKind::PlacementRound => {
+                    self.run_placement_round(now);
+                    if let Some(p) = self.cfg.replacement_interval_ms {
+                        if now < self.cfg.duration_ms {
+                            self.push_event(now + p, EventKind::PlacementRound);
+                        }
+                    }
+                }
+            }
+        }
+        self.metrics.duration_ms = self.cfg.duration_ms;
+        self.account_capacity();
+        &mut self.metrics
+    }
+
+    fn handle_arrival(&mut self, req: Request, at: ServerId, now: f64) {
+        if req.offloads == 0 && self.cfg.replacement_interval_ms.is_some() {
+            // first-hop arrivals feed the next placement round's R^T
+            self.window_requests.push(req.clone());
+        }
+        let decision = match self.cfg.policy.offload {
+            OffloadMode::Eq1 => {
+                let view = SimView {
+                    snap: &self.snap,
+                    servers: &self.servers,
+                    sync: &self.sync,
+                    table: self.table,
+                    now_ms: now,
+                    n: self.servers.len(),
+                    allow_cross_server: self.cfg.policy.allow_cross_server,
+                    allow_device: self.cfg.policy.allow_device,
+                };
+                decide(&req, at, now, &view, &self.cfg.handler, &mut self.rng)
+            }
+            other => self.baseline_decide(&req, at, now, other),
+        };
+
+        match decision {
+            Decision::Timeout => {
+                self.metrics.record(req.service, &Outcome::Timeout, req.offloads)
+            }
+            Decision::OffloadExceeded => self.metrics.record(
+                req.service,
+                &Outcome::OffloadExceeded,
+                req.offloads,
+            ),
+            Decision::ResourceInsufficient => self.metrics.record(
+                req.service,
+                &Outcome::ResourceInsufficient,
+                req.offloads,
+            ),
+            Decision::Local | Decision::CrossServerParallel => {
+                self.enqueue_local(req, at, now, decision == Decision::CrossServerParallel)
+            }
+            Decision::Device(dev) => self.enqueue_device(req, at, dev, now),
+            Decision::Offload(target) => {
+                let mut r = req;
+                r.offloads += 1;
+                r.path.push(at);
+                let spec = self.table.spec(r.service);
+                // per-request scheduling latency of the policy, if any
+                let sched = self.cfg.policy.central_latency_ms(self.servers.len());
+                let transfer =
+                    self.cloud.inter_server.transfer_ms(spec.payload_kb) + sched;
+                self.push_event(now + transfer, EventKind::Arrive(Box::new(r), target));
+            }
+        }
+    }
+
+    /// Baseline offload decisions (policies that don't use Eq. 1).
+    fn baseline_decide(
+        &mut self,
+        req: &Request,
+        at: ServerId,
+        now: f64,
+        mode: OffloadMode,
+    ) -> Decision {
+        let slo = self.table.spec(req.service).slo.latency_ms;
+        if now - req.arrival_ms > slo {
+            return Decision::Timeout;
+        }
+        let view = SimView {
+            snap: &self.snap,
+            servers: &self.servers,
+            sync: &self.sync,
+            table: self.table,
+            now_ms: now,
+            n: self.servers.len(),
+            allow_cross_server: self.cfg.policy.allow_cross_server,
+            allow_device: self.cfg.policy.allow_device,
+        };
+        match view.local_capacity(at, req.service) {
+            LocalCapacity::Ready => return Decision::Local,
+            LocalCapacity::CrossServerParallel => {
+                return Decision::CrossServerParallel
+            }
+            LocalCapacity::Device(d) => return Decision::Device(d),
+            LocalCapacity::None => {}
+        }
+        match mode {
+            OffloadMode::None => Decision::ResourceInsufficient,
+            OffloadMode::RoundRobin => {
+                if req.offloads >= self.cfg.handler.max_offloads {
+                    return Decision::OffloadExceeded;
+                }
+                // InterEdge: forward to the next server in the ring
+                let next = ServerId((at.0 + 1) % self.servers.len() as u32);
+                if req.path.contains(&next) {
+                    Decision::ResourceInsufficient
+                } else {
+                    Decision::Offload(next)
+                }
+            }
+            OffloadMode::Centralized => {
+                if req.offloads >= 1 {
+                    // the central scheduler already routed it once
+                    return Decision::ResourceInsufficient;
+                }
+                // global fresh view: pick the server with max idle capacity
+                let mut best: Option<(ServerId, f64)> = None;
+                for m in 0..self.servers.len() {
+                    let mid = ServerId(m as u32);
+                    if mid == at {
+                        continue;
+                    }
+                    let e = view.entry(mid, req.service);
+                    let idle = e.theoretical - e.actual;
+                    if idle > 0.0 && best.map_or(true, |(_, b)| idle > b) {
+                        best = Some((mid, idle));
+                    }
+                }
+                match best {
+                    Some((m, _)) => Decision::Offload(m),
+                    None => Decision::ResourceInsufficient,
+                }
+            }
+            OffloadMode::Eq1 => unreachable!(),
+        }
+    }
+
+    fn enqueue_local(&mut self, req: Request, at: ServerId, now: f64, cross: bool) {
+        let srv = &mut self.servers[at.0 as usize];
+        // choose the matching deployment with minimum expected wait
+        let mut best: Option<(usize, f64)> = None;
+        for (i, d) in srv.deployments.iter().enumerate() {
+            if d.service != req.service || d.cross_server != cross || d.retired {
+                continue;
+            }
+            let wait = d.wait_from(now);
+            if best.map_or(true, |(_, w)| wait < w) {
+                best = Some((i, wait));
+            }
+        }
+        // fall back to any live deployment of the service
+        if best.is_none() {
+            for (i, d) in srv.deployments.iter().enumerate() {
+                if d.service == req.service && !d.retired {
+                    let wait = d.wait_from(now);
+                    if best.map_or(true, |(_, w)| wait < w) {
+                        best = Some((i, wait));
+                    }
+                }
+            }
+        }
+        let (dep, _) = match best {
+            Some(b) => b,
+            None => {
+                self.metrics.record(
+                    req.service,
+                    &Outcome::ResourceInsufficient,
+                    req.offloads,
+                );
+                return;
+            }
+        };
+        {
+            let d = &mut srv.deployments[dep];
+            let svc_ms = d.service_ms(req.frames);
+            d.queued_ms += svc_ms;
+            d.queue.push_back(req);
+        }
+        self.start_ready(at, dep, now, false);
+    }
+
+    fn enqueue_device(&mut self, req: Request, at: ServerId, dev: DeviceId, now: f64) {
+        let srv = &mut self.servers[at.0 as usize];
+        if let Some(idx) = srv.device_deps.iter().position(|(d, _)| *d == dev) {
+            let d = &mut srv.device_deps[idx].1;
+            let svc_ms = d.service_ms(req.frames);
+            d.queued_ms += svc_ms;
+            d.queue.push_back(req);
+            self.start_ready(at, idx, now, true);
+        } else {
+            self.metrics
+                .record(req.service, &Outcome::ResourceInsufficient, req.offloads);
+        }
+    }
+
+    /// Start queued requests while concurrency slots (Eq. 5) remain.
+    fn start_ready(&mut self, at: ServerId, dep: usize, now: f64, device: bool) {
+        loop {
+            let d = if device {
+                &mut self.servers[at.0 as usize].device_deps[dep].1
+            } else {
+                &mut self.servers[at.0 as usize].deployments[dep]
+            };
+            if d.in_flight >= d.cap {
+                return;
+            }
+            let req = match d.queue.pop_front() {
+                Some(r) => r,
+                None => return,
+            };
+            let svc_ms = d.service_ms(req.frames);
+            d.queued_ms = (d.queued_ms - svc_ms).max(0.0);
+            d.in_flight += 1;
+
+            let spec = self.table.spec(req.service);
+            // execution cannot begin before the model finished loading
+            let start = now.max(d.available_at_ms);
+            let done_at = start + svc_ms;
+            let latency = done_at - req.arrival_ms;
+            let outcome = match spec.sensitivity {
+                Sensitivity::Latency => {
+                    if latency <= spec.slo.latency_ms {
+                        Outcome::Completed { latency_ms: latency }
+                    } else {
+                        Outcome::Timeout
+                    }
+                }
+                Sensitivity::Frequency => {
+                    let target = spec.slo.min_rate.unwrap_or(30.0);
+                    // achieved rate across the whole request lifetime
+                    let achieved =
+                        req.frames as f64 / (latency / 1000.0).max(1e-9);
+                    if achieved >= target {
+                        Outcome::Completed { latency_ms: latency }
+                    } else {
+                        let frac = (achieved / target).min(1.0);
+                        Outcome::Partial {
+                            satisfied: frac * req.frames as f64,
+                            total: req.frames,
+                        }
+                    }
+                }
+            };
+            self.metrics.record(req.service, &outcome, req.offloads);
+            *self
+                .window_done
+                .entry((at.0, req.service.0))
+                .or_insert(0.0) += outcome.credit();
+
+            if !device {
+                // GPU-time: this request's share of its batch windows;
+                // exclusive (no-MT) deployments hold the whole GPU
+                let al = &self.allocs[&req.service];
+                let slice = if al.exclusive_gpu {
+                    1.0
+                } else {
+                    self.table.spec(req.service).compute_slice.min(1.0)
+                };
+                let share = 1.0 / self.servers[at.0 as usize].deployments[dep]
+                    .cap.max(1) as f64;
+                self.metrics.gpu_busy_ms +=
+                    svc_ms * al.ops.gpus() as f64 * slice * share;
+            }
+            self.push_event(
+                done_at,
+                EventKind::Finish {
+                    server: at,
+                    dep: if device { usize::MAX - dep } else { dep },
+                },
+            );
+        }
+    }
+
+    /// Coarse-grained re-placement (§3.4): recompute Θ from the last
+    /// interval's arrivals, retire deployments the new Θ drops, and
+    /// install the additions with their model-load delay (Fig. 3f).
+    fn run_placement_round(&mut self, now: f64) {
+        if self.window_requests.is_empty() {
+            return;
+        }
+        let interval = self.cfg.replacement_interval_ms.unwrap_or(1.0);
+        let requests = std::mem::take(&mut self.window_requests);
+        let services: Vec<ServiceId> = {
+            let mut s: Vec<ServiceId> = requests.iter().map(|r| r.service).collect();
+            s.sort();
+            s.dedup();
+            s
+        };
+        let mut eval = FluidEval::from_requests(
+            self.table, &self.allocs, &self.cloud, &requests, interval);
+        let new_placement = sssp(&[], &services, self.cloud.n_servers(), &mut eval);
+
+        // diff: count deployments per (service, server) old vs new
+        let mut want: HashMap<(u32, u32), i32> = HashMap::new();
+        let mut eps_cursor = 0usize;
+        for item in &new_placement {
+            let server = if item.server == EPSILON_SERVER {
+                let s = (eps_cursor % self.servers.len()) as u32;
+                eps_cursor += 1;
+                s
+            } else {
+                item.server.0
+            };
+            *want.entry((item.service.0, server)).or_insert(0) += 1;
+        }
+        // retire surplus live deployments, compute additions
+        for (si, srv) in self.servers.iter_mut().enumerate() {
+            for d in srv.deployments.iter_mut() {
+                if d.retired {
+                    continue;
+                }
+                let key = (d.service.0, si as u32);
+                match want.get_mut(&key) {
+                    Some(c) if *c > 0 => *c -= 1, // kept (no reload needed)
+                    _ => d.retired = true,
+                }
+            }
+        }
+        let additions: Vec<PlacementItem> = want
+            .into_iter()
+            .flat_map(|((svc, srv), c)| {
+                (0..c.max(0)).map(move |_| PlacementItem {
+                    service: ServiceId(svc),
+                    server: ServerId(srv),
+                })
+            })
+            .collect();
+        self.placement_applied_at_ms = now;
+        self.materialize_placement(&additions);
+        self.placement.extend(additions);
+        self.prime_snapshot();
+    }
+
+    fn handle_finish(&mut self, server: ServerId, dep: usize, now: f64) {
+        let device = dep > usize::MAX / 2;
+        let idx = if device { usize::MAX - dep } else { dep };
+        {
+            let d = if device {
+                &mut self.servers[server.0 as usize].device_deps[idx].1
+            } else {
+                &mut self.servers[server.0 as usize].deployments[idx]
+            };
+            d.in_flight = d.in_flight.saturating_sub(1);
+        }
+        self.start_ready(server, idx, now, device);
+    }
+
+    /// Complete a sync round: refresh snapshots of actual goodput and
+    /// queue depths (this is what makes the handler's view *stale*).
+    fn run_sync_round(&mut self, now: f64) {
+        let window_s = ((now - self.last_sync_ms) / 1000.0).max(1e-9);
+        for (si, srv) in self.servers.iter().enumerate() {
+            let mut per_service: HashMap<u32, (f64, f64)> = HashMap::new();
+            for d in &srv.deployments {
+                if d.retired && d.queue.is_empty() {
+                    continue;
+                }
+                let e = per_service.entry(d.service.0).or_insert((0.0, 0.0));
+                if !d.retired {
+                    e.0 += d.req_rate;
+                }
+                e.1 += d.queued_ms / d.cap.max(1) as f64;
+            }
+            for (svc, (theo, queued)) in per_service {
+                let done = self
+                    .window_done
+                    .get(&(si as u32, svc))
+                    .copied()
+                    .unwrap_or(0.0);
+                self.snap.insert(
+                    (si as u32, svc),
+                    SyncedEntry {
+                        theoretical: theo,
+                        actual: done / window_s,
+                        queued_ms: queued,
+                    },
+                );
+            }
+        }
+        self.window_done.clear();
+        self.last_sync_ms = now;
+        self.sync.advance(now);
+    }
+
+    fn account_capacity(&mut self) {
+        let dur = self.cfg.duration_ms;
+        let gpus = self.cloud.healthy_gpus() as f64;
+        self.metrics.gpu_capacity_ms = gpus * dur;
+        let vram_total: f64 = self
+            .cloud
+            .servers
+            .iter()
+            .flat_map(|s| s.gpus.iter())
+            .filter(|g| !g.failed)
+            .map(|g| g.spec.vram_mb)
+            .sum();
+        self.metrics.vram_capacity_mb_ms = vram_total * dur;
+        // VRAM in use = resident placements over the whole run
+        let mut used = 0.0;
+        for srv in &self.servers {
+            for d in &srv.deployments {
+                let al = &self.allocs[&d.service];
+                used += self.table.vram_per_gpu(d.service, al.ops.mp)
+                    * al.ops.gpus() as f64;
+            }
+        }
+        self.metrics.vram_used_mb_ms = used.min(vram_total) * dur;
+    }
+
+    /// Access to the sync substrate for fault-injection experiments.
+    pub fn sync_mut(&mut self) -> &mut SyncNet {
+        &mut self.sync
+    }
+
+    /// Inject a GPU failure (§5.3.3): the whole server's deployments of
+    /// co-parallel GPUs are terminated and excluded.
+    pub fn fail_gpu_containment(&mut self, server: ServerId) {
+        // terminate services of the faulty GPU and its parallel peers
+        self.servers[server.0 as usize].deployments.clear();
+        for g in &mut self.cloud.servers[server.0 as usize].gpus {
+            g.failed = true;
+        }
+        // synced state zeroes out at the next round; mark immediately to
+        // prevent fault propagation
+        for ((s, _l), e) in self.snap.iter_mut() {
+            if *s == server.0 {
+                e.theoretical = 0.0;
+            }
+        }
+    }
+}
+
+/// Convenience: run one end-to-end simulation.
+pub fn simulate(
+    table: &ProfileTable,
+    cloud: EdgeCloud,
+    requests: Vec<Request>,
+    cfg: SimConfig,
+) -> Metrics {
+    let mut sim = Simulator::new(table, cloud, &requests, cfg);
+    sim.run(requests).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::zoo;
+    use crate::workload::{generate, Mix, WorkloadSpec};
+
+    fn run_mix(mix: Mix, rps: f64, policy: PolicyConfig) -> Metrics {
+        let table = zoo::paper_zoo();
+        let cloud = EdgeCloud::testbed();
+        let spec = WorkloadSpec {
+            mix,
+            rps,
+            duration_ms: 20_000.0,
+            ..Default::default()
+        };
+        let reqs = generate(&spec, &table, &cloud);
+        let cfg = SimConfig {
+            policy,
+            duration_ms: 20_000.0,
+            ..Default::default()
+        };
+        simulate(&table, cloud, reqs, cfg)
+    }
+
+    #[test]
+    fn light_load_high_satisfaction() {
+        let m = run_mix(Mix::Production(0), 5.0, PolicyConfig::epara());
+        assert!(m.offered > 20);
+        assert!(
+            m.satisfaction_ratio() > 0.9,
+            "ratio {} of {}",
+            m.satisfaction_ratio(),
+            m.offered
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_mix(Mix::Production(0), 20.0, PolicyConfig::epara());
+        let b = run_mix(Mix::Production(0), 20.0, PolicyConfig::epara());
+        assert_eq!(a.offered, b.offered);
+        assert!((a.satisfied - b.satisfied).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overload_degrades_gracefully() {
+        let light = run_mix(Mix::Production(0), 10.0, PolicyConfig::epara());
+        let heavy = run_mix(Mix::Production(0), 400.0, PolicyConfig::epara());
+        // goodput must not collapse under 10× overload (Fig. 18e)
+        assert!(heavy.goodput_rps() >= light.goodput_rps() * 0.8,
+                "heavy {} light {}", heavy.goodput_rps(), light.goodput_rps());
+        assert!(heavy.satisfaction_ratio() < light.satisfaction_ratio());
+    }
+
+    #[test]
+    fn epara_beats_no_offload_baseline() {
+        // Fig. 17a: request handling (offloading) matters
+        let epara = run_mix(Mix::Production(0), 120.0, PolicyConfig::epara());
+        let pinned = run_mix(Mix::Production(0), 120.0, PolicyConfig::epara_no_offload());
+        assert!(
+            epara.satisfied > pinned.satisfied,
+            "epara {} <= pinned {}",
+            epara.satisfied,
+            pinned.satisfied
+        );
+    }
+
+    #[test]
+    fn gpu_failure_containment() {
+        let table = zoo::paper_zoo();
+        let cloud = EdgeCloud::testbed();
+        let spec = WorkloadSpec { rps: 30.0, duration_ms: 10_000.0, ..Default::default() };
+        let reqs = generate(&spec, &table, &cloud);
+        let cfg = SimConfig { duration_ms: 10_000.0, ..Default::default() };
+        let mut sim = Simulator::new(&table, cloud, &reqs, cfg);
+        sim.fail_gpu_containment(ServerId(0));
+        let m = sim.run(reqs).clone();
+        // the system keeps serving from the remaining servers
+        assert!(m.satisfied > 0.0);
+    }
+}

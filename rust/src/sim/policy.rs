@@ -1,0 +1,303 @@
+//! Policy knobs: EPARA and the comparison baselines behind one config.
+//!
+//! Table 3's scheme matrix, operationalized.  Every baseline runs on the
+//! SAME simulator engine; only allocation operators, offload mode,
+//! placement mode, and central-scheduler latency differ — so measured
+//! gaps are due to the paper's design choices, not bookkeeping.
+//!
+//! | scheme        | request-level | service-level | mode         |
+//! |---------------|---------------|---------------|--------------|
+//! | InterEdge     | no            | MP+BS+MT (aligned with EPARA) | distributed, round-robin offload |
+//! | AlpaServe     | no            | MP+           | centralized, refuses offloading |
+//! | Galaxy        | no            | MP (no MT)    | centralized edge devices |
+//! | SERV-P        | no            | no            | centralized NP-hard solver (latency penalty) |
+//! | USHER         | no            | MP+MT         | centralized |
+//! | DeTransformer | no            | MP only       | centralized |
+//! | EPARA         | DP+MF         | MP+BS+MT      | mixed        |
+
+use crate::allocator::Allocation;
+use crate::core::MpKind;
+use crate::placement::cache_baselines::CachePolicy;
+
+/// How requests leave a saturated server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OffloadMode {
+    /// EPARA's Eq. (1) probabilistic idle-goodput draw.
+    Eq1,
+    /// InterEdge: forward to the ring successor.
+    RoundRobin,
+    /// AlpaServe / USHER / DeTransformer: no inter-server offloading.
+    None,
+    /// Galaxy / SERV-P: an omniscient central scheduler routes once.
+    Centralized,
+}
+
+/// Placement strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementMode {
+    /// EPARA's Algorithm 1 (submodular, three stages).
+    Sssp,
+    /// Cache-policy baseline (Fig. 17b).
+    Cache(CachePolicy),
+    /// Demand-greedy without the ε stage (datacenter schemes).
+    LocalOnly,
+}
+
+/// Full policy configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyConfig {
+    pub name: &'static str,
+    pub offload: OffloadMode,
+    pub placement: PlacementMode,
+    /// Request-level operators (MF + DP) enabled?
+    pub request_level: bool,
+    /// Multi-task (MT) packing enabled?
+    pub mt_enabled: bool,
+    /// Batching (BS) enabled?
+    pub bs_enabled: bool,
+    /// Model parallelism enabled?
+    pub mp_enabled: bool,
+    /// Cross-server parallel deployments allowed (ε stage)?
+    pub allow_cross_server: bool,
+    /// Edge-device GPU registration allowed?
+    pub allow_device: bool,
+    /// Per-request central-scheduler latency: a + b·n ms for n servers
+    /// (Fig. 3e's scaling; zero for decentralized schemes).
+    pub central_lat_base_ms: f64,
+    pub central_lat_per_server_ms: f64,
+}
+
+impl PolicyConfig {
+    /// Central-scheduler latency for `n` servers (0 for decentralized).
+    pub fn central_latency_ms(&self, n: usize) -> f64 {
+        if self.central_lat_per_server_ms == 0.0 && self.central_lat_base_ms == 0.0 {
+            return 0.0;
+        }
+        self.central_lat_base_ms + self.central_lat_per_server_ms * n as f64
+    }
+
+    /// Strip operators this policy does not implement.
+    pub fn adjust_allocation(&self, al: &mut Allocation) {
+        if !self.request_level {
+            al.ops.mf = 1;
+            al.ops.dp = 1;
+        }
+        if !self.mt_enabled {
+            al.ops.mt = 1;
+            // no MPS packing: every deployment owns its GPUs outright
+            al.exclusive_gpu = true;
+        }
+        if !self.bs_enabled {
+            al.ops.bs = 1;
+        }
+        if !self.mp_enabled {
+            al.ops.mp = MpKind::None;
+        }
+    }
+
+    pub fn epara() -> Self {
+        PolicyConfig {
+            name: "EPARA",
+            offload: OffloadMode::Eq1,
+            placement: PlacementMode::Sssp,
+            request_level: true,
+            mt_enabled: true,
+            bs_enabled: true,
+            mp_enabled: true,
+            allow_cross_server: true,
+            allow_device: true,
+            central_lat_base_ms: 0.0,
+            central_lat_per_server_ms: 0.0,
+        }
+    }
+
+    /// Ablation: EPARA with offloading disabled (Fig. 17a's "first hop
+    /// only" comparison).
+    pub fn epara_no_offload() -> Self {
+        PolicyConfig {
+            name: "EPARA-no-offload",
+            offload: OffloadMode::None,
+            ..Self::epara()
+        }
+    }
+
+    /// Ablation: EPARA with a cache placement (Fig. 17b).
+    pub fn epara_cache_placement(policy: CachePolicy) -> Self {
+        PolicyConfig {
+            name: "EPARA-cache",
+            placement: PlacementMode::Cache(policy),
+            ..Self::epara()
+        }
+    }
+
+    /// InterEdge: decentralized round-robin forwarding; MP/BS/MT aligned
+    /// with EPARA (§5.1 comparisons), no request-level operators.
+    pub fn interedge() -> Self {
+        PolicyConfig {
+            name: "InterEdge",
+            offload: OffloadMode::RoundRobin,
+            placement: PlacementMode::LocalOnly,
+            request_level: false,
+            ..Self::epara()
+        }
+    }
+
+    /// AlpaServe: datacenter statistical multiplexing; refuses requests
+    /// needing offload or cross-edge parallelism.
+    pub fn alpaserve() -> Self {
+        PolicyConfig {
+            name: "AlpaServe",
+            offload: OffloadMode::None,
+            placement: PlacementMode::LocalOnly,
+            request_level: false,
+            allow_cross_server: false,
+            allow_device: false,
+            ..Self::epara()
+        }
+    }
+
+    /// Galaxy: every GPU an edge device under one coordinator; MP across
+    /// devices but no MT packing.
+    pub fn galaxy() -> Self {
+        PolicyConfig {
+            name: "Galaxy",
+            offload: OffloadMode::Centralized,
+            placement: PlacementMode::LocalOnly,
+            request_level: false,
+            mt_enabled: false,
+            allow_device: false,
+            central_lat_base_ms: 2.0,
+            central_lat_per_server_ms: 0.2,
+            ..Self::epara()
+        }
+    }
+
+    /// SERV-P: fully centralized placement+handling, NP-hard solver —
+    /// Fig. 3e latency: >100 ms at 10 servers, >750 ms at 30+.
+    pub fn servp() -> Self {
+        PolicyConfig {
+            name: "SERV-P",
+            offload: OffloadMode::Centralized,
+            placement: PlacementMode::LocalOnly,
+            request_level: false,
+            mt_enabled: false,
+            bs_enabled: true,
+            central_lat_base_ms: 10.0,
+            central_lat_per_server_ms: 10.0,
+            ..Self::epara()
+        }
+    }
+
+    /// USHER: holistic interference-aware packing (MT strong), no
+    /// request-level ops, centralized.
+    pub fn usher() -> Self {
+        PolicyConfig {
+            name: "USHER",
+            offload: OffloadMode::None,
+            placement: PlacementMode::LocalOnly,
+            request_level: false,
+            allow_cross_server: false,
+            allow_device: false,
+            ..Self::epara()
+        }
+    }
+
+    /// DeTransformer: block-parallel MP on edge devices; no MT, BS=1.
+    pub fn detransformer() -> Self {
+        PolicyConfig {
+            name: "DeTransformer",
+            offload: OffloadMode::None,
+            placement: PlacementMode::LocalOnly,
+            request_level: false,
+            mt_enabled: false,
+            bs_enabled: false,
+            allow_device: false,
+            central_lat_base_ms: 1.0,
+            central_lat_per_server_ms: 0.1,
+            ..Self::epara()
+        }
+    }
+
+    /// The Fig. 10/14 comparison set.
+    pub fn testbed_baselines() -> Vec<PolicyConfig> {
+        vec![
+            Self::epara(),
+            Self::interedge(),
+            Self::alpaserve(),
+            Self::galaxy(),
+            Self::servp(),
+        ]
+    }
+
+    pub fn all_baselines() -> Vec<PolicyConfig> {
+        vec![
+            Self::epara(),
+            Self::interedge(),
+            Self::alpaserve(),
+            Self::galaxy(),
+            Self::servp(),
+            Self::usher(),
+            Self::detransformer(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{OperatorConfig, ServiceId, TaskCategory};
+
+    fn dummy_alloc() -> Allocation {
+        Allocation {
+            service: ServiceId(0),
+            category: TaskCategory::FrequencyMulti,
+            ops: OperatorConfig {
+                bs: 8,
+                mt: 4,
+                mp: MpKind::Tp(2),
+                mf: 4,
+                dp: 2,
+            },
+            expected_rate: 10.0,
+            expected_latency_ms: 5.0,
+            exclusive_gpu: false,
+        }
+    }
+
+    #[test]
+    fn interedge_strips_request_level_only() {
+        let mut al = dummy_alloc();
+        PolicyConfig::interedge().adjust_allocation(&mut al);
+        assert_eq!(al.ops.mf, 1);
+        assert_eq!(al.ops.dp, 1);
+        assert_eq!(al.ops.bs, 8, "BS stays aligned with EPARA");
+        assert_eq!(al.ops.mt, 4);
+        assert_eq!(al.ops.mp, MpKind::Tp(2));
+    }
+
+    #[test]
+    fn galaxy_strips_mt() {
+        let mut al = dummy_alloc();
+        PolicyConfig::galaxy().adjust_allocation(&mut al);
+        assert_eq!(al.ops.mt, 1);
+        assert!(al.exclusive_gpu, "no MT means whole-GPU deployments");
+        assert_eq!(al.ops.mp, MpKind::Tp(2));
+    }
+
+    #[test]
+    fn detransformer_strips_batching() {
+        let mut al = dummy_alloc();
+        PolicyConfig::detransformer().adjust_allocation(&mut al);
+        assert_eq!(al.ops.bs, 1);
+        assert_eq!(al.ops.mt, 1);
+    }
+
+    #[test]
+    fn servp_latency_matches_fig3e() {
+        let p = PolicyConfig::servp();
+        assert!(p.central_latency_ms(10) > 100.0);
+        assert!(p.central_latency_ms(30) < 750.0 * 1.2);
+        assert!(p.central_latency_ms(80) > 750.0);
+        assert_eq!(PolicyConfig::epara().central_latency_ms(1000), 0.0);
+    }
+}

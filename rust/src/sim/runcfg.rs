@@ -1,0 +1,202 @@
+//! JSON run configuration for the launcher (`epara simulate --config`).
+//!
+//! One file describes a full experiment: cluster shape, workload, policy,
+//! handler/sync/placement knobs.  Example (`examples/run_config.json`):
+//!
+//! ```json
+//! {
+//!   "servers": 6, "gpus_per_server": 0,
+//!   "workload": { "mix": "prod0", "rps": 150.0, "duration_s": 20.0,
+//!                 "seed": 7, "streams": 100, "burstiness": 0.3 },
+//!   "policy": "epara",
+//!   "handler": { "max_offloads": 5 },
+//!   "sync": { "interval_ms": 1000.0, "bandwidth_mbps": 500.0,
+//!             "group_size": 200 },
+//!   "replacement_interval_ms": 2000.0
+//! }
+//! ```
+//!
+//! `gpus_per_server: 0` selects the paper's testbed (6 servers / 4 P100 +
+//! devices); anything else builds a uniform cluster.
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::{EdgeCloud, GpuSpec, Link};
+use crate::configjson::Json;
+use crate::handler::HandlerConfig;
+use crate::sync::SyncConfig;
+use crate::workload::{Mix, WorkloadSpec};
+
+use super::{PolicyConfig, SimConfig};
+
+/// A fully-described simulation run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub cloud: EdgeCloud,
+    pub workload: WorkloadSpec,
+    pub sim: SimConfig,
+}
+
+fn parse_mix(s: &str) -> Result<Mix> {
+    Ok(match s {
+        "latency" => Mix::LatencyOnly,
+        "frequency" => Mix::FrequencyOnly,
+        "mixed" => Mix::Mixed,
+        other => match other.strip_prefix("prod") {
+            Some(k) => Mix::Production(
+                k.parse().map_err(|_| anyhow!("bad mix '{other}'"))?,
+            ),
+            None => return Err(anyhow!("unknown mix '{other}'")),
+        },
+    })
+}
+
+fn f(j: &Json, key: &str, default: f64) -> f64 {
+    j.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+}
+
+fn u(j: &Json, key: &str, default: usize) -> usize {
+    j.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+}
+
+impl RunConfig {
+    /// Parse a run config from JSON.
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let servers = u(j, "servers", 6);
+        let gpus = u(j, "gpus_per_server", 0);
+        let cloud = if gpus == 0 {
+            EdgeCloud::testbed()
+        } else {
+            EdgeCloud::uniform(servers, gpus, GpuSpec::P100, Link::SWITCH_10G)
+        };
+
+        let w = j.get("workload").cloned().unwrap_or(Json::Obj(vec![]));
+        let duration_ms = f(&w, "duration_s", 30.0) * 1000.0;
+        let workload = WorkloadSpec {
+            seed: f(&w, "seed", 1.0) as u64,
+            duration_ms,
+            rps: f(&w, "rps", 50.0),
+            streams: u(&w, "streams", 100),
+            burstiness: f(&w, "burstiness", 0.3),
+            mix: parse_mix(
+                w.get("mix").and_then(|v| v.as_str()).unwrap_or("prod0"),
+            )?,
+            services: Vec::new(),
+        };
+
+        let policy_name = j
+            .get("policy")
+            .and_then(|v| v.as_str())
+            .unwrap_or("epara");
+        let policy = match policy_name {
+            "epara" => PolicyConfig::epara(),
+            other => crate::baselines::policy_for(&canonical(other))
+                .ok_or_else(|| anyhow!("unknown policy '{other}'"))?,
+        };
+
+        let h = j.get("handler").cloned().unwrap_or(Json::Obj(vec![]));
+        let handler = HandlerConfig {
+            max_offloads: u(&h, "max_offloads", 5) as u32,
+        };
+
+        let s = j.get("sync").cloned().unwrap_or(Json::Obj(vec![]));
+        let sync = SyncConfig {
+            interval_ms: f(&s, "interval_ms", 1000.0),
+            bandwidth_mbps: f(&s, "bandwidth_mbps", 500.0),
+            group_size: s.get("group_size").and_then(|v| v.as_usize()),
+            ..Default::default()
+        };
+
+        let sim = SimConfig {
+            seed: f(j, "seed", 7.0) as u64,
+            handler,
+            sync,
+            policy,
+            duration_ms,
+            replacement_interval_ms: j
+                .get("replacement_interval_ms")
+                .and_then(|v| v.as_f64()),
+        };
+        Ok(RunConfig { cloud, workload, sim })
+    }
+
+    /// Load from a file.
+    pub fn from_file(path: &std::path::Path) -> Result<RunConfig> {
+        RunConfig::from_json(&crate::configjson::from_file(path)?)
+    }
+}
+
+fn canonical(name: &str) -> String {
+    match name {
+        "interedge" => "InterEdge".into(),
+        "alpaserve" => "AlpaServe".into(),
+        "galaxy" => "Galaxy".into(),
+        "servp" => "SERV-P".into(),
+        "usher" => "USHER".into(),
+        "detransformer" => "DeTransformer".into(),
+        other => other.into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configjson::parse;
+
+    #[test]
+    fn defaults_from_empty_object() {
+        let rc = RunConfig::from_json(&parse("{}").unwrap()).unwrap();
+        assert_eq!(rc.cloud.n_servers(), 6); // testbed default
+        assert_eq!(rc.sim.handler.max_offloads, 5);
+        assert_eq!(rc.workload.mix, Mix::Production(0));
+        assert!(rc.sim.replacement_interval_ms.is_none());
+    }
+
+    #[test]
+    fn full_config_round() {
+        let text = r#"{
+          "servers": 4, "gpus_per_server": 8,
+          "workload": {"mix": "frequency", "rps": 200.0, "duration_s": 10.0,
+                       "seed": 3},
+          "policy": "interedge",
+          "handler": {"max_offloads": 2},
+          "sync": {"interval_ms": 500.0, "group_size": 100},
+          "replacement_interval_ms": 2000.0
+        }"#;
+        let rc = RunConfig::from_json(&parse(text).unwrap()).unwrap();
+        assert_eq!(rc.cloud.n_servers(), 4);
+        assert_eq!(rc.cloud.total_gpus(), 32);
+        assert_eq!(rc.workload.mix, Mix::FrequencyOnly);
+        assert_eq!(rc.workload.rps, 200.0);
+        assert_eq!(rc.sim.duration_ms, 10_000.0);
+        assert_eq!(rc.sim.policy.name, "InterEdge");
+        assert_eq!(rc.sim.handler.max_offloads, 2);
+        assert_eq!(rc.sim.sync.group_size, Some(100));
+        assert_eq!(rc.sim.replacement_interval_ms, Some(2000.0));
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(RunConfig::from_json(
+            &parse(r#"{"workload": {"mix": "bogus"}}"#).unwrap()
+        )
+        .is_err());
+        assert!(RunConfig::from_json(
+            &parse(r#"{"policy": "nonesuch"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn config_runs_end_to_end() {
+        let rc = RunConfig::from_json(
+            &parse(r#"{"workload": {"rps": 20.0, "duration_s": 5.0}}"#).unwrap(),
+        )
+        .unwrap();
+        let table = crate::profile::zoo::paper_zoo();
+        let reqs = crate::workload::generate(&rc.workload, &table, &rc.cloud);
+        let m = super::super::simulate(&table, rc.cloud, reqs, rc.sim);
+        assert!(m.offered > 0);
+        assert!(m.satisfied > 0.0);
+    }
+}

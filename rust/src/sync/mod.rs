@@ -1,0 +1,240 @@
+//! Information synchronization (§3.4): ring-reduce state exchange with
+//! three temporal granularities, grouping for scale (Fig. 18a), and the
+//! §5.3.3 fault model (silent corruption self-heal, detected-loss bypass).
+//!
+//! Servers form a ring; each round every server exchanges its request
+//! arrival/processing status and its cached system-wide state with both
+//! neighbours (ring-reduce/all-gather), so a round moves ~2× the total
+//! state per node pipelined over N−1 hops.  The handler never sees fresh
+//! truth — it sees state `t_n` old (Eq. 1's ẗ window), and prolonged sync
+//! delays increase offload misses (Fig. 17e).
+
+use crate::core::ServerId;
+
+/// Sync protocol configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SyncConfig {
+    /// Gap between sync rounds (ms).
+    pub interval_ms: f64,
+    /// Link bandwidth used by the protocol (Mb/s).
+    pub bandwidth_mbps: f64,
+    /// Per-server state record size (KB): arrivals, per-service goodput,
+    /// queue depths.
+    pub state_kb: f64,
+    /// Per-hop forwarding latency (ms).
+    pub hop_latency_ms: f64,
+    /// Per-hop processing cost (ms).
+    pub proc_ms: f64,
+    /// Optional grouping: ring within groups of this size, plus a second
+    /// level across group leaders via the messager (Fig. 18a's fix).
+    pub group_size: Option<usize>,
+}
+
+impl Default for SyncConfig {
+    fn default() -> Self {
+        SyncConfig {
+            interval_ms: 1000.0,
+            bandwidth_mbps: 500.0,
+            state_kb: 2.0,
+            hop_latency_ms: 0.15,
+            proc_ms: 0.02,
+            group_size: None,
+        }
+    }
+}
+
+impl SyncConfig {
+    /// Delay for one complete ring round over `n` members: pipelined
+    /// all-gather (2·n·state over the link) plus hop latency/processing.
+    pub fn ring_delay_ms(&self, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let data_ms = 2.0 * n as f64 * self.state_kb * 8.0 / self.bandwidth_mbps;
+        let hops = (n - 1) as f64;
+        data_ms + hops * (self.hop_latency_ms + self.proc_ms)
+    }
+
+    /// Full-cloud sync delay with optional two-level grouping.
+    pub fn full_sync_delay_ms(&self, n: usize) -> f64 {
+        match self.group_size {
+            None => self.ring_delay_ms(n),
+            Some(g) if g >= n => self.ring_delay_ms(n),
+            Some(g) => {
+                let groups = n.div_ceil(g);
+                // group-local ring + leader ring (state aggregated per group)
+                self.ring_delay_ms(g) + self.ring_delay_ms(groups)
+            }
+        }
+    }
+}
+
+/// Per-server fault state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Fault {
+    Healthy,
+    /// Silent data error until the given virtual time: cached state about
+    /// this server is wrong by `factor` (undetected; self-heals at the
+    /// next sync round after `until_ms`).
+    SilentError { until_ms: f64, factor: f64 },
+    /// Detected unresponsive: bypassed by the ring, excluded from
+    /// placement/offloading until manual intervention.
+    Down,
+}
+
+/// The synchronization substrate tracked by the simulator.
+#[derive(Clone, Debug)]
+pub struct SyncNet {
+    pub cfg: SyncConfig,
+    n: usize,
+    /// Completion time of each server's last sync round (ms).
+    last_sync_ms: Vec<f64>,
+    fault: Vec<Fault>,
+}
+
+impl SyncNet {
+    pub fn new(n: usize, cfg: SyncConfig) -> Self {
+        SyncNet {
+            cfg,
+            n,
+            last_sync_ms: vec![0.0; n],
+            fault: vec![Fault::Healthy; n],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of ring members currently participating.
+    pub fn live_members(&self) -> usize {
+        self.fault.iter().filter(|f| !matches!(f, Fault::Down)).count()
+    }
+
+    /// Run one sync round completing at `now_ms`: every live server's
+    /// state timestamp advances; silent errors past their window heal.
+    pub fn advance(&mut self, now_ms: f64) {
+        for i in 0..self.n {
+            match self.fault[i] {
+                Fault::Down => {} // bypassed: state stays stale
+                Fault::SilentError { until_ms, .. } if now_ms >= until_ms => {
+                    // §5.3.3: "passively resolves ... with automatic
+                    // correction during subsequent synchronization cycles"
+                    self.fault[i] = Fault::Healthy;
+                    self.last_sync_ms[i] = now_ms;
+                }
+                _ => self.last_sync_ms[i] = now_ms,
+            }
+        }
+    }
+
+    /// t_n: age of the synced state about `server` at `now_ms`.
+    pub fn staleness_ms(&self, server: ServerId, now_ms: f64) -> f64 {
+        let i = server.0 as usize;
+        (now_ms - self.last_sync_ms[i]).max(0.0) + self.round_delay_ms()
+    }
+
+    /// Delay of one round over the live membership.
+    pub fn round_delay_ms(&self) -> f64 {
+        self.cfg.full_sync_delay_ms(self.live_members())
+    }
+
+    /// Inject an undetected silent data error about `server` lasting
+    /// `duration_ms`: cached goodput about it reads wrong by `factor`.
+    pub fn inject_silent_error(&mut self, server: ServerId, now_ms: f64,
+                               duration_ms: f64, factor: f64) {
+        self.fault[server.0 as usize] =
+            Fault::SilentError { until_ms: now_ms + duration_ms, factor };
+    }
+
+    /// Detected information loss: flag unresponsive, bypass in the ring
+    /// "until manual intervention" (§5.3.3).
+    pub fn mark_down(&mut self, server: ServerId) {
+        self.fault[server.0 as usize] = Fault::Down;
+    }
+
+    /// Manual intervention: bring the server back.
+    pub fn repair(&mut self, server: ServerId, now_ms: f64) {
+        self.fault[server.0 as usize] = Fault::Healthy;
+        self.last_sync_ms[server.0 as usize] = now_ms;
+    }
+
+    /// Is the server excluded from offloading/placement?
+    pub fn is_down(&self, server: ServerId) -> bool {
+        matches!(self.fault[server.0 as usize], Fault::Down)
+    }
+
+    /// Distortion the synced view applies to `server`'s reported actual
+    /// goodput (silent errors make the cloud misjudge idle capacity).
+    pub fn state_distortion(&self, server: ServerId) -> f64 {
+        match self.fault[server.0 as usize] {
+            Fault::SilentError { factor, .. } => factor,
+            _ => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig17d_sync_delay_envelope() {
+        // (50 Mb/s, 100 servers) and (500 Mb/s, 1000 servers) ≤ 10 s
+        let a = SyncConfig { bandwidth_mbps: 50.0, ..Default::default() };
+        assert!(a.full_sync_delay_ms(100) <= 10_000.0,
+                "{}", a.full_sync_delay_ms(100));
+        let b = SyncConfig { bandwidth_mbps: 500.0, ..Default::default() };
+        assert!(b.full_sync_delay_ms(1000) <= 10_000.0,
+                "{}", b.full_sync_delay_ms(1000));
+    }
+
+    #[test]
+    fn delay_grows_with_scale_and_grouping_fixes_it() {
+        let flat = SyncConfig::default();
+        let d10k = flat.full_sync_delay_ms(10_000);
+        let d100 = flat.full_sync_delay_ms(100);
+        assert!(d10k > 10.0 * d100, "flat ring must degrade with scale");
+        // Fig 18a: groups of 100–500 keep large clouds responsive
+        let grouped = SyncConfig { group_size: Some(200), ..Default::default() };
+        let dg = grouped.full_sync_delay_ms(10_000);
+        assert!(dg < d10k / 5.0, "grouped {dg} vs flat {d10k}");
+    }
+
+    #[test]
+    fn staleness_tracks_rounds() {
+        let mut net = SyncNet::new(4, SyncConfig::default());
+        net.advance(1000.0);
+        let t = net.staleness_ms(ServerId(2), 1500.0);
+        assert!(t >= 500.0 && t < 600.0, "{t}");
+        net.advance(2000.0);
+        assert!(net.staleness_ms(ServerId(2), 2000.0) < 100.0);
+    }
+
+    #[test]
+    fn silent_error_self_heals() {
+        let mut net = SyncNet::new(3, SyncConfig::default());
+        net.inject_silent_error(ServerId(1), 0.0, 500.0, 0.0);
+        assert_eq!(net.state_distortion(ServerId(1)), 0.0);
+        net.advance(100.0); // too early: error persists
+        assert_eq!(net.state_distortion(ServerId(1)), 0.0);
+        net.advance(600.0); // next cycle after the window: healed
+        assert_eq!(net.state_distortion(ServerId(1)), 1.0);
+    }
+
+    #[test]
+    fn down_server_bypassed() {
+        let mut net = SyncNet::new(5, SyncConfig::default());
+        let before = net.round_delay_ms();
+        net.mark_down(ServerId(3));
+        assert!(net.is_down(ServerId(3)));
+        assert_eq!(net.live_members(), 4);
+        assert!(net.round_delay_ms() < before);
+        net.advance(100.0);
+        // the down server's state never refreshes
+        assert!(net.staleness_ms(ServerId(3), 100.0)
+                > net.staleness_ms(ServerId(0), 100.0));
+        net.repair(ServerId(3), 200.0);
+        assert!(!net.is_down(ServerId(3)));
+    }
+}

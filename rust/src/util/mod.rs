@@ -1,0 +1,38 @@
+//! In-crate substrates: deterministic RNG, statistics, and a mini
+//! property-testing harness (the offline registry has no rand/proptest).
+
+pub mod minitest;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;
+
+/// Simple leveled stderr logger gated by `EPARA_LOG` (error|warn|info|debug).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum LogLevel {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+/// Current log level from the environment (default: warn).
+pub fn log_level() -> LogLevel {
+    match std::env::var("EPARA_LOG").as_deref() {
+        Ok("error") => LogLevel::Error,
+        Ok("info") => LogLevel::Info,
+        Ok("debug") => LogLevel::Debug,
+        _ => LogLevel::Warn,
+    }
+}
+
+/// Log a message at the given level (stderr, never on the hot path).
+#[macro_export]
+macro_rules! log_at {
+    ($lvl:expr, $($arg:tt)*) => {
+        if $lvl <= $crate::util::log_level() {
+            eprintln!("[epara {:?}] {}", $lvl, format!($($arg)*));
+        }
+    };
+}

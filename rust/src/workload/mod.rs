@@ -1,0 +1,324 @@
+//! Workload generator shaped like the paper's traces (§5.1):
+//! Microsoft Azure Function Trace 2021 for request rates and the Azure LLM
+//! Inference Trace 2023 for token lengths.
+//!
+//! We cannot ship the proprietary traces, so we reproduce their published
+//! marginals (DESIGN.md substitutions): heavy-tailed per-stream rates
+//! (lognormal), bursty arrivals (Poisson with episodic rate spikes),
+//! diurnal modulation, heavy-tailed LLM output lengths (lognormal, mean
+//! ≈ 64 tokens), and the paper's round-robin stream→service assignment.
+//! Frequency services receive *session* requests each carrying a frame
+//! budget (e.g. 120 frames at 60 fps).
+
+use crate::cluster::EdgeCloud;
+use crate::core::{Request, RequestId, Sensitivity, ServerId, ServiceId};
+use crate::profile::ProfileTable;
+use crate::util::Rng;
+
+/// Workload mixes used across the evaluation figures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mix {
+    /// Only latency-sensitive services (Fig. 14 left).
+    LatencyOnly,
+    /// Only frequency-sensitive services (Fig. 14 middle).
+    FrequencyOnly,
+    /// Both (Fig. 14 right, Fig. 10 "mixed").
+    Mixed,
+    /// One of the five production workloads of Fig. 10/11 (0..5).
+    Production(u8),
+}
+
+/// Generator configuration.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub seed: u64,
+    /// Virtual-time horizon (ms).
+    pub duration_ms: f64,
+    /// Aggregate target request rate (requests/s across the cloud).
+    pub rps: f64,
+    /// Number of function streams multiplexed (Azure-trace style).
+    pub streams: usize,
+    /// Burstiness knob in [0, 1]: fraction of episodic rate spikes.
+    pub burstiness: f64,
+    pub mix: Mix,
+    /// Explicit service set (overrides `mix` when non-empty) — used by the
+    /// case studies and component benches that pin a service roster.
+    pub services: Vec<ServiceId>,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            seed: 1,
+            duration_ms: 60_000.0,
+            rps: 50.0,
+            streams: 100,
+            burstiness: 0.3,
+            mix: Mix::Mixed,
+            services: Vec::new(),
+        }
+    }
+}
+
+/// Select the service set for a mix from the profile table.
+pub fn services_for_mix(table: &ProfileTable, mix: Mix) -> Vec<ServiceId> {
+    let mut all: Vec<_> = table.services().collect();
+    all.sort_by_key(|s| s.id);
+    let filtered: Vec<ServiceId> = match mix {
+        Mix::LatencyOnly => all
+            .iter()
+            .filter(|s| s.sensitivity == Sensitivity::Latency)
+            .map(|s| s.id)
+            .collect(),
+        Mix::FrequencyOnly => all
+            .iter()
+            .filter(|s| s.sensitivity == Sensitivity::Frequency)
+            .map(|s| s.id)
+            .collect(),
+        Mix::Mixed => all.iter().map(|s| s.id).collect(),
+        // Five production workloads (the paper's five mixed testbed
+        // workloads): curated rosters spanning the four Fig. 5 categories
+        // that a 4-P100 edge cloud can realistically host.
+        Mix::Production(k) => production_roster(k),
+    };
+    if filtered.is_empty() {
+        all.iter().map(|s| s.id).collect()
+    } else {
+        filtered
+    }
+}
+
+/// The five production workload rosters (Fig. 10/11): each spans the four
+/// Fig. 5 categories with a different emphasis.
+pub fn production_roster(k: u8) -> Vec<ServiceId> {
+    use crate::profile::zoo::ids::*;
+    let vid = |s: ServiceId| ServiceId(s.0 + VIDEO_OFFSET);
+    let hci = |s: ServiceId| ServiceId(s.0 + HCI_OFFSET);
+    match k % 5 {
+        // W0: vision-heavy analytics
+        0 => vec![MOBILENET_V2, RESNET50, YOLOV10, UNET,
+                  vid(MOBILENET_V2), vid(RESNET50), vid(DEEPLABV3P)],
+        // W1: text/LLM chat mix
+        1 => vec![BERT, GNMT, QWEN_1_5B, LLAMA3_8B,
+                  hci(QWEN_1_5B), hci(LLAMA3_8B)],
+        // W2: segmentation case-study flavored
+        2 => vec![UNET, DEEPLABV3P, SCTNET, MASKFORMER,
+                  vid(UNET), vid(SCTNET)],
+        // W3: mixed light services, frequency-leaning
+        3 => vec![MOBILENET_V2, YOLOV11, BERT, QWEN_1_5B,
+                  vid(MOBILENET_V2), vid(YOLOV10), vid(UNET), hci(QWEN_1_5B)],
+        // W4: heavy multi-GPU leaning
+        _ => vec![RESNET50, MASKFORMER, DEEPSEEK_16B, QWEN_1_5B,
+                  vid(DEEPLABV3P), hci(DEEPSEEK_16B)],
+    }
+}
+
+/// One multiplexed request stream (an Azure "function").
+#[derive(Clone, Debug)]
+struct Stream {
+    service: ServiceId,
+    /// Base Poisson rate (requests/ms).
+    rate: f64,
+    origin: ServerId,
+}
+
+/// Generate the request trace, sorted by arrival time.
+pub fn generate(
+    spec: &WorkloadSpec,
+    table: &ProfileTable,
+    cloud: &EdgeCloud,
+) -> Vec<Request> {
+    let services = if spec.services.is_empty() {
+        services_for_mix(table, spec.mix)
+    } else {
+        spec.services.clone()
+    };
+    let mut rng = Rng::new(spec.seed);
+    let n_servers = cloud.n_servers().max(1);
+
+    // Zipf-ish origin skew: edge requests are uneven across servers (§2.2).
+    let origin_weights: Vec<f64> =
+        (0..n_servers).map(|i| 1.0 / (1.0 + i as f64).sqrt()).collect();
+
+    // Heavy-tailed per-stream weights (Azure: few hot functions dominate).
+    let weights: Vec<f64> =
+        (0..spec.streams).map(|_| rng.lognormal(0.0, 1.2)).collect();
+    let wsum: f64 = weights.iter().sum();
+
+    let streams: Vec<Stream> = (0..spec.streams)
+        .map(|i| {
+            let origin_idx = rng.weighted_index(&origin_weights).unwrap_or(0);
+            Stream {
+                // paper: streams assigned to models round-robin
+                service: services[i % services.len()],
+                rate: spec.rps * (weights[i] / wsum) / 1000.0,
+                origin: ServerId(origin_idx as u32),
+            }
+        })
+        .collect();
+
+    let mut out = Vec::new();
+    let mut next_id = 0u64;
+    for (si, st) in streams.iter().enumerate() {
+        let mut srng = rng.fork(si as u64);
+        let svc = table.spec(st.service);
+        let mut t = srng.exp(st.rate.max(1e-9));
+        while t < spec.duration_ms {
+            // diurnal modulation + burst episodes
+            let phase = 2.0 * std::f64::consts::PI * t / spec.duration_ms;
+            let diurnal = 1.0 + 0.3 * phase.sin();
+            let burst = if srng.chance(spec.burstiness * 0.05) { 5.0 } else { 1.0 };
+
+            let frames = match svc.sensitivity {
+                Sensitivity::Frequency => svc.frames_per_request,
+                Sensitivity::Latency => {
+                    // LLM latency requests: token budget ~ lognormal with
+                    // the Azure-LLM-trace shape (mean ≈ items_per_request)
+                    let base = table.base(st.service).items_per_request;
+                    if base > 1.5 {
+                        (base * srng.lognormal(-0.125, 0.5)).round().max(1.0) as u32
+                    } else {
+                        1
+                    }
+                }
+            };
+            out.push(Request {
+                id: RequestId(next_id),
+                service: st.service,
+                arrival_ms: t,
+                origin: st.origin,
+                frames,
+                path: Vec::new(),
+                offloads: 0,
+            });
+            next_id += 1;
+            t += srng.exp((st.rate * diurnal * burst).max(1e-9));
+        }
+    }
+    out.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
+    // re-number in arrival order so RequestId is monotone
+    for (i, r) in out.iter_mut().enumerate() {
+        r.id = RequestId(i as u64);
+    }
+    out
+}
+
+/// A steady frame stream for a single frequency service (Fig. 1 / Fig. 3a
+/// motivation experiments): one session of `n_frames` at `fps`.
+pub fn video_session(
+    service: ServiceId,
+    fps: f64,
+    n_frames: u32,
+    origin: ServerId,
+) -> Vec<Request> {
+    (0..n_frames)
+        .map(|i| Request {
+            id: RequestId(i as u64),
+            service,
+            arrival_ms: i as f64 * 1000.0 / fps,
+            origin,
+            frames: 1,
+            path: Vec::new(),
+            offloads: 0,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::zoo;
+
+    fn setup() -> (ProfileTable, EdgeCloud) {
+        (zoo::paper_zoo(), EdgeCloud::testbed())
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (t, c) = setup();
+        let spec = WorkloadSpec::default();
+        let a = generate(&spec, &t, &c);
+        let b = generate(&spec, &t, &c);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+            assert_eq!(x.service, y.service);
+        }
+    }
+
+    #[test]
+    fn rate_approximates_target() {
+        let (t, c) = setup();
+        let spec = WorkloadSpec { rps: 100.0, duration_ms: 30_000.0, ..Default::default() };
+        let reqs = generate(&spec, &t, &c);
+        let achieved = reqs.len() as f64 / (spec.duration_ms / 1000.0);
+        assert!(
+            (achieved - 100.0).abs() / 100.0 < 0.35,
+            "rps {achieved} vs target 100"
+        );
+    }
+
+    #[test]
+    fn sorted_by_arrival_and_monotone_ids() {
+        let (t, c) = setup();
+        let reqs = generate(&WorkloadSpec::default(), &t, &c);
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival_ms <= w[1].arrival_ms);
+            assert!(w[0].id < w[1].id);
+        }
+    }
+
+    #[test]
+    fn mixes_filter_sensitivity() {
+        let (t, c) = setup();
+        for (mix, want) in [
+            (Mix::LatencyOnly, Sensitivity::Latency),
+            (Mix::FrequencyOnly, Sensitivity::Frequency),
+        ] {
+            let spec = WorkloadSpec { mix, ..Default::default() };
+            let reqs = generate(&spec, &t, &c);
+            assert!(!reqs.is_empty());
+            for r in &reqs {
+                assert_eq!(t.spec(r.service).sensitivity, want);
+            }
+        }
+    }
+
+    #[test]
+    fn production_mixes_differ() {
+        let (t, _) = setup();
+        let sets: Vec<Vec<ServiceId>> = (0..5)
+            .map(|k| services_for_mix(&t, Mix::Production(k)))
+            .collect();
+        assert!(sets.iter().any(|s| s != &sets[0]), "mixes should differ");
+    }
+
+    #[test]
+    fn llm_token_lengths_heavy_tailed() {
+        let (t, c) = setup();
+        let spec = WorkloadSpec {
+            mix: Mix::LatencyOnly,
+            rps: 200.0,
+            duration_ms: 20_000.0,
+            ..Default::default()
+        };
+        let reqs = generate(&spec, &t, &c);
+        let llm: Vec<u32> = reqs
+            .iter()
+            .filter(|r| t.base(r.service).items_per_request > 1.5)
+            .map(|r| r.frames)
+            .collect();
+        assert!(llm.len() > 50);
+        let mean = llm.iter().sum::<u32>() as f64 / llm.len() as f64;
+        assert!((mean - 64.0).abs() < 20.0, "mean tokens {mean}");
+        assert!(llm.iter().any(|f| *f > 100), "tail should exceed 100");
+    }
+
+    #[test]
+    fn video_session_spacing() {
+        let s = video_session(ServiceId(104), 60.0, 120, ServerId(0));
+        assert_eq!(s.len(), 120);
+        let dt = s[1].arrival_ms - s[0].arrival_ms;
+        assert!((dt - 16.6667).abs() < 0.01);
+    }
+}

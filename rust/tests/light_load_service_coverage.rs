@@ -1,0 +1,35 @@
+//! Light-load per-service satisfaction: at a fraction of testbed capacity
+//! every service in the roster must be (nearly) fully served — the
+//! §5.1.1 ">99.4% fulfilment below max goodput" claim, per service.
+
+#[test]
+fn light_load_serves_every_service() {
+    use epara::*;
+    use std::collections::HashMap;
+    let table = profile::zoo::paper_zoo();
+    let cloud = cluster::EdgeCloud::testbed();
+    let spec = workload::WorkloadSpec {
+        mix: workload::Mix::Production(0),
+        rps: 5.0,
+        duration_ms: 20_000.0,
+        ..Default::default()
+    };
+    let reqs = workload::generate(&spec, &table, &cloud);
+    let cfg = sim::SimConfig { duration_ms: 20_000.0, ..Default::default() };
+    let mut s = sim::Simulator::new(&table, cloud, &reqs, cfg);
+    let m = s.run(reqs.clone()).clone();
+    assert!(m.satisfaction_ratio() > 0.9, "ratio {}", m.satisfaction_ratio());
+
+    let mut offered: HashMap<u32, usize> = HashMap::new();
+    for r in &reqs {
+        *offered.entry(r.service.0).or_default() += 1;
+    }
+    for (svc, n) in offered {
+        let sat = m.per_service.get(&core::ServiceId(svc)).copied().unwrap_or(0.0);
+        assert!(
+            sat >= 0.7 * n as f64,
+            "service {svc} ({}) starved: {sat}/{n}",
+            table.spec(core::ServiceId(svc)).name
+        );
+    }
+}

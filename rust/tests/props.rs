@@ -1,0 +1,470 @@
+//! Property-based tests (in-crate minitest harness) over the paper's
+//! invariants: submodularity of φ, placement feasibility, handler loop
+//! freedom, Eq. 1 weighting, goodput accounting.
+
+use std::collections::HashMap;
+
+use epara::allocator::{Allocator, Overrides};
+use epara::cluster::{EdgeCloud, GpuSpec, Link};
+use epara::core::{Request, RequestId, ServerId, ServiceId};
+use epara::placement::{
+    spf_greedy, spf_lazy, Candidates, FluidEval, PhiEval, PlacementItem,
+};
+use epara::profile::zoo;
+use epara::util::minitest::forall;
+use epara::util::Rng;
+
+fn random_requests(rng: &mut Rng, services: &[ServiceId], n_servers: usize)
+                   -> Vec<Request> {
+    let n = 50 + rng.below(200) as usize;
+    (0..n)
+        .map(|i| Request {
+            id: RequestId(i as u64),
+            service: services[rng.below(services.len() as u64) as usize],
+            arrival_ms: rng.uniform(0.0, 10_000.0),
+            origin: ServerId(rng.below(n_servers as u64) as u32),
+            frames: 1 + rng.below(120) as u32,
+            path: vec![],
+            offloads: 0,
+        })
+        .collect()
+}
+
+fn small_services() -> Vec<ServiceId> {
+    use epara::profile::zoo::ids::*;
+    vec![MOBILENET_V2, RESNET50, YOLOV10, UNET,
+         ServiceId(MOBILENET_V2.0 + VIDEO_OFFSET),
+         ServiceId(UNET.0 + VIDEO_OFFSET)]
+}
+
+struct Instance {
+    cloud: EdgeCloud,
+    requests: Vec<Request>,
+    services: Vec<ServiceId>,
+}
+
+impl std::fmt::Debug for Instance {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Instance(servers={}, reqs={})",
+               self.cloud.n_servers(), self.requests.len())
+    }
+}
+
+fn gen_instance(rng: &mut Rng) -> Instance {
+    let n = 2 + rng.below(5) as usize;
+    let g = 1 + rng.below(4) as usize;
+    let cloud = EdgeCloud::uniform(n, g, GpuSpec::P100, Link::SWITCH_10G);
+    let services = small_services();
+    let requests = random_requests(rng, &services, n);
+    Instance { cloud, requests, services }
+}
+
+fn build_eval<'a>(
+    table: &'a epara::profile::ProfileTable,
+    allocs: &'a HashMap<ServiceId, epara::allocator::Allocation>,
+    inst: &Instance,
+) -> FluidEval<'a> {
+    FluidEval::from_requests(table, allocs, &inst.cloud, &inst.requests, 10_000.0)
+}
+
+#[test]
+fn prop_fluid_gains_diminish() {
+    // submodularity: for a fixed item, repeated push never increases gain
+    let table = zoo::paper_zoo();
+    let a = Allocator::new(&table, GpuSpec::P100);
+    let allocs: HashMap<_, _> = small_services()
+        .into_iter()
+        .map(|s| (s, a.allocate(s, Overrides::default())))
+        .collect();
+    forall(101, 30, gen_instance, |inst| {
+        let mut eval = build_eval(&table, &allocs, inst);
+        for &svc in &inst.services {
+            let item = PlacementItem { service: svc, server: ServerId(0) };
+            let mut last = f64::INFINITY;
+            for _ in 0..4 {
+                if !eval.feasible(item) {
+                    break;
+                }
+                let g = eval.gain(item);
+                if g > last + 1e-6 {
+                    return Err(format!("gain grew {g} > {last} for {svc:?}"));
+                }
+                last = g;
+                eval.push(item);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gain_equals_push_delta() {
+    let table = zoo::paper_zoo();
+    let a = Allocator::new(&table, GpuSpec::P100);
+    let allocs: HashMap<_, _> = small_services()
+        .into_iter()
+        .map(|s| (s, a.allocate(s, Overrides::default())))
+        .collect();
+    forall(102, 30, gen_instance, |inst| {
+        let mut eval = build_eval(&table, &allocs, inst);
+        let mut rng = Rng::new(inst.requests.len() as u64);
+        for _ in 0..10 {
+            let svc = inst.services
+                [rng.below(inst.services.len() as u64) as usize];
+            let srv = ServerId(rng.below(inst.cloud.n_servers() as u64) as u32);
+            let item = PlacementItem { service: svc, server: srv };
+            if !eval.feasible(item) {
+                continue;
+            }
+            let g = eval.gain(item);
+            let before = eval.phi();
+            eval.push(item);
+            let delta = eval.phi() - before;
+            if (delta - g).abs() > 1e-6 {
+                return Err(format!("gain {g} != delta {delta}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lazy_greedy_matches_plain_greedy() {
+    // accelerated greedy must reach the same φ as the literal Algorithm 2
+    let table = zoo::paper_zoo();
+    let a = Allocator::new(&table, GpuSpec::P100);
+    let allocs: HashMap<_, _> = small_services()
+        .into_iter()
+        .map(|s| (s, a.allocate(s, Overrides::default())))
+        .collect();
+    forall(103, 15, gen_instance, |inst| {
+        let candidates: Vec<PlacementItem> = inst
+            .services
+            .iter()
+            .flat_map(|&l| {
+                (0..inst.cloud.n_servers()).map(move |n| PlacementItem {
+                    service: l,
+                    server: ServerId(n as u32),
+                })
+            })
+            .collect();
+        let mut plain = build_eval(&table, &allocs, inst);
+        spf_greedy(&Candidates::Set(candidates.clone()), &mut plain, false);
+        let mut lazy = build_eval(&table, &allocs, inst);
+        spf_lazy(&candidates, &mut lazy);
+        let (p, l) = (plain.phi(), lazy.phi());
+        if (p - l).abs() > 1e-6 * p.abs().max(1.0) {
+            return Err(format!("plain {p} != lazy {l}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_placement_respects_resources() {
+    // after any greedy run, per-server compute slots and VRAM never exceed
+    // capacity
+    let table = zoo::paper_zoo();
+    let a = Allocator::new(&table, GpuSpec::P100);
+    let allocs: HashMap<_, _> = small_services()
+        .into_iter()
+        .map(|s| (s, a.allocate(s, Overrides::default())))
+        .collect();
+    forall(104, 20, gen_instance, |inst| {
+        let mut eval = build_eval(&table, &allocs, inst);
+        let placement = epara::placement::sssp(
+            &[], &inst.services, inst.cloud.n_servers(), &mut eval);
+        // recompute resource usage from scratch
+        let n = inst.cloud.n_servers();
+        let mut slots = vec![0.0f64; n];
+        let mut vram = vec![0.0f64; n];
+        for item in &placement {
+            if item.server == epara::placement::EPSILON_SERVER {
+                continue;
+            }
+            let al = &allocs[&item.service];
+            let spec = table.spec(item.service);
+            let s = item.server.0 as usize;
+            slots[s] += al.ops.gpus() as f64 * spec.compute_slice.min(1.0);
+            vram[s] += table.vram_per_gpu(item.service, al.ops.mp)
+                * al.ops.gpus() as f64;
+        }
+        for (i, srv) in inst.cloud.servers.iter().enumerate() {
+            let cap_slots = srv.gpus.len() as f64;
+            let cap_vram: f64 = srv.gpus.iter().map(|g| g.spec.vram_mb).sum();
+            if slots[i] > cap_slots + 1e-6 {
+                return Err(format!("server {i}: slots {} > {cap_slots}", slots[i]));
+            }
+            if vram[i] > cap_vram + 1e-6 {
+                return Err(format!("server {i}: vram {} > {cap_vram}", vram[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_handler_paths_never_loop() {
+    // run random request paths through the simulator and verify no request
+    // ever revisits a server (§3.2 loop freedom) — checked via the path
+    // recorded in outcomes being duplicate-free by construction: we assert
+    // on the handler level directly with random state views.
+    use epara::handler::{decide, Decision, HandlerConfig, LocalCapacity, StateView};
+
+    struct RandView {
+        n: usize,
+        theo: Vec<f64>,
+    }
+    impl StateView for RandView {
+        fn n_servers(&self) -> usize {
+            self.n
+        }
+        fn local_capacity(&self, _s: ServerId, _l: ServiceId) -> LocalCapacity {
+            LocalCapacity::None
+        }
+        fn theoretical_goodput(&self, s: ServerId, _l: ServiceId) -> f64 {
+            self.theo[s.0 as usize]
+        }
+        fn actual_goodput(&self, _s: ServerId, _l: ServiceId) -> f64 {
+            0.0
+        }
+        fn queued_ms(&self, _s: ServerId, _l: ServiceId) -> f64 {
+            0.0
+        }
+        fn sync_delay_ms(&self, _s: ServerId) -> f64 {
+            10.0
+        }
+        fn slo_ms(&self, _l: ServiceId) -> f64 {
+            1e9
+        }
+    }
+
+    forall(
+        105,
+        50,
+        |rng| {
+            let n = 2 + rng.below(8) as usize;
+            let theo: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 10.0)).collect();
+            let seed = rng.next_u64();
+            (n, theo, seed)
+        },
+        |(n, theo, seed)| {
+            let view = RandView { n: *n, theo: theo.clone() };
+            let mut rng = Rng::new(*seed);
+            let mut req = Request {
+                id: RequestId(0),
+                service: ServiceId(0),
+                arrival_ms: 0.0,
+                origin: ServerId(0),
+                frames: 1,
+                path: vec![],
+                offloads: 0,
+            };
+            let mut at = ServerId(0);
+            let cfg = HandlerConfig { max_offloads: 20 };
+            for _hop in 0..30 {
+                match decide(&req, at, 0.0, &view, &cfg, &mut rng) {
+                    Decision::Offload(next) => {
+                        if req.path.contains(&next) || next == at {
+                            return Err(format!("loop: revisited {next:?}"));
+                        }
+                        req.path.push(at);
+                        req.offloads += 1;
+                        at = next;
+                    }
+                    _ => return Ok(()),
+                }
+            }
+            // must terminate within n hops (every server visited at most once)
+            if req.path.len() > *n {
+                return Err(format!("path longer than server count: {}", req.path.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_goodput_bounded_by_offered() {
+    use epara::sim::{simulate, PolicyConfig, SimConfig};
+    use epara::workload::{generate, Mix, WorkloadSpec};
+    let table = zoo::paper_zoo();
+    forall(
+        106,
+        10,
+        |rng| (rng.below(4) as u8, 20.0 + rng.next_f64() * 200.0, rng.next_u64()),
+        |(w, rps, seed)| {
+            let cloud = EdgeCloud::testbed();
+            let spec = WorkloadSpec {
+                mix: Mix::Production(*w),
+                rps: *rps,
+                seed: *seed,
+                duration_ms: 8_000.0,
+                ..Default::default()
+            };
+            let reqs = generate(&spec, &table, &cloud);
+            let offered = reqs.len() as f64;
+            let cfg = SimConfig {
+                policy: PolicyConfig::epara(),
+                duration_ms: 8_000.0,
+                ..Default::default()
+            };
+            let m = simulate(&table, cloud, reqs, cfg);
+            if m.satisfied > offered + 1e-6 {
+                return Err(format!("satisfied {} > offered {offered}", m.satisfied));
+            }
+            if m.satisfaction_ratio() > 1.0 + 1e-9 {
+                return Err(format!("ratio {} > 1", m.satisfaction_ratio()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_online_assign_never_oversubscribes() {
+    forall(
+        107,
+        100,
+        |rng| {
+            let gpus = 1 + rng.below(8) as usize;
+            let load: Vec<f64> = (0..gpus).map(|_| rng.uniform(0.0, 1.0)).collect();
+            let need = 1 + rng.below(4) as usize;
+            let slice = rng.uniform(0.05, 0.6);
+            (load, need, slice)
+        },
+        |(load, need, slice)| {
+            let mut l = load.clone();
+            if let Some(chosen) = epara::placement::online_assign_gpus(&mut l, *need, *slice) {
+                if chosen.len() != *need {
+                    return Err("wrong count".into());
+                }
+                for &g in &chosen {
+                    if l[g] > 1.0 + 1e-9 {
+                        return Err(format!("gpu {g} oversubscribed: {}", l[g]));
+                    }
+                }
+            } else if l != *load {
+                return Err("failed assign mutated state".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    // configjson: parse(serialize(x)) == x for random JSON trees
+    use epara::configjson::{parse, Json};
+
+    fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.range(-100_000, 100_000) as f64) / 8.0),
+            3 => {
+                let n = rng.below(12) as usize;
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            let c = rng.below(96) as u8 + 32;
+                            c as char
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr(
+                (0..rng.below(5)).map(|_| gen_json(rng, depth - 1)).collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    forall(108, 300, |rng| gen_json(rng, 3), |j| {
+        let text = j.to_string();
+        match parse(&text) {
+            Ok(back) if back == *j => Ok(()),
+            Ok(back) => Err(format!("roundtrip mismatch:\n{j:?}\n{back:?}")),
+            Err(e) => Err(format!("parse failed on {text}: {e}")),
+        }
+    });
+}
+
+#[test]
+fn prop_summary_percentiles_monotone() {
+    use epara::util::stats::Summary;
+    forall(
+        109,
+        100,
+        |rng| {
+            let n = 1 + rng.below(200) as usize;
+            (0..n).map(|_| rng.uniform(-1000.0, 1000.0)).collect::<Vec<f64>>()
+        },
+        |xs| {
+            let mut s = Summary::new();
+            s.extend(xs.iter().cloned());
+            let mut last = f64::NEG_INFINITY;
+            for p in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+                let v = s.percentile(p);
+                if v < last - 1e-9 {
+                    return Err(format!("p{p} = {v} < previous {last}"));
+                }
+                if v < s.min() - 1e-9 || v > s.max() + 1e-9 {
+                    return Err(format!("p{p} = {v} outside [min,max]"));
+                }
+                last = v;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_workload_rosters_span_categories() {
+    // every production roster must include at least one frequency and one
+    // latency service, and all must resolve in the zoo
+    use epara::workload::production_roster;
+    let table = zoo::paper_zoo();
+    for k in 0..5u8 {
+        let roster = production_roster(k);
+        assert!(roster.len() >= 4, "W{k} too small");
+        let mut has_lat = false;
+        let mut has_freq = false;
+        for id in roster {
+            let spec = table.get_spec(id).unwrap_or_else(|| panic!("W{k}: {id:?}"));
+            match spec.sensitivity {
+                epara::core::Sensitivity::Latency => has_lat = true,
+                epara::core::Sensitivity::Frequency => has_freq = true,
+            }
+        }
+        assert!(has_lat && has_freq, "W{k} must mix sensitivities");
+    }
+}
+
+#[test]
+fn prop_sync_delay_monotone_in_scale() {
+    use epara::sync::SyncConfig;
+    forall(
+        110,
+        50,
+        |rng| {
+            let bw = rng.uniform(10.0, 1000.0);
+            let n1 = 2 + rng.below(5000) as usize;
+            let n2 = n1 + 1 + rng.below(5000) as usize;
+            (bw, n1, n2)
+        },
+        |(bw, n1, n2)| {
+            let cfg = SyncConfig { bandwidth_mbps: *bw, ..Default::default() };
+            let d1 = cfg.full_sync_delay_ms(*n1);
+            let d2 = cfg.full_sync_delay_ms(*n2);
+            if d2 + 1e-9 < d1 {
+                return Err(format!("delay({n2}) = {d2} < delay({n1}) = {d1}"));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,137 @@
+//! Runtime integration tests: the python-AOT → rust-PJRT interchange.
+//!
+//! Skipped (cleanly) when `artifacts/` has not been built — run
+//! `make artifacts` first.  These are the strongest cross-layer checks in
+//! the repo: L1 pallas kernels → L2 jax graphs → HLO text → PJRT CPU →
+//! rust coordination (TP2 combine, PP2 piping, device split) must agree
+//! with the python oracle bit-for-bit (greedy tokens) or to fp tolerance.
+
+use epara::runtime::Engine;
+
+fn engine() -> Option<Engine> {
+    let dir = epara::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping runtime tests: no artifacts at {dir:?}");
+        return None;
+    }
+    Some(Engine::load(&dir).expect("engine load"))
+}
+
+#[test]
+fn golden_fixtures_match() {
+    let Some(engine) = engine() else { return };
+    for name in engine.golden_artifacts() {
+        let diff = engine.verify_golden(&name).unwrap_or_else(|e| {
+            panic!("golden {name}: {e:#}");
+        });
+        assert!(diff <= 2e-3, "golden {name}: max |diff| {diff}");
+    }
+}
+
+#[test]
+fn generation_matches_python_exactly() {
+    let Some(engine) = engine() else { return };
+    engine.verify_generate_golden().expect("greedy tokens must match python");
+}
+
+#[test]
+fn tp2_and_pp2_agree_with_full_model() {
+    // The coordinator-side MP compositions must produce the same greedy
+    // tokens as the single-executable model.
+    let Some(engine) = engine() else { return };
+    let cfg = engine.manifest.llm;
+    let prompts: Vec<Vec<i32>> = (0..2)
+        .map(|b| (0..cfg.prefill_len).map(|i| ((b * 131 + i * 7) % cfg.vocab) as i32).collect())
+        .collect();
+    let full = engine.llm_generate(2, &prompts, 6).expect("full");
+    let tp2 = engine.llm_generate_tp2(&prompts, 6).expect("tp2");
+    let pp2 = engine.llm_generate_pp2(&prompts, 6).expect("pp2");
+    assert_eq!(full, tp2, "TP2 combine diverged from the full model");
+    assert_eq!(full, pp2, "PP2 pipe diverged from the full model");
+}
+
+#[test]
+fn classifier_split_composes() {
+    // Fig. 12b: device head + server tail == single-GPU forward.
+    let Some(engine) = engine() else { return };
+    let shape = [1usize, 32, 32, 3];
+    let image: Vec<f32> = (0..shape.iter().product::<usize>())
+        .map(|i| ((i * 37) % 255) as f32 / 255.0)
+        .collect();
+    let full = engine.classify(1, &image, &shape).expect("full classify");
+    for split in ["conv2", "conv4"] {
+        let (logits, act_bytes) =
+            engine.classify_split(split, &image, &shape).expect(split);
+        assert_eq!(logits.len(), full.len());
+        let diff = epara::runtime::max_abs_diff(&logits, &full);
+        assert!(diff < 1e-4, "{split}: diff {diff}");
+        assert!(act_bytes > 0);
+        // conv4 activation is smaller than conv2 (more pooling): the
+        // Fig. 12b offload-point tradeoff
+        if split == "conv4" {
+            let (_, conv2_bytes) =
+                engine.classify_split("conv2", &image, &shape).unwrap();
+            assert!(act_bytes < conv2_bytes,
+                    "conv4 act {act_bytes} !< conv2 act {conv2_bytes}");
+        }
+    }
+}
+
+#[test]
+fn batch_sizes_agree() {
+    // classify bs4 must equal four bs1 calls stacked.
+    let Some(engine) = engine() else { return };
+    let one_shape = [1usize, 32, 32, 3];
+    let n = one_shape.iter().product::<usize>();
+    let images: Vec<Vec<f32>> = (0..4)
+        .map(|b| (0..n).map(|i| ((i * 13 + b * 97) % 251) as f32 / 251.0).collect())
+        .collect();
+    let mut singles = Vec::new();
+    for img in &images {
+        singles.extend(engine.classify(1, img, &one_shape).unwrap());
+    }
+    let flat: Vec<f32> = images.concat();
+    let batched = engine.classify(4, &flat, &[4, 32, 32, 3]).unwrap();
+    let diff = epara::runtime::max_abs_diff(&singles, &batched);
+    assert!(diff < 1e-4, "batched != stacked singles: {diff}");
+}
+
+#[test]
+fn segmentation_output_shape_and_finiteness() {
+    let Some(engine) = engine() else { return };
+    let shape = [2usize, 64, 64, 3];
+    let image: Vec<f32> = (0..shape.iter().product::<usize>())
+        .map(|i| (i % 100) as f32 / 100.0)
+        .collect();
+    let out = engine.segment(2, &image, &shape).expect("segment");
+    assert_eq!(out.len(), 2 * 64 * 64 * 8);
+    assert!(out.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn calibration_produces_sane_latencies() {
+    let Some(engine) = engine() else { return };
+    let mut table = epara::profile::zoo::paper_zoo();
+    engine.calibrate_profile(&mut table).expect("calibrate");
+    use epara::profile::zoo::ids;
+    for id in [ids::TINY_LLM, ids::TINY_CLS, ids::TINY_SEG] {
+        let lat = table.latency_ms(id, 1, epara::core::MpKind::None, 1);
+        assert!(lat > 0.0 && lat < 10_000.0, "{id:?}: {lat} ms");
+    }
+}
+
+#[test]
+fn live_coordinator_serves_mixed_workload() {
+    // End-to-end wall-clock serving through the engine thread.
+    let dir = epara::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    use epara::coordinator::{synthetic_workload, BatchConfig, Coordinator};
+    let coord = Coordinator::new(dir, BatchConfig::default()).expect("coordinator");
+    let wl = synthetic_workload(12, 200.0, 5);
+    let stats = coord.serve(wl).expect("serve");
+    assert_eq!(stats.served + stats.errors, 12);
+    assert_eq!(stats.errors, 0, "no request may fail");
+    assert!(stats.throughput_rps() > 0.0);
+}
