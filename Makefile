@@ -1,0 +1,59 @@
+# epara — top-level developer entry points.
+#
+#   make build       release build of the workspace (default features)
+#   make test        run the tier-1 test suite (ROADMAP verify)
+#   make bench       run every simulation-backed figure bench
+#   make lint        rustfmt check + clippy (what CI's lint job runs)
+#   make check-pjrt  compile-check the feature-gated runtime path
+#   make artifacts   build the AOT artifacts via the Python pipeline (stub)
+
+CARGO ?= cargo
+PYTHON ?= python3
+ARTIFACTS_DIR ?= artifacts
+
+# Benches needing the `pjrt` feature (fig08/fig12/fig20) are excluded here;
+# run them with `cargo bench --features pjrt --bench <name>` once a real
+# PJRT backend is wired in.
+SIM_BENCHES = ablation_params fig03_motivation fig10_testbed_goodput \
+              fig11_detailed_goodput fig13_resources fig14_large_scale \
+              fig15_gpu_count fig16_allocator fig17_components fig18_extreme \
+              fig19_errors perf_hotpath
+
+.PHONY: build test bench lint check-pjrt artifacts clean
+
+build:
+	$(CARGO) build --release --workspace
+
+test:
+	$(CARGO) build --release --workspace && $(CARGO) test -q --workspace
+
+bench:
+	@for b in $(SIM_BENCHES); do \
+		echo "== bench $$b"; \
+		$(CARGO) bench --bench $$b || exit 1; \
+	done
+
+lint:
+	$(CARGO) fmt --all --check
+	$(CARGO) clippy --workspace --all-targets -- -D warnings
+
+check-pjrt:
+	$(CARGO) check -p epara --all-targets --features pjrt
+
+# The Python AOT step (Layer 1+2): lowers the JAX+Pallas models to HLO
+# text, writes weight blobs and golden fixtures, and emits manifest.json —
+# everything `rust/src/runtime` consumes.  It needs jax + numpy, which the
+# offline registry does not ship, so this target documents the invocation
+# rather than assuming the toolchain exists.
+artifacts:
+	@if $(PYTHON) -c "import jax" 2>/dev/null; then \
+		cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS_DIR); \
+	else \
+		echo "make artifacts: needs a Python env with jax+numpy:"; \
+		echo "  cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS_DIR)"; \
+		echo "Outputs: $(ARTIFACTS_DIR)/manifest.json, *.hlo.txt, weights/, goldens/"; \
+		exit 1; \
+	fi
+
+clean:
+	$(CARGO) clean

@@ -74,7 +74,7 @@ fn main() -> anyhow::Result<()> {
             }
         }
         println!("{:>14} {:>10}", policy.name,
-                 gpus_needed.map(|g| g.to_string()).unwrap_or("->256+".into()));
+                 gpus_needed.map(|g| g.to_string()).unwrap_or_else(|| "->256+".into()));
     }
     Ok(())
 }

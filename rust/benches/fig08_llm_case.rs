@@ -66,9 +66,9 @@ fn main() {
         let prompts: Vec<Vec<i32>> = (0..2)
             .map(|b| (0..32).map(|i| ((b + i * 3) % 512) as i32).collect())
             .collect();
+        type GenFn<'a> = Box<dyn Fn() -> anyhow::Result<Vec<Vec<i32>>> + 'a>;
         for (label, f) in [
-            ("full", Box::new(|| engine.llm_generate(2, &prompts, 8))
-                as Box<dyn Fn() -> anyhow::Result<Vec<Vec<i32>>>>),
+            ("full", Box::new(|| engine.llm_generate(2, &prompts, 8)) as GenFn<'_>),
             ("tp2", Box::new(|| engine.llm_generate_tp2(&prompts, 8))),
             ("pp2", Box::new(|| engine.llm_generate_pp2(&prompts, 8))),
         ] {

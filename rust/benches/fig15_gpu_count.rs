@@ -44,7 +44,7 @@ fn main() {
             }
             println!("{rps:>10.0} {:>14} {:>10}",
                      policy.name,
-                     g.map(|v| v.to_string()).unwrap_or(">256".into()));
+                     g.map(|v| v.to_string()).unwrap_or_else(|| ">256".into()));
         }
         println!();
     }

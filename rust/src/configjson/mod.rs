@@ -91,13 +91,6 @@ impl Json {
         }
     }
 
-    /// Compact serialization.
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -148,6 +141,15 @@ impl Json {
     /// Builder: number.
     pub fn num(n: f64) -> Json {
         Json::Num(n)
+    }
+}
+
+/// Compact serialization (`value.to_string()` via the blanket `ToString`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

@@ -2,13 +2,21 @@
 
 use super::Json;
 
-/// Parse failure with byte position.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+/// Parse failure with byte position (hand-rolled `Display`/`Error`; the
+/// offline registry carries no thiserror).
+#[derive(Debug)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],
@@ -27,7 +35,7 @@ pub fn parse(text: &str) -> Result<Json, ParseError> {
     Ok(v)
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn err(&self, msg: impl Into<String>) -> ParseError {
         ParseError { pos: self.pos, msg: msg.into() }
     }

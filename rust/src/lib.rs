@@ -21,10 +21,13 @@
 //!   accounting with fractional frequency credit).
 //! * [`baselines`] — InterEdge, AlpaServe, Galaxy, SERV-P, USHER,
 //!   DeTransformer comparison policies behind one trait.
-//! * [`runtime`] — PJRT CPU engine loading the AOT artifacts
+//! * `runtime` — PJRT CPU engine loading the AOT artifacts
 //!   (`artifacts/*.hlo.txt`); TP2 combine and PP2 piping live here.
-//! * [`coordinator`] — the real (wall-clock) serving path built on
-//!   [`runtime`]: per-GPU workers, BS/MF batching, DP dispatch.
+//!   Gated on the `pjrt` cargo feature (off by default — CI cannot load a
+//!   PJRT plugin; see DESIGN.md for the feature matrix).
+//! * `coordinator` — the real (wall-clock) serving path built on the
+//!   runtime: per-GPU workers, BS/MF batching, DP dispatch.  Also gated
+//!   on `pjrt`.
 //! * [`util`], [`configjson`], [`metrics`] — in-crate substrates required
 //!   by the offline registry (RNG, stats, property-test harness, JSON,
 //!   metrics registry).
@@ -37,12 +40,14 @@ pub mod allocator;
 pub mod baselines;
 pub mod cluster;
 pub mod configjson;
+#[cfg(feature = "pjrt")]
 pub mod coordinator;
 pub mod core;
 pub mod handler;
 pub mod metrics;
 pub mod placement;
 pub mod profile;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod sync;
@@ -52,9 +57,21 @@ pub mod workload;
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;
 
+/// Locate the `artifacts/` directory.
+///
+/// Single source of truth for the whole crate (the CLI feeds its
+/// `--artifacts` flag through `explicit`): an explicit non-empty override
+/// wins, then `$EPARA_ARTIFACTS`, then `./artifacts`.
+pub fn artifacts_dir_from(explicit: Option<&str>) -> std::path::PathBuf {
+    match explicit {
+        Some(dir) if !dir.is_empty() => std::path::PathBuf::from(dir),
+        _ => std::env::var_os("EPARA_ARTIFACTS")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| std::path::PathBuf::from("artifacts")),
+    }
+}
+
 /// Locate the `artifacts/` directory: `$EPARA_ARTIFACTS` or ./artifacts.
 pub fn artifacts_dir() -> std::path::PathBuf {
-    std::env::var_os("EPARA_ARTIFACTS")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+    artifacts_dir_from(None)
 }

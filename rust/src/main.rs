@@ -20,7 +20,6 @@ use std::collections::HashMap;
 
 use epara::allocator::{Allocator, Overrides};
 use epara::cluster::{EdgeCloud, GpuSpec};
-use epara::coordinator::{synthetic_workload, BatchConfig, Coordinator};
 use epara::core::ServiceId;
 use epara::placement::{approximation_bound, approximation_p, sssp, FluidEval, PhiEval};
 use epara::profile::zoo;
@@ -94,16 +93,17 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
+/// CLI-aware artifacts lookup: `--artifacts` flag, else the crate-wide
+/// resolution (`$EPARA_ARTIFACTS`, then ./artifacts) from `epara::lib`.
+#[cfg(feature = "pjrt")]
 fn artifacts_dir(args: &Args) -> std::path::PathBuf {
-    let s = args.str("artifacts", "");
-    if s.is_empty() {
-        epara::artifacts_dir()
-    } else {
-        s.into()
-    }
+    epara::artifacts_dir_from(args.0.get("artifacts").map(String::as_str))
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use epara::coordinator::{synthetic_workload, BatchConfig, Coordinator};
+
     let n: usize = args.get("requests", 60);
     let rps: f64 = args.get("rps", 40.0);
     let coord = Coordinator::new(artifacts_dir(args), BatchConfig::default())?;
@@ -112,6 +112,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut stats = coord.serve(workload)?;
     println!("{}", stats.report("serve"));
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &Args) -> anyhow::Result<()> {
+    anyhow::bail!(pjrt_required("serve"))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_required(cmd: &str) -> String {
+    format!(
+        "`epara {cmd}` needs the wall-clock runtime; rebuild with \
+         `cargo build --features pjrt` (simulation commands work without it)"
+    )
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
@@ -223,6 +236,17 @@ fn cmd_place(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_golden(_args: &Args) -> anyhow::Result<()> {
+    anyhow::bail!(pjrt_required("golden"))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_report(_args: &Args) -> anyhow::Result<()> {
+    anyhow::bail!(pjrt_required("report"))
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_golden(args: &Args) -> anyhow::Result<()> {
     let engine = epara::runtime::Engine::load(&artifacts_dir(args))?;
     let mut failures = 0;
@@ -252,6 +276,7 @@ fn cmd_golden(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_report(args: &Args) -> anyhow::Result<()> {
     let manifest = epara::runtime::Manifest::load(&artifacts_dir(args))?;
     println!("artifacts: {}", manifest.artifacts.len());

@@ -180,7 +180,7 @@ impl<'a> FluidEval<'a> {
     }
 }
 
-impl<'a> PhiEval for FluidEval<'a> {
+impl PhiEval for FluidEval<'_> {
     fn phi(&self) -> f64 {
         self.phi
     }
@@ -315,8 +315,8 @@ mod tests {
         out
     }
 
-    fn setup<'a>(
-        table: &'a ProfileTable,
+    fn setup(
+        table: &ProfileTable,
         svcs: &[ServiceId],
     ) -> HashMap<ServiceId, Allocation> {
         let a = Allocator::new(table, GpuSpec::P100);

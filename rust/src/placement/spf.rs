@@ -125,14 +125,14 @@ pub fn spf_lazy<E: PhiEval>(candidates: &[PlacementItem], eval: &mut E) {
             // *stale* positive entries whose fresh value is positive for a
             // different item.  Re-insert only if this entry was stale and
             // the heap still has entries promising more.
-            if top.epoch != epoch && heap.peek().map_or(false, |n| n.gain > 1e-12) {
+            if top.epoch != epoch && heap.peek().is_some_and(|n| n.gain > 1e-12) {
                 heap.push(HeapEntry { gain: fresh, item: top.item, epoch });
                 continue;
             }
             break;
         }
         // is the freshly-computed gain still the best available?
-        if heap.peek().map_or(true, |next| fresh >= next.gain) {
+        if heap.peek().is_none_or(|next| fresh >= next.gain) {
             eval.push(top.item);
             epoch += 1;
             // set semantics: the item stays available — re-insert with its

@@ -1,9 +1,9 @@
 //! Host-side tensor helpers bridging raw blob bytes and xla Literals.
 
 use anyhow::{anyhow, Result};
-use xla::Literal;
 
 use super::manifest::Dtype;
+use super::xla_stub::Literal;
 
 /// Host tensor (row-major) as read from blobs / golden fixtures.
 #[derive(Clone, Debug)]
@@ -61,9 +61,9 @@ impl Host {
         };
         if dims.is_empty() {
             // scalar: vec1 of len 1 reshaped to rank-0
-            Ok(lit.reshape(&[])?)
+            lit.reshape(&[])
         } else {
-            Ok(lit.reshape(&dims)?)
+            lit.reshape(&dims)
         }
     }
 
@@ -94,7 +94,7 @@ pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<Literal> {
 
 /// i32 scalar literal (cache_len / pos0 arguments).
 pub fn i32_scalar(v: i32) -> Result<Literal> {
-    Ok(Literal::vec1(&[v]).reshape(&[])?)
+    Literal::vec1(&[v]).reshape(&[])
 }
 
 /// Row-wise argmax over a [rows, cols] f32 buffer.

@@ -1,0 +1,244 @@
+//! In-crate stand-in for the `xla` PJRT bindings.
+//!
+//! The offline registry cannot resolve (or dynamically load) a real PJRT
+//! plugin, so the `pjrt` cargo feature compiles the runtime against this
+//! stub instead of an external `xla` crate.  The stub keeps the exact API
+//! surface [`crate::runtime`] consumes — `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `PjRtClient::compile` → `execute` —
+//! with host-side [`Literal`] handling implemented for real (so manifest
+//! loading, blob slicing, and tensor plumbing are exercised end to end)
+//! and only the device step (`compile`) reporting that no backend is
+//! present.  Swapping in real PJRT later means replacing this module (or
+//! re-exporting a PJRT-backed crate under these names); nothing else in
+//! the runtime changes.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+/// Message every device-side entry point fails with.
+const NO_BACKEND: &str = "epara was built with the in-crate PJRT stub: host-side tensor and \
+     manifest handling work, but compilation/execution need a real \
+     PJRT-backed `xla` implementation (see DESIGN.md, \"Feature flags\")";
+
+/// Element types the interchange uses (weights f32, token ids i32).
+#[derive(Clone, Debug)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Native element types a [`Literal`] can hold.  Signatures only mention
+/// the public [`Literal`] type so the private `Data` enum never leaks
+/// through a public interface.
+pub trait NativeType: Copy {
+    /// Rank-1 literal from a slice (the building block of [`Literal::vec1`]).
+    fn rank1(values: &[Self]) -> Literal;
+    /// Copy the elements out of a literal, checking the dtype.
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn rank1(values: &[Self]) -> Literal {
+        Literal {
+            data: Data::F32(values.to_vec()),
+            dims: vec![values.len() as i64],
+        }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            Data::F32(v) => Ok(v.clone()),
+            Data::I32(_) => Err(anyhow!("literal holds i32, asked for f32")),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn rank1(values: &[Self]) -> Literal {
+        Literal {
+            data: Data::I32(values.to_vec()),
+            dims: vec![values.len() as i64],
+        }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            Data::I32(v) => Ok(v.clone()),
+            Data::F32(_) => Err(anyhow!("literal holds f32, asked for i32")),
+        }
+    }
+}
+
+/// Host tensor value (data + shape), mirroring xla's `Literal`.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        T::rank1(values)
+    }
+
+    /// Reinterpret with new dimensions (element count must match; an empty
+    /// `dims` produces a rank-0 scalar).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.data.len() as i64;
+        if want != have {
+            return Err(anyhow!(
+                "reshape {:?} -> {dims:?}: {have} elements != {want}",
+                self.dims
+            ));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Copy the elements out.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    /// Size of the element buffer in bytes (all dtypes are 4-byte).
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Decompose a tuple literal.  The stub never materializes device
+    /// tuples, so every literal is treated as a 1-tuple of itself.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Ok(vec![self])
+    }
+}
+
+/// Parsed HLO module (text form); only the module name is retained.
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    name: String,
+}
+
+impl HloModuleProto {
+    /// Load HLO text produced by `python/compile/aot.py` (`*.hlo.txt`).
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(Path::new(path))
+            .map_err(|e| anyhow!("reading HLO text {path}: {e}"))?;
+        // First line is `HloModule <name>[, attributes...]`.
+        let name = text
+            .lines()
+            .next()
+            .and_then(|l| l.strip_prefix("HloModule "))
+            .map(|rest| {
+                rest.split([',', ' '])
+                    .next()
+                    .unwrap_or("unknown")
+                    .to_string()
+            })
+            .unwrap_or_else(|| "unknown".to_string());
+        Ok(HloModuleProto { name })
+    }
+}
+
+/// Computation handle produced from an HLO module.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    name: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            name: proto.name.clone(),
+        }
+    }
+}
+
+/// PJRT client.  The real client is `Rc`-based (not `Send`); the stub
+/// mirrors that so threading bugs surface identically under both builds.
+pub struct PjRtClient {
+    _not_send: std::marker::PhantomData<std::rc::Rc<()>>,
+}
+
+impl PjRtClient {
+    /// CPU client construction always succeeds (so `Engine::load` can
+    /// validate manifests and weight blobs without a device).
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient {
+            _not_send: std::marker::PhantomData,
+        })
+    }
+
+    /// Device compilation is the stub's boundary: it reports which module
+    /// needed a real backend.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(anyhow!("cannot compile HLO module '{}': {NO_BACKEND}", comp.name))
+    }
+}
+
+/// Compiled executable handle (unreachable through the stub client, but
+/// the type keeps the runtime's signatures identical to the real API).
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(anyhow!("{NO_BACKEND}"))
+    }
+}
+
+/// Device buffer handle returned by `execute`.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.size_bytes(), 16);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(m.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3]).is_err());
+        // rank-0 scalar from a singleton
+        let s = Literal::vec1(&[7i32]).reshape(&[]).unwrap();
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn stub_refuses_device_work() {
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation {
+            name: "m".into(),
+        };
+        let err = client.compile(&comp).unwrap_err().to_string();
+        assert!(err.contains("PJRT stub"), "{err}");
+        let exe = PjRtLoadedExecutable {};
+        assert!(exe.execute::<&Literal>(&[]).is_err());
+    }
+}

@@ -171,13 +171,13 @@ struct SimView<'a> {
     allow_device: bool,
 }
 
-impl<'a> SimView<'a> {
+impl SimView<'_> {
     fn entry(&self, s: ServerId, l: ServiceId) -> SyncedEntry {
         self.snap.get(&(s.0, l.0)).copied().unwrap_or_default()
     }
 }
 
-impl<'a> StateView for SimView<'a> {
+impl StateView for SimView<'_> {
     fn n_servers(&self) -> usize {
         self.n
     }
@@ -696,7 +696,7 @@ impl<'a> Simulator<'a> {
                     }
                     let e = view.entry(mid, req.service);
                     let idle = e.theoretical - e.actual;
-                    if idle > 0.0 && best.map_or(true, |(_, b)| idle > b) {
+                    if idle > 0.0 && best.is_none_or(|(_, b)| idle > b) {
                         best = Some((mid, idle));
                     }
                 }
@@ -718,7 +718,7 @@ impl<'a> Simulator<'a> {
                 continue;
             }
             let wait = d.wait_from(now);
-            if best.map_or(true, |(_, w)| wait < w) {
+            if best.is_none_or(|(_, w)| wait < w) {
                 best = Some((i, wait));
             }
         }
@@ -727,7 +727,7 @@ impl<'a> Simulator<'a> {
             for (i, d) in srv.deployments.iter().enumerate() {
                 if d.service == req.service && !d.retired {
                     let wait = d.wait_from(now);
-                    if best.map_or(true, |(_, w)| wait < w) {
+                    if best.is_none_or(|(_, w)| wait < w) {
                         best = Some((i, wait));
                     }
                 }

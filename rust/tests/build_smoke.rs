@@ -1,0 +1,36 @@
+//! Build smoke test — the fastest end-to-end CI canary (<5 s).
+//!
+//! Constructs the paper's testbed cloud, generates one second of mixed
+//! workload, and drives the full §5.2 simulation pipeline (allocator →
+//! placement → handler → sync → sim → metrics).  If this passes, the
+//! crate's core layers compose; the heavier shape assertions live in
+//! `integration_sim.rs`.
+
+use epara::cluster::EdgeCloud;
+use epara::profile::zoo;
+use epara::sim::{simulate, SimConfig};
+use epara::workload::{generate, WorkloadSpec};
+
+#[test]
+fn one_second_sim_end_to_end() {
+    let table = zoo::paper_zoo();
+    let cloud = EdgeCloud::testbed();
+    let spec = WorkloadSpec {
+        duration_ms: 1_000.0,
+        rps: 40.0,
+        ..Default::default()
+    };
+    let reqs = generate(&spec, &table, &cloud);
+    assert!(!reqs.is_empty(), "workload generator produced no requests");
+
+    let cfg = SimConfig {
+        duration_ms: 1_000.0,
+        ..Default::default()
+    };
+    let m = simulate(&table, cloud, reqs, cfg);
+
+    assert!(m.offered > 0, "simulator consumed no requests");
+    assert!(m.satisfied > 0.0, "nothing was served on a near-idle testbed");
+    assert!(m.satisfaction_ratio() <= 1.0 + 1e-9);
+    assert_eq!(m.duration_ms, 1_000.0);
+}

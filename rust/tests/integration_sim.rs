@@ -3,7 +3,6 @@
 //! together.  These assert the *shape* of the paper's results (who wins,
 //! roughly by how much), not absolute numbers.
 
-
 use epara::cluster::{EdgeCloud, GpuSpec, Link};
 use epara::core::ServiceId;
 use epara::metrics::Metrics;

@@ -4,7 +4,8 @@
 
 #[test]
 fn light_load_serves_every_service() {
-    use epara::*;
+    use epara::core::ServiceId;
+    use epara::{cluster, profile, sim, workload};
     use std::collections::HashMap;
     let table = profile::zoo::paper_zoo();
     let cloud = cluster::EdgeCloud::testbed();
@@ -25,11 +26,11 @@ fn light_load_serves_every_service() {
         *offered.entry(r.service.0).or_default() += 1;
     }
     for (svc, n) in offered {
-        let sat = m.per_service.get(&core::ServiceId(svc)).copied().unwrap_or(0.0);
+        let sat = m.per_service.get(&ServiceId(svc)).copied().unwrap_or(0.0);
         assert!(
             sat >= 0.7 * n as f64,
             "service {svc} ({}) starved: {sat}/{n}",
-            table.spec(core::ServiceId(svc)).name
+            table.spec(ServiceId(svc)).name
         );
     }
 }
