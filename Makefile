@@ -5,6 +5,8 @@
 #   make bench       run every simulation-backed figure bench
 #   make lint        rustfmt check + clippy (what CI's lint job runs)
 #   make check-pjrt  compile-check the feature-gated runtime path
+#   make gateway     run the serving gateway on $(GATEWAY_ADDR)
+#   make loadgen     fire a mixed workload at a running gateway
 #   make artifacts   build the AOT artifacts via the Python pipeline (stub)
 
 CARGO ?= cargo
@@ -19,7 +21,9 @@ SIM_BENCHES = ablation_params fig03_motivation fig10_testbed_goodput \
               fig15_gpu_count fig16_allocator fig17_components fig18_extreme \
               fig19_errors perf_hotpath
 
-.PHONY: build test bench lint check-pjrt artifacts clean
+GATEWAY_ADDR ?= 127.0.0.1:8080
+
+.PHONY: build test bench lint check-pjrt gateway loadgen artifacts clean
 
 build:
 	$(CARGO) build --release --workspace
@@ -39,6 +43,12 @@ lint:
 
 check-pjrt:
 	$(CARGO) check -p epara --all-targets --features pjrt
+
+gateway:
+	$(CARGO) run --release -- gateway --addr $(GATEWAY_ADDR)
+
+loadgen:
+	$(CARGO) run --release -- loadgen --addr $(GATEWAY_ADDR) --requests 200 --rps 100
 
 # The Python AOT step (Layer 1+2): lowers the JAX+Pallas models to HLO
 # text, writes weight blobs and golden fixtures, and emits manifest.json —

@@ -13,6 +13,7 @@ use epara::cluster::{EdgeCloud, GpuSpec, Link};
 use epara::profile::zoo;
 use epara::sim::{simulate, PolicyConfig, SimConfig};
 use epara::sync::SyncConfig;
+use epara::util::stats::Summary;
 use epara::workload::{generate, Mix, WorkloadSpec};
 
 fn main() {
@@ -44,14 +45,17 @@ fn main() {
 
     println!("## Fig 18c/d — device-saturated registration (queueing model)");
     // Devices register at one server; model loading serializes on the
-    // server's management path (bandwidth-capped).  Report time-to-task
-    // for the k-th concurrent registration.
-    println!("{:>12} {:>18} {:>14}", "concurrent", "assign p50 (ms)", "p99 (ms)");
+    // server's management path (bandwidth-capped): the i-th registration
+    // to be served waits i·load_ms.  Percentiles come from the shared
+    // util::stats helpers (same code path as the gateway's /metrics).
+    println!("{:>12} {:>18} {:>14} {:>14}",
+             "concurrent", "assign p50 (ms)", "p95 (ms)", "p99 (ms)");
     let load_ms = 40.0; // tiny model push to a Jetson over WiFi
     for k in [1usize, 4, 16, 64, 256] {
-        let p50 = load_ms * (k as f64 / 2.0).max(1.0);
-        let p99 = load_ms * k as f64;
-        println!("{k:>12} {p50:>18.0} {p99:>14.0}");
+        let mut wait = Summary::new();
+        wait.extend((1..=k).map(|i| i as f64 * load_ms));
+        let (p50, p95, p99) = wait.p50_p95_p99();
+        println!("{k:>12} {p50:>18.0} {p95:>14.0} {p99:>14.0}");
     }
     println!("(queueing states appear past the concurrency threshold)\n");
 

@@ -19,6 +19,12 @@
 //!   Azure-trace-shaped workload generator.
 //! * [`sim`] — the event-driven simulator of §5.2 (virtual time, goodput
 //!   accounting with fractional frequency credit).
+//! * [`server`] — the network serving gateway: socket-facing HTTP/1.1
+//!   request path with category-aware admission, BS batching windows,
+//!   SLO-budget load shedding, Prometheus metrics, and a load generator
+//!   (`epara gateway` / `epara loadgen`).  Execution is pluggable: the
+//!   default backend replays `profile` tables on wall-clock time; the
+//!   `pjrt` feature bridges to the coordinator.
 //! * [`baselines`] — InterEdge, AlpaServe, Galaxy, SERV-P, USHER,
 //!   DeTransformer comparison policies behind one trait.
 //! * `runtime` — PJRT CPU engine loading the AOT artifacts
@@ -49,6 +55,7 @@ pub mod placement;
 pub mod profile;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod sync;
 pub mod util;

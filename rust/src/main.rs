@@ -15,6 +15,17 @@
 //!       Execute every golden fixture through PJRT and verify numerics.
 //!   epara report    [--artifacts DIR]
 //!       Print the manifest inventory.
+//!   epara gateway   [--addr HOST:PORT] [--threads N] [--queue-cap N]
+//!                   [--window-ms MS] [--max-batch N] [--lanes N]
+//!                   [--slo-headroom X] [--time-scale X] [--backend replay|pjrt]
+//!       Network serving gateway: POST /v1/infer, GET /metrics,
+//!       GET /healthz; category-aware admission + BS batching;
+//!       graceful shutdown on ctrl-c.
+//!   epara loadgen   [--addr HOST:PORT] [--requests N] [--rps R]
+//!                   [--mix mixed|latency|frequency|prodK] [--closed-loop]
+//!                   [--concurrency N] [--seed S] [--timeout-ms MS]
+//!       Drive a running gateway over real sockets with the Azure-shaped
+//!       workload generator (open- or closed-loop).
 
 use std::collections::HashMap;
 
@@ -26,7 +37,8 @@ use epara::profile::zoo;
 use epara::sim::{simulate, PolicyConfig, SimConfig};
 use epara::workload::{generate, Mix, WorkloadSpec};
 
-/// Minimal flag parser: --key value pairs after the subcommand.
+/// Minimal flag parser: `--key value` pairs and bare `--flag` booleans
+/// after the subcommand.
 struct Args(HashMap<String, String>);
 
 impl Args {
@@ -35,9 +47,20 @@ impl Args {
         let mut i = 0;
         while i < argv.len() {
             if let Some(key) = argv[i].strip_prefix("--") {
-                let val = argv.get(i + 1).cloned().unwrap_or_default();
-                m.insert(key.to_string(), val);
-                i += 2;
+                match argv.get(i + 1) {
+                    // `--key value` — but a following `--flag` is the next
+                    // flag, not this key's value
+                    Some(v) if !v.starts_with("--") => {
+                        m.insert(key.to_string(), v.clone());
+                        i += 2;
+                    }
+                    // `--flag` at end of argv or followed by another flag:
+                    // bare boolean (e.g. `loadgen --closed-loop`)
+                    _ => {
+                        m.insert(key.to_string(), "true".to_string());
+                        i += 1;
+                    }
+                }
             } else {
                 i += 1;
             }
@@ -54,6 +77,14 @@ impl Args {
 
     fn str(&self, key: &str, default: &str) -> String {
         self.0.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Boolean flag: present bare (or as `--key true`) → true.
+    fn flag(&self, key: &str) -> bool {
+        matches!(
+            self.0.get(key).map(String::as_str),
+            Some("true") | Some("1") | Some("yes")
+        )
     }
 }
 
@@ -83,14 +114,119 @@ fn main() -> anyhow::Result<()> {
         "place" => cmd_place(&args),
         "golden" => cmd_golden(&args),
         "report" => cmd_report(&args),
+        "gateway" => cmd_gateway(&args),
+        "loadgen" => cmd_loadgen(&args),
         _ => {
             eprintln!(
-                "usage: epara <serve|simulate|place|golden|report> [--flags]\n\
+                "usage: epara <serve|simulate|place|golden|report|gateway|loadgen> [--flags]\n\
                  see `rust/src/main.rs` docs for flags"
             );
             Ok(())
         }
     }
+}
+
+/// `epara gateway` — run the socket-facing serving gateway until SIGINT.
+fn cmd_gateway(args: &Args) -> anyhow::Result<()> {
+    use epara::server::{self, AdmissionConfig, GatewayConfig};
+
+    let cfg = GatewayConfig {
+        addr: args.str("addr", "127.0.0.1:8080"),
+        threads: args.get("threads", 8usize),
+        admission: AdmissionConfig {
+            queue_cap: args.get("queue-cap", 64usize),
+            window_ms: args.get("window-ms", 4u64),
+            max_batch: args.get("max-batch", 8usize),
+            lanes_per_category: args.get("lanes", 1usize),
+            slo_headroom: args.get("slo-headroom", 1.0f64),
+        },
+        ..Default::default()
+    };
+    let time_scale: f64 = args.get("time-scale", 1.0);
+    let table = zoo::paper_zoo();
+    let executor = gateway_executor(args, &table, time_scale)?;
+
+    server::install_signal_handlers();
+    let gw = server::Gateway::spawn(cfg, table, executor)?;
+    println!(
+        "epara gateway: listening on {} (time-scale {}x) — \
+         POST /v1/infer, GET /metrics, GET /healthz; ctrl-c to stop",
+        gw.local_addr(),
+        time_scale
+    );
+    gw.wait();
+    println!("epara gateway: shut down cleanly");
+    Ok(())
+}
+
+/// Pick the gateway backend: profile replay by default, the coordinator
+/// engine with `--backend pjrt` (needs the `pjrt` feature + artifacts).
+fn gateway_executor(
+    args: &Args,
+    table: &epara::profile::ProfileTable,
+    time_scale: f64,
+) -> anyhow::Result<std::sync::Arc<dyn epara::server::Executor>> {
+    use epara::server::ProfileReplayExecutor;
+
+    match args.str("backend", "replay").as_str() {
+        "replay" => Ok(std::sync::Arc::new(ProfileReplayExecutor::new(
+            table.clone(),
+            time_scale,
+        ))),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Ok(std::sync::Arc::new(
+            epara::server::executor::CoordinatorExecutor::new(
+                artifacts_dir(args),
+                table.clone(),
+            )?,
+        )),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => anyhow::bail!(
+            "`--backend pjrt` needs the wall-clock runtime; rebuild with \
+             `cargo build --features pjrt`"
+        ),
+        other => anyhow::bail!("unknown backend {other} (replay|pjrt)"),
+    }
+}
+
+/// `epara loadgen` — drive a running gateway over real sockets.
+fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
+    use epara::server::loadgen::{self, LoadgenConfig};
+
+    let cfg = LoadgenConfig {
+        addr: args.str("addr", "127.0.0.1:8080"),
+        requests: args.get("requests", 200usize),
+        rps: args.get("rps", 100.0f64),
+        mix: parse_mix(&args.str("mix", "mixed")),
+        closed_loop: args.flag("closed-loop"),
+        concurrency: args.get("concurrency", 8usize),
+        seed: args.get("seed", 42u64),
+        timeout_ms: args.get("timeout-ms", 30_000u64),
+    };
+    let mode = if cfg.closed_loop {
+        "closed-loop".to_string()
+    } else {
+        format!("open-loop @{} req/s", cfg.rps)
+    };
+    println!(
+        "epara loadgen: {} requests to {} ({mode}, {} workers)",
+        cfg.requests, cfg.addr, cfg.concurrency
+    );
+    let table = zoo::paper_zoo();
+    let mut report = loadgen::run(&cfg, &table, zoo::P100_VRAM_MB);
+    println!("{}", report.report("loadgen"));
+    for (label, (ok, shed)) in loadgen::by_category_labels(&report) {
+        if ok + shed > 0 {
+            println!("  {label:>17}: ok={ok} shed={shed}");
+        }
+    }
+    anyhow::ensure!(
+        report.transport_errors == 0,
+        "{} transport errors — is the gateway up at {}?",
+        report.transport_errors,
+        cfg.addr
+    );
+    Ok(())
 }
 
 /// CLI-aware artifacts lookup: `--artifacts` flag, else the crate-wide
@@ -274,6 +410,53 @@ fn cmd_golden(args: &Args) -> anyhow::Result<()> {
     }
     anyhow::ensure!(failures == 0, "{failures} golden checks failed");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Args;
+
+    fn parse(argv: &[&str]) -> Args {
+        Args::parse(&argv.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn key_value_pairs() {
+        let a = parse(&["--rps", "50", "--policy", "epara"]);
+        assert_eq!(a.get("rps", 0.0), 50.0);
+        assert_eq!(a.str("policy", "x"), "epara");
+    }
+
+    #[test]
+    fn bare_flag_before_another_flag_is_boolean() {
+        // regression: `--closed-loop --rps 50` used to swallow `--rps`
+        // as the value of `closed-loop`
+        let a = parse(&["--closed-loop", "--rps", "50"]);
+        assert!(a.flag("closed-loop"));
+        assert_eq!(a.get("rps", 0.0), 50.0);
+    }
+
+    #[test]
+    fn bare_flag_at_end_is_boolean() {
+        let a = parse(&["--requests", "10", "--closed-loop"]);
+        assert_eq!(a.get("requests", 0usize), 10);
+        assert!(a.flag("closed-loop"));
+        assert!(!a.flag("open-loop"));
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        let a = parse(&["--offset", "-5"]);
+        assert_eq!(a.get("offset", 0i64), -5);
+    }
+
+    #[test]
+    fn explicit_boolean_values() {
+        assert!(parse(&["--x", "true"]).flag("x"));
+        assert!(parse(&["--x", "1"]).flag("x"));
+        assert!(!parse(&["--x", "false"]).flag("x"));
+        assert!(!parse(&[]).flag("x"));
+    }
 }
 
 #[cfg(feature = "pjrt")]

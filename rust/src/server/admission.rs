@@ -1,0 +1,465 @@
+//! Category-aware admission control and BS batching for the gateway.
+//!
+//! Every admitted request is classified into one of the four §2.1 task
+//! categories and flows through that category's bounded queue:
+//!
+//! * **latency-sensitive** requests bypass batching entirely — they grab a
+//!   category execution lane as soon as one frees and run at BS = 1;
+//! * **frequency-sensitive** requests collect in a per-service batching
+//!   window (leader/follower: the first arrival becomes the window's
+//!   leader, waits up to `window_ms` or until `max_batch` same-service
+//!   requests gathered, then executes the whole batch in one backend
+//!   call);
+//! * overflow is shed at admission time with HTTP 429 — either the
+//!   category queue is past `queue_cap`, or the estimated queue delay
+//!   already blows the request's SLO budget — so goodput accounting stays
+//!   honest under overload instead of letting doomed requests rot in
+//!   queues.
+//!
+//! Execution lanes model the per-category GPU pool of the testbed
+//! (`lanes_per_category`, default 1): admitted work serializes per
+//! category the way batches serialize on a GPU.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::core::{Sensitivity, ServiceId, TaskCategory};
+
+use super::executor::{ExecRequest, Executor};
+
+/// Admission-tier knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Max requests admitted (queued + executing) per category.
+    pub queue_cap: usize,
+    /// Batching window for frequency-sensitive categories (ms).
+    pub window_ms: u64,
+    /// BS cap: batch executes as soon as this many requests gathered.
+    pub max_batch: usize,
+    /// Concurrent execution lanes per category (the category's GPU pool).
+    pub lanes_per_category: usize,
+    /// Shed when estimated queue delay exceeds `slo_ms * slo_headroom`.
+    pub slo_headroom: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            queue_cap: 64,
+            window_ms: 4,
+            max_batch: 8,
+            lanes_per_category: 1,
+            slo_headroom: 1.0,
+        }
+    }
+}
+
+/// Why a request was shed with 429.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Category queue already at `queue_cap`.
+    QueueFull,
+    /// Estimated queue delay exceeds the request's SLO budget.
+    SloBudget,
+}
+
+impl ShedReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::SloBudget => "slo_budget",
+        }
+    }
+}
+
+/// Successful execution as observed by one request.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmitOutcome {
+    /// Wall-clock latency of the executed batch (ms).
+    pub batch_latency_ms: f64,
+    /// How many requests shared the batch.
+    pub batch_size: usize,
+}
+
+/// Terminal admission decision for one request.
+#[derive(Debug)]
+pub enum Decision {
+    Served(AdmitOutcome),
+    Shed(ShedReason),
+    Failed(anyhow::Error),
+}
+
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Counting semaphore over Mutex+Condvar (the category's execution lanes).
+struct Lanes {
+    free: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Lanes {
+    fn new(n: usize) -> Lanes {
+        Lanes { free: Mutex::new(n.max(1)), cv: Condvar::new() }
+    }
+
+    fn acquire(&self) {
+        let mut free = lock_unpoisoned(&self.free);
+        while *free == 0 {
+            free = match self.cv.wait(free) {
+                Ok(g) => g,
+                Err(e) => e.into_inner(),
+            };
+        }
+        *free -= 1;
+    }
+
+    fn release(&self) {
+        *lock_unpoisoned(&self.free) += 1;
+        self.cv.notify_one();
+    }
+}
+
+/// Per-category admission state.
+struct CategoryLane {
+    /// Admitted and not yet finished (queued + executing).
+    depth: AtomicUsize,
+    lanes: Lanes,
+}
+
+type BatchReply = std::result::Result<AdmitOutcome, String>;
+
+/// Per-service batch collection point (frequency-sensitive traffic).
+struct Batcher {
+    state: Mutex<BatchState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct BatchState {
+    entries: Vec<(ExecRequest, mpsc::Sender<BatchReply>)>,
+    /// A leader is currently collecting this window.
+    collecting: bool,
+}
+
+/// The admission tier: four category queues + per-service batchers.
+pub struct Admission {
+    cfg: AdmissionConfig,
+    cats: [CategoryLane; 4],
+    batchers: Mutex<HashMap<ServiceId, Arc<Batcher>>>,
+}
+
+pub(crate) fn cat_index(c: TaskCategory) -> usize {
+    match c {
+        TaskCategory::LatencySingle => 0,
+        TaskCategory::LatencyMulti => 1,
+        TaskCategory::FrequencySingle => 2,
+        TaskCategory::FrequencyMulti => 3,
+    }
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionConfig) -> Admission {
+        let lane = || CategoryLane {
+            depth: AtomicUsize::new(0),
+            lanes: Lanes::new(cfg.lanes_per_category),
+        };
+        Admission {
+            cfg,
+            cats: [lane(), lane(), lane(), lane()],
+            batchers: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Current queued+executing depth per category (metrics gauge).
+    pub fn depths(&self) -> [usize; 4] {
+        [0, 1, 2, 3].map(|i| self.cats[i].depth.load(Ordering::Relaxed))
+    }
+
+    /// Admit, queue/batch, and execute one request; blocks the calling
+    /// worker thread until the request reaches a terminal state.
+    pub fn submit(
+        &self,
+        category: TaskCategory,
+        req: ExecRequest,
+        slo_ms: f64,
+        executor: &dyn Executor,
+    ) -> Decision {
+        let lane = &self.cats[cat_index(category)];
+
+        // Optimistic depth reservation, rolled back on shed.
+        let ahead = lane.depth.fetch_add(1, Ordering::SeqCst);
+        if ahead >= self.cfg.queue_cap {
+            lane.depth.fetch_sub(1, Ordering::SeqCst);
+            return Decision::Shed(ShedReason::QueueFull);
+        }
+        // SLO budget: everyone ahead in the category is assumed to cost
+        // one execution of this request's shape.  Latency traffic runs at
+        // BS=1 (its actual path); frequency traffic rides BS windows, so
+        // it is charged the amortized share of a full batch — a serial
+        // BS=1 bound would shed every long session even on an idle lane.
+        let est_exec = match category.sensitivity() {
+            Sensitivity::Latency => executor.expected_ms(req.service, 1, req.frames),
+            Sensitivity::Frequency => {
+                let bs = self.cfg.max_batch.max(1) as u32;
+                executor.expected_ms(req.service, bs, req.frames) / bs as f64
+            }
+        };
+        if (ahead as f64 + 1.0) * est_exec > slo_ms * self.cfg.slo_headroom {
+            lane.depth.fetch_sub(1, Ordering::SeqCst);
+            return Decision::Shed(ShedReason::SloBudget);
+        }
+
+        let decision = match category.sensitivity() {
+            Sensitivity::Latency => self.run_direct(lane, req, executor),
+            Sensitivity::Frequency => self.run_batched(lane, req, executor),
+        };
+        lane.depth.fetch_sub(1, Ordering::SeqCst);
+        decision
+    }
+
+    /// Latency path: BS = 1, straight to an execution lane.
+    fn run_direct(&self, lane: &CategoryLane, req: ExecRequest, ex: &dyn Executor) -> Decision {
+        lane.lanes.acquire();
+        let result = ex.execute(req.service, std::slice::from_ref(&req));
+        lane.lanes.release();
+        match result {
+            Ok(out) => Decision::Served(AdmitOutcome {
+                batch_latency_ms: out.batch_latency_ms,
+                batch_size: 1,
+            }),
+            Err(e) => Decision::Failed(e),
+        }
+    }
+
+    /// Frequency path: leader/follower batch collection per service.
+    fn run_batched(&self, lane: &CategoryLane, req: ExecRequest, ex: &dyn Executor) -> Decision {
+        let batcher = {
+            let mut map = lock_unpoisoned(&self.batchers);
+            Arc::clone(map.entry(req.service).or_insert_with(|| {
+                Arc::new(Batcher { state: Mutex::new(BatchState::default()), cv: Condvar::new() })
+            }))
+        };
+
+        let (tx, rx) = mpsc::channel::<BatchReply>();
+        let is_leader = {
+            let mut st = lock_unpoisoned(&batcher.state);
+            st.entries.push((req, tx));
+            if st.entries.len() >= self.cfg.max_batch {
+                batcher.cv.notify_all();
+            }
+            if st.collecting {
+                false
+            } else {
+                st.collecting = true;
+                true
+            }
+        };
+
+        if is_leader {
+            self.lead_batch(lane, &batcher, req.service, ex);
+        }
+        // Everyone (leader included — it sent to its own channel) waits for
+        // the batch verdict.
+        match rx.recv() {
+            Ok(Ok(out)) => Decision::Served(out),
+            Ok(Err(msg)) => Decision::Failed(anyhow::anyhow!(msg)),
+            Err(_) => Decision::Failed(anyhow::anyhow!("batch leader disappeared")),
+        }
+    }
+
+    /// Collect windows and execute batches until the queue drains.
+    ///
+    /// Each round takes at most `max_batch` entries (the BS cap a real
+    /// backend was compiled for).  When more entries accumulated than one
+    /// batch, this leader stays responsible and loops — leftover entries
+    /// belong to followers already blocked on their reply channels, so
+    /// abandoning them would strand them.
+    fn lead_batch(
+        &self,
+        lane: &CategoryLane,
+        batcher: &Batcher,
+        service: ServiceId,
+        ex: &dyn Executor,
+    ) {
+        loop {
+            let deadline = Instant::now() + Duration::from_millis(self.cfg.window_ms);
+            let mut st = lock_unpoisoned(&batcher.state);
+            loop {
+                if st.entries.len() >= self.cfg.max_batch {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                st = match batcher.cv.wait_timeout(st, deadline - now) {
+                    Ok((g, _)) => g,
+                    Err(e) => e.into_inner().0,
+                };
+            }
+            let take_n = st.entries.len().min(self.cfg.max_batch.max(1));
+            let entries: Vec<(ExecRequest, mpsc::Sender<BatchReply>)> =
+                st.entries.drain(..take_n).collect();
+            let more = !st.entries.is_empty();
+            if !more {
+                // next arrival elects a fresh leader
+                st.collecting = false;
+            }
+            drop(st);
+
+            let reqs: Vec<ExecRequest> = entries.iter().map(|(r, _)| *r).collect();
+            lane.lanes.acquire();
+            let result = ex.execute(service, &reqs);
+            lane.lanes.release();
+
+            let reply: BatchReply = match result {
+                Ok(out) => Ok(AdmitOutcome {
+                    batch_latency_ms: out.batch_latency_ms,
+                    batch_size: reqs.len(),
+                }),
+                Err(e) => Err(format!("batch execution failed: {e:#}")),
+            };
+            for (_, tx) in entries {
+                let _ = tx.send(reply.clone());
+            }
+            if !more {
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::executor::ExecOutcome;
+    use std::sync::atomic::AtomicU32;
+
+    /// Records batch widths; constant expected/actual latency.
+    struct MockExecutor {
+        expected: f64,
+        calls: AtomicU32,
+        widths: Mutex<Vec<usize>>,
+    }
+
+    impl MockExecutor {
+        fn new(expected: f64) -> Self {
+            MockExecutor { expected, calls: AtomicU32::new(0), widths: Mutex::new(Vec::new()) }
+        }
+    }
+
+    impl Executor for MockExecutor {
+        fn name(&self) -> &'static str {
+            "mock"
+        }
+
+        fn expected_ms(&self, _s: ServiceId, _bs: u32, _f: u32) -> f64 {
+            self.expected
+        }
+
+        fn execute(&self, _s: ServiceId, batch: &[ExecRequest]) -> crate::Result<ExecOutcome> {
+            self.calls.fetch_add(1, Ordering::SeqCst);
+            lock_unpoisoned(&self.widths).push(batch.len());
+            Ok(ExecOutcome { batch_latency_ms: self.expected })
+        }
+    }
+
+    fn req(id: u32) -> ExecRequest {
+        ExecRequest { service: ServiceId(id), frames: 1 }
+    }
+
+    #[test]
+    fn latency_path_runs_bs1_immediately() {
+        let adm = Admission::new(AdmissionConfig::default());
+        let ex = MockExecutor::new(1.0);
+        let d = adm.submit(TaskCategory::LatencySingle, req(1), 1000.0, &ex);
+        assert!(matches!(d, Decision::Served(out) if out.batch_size == 1));
+        assert_eq!(ex.calls.load(Ordering::SeqCst), 1);
+        assert_eq!(adm.depths(), [0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn zero_capacity_sheds_queue_full() {
+        let adm = Admission::new(AdmissionConfig { queue_cap: 0, ..Default::default() });
+        let ex = MockExecutor::new(1.0);
+        let d = adm.submit(TaskCategory::LatencySingle, req(1), 1000.0, &ex);
+        assert!(matches!(d, Decision::Shed(ShedReason::QueueFull)));
+        assert_eq!(ex.calls.load(Ordering::SeqCst), 0);
+        assert_eq!(adm.depths(), [0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn slo_budget_sheds_doomed_requests() {
+        let adm = Admission::new(AdmissionConfig::default());
+        // one execution already costs 500 ms against a 100 ms SLO
+        let ex = MockExecutor::new(500.0);
+        let d = adm.submit(TaskCategory::LatencyMulti, req(1), 100.0, &ex);
+        assert!(matches!(d, Decision::Shed(ShedReason::SloBudget)));
+        assert_eq!(ex.calls.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn frequency_requests_batch_in_one_window() {
+        let adm = Arc::new(Admission::new(AdmissionConfig {
+            window_ms: 1000,
+            max_batch: 4,
+            ..Default::default()
+        }));
+        let ex = Arc::new(MockExecutor::new(0.1));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let adm = Arc::clone(&adm);
+                let ex = Arc::clone(&ex);
+                std::thread::spawn(move || {
+                    adm.submit(TaskCategory::FrequencySingle, req(104), 10_000.0, &*ex)
+                })
+            })
+            .collect();
+        let decisions: Vec<Decision> =
+            threads.into_iter().map(|t| t.join().unwrap()).collect();
+        for d in &decisions {
+            assert!(matches!(d, Decision::Served(_)), "{d:?}");
+        }
+        // all four rode one batch: the window only closes at max_batch=4
+        // or after a full second, and all submissions start together
+        assert_eq!(ex.calls.load(Ordering::SeqCst), 1);
+        assert_eq!(*lock_unpoisoned(&ex.widths), vec![4]);
+        assert_eq!(adm.depths(), [0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn batches_never_exceed_max_batch() {
+        let adm = Arc::new(Admission::new(AdmissionConfig {
+            window_ms: 50,
+            max_batch: 2,
+            queue_cap: 64,
+            ..Default::default()
+        }));
+        let ex = Arc::new(MockExecutor::new(0.1));
+        let threads: Vec<_> = (0..6)
+            .map(|_| {
+                let adm = Arc::clone(&adm);
+                let ex = Arc::clone(&ex);
+                std::thread::spawn(move || {
+                    adm.submit(TaskCategory::FrequencySingle, req(104), 10_000.0, &*ex)
+                })
+            })
+            .collect();
+        for t in threads {
+            assert!(matches!(t.join().unwrap(), Decision::Served(_)));
+        }
+        let widths = lock_unpoisoned(&ex.widths);
+        assert_eq!(widths.iter().sum::<usize>(), 6, "{widths:?}");
+        assert!(widths.iter().all(|w| *w <= 2), "BS cap violated: {widths:?}");
+    }
+
+    #[test]
+    fn shed_reason_labels() {
+        assert_eq!(ShedReason::QueueFull.as_str(), "queue_full");
+        assert_eq!(ShedReason::SloBudget.as_str(), "slo_budget");
+    }
+}

@@ -1,0 +1,215 @@
+//! Pluggable execution backends behind the gateway.
+//!
+//! The gateway's admission/batching tier is backend-agnostic: it hands a
+//! same-service batch to an [`Executor`] and gets back the wall-clock
+//! batch latency.  Two backends exist:
+//!
+//! * [`ProfileReplayExecutor`] (always available) — replays the offline
+//!   `profile` latency tables on wall-clock time, optionally compressed by
+//!   `time_scale` (a pretend-faster GPU, so CI exercises the entire
+//!   socket → admission → batch → execute path in milliseconds).
+//! * `CoordinatorExecutor` (`pjrt` feature) — bridges to the existing
+//!   wall-clock [`crate::coordinator`] engine unchanged: batches map onto
+//!   the artifact-backed tiny services (chat / segment / classify).
+
+use crate::core::{MpKind, ServiceId};
+use crate::profile::ProfileTable;
+
+/// One admitted request as the executor sees it.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecRequest {
+    pub service: ServiceId,
+    /// Items this request carries: generated tokens for LLM chat,
+    /// frames for frequency streams, 1 for one-shot vision.
+    pub frames: u32,
+}
+
+/// Result of executing one batch.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecOutcome {
+    /// Wall-clock latency of the whole batch (ms) — batched requests
+    /// complete together.
+    pub batch_latency_ms: f64,
+}
+
+/// A serving backend.
+///
+/// `execute` blocks for the execution duration (the calling worker thread
+/// is the request's thread); batches are same-service by construction.
+pub trait Executor: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Predicted wall-clock latency (ms) of a `bs`-wide batch whose
+    /// largest request carries `frames` items — the admission tier's
+    /// queue-delay estimate, in the same time base as `execute`.
+    fn expected_ms(&self, service: ServiceId, bs: u32, frames: u32) -> f64;
+
+    /// Run one same-service batch to completion.
+    fn execute(&self, service: ServiceId, batch: &[ExecRequest]) -> crate::Result<ExecOutcome>;
+}
+
+/// Default backend: wall-clock replay of the offline profiling tables.
+pub struct ProfileReplayExecutor {
+    table: ProfileTable,
+    time_scale: f64,
+}
+
+impl ProfileReplayExecutor {
+    /// `time_scale` divides every modeled latency (1.0 = paper-scale
+    /// P100 timings; CI uses a large scale to stay fast).
+    pub fn new(table: ProfileTable, time_scale: f64) -> Self {
+        ProfileReplayExecutor { table, time_scale: time_scale.max(1e-6) }
+    }
+
+    /// Modeled batch latency before time scaling: a BS-wide batch steps
+    /// through the item dimension once per item, so the widest request in
+    /// the batch sets the window count (BS batching semantics, §3.1).
+    fn model_ms(&self, service: ServiceId, bs: u32, frames: u32) -> f64 {
+        let per_item = self.table.latency_ms(service, bs.max(1), MpKind::None, 1);
+        per_item * frames.max(1) as f64
+    }
+}
+
+impl Executor for ProfileReplayExecutor {
+    fn name(&self) -> &'static str {
+        "profile-replay"
+    }
+
+    fn expected_ms(&self, service: ServiceId, bs: u32, frames: u32) -> f64 {
+        self.model_ms(service, bs, frames) / self.time_scale
+    }
+
+    fn execute(&self, service: ServiceId, batch: &[ExecRequest]) -> crate::Result<ExecOutcome> {
+        anyhow::ensure!(!batch.is_empty(), "empty batch");
+        anyhow::ensure!(
+            batch.iter().all(|r| r.service == service),
+            "mixed-service batch"
+        );
+        let frames = batch.iter().map(|r| r.frames).max().unwrap_or(1);
+        let ms = self.expected_ms(service, batch.len() as u32, frames);
+        std::thread::sleep(std::time::Duration::from_secs_f64(ms / 1000.0));
+        Ok(ExecOutcome { batch_latency_ms: ms })
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_bridge::CoordinatorExecutor;
+
+#[cfg(feature = "pjrt")]
+mod pjrt_bridge {
+    use std::sync::Mutex;
+    use std::time::Instant;
+
+    use super::{ExecOutcome, ExecRequest, Executor};
+    use crate::coordinator::{BatchConfig, Coordinator, ServeRequest};
+    use crate::core::{MpKind, Sensitivity, ServiceId};
+    use crate::profile::ProfileTable;
+
+    /// `pjrt` backend: the existing coordinator engine, unchanged.
+    ///
+    /// The gateway's wire payloads are metadata-only, so the bridge
+    /// synthesizes deterministic tensors of the artifact-backed shapes:
+    /// LLM-shaped services run tiny-LLM chat, frequency services run UNet
+    /// segmentation, everything else runs the CNN classifier.
+    pub struct CoordinatorExecutor {
+        coord: Mutex<Coordinator>,
+        table: ProfileTable,
+    }
+
+    impl CoordinatorExecutor {
+        pub fn new(artifacts: std::path::PathBuf, table: ProfileTable) -> crate::Result<Self> {
+            let coord = Coordinator::new(artifacts, BatchConfig::default())?;
+            Ok(CoordinatorExecutor { coord: Mutex::new(coord), table })
+        }
+
+        fn to_serve_request(&self, req: &ExecRequest) -> ServeRequest {
+            let spec = self.table.spec(req.service);
+            let base = self.table.base(req.service);
+            if base.items_per_request > 1.5 && spec.sensitivity == Sensitivity::Latency {
+                ServeRequest::Chat {
+                    prompt: (0..32).map(|j| (req.service.0 as i32 + j) % 512).collect(),
+                    n_new: 8,
+                }
+            } else if spec.sensitivity == Sensitivity::Frequency {
+                ServeRequest::Segment { image: vec![0.5; 64 * 64 * 3] }
+            } else {
+                ServeRequest::Classify { image: vec![0.5; 32 * 32 * 3] }
+            }
+        }
+    }
+
+    impl Executor for CoordinatorExecutor {
+        fn name(&self) -> &'static str {
+            "coordinator-pjrt"
+        }
+
+        fn expected_ms(&self, service: ServiceId, bs: u32, frames: u32) -> f64 {
+            // The coordinator serves the calibrated tiny artifacts; the
+            // calibrated table is the best available estimate.
+            let per_item = self.table.latency_ms(service, bs.max(1), MpKind::None, 1);
+            per_item * frames.max(1) as f64
+        }
+
+        fn execute(
+            &self,
+            service: ServiceId,
+            batch: &[ExecRequest],
+        ) -> crate::Result<ExecOutcome> {
+            anyhow::ensure!(!batch.is_empty(), "empty batch");
+            let workload: Vec<(u64, ServeRequest)> =
+                batch.iter().map(|r| (0u64, self.to_serve_request(r))).collect();
+            let coord = self
+                .coord
+                .lock()
+                .map_err(|_| anyhow::anyhow!("coordinator executor poisoned"))?;
+            let t0 = Instant::now();
+            let stats = coord.serve(workload)?;
+            anyhow::ensure!(
+                stats.errors == 0,
+                "coordinator reported {} errors for {:?}",
+                stats.errors,
+                service
+            );
+            Ok(ExecOutcome { batch_latency_ms: t0.elapsed().as_secs_f64() * 1000.0 })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::zoo::{self, ids};
+
+    #[test]
+    fn replay_scales_time() {
+        let ex = ProfileReplayExecutor::new(zoo::paper_zoo(), 1000.0);
+        // resnet50 BS1: 60 ms modeled → 0.06 ms scaled
+        let ms = ex.expected_ms(ids::RESNET50, 1, 1);
+        assert!((ms - 0.06).abs() < 1e-9, "{ms}");
+        let t0 = std::time::Instant::now();
+        let out = ex
+            .execute(ids::RESNET50, &[ExecRequest { service: ids::RESNET50, frames: 1 }])
+            .unwrap();
+        assert!((out.batch_latency_ms - ms).abs() < 1e-9);
+        // the sleep actually happened on the wall clock (loosely)
+        assert!(t0.elapsed().as_secs_f64() < 1.0);
+    }
+
+    #[test]
+    fn replay_batches_amortize() {
+        let ex = ProfileReplayExecutor::new(zoo::paper_zoo(), 1e6);
+        let one = ex.expected_ms(ids::RESNET50, 1, 1);
+        let eight = ex.expected_ms(ids::RESNET50, 8, 1);
+        assert!(eight < 8.0 * one, "batching must beat serial replay");
+    }
+
+    #[test]
+    fn replay_rejects_mixed_batches() {
+        let ex = ProfileReplayExecutor::new(zoo::paper_zoo(), 1e6);
+        let batch = [
+            ExecRequest { service: ids::RESNET50, frames: 1 },
+            ExecRequest { service: ids::UNET, frames: 1 },
+        ];
+        assert!(ex.execute(ids::RESNET50, &batch).is_err());
+    }
+}

@@ -1,0 +1,405 @@
+//! Hand-rolled HTTP/1.1 subset: request parsing, response writing, and the
+//! minimal client-side response reader the load generator uses.
+//!
+//! The offline registry carries no hyper/axum, and the gateway's surface is
+//! three routes with small JSON bodies, so a strict dependency-free parser
+//! is both sufficient and auditable.  Supported: request line + headers +
+//! `Content-Length` bodies, keep-alive vs close semantics (HTTP/1.1
+//! defaults to keep-alive, HTTP/1.0 to close), hard limits on head and
+//! body size.  Not supported (rejected, never mis-parsed): chunked
+//! transfer encoding, continuation lines, multiple Content-Length values.
+
+use std::io::{BufRead, Read, Write};
+
+/// Cap on request line + headers together (bytes).
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+/// Cap on a declared Content-Length body (bytes).
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// A parsed request.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Request target as sent (path + optional query).
+    pub target: String,
+    /// "HTTP/1.1" or "HTTP/1.0".
+    pub version: String,
+    /// Header (name, value) pairs; names lowercased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First header value by lowercase name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Path without the query string.
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or(&self.target)
+    }
+
+    /// Keep-alive semantics: HTTP/1.1 defaults to keep-alive unless
+    /// `Connection: close`; HTTP/1.0 defaults to close unless
+    /// `Connection: keep-alive`.
+    pub fn keep_alive(&self) -> bool {
+        let conn = self
+            .header("connection")
+            .map(|v| v.to_ascii_lowercase())
+            .unwrap_or_default();
+        if self.version == "HTTP/1.0" {
+            conn == "keep-alive"
+        } else {
+            conn != "close"
+        }
+    }
+}
+
+/// Parse failures, each mapped to a response (or connection close).
+#[derive(Debug)]
+pub enum HttpError {
+    /// Peer closed before sending any byte — the normal end of a
+    /// keep-alive connection, not an error.
+    ConnectionClosed,
+    /// Read timeout fired before any byte of a new request arrived: the
+    /// connection is idle; the caller may poll shutdown and retry.
+    IdleTimeout,
+    /// Timed out or disconnected mid-request → 408 then close (the
+    /// reader's per-read timeout doubles as the slow-client deadline).
+    Truncated,
+    /// Malformed request line / headers / body framing → 400.
+    BadRequest(&'static str),
+    /// Request line + headers exceed MAX_HEAD_BYTES → 431.
+    HeadersTooLarge,
+    /// Declared Content-Length exceeds MAX_BODY_BYTES → 413.
+    BodyTooLarge,
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::ConnectionClosed => write!(f, "connection closed"),
+            HttpError::IdleTimeout => write!(f, "idle timeout"),
+            HttpError::Truncated => write!(f, "truncated request"),
+            HttpError::BadRequest(why) => write!(f, "bad request: {why}"),
+            HttpError::HeadersTooLarge => write!(f, "headers exceed {MAX_HEAD_BYTES} bytes"),
+            HttpError::BodyTooLarge => write!(f, "body exceeds {MAX_BODY_BYTES} bytes"),
+            HttpError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+impl HttpError {
+    /// Status code to answer with, or None when the connection must just
+    /// be dropped (nothing parseable arrived / peer went away).
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            HttpError::ConnectionClosed | HttpError::IdleTimeout => None,
+            HttpError::Truncated => Some(408),
+            HttpError::BadRequest(_) => Some(400),
+            HttpError::HeadersTooLarge => Some(431),
+            HttpError::BodyTooLarge => Some(413),
+            HttpError::Io(_) => None,
+        }
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Read one CRLF- (or bare-LF-) terminated line, enforcing the running
+/// head budget.  `started` tracks whether any byte of the current request
+/// has been consumed (distinguishes idle close from mid-request drop).
+fn read_line<R: BufRead>(
+    r: &mut R,
+    budget: &mut usize,
+    started: &mut bool,
+) -> Result<String, HttpError> {
+    let mut raw = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        match r.read(&mut byte) {
+            Ok(0) => {
+                return if raw.is_empty() && !*started {
+                    Err(HttpError::ConnectionClosed)
+                } else {
+                    Err(HttpError::Truncated)
+                };
+            }
+            Ok(_) => {
+                *started = true;
+                if *budget == 0 {
+                    return Err(HttpError::HeadersTooLarge);
+                }
+                *budget -= 1;
+                if byte[0] == b'\n' {
+                    break;
+                }
+                // `budget` is the single head limit: it already bounds
+                // raw.len() at MAX_HEAD_BYTES.
+                raw.push(byte[0]);
+            }
+            Err(e) if is_timeout(&e) => {
+                return if raw.is_empty() && !*started {
+                    Err(HttpError::IdleTimeout)
+                } else {
+                    Err(HttpError::Truncated)
+                };
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+    }
+    if raw.last() == Some(&b'\r') {
+        raw.pop();
+    }
+    String::from_utf8(raw).map_err(|_| HttpError::BadRequest("non-utf8 header bytes"))
+}
+
+/// Parse one request from the stream.
+///
+/// Blocking semantics follow the reader: with a read timeout set on the
+/// underlying socket, an idle keep-alive connection yields
+/// [`HttpError::IdleTimeout`] (no byte of a new request arrived — poll a
+/// shutdown flag and retry), while a cleanly closed peer yields
+/// [`HttpError::ConnectionClosed`].
+pub fn parse_request<R: BufRead>(r: &mut R) -> Result<HttpRequest, HttpError> {
+    let mut budget = MAX_HEAD_BYTES;
+    let mut started = false;
+
+    // request line: METHOD SP TARGET SP VERSION
+    let line = read_line(r, &mut budget, &mut started)?;
+    let mut parts = line.split(' ');
+    let fields = (parts.next(), parts.next(), parts.next(), parts.next());
+    let (method, target, version) = match fields {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => {
+            (m.to_string(), t.to_string(), v.to_string())
+        }
+        _ => return Err(HttpError::BadRequest("malformed request line")),
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(HttpError::BadRequest("unsupported HTTP version"));
+    }
+    if !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(HttpError::BadRequest("malformed method"));
+    }
+    if !target.starts_with('/') {
+        return Err(HttpError::BadRequest("target must be absolute path"));
+    }
+
+    // headers until the blank line
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = read_line(r, &mut budget, &mut started)?;
+        if line.is_empty() {
+            break;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::BadRequest("header line without colon"));
+        };
+        if name.is_empty() || name.contains(' ') {
+            return Err(HttpError::BadRequest("malformed header name"));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let req = HttpRequest {
+        method,
+        target,
+        version,
+        headers,
+        body: Vec::new(),
+    };
+
+    if req.header("transfer-encoding").is_some() {
+        return Err(HttpError::BadRequest("chunked bodies not supported"));
+    }
+    if req.headers.iter().filter(|(k, _)| k == "content-length").count() > 1 {
+        return Err(HttpError::BadRequest("conflicting content-length"));
+    }
+
+    let len = match req.header("content-length") {
+        None => 0usize,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| HttpError::BadRequest("unparseable content-length"))?,
+    };
+    if len > MAX_BODY_BYTES {
+        return Err(HttpError::BodyTooLarge);
+    }
+
+    let mut body = vec![0u8; len];
+    let mut filled = 0usize;
+    while filled < len {
+        match r.read(&mut body[filled..]) {
+            Ok(0) => return Err(HttpError::Truncated),
+            Ok(n) => filled += n,
+            Err(e) if is_timeout(&e) => return Err(HttpError::Truncated),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+    }
+
+    Ok(HttpRequest { body, ..req })
+}
+
+/// Canonical reason phrase for the statuses the gateway emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// A response the router hands back to the connection loop.
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn json(status: u16, body: String) -> Self {
+        HttpResponse {
+            status,
+            content_type: "application/json",
+            body: body.into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Self {
+        HttpResponse {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into().into_bytes(),
+        }
+    }
+
+    /// Serialize onto the wire with explicit framing.
+    pub fn write_to<W: Write>(&self, w: &mut W, keep_alive: bool) -> std::io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Client-side: read one response (status + Content-Length body) — the
+/// load generator's half of the protocol.
+pub fn read_response<R: BufRead>(r: &mut R) -> Result<(u16, Vec<u8>), HttpError> {
+    let mut budget = MAX_HEAD_BYTES;
+    let mut started = false;
+    let line = read_line(r, &mut budget, &mut started)?;
+    let mut parts = line.split(' ');
+    let status = match (parts.next(), parts.next()) {
+        (Some(v), Some(code)) if v.starts_with("HTTP/") => code
+            .parse::<u16>()
+            .map_err(|_| HttpError::BadRequest("unparseable status code"))?,
+        _ => return Err(HttpError::BadRequest("malformed status line")),
+    };
+    let mut len = 0usize;
+    loop {
+        let line = read_line(r, &mut budget, &mut started)?;
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                len = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| HttpError::BadRequest("unparseable content-length"))?;
+            }
+        }
+    }
+    if len > MAX_BODY_BYTES {
+        return Err(HttpError::BodyTooLarge);
+    }
+    let mut body = vec![0u8; len];
+    let mut filled = 0usize;
+    while filled < len {
+        match r.read(&mut body[filled..]) {
+            Ok(0) => return Err(HttpError::Truncated),
+            Ok(n) => filled += n,
+            Err(e) if is_timeout(&e) => return Err(HttpError::Truncated),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+    }
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse_bytes(b: &[u8]) -> Result<HttpRequest, HttpError> {
+        parse_request(&mut BufReader::new(b))
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = parse_bytes(
+            b"POST /v1/infer HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path(), "/v1/infer");
+        assert_eq!(req.body, b"abcd");
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn close_semantics_per_version() {
+        let r11 = parse_bytes(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(!r11.keep_alive());
+        let r10 = parse_bytes(b"GET / HTTP/1.0\r\n\r\n").unwrap();
+        assert!(!r10.keep_alive());
+        let r10ka = parse_bytes(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap();
+        assert!(r10ka.keep_alive());
+    }
+
+    #[test]
+    fn empty_stream_is_connection_closed() {
+        assert!(matches!(parse_bytes(b""), Err(HttpError::ConnectionClosed)));
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = HttpResponse::json(429, "{\"error\":\"shed\"}".into());
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire, true).unwrap();
+        let (status, body) = read_response(&mut BufReader::new(&wire[..])).unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(body, resp.body);
+    }
+}

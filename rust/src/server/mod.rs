@@ -1,0 +1,280 @@
+//! Network serving gateway: the socket-facing request path (§3.2 grown
+//! from simulator-only to a real wire).
+//!
+//! A dependency-free wall-clock HTTP/1.1 server on `std::net::TcpListener`
+//! with a fixed worker pool.  `POST /v1/infer` requests are classified
+//! into the four §2.1 task categories and flow through per-category
+//! queues: latency-sensitive requests bypass batching, frequency-sensitive
+//! requests collect in a BS batching window, and overflow past the SLO
+//! budget is shed with 429 so goodput accounting stays honest under
+//! overload.  Execution is pluggable behind [`executor::Executor`]: the
+//! default backend replays the `profile` latency tables on wall-clock time
+//! (the full path runs in CI with no feature flags); the `pjrt` feature
+//! adds `CoordinatorExecutor`, which drives the existing `coordinator`
+//! engine unchanged.
+//!
+//! Module map:
+//! * [`http`] — hand-rolled HTTP/1.1 parse/serialize with hard limits;
+//! * [`pool`] — fixed connection-worker thread pool;
+//! * [`admission`] — category queues, SLO-budget shedding, BS batching;
+//! * [`executor`] — backend trait + profile-replay / coordinator backends;
+//! * [`router`] — `/v1/infer`, `/metrics`, `/healthz` dispatch;
+//! * [`telemetry`] — Prometheus text exposition + §3.3 goodput credit;
+//! * [`loadgen`] — socket-driving load generator (open / closed loop).
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::profile::{zoo, ProfileTable};
+
+pub mod admission;
+pub mod executor;
+pub mod http;
+pub mod loadgen;
+pub mod pool;
+pub mod router;
+pub mod telemetry;
+
+pub use admission::{Admission, AdmissionConfig};
+pub use executor::{Executor, ProfileReplayExecutor};
+pub use telemetry::Telemetry;
+
+/// Read timeout on accepted sockets.  Doubles as two deadlines: how long
+/// an idle keep-alive connection can pin a worker before it re-checks
+/// the shutdown flag, and the per-read slow-client bound mid-request — a
+/// peer that stalls longer than this between bytes of a request gets
+/// 408 and the connection closed (slow-loris containment).
+const IDLE_POLL: Duration = Duration::from_millis(200);
+
+/// Idle keep-alive eviction: after this many consecutive idle polls with
+/// no new request (~30 s), the connection is closed so parked clients
+/// cannot pin the fixed worker pool indefinitely.
+const MAX_IDLE_POLLS: u32 = 150;
+
+/// Gateway configuration.
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    /// Bind address; port 0 picks an ephemeral port.
+    pub addr: String,
+    /// Connection-worker pool size.
+    pub threads: usize,
+    pub admission: AdmissionConfig,
+    /// GPU VRAM used for the single/multi-GPU category split (§3.1).
+    pub gpu_vram_mb: f64,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            addr: "127.0.0.1:8080".into(),
+            threads: 8,
+            admission: AdmissionConfig::default(),
+            gpu_vram_mb: zoo::P100_VRAM_MB,
+        }
+    }
+}
+
+/// State shared by every connection worker.
+pub(crate) struct Shared {
+    pub table: ProfileTable,
+    pub admission: Admission,
+    pub executor: Arc<dyn Executor>,
+    pub telemetry: Telemetry,
+    pub gpu_vram_mb: f64,
+}
+
+/// Process-wide SIGINT/SIGTERM latch (signal handlers can only touch
+/// statics).  The accept loop polls it alongside the per-gateway flag.
+static SIGNALED: AtomicBool = AtomicBool::new(false);
+
+/// Whether a termination signal has been observed.
+pub fn signal_received() -> bool {
+    SIGNALED.load(Ordering::Relaxed)
+}
+
+/// Install SIGINT/SIGTERM handlers that set the shutdown latch (unix
+/// only; elsewhere ctrl-c terminates the process as usual).  Safe to call
+/// more than once.
+#[cfg(unix)]
+pub fn install_signal_handlers() {
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNALED.store(true, Ordering::Relaxed);
+    }
+    // Bind libc's `signal` directly — std links libc on unix, and the
+    // offline registry carries no libc crate.
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal);
+        signal(SIGTERM, on_signal);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_signal_handlers() {}
+
+/// A running gateway: owns the accept thread, which owns the worker pool.
+pub struct Gateway {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Bind, spawn the accept thread + worker pool, and return.
+    pub fn spawn(
+        cfg: GatewayConfig,
+        table: ProfileTable,
+        executor: Arc<dyn Executor>,
+    ) -> crate::Result<Gateway> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+
+        let shared = Arc::new(Shared {
+            table,
+            admission: Admission::new(cfg.admission),
+            executor,
+            telemetry: Telemetry::new(),
+            gpu_vram_mb: cfg.gpu_vram_mb,
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_stop = Arc::clone(&stop);
+        let threads = cfg.threads;
+
+        let join = thread::Builder::new()
+            .name("epara-gateway".into())
+            .spawn(move || accept_loop(listener, shared, accept_stop, threads))?;
+
+        Ok(Gateway { addr, stop, join: Some(join) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal shutdown and join the accept thread (which drains and joins
+    /// every connection worker).  Idempotent.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+
+    /// Block until the gateway exits on its own (SIGINT/SIGTERM latch).
+    pub fn wait(mut self) {
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Accept connections until shutdown; graceful on SIGINT/SIGTERM.
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+    threads: usize,
+) {
+    let mut pool = pool::ThreadPool::new(threads);
+    // Backpressure: beyond this many queued + running connections, stop
+    // accepting and let the OS backlog (and ultimately the client) wait —
+    // the job channel itself is unbounded.
+    let max_pending = threads.max(1) * 4;
+    loop {
+        if stop.load(Ordering::SeqCst) || signal_received() {
+            break;
+        }
+        if pool.pending() >= max_pending {
+            thread::sleep(Duration::from_millis(2));
+            continue;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let shared = Arc::clone(&shared);
+                let stop = Arc::clone(&stop);
+                pool.execute(move || handle_connection(stream, &shared, &stop));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => {
+                crate::log_at!(crate::util::LogLevel::Warn, "gateway accept error: {e}");
+                thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+    // Joining the pool completes every in-flight request first.
+    pool.join();
+}
+
+/// One connection: parse → route → respond, looping on keep-alive.
+fn handle_connection(stream: TcpStream, shared: &Shared, stop: &AtomicBool) {
+    // Accepted sockets inherit non-blocking from the listener on some
+    // platforms; force blocking + a bounded read timeout.
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let _ = stream.set_read_timeout(Some(IDLE_POLL));
+    let _ = stream.set_nodelay(true);
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut idle_polls = 0u32;
+
+    loop {
+        if stop.load(Ordering::SeqCst) || signal_received() {
+            return;
+        }
+        match http::parse_request(&mut reader) {
+            Ok(req) => {
+                idle_polls = 0;
+                let keep_alive = req.keep_alive();
+                let resp = router::handle(shared, &req);
+                if resp.write_to(&mut writer, keep_alive).is_err() || !keep_alive {
+                    return;
+                }
+            }
+            // Idle keep-alive tick: nothing arrived within IDLE_POLL —
+            // re-check shutdown, evict if parked too long, keep listening.
+            Err(http::HttpError::IdleTimeout) => {
+                idle_polls += 1;
+                if idle_polls >= MAX_IDLE_POLLS {
+                    return;
+                }
+            }
+            Err(e) => {
+                // Answer protocol violations (400/413/431) and drop the
+                // connection; EOF / truncation just closes.
+                if let Some(status) = e.status() {
+                    shared.telemetry.record_http_error();
+                    let resp = http::HttpResponse::json(
+                        status,
+                        format!("{{\"error\":\"{}\"}}", http::reason(status)),
+                    );
+                    let _ = resp.write_to(&mut writer, false);
+                }
+                return;
+            }
+        }
+    }
+}

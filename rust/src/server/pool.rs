@@ -1,0 +1,152 @@
+//! Fixed-size worker thread pool for connection handling.
+//!
+//! The gateway's concurrency model mirrors the paper's per-GPU executor
+//! processes: a bounded set of OS threads drains an mpsc job queue.  No
+//! async runtime exists in the offline registry, and a fixed pool keeps
+//! the memory footprint flat under connection floods: the accept loop
+//! watches [`ThreadPool::pending`] and stops accepting past its
+//! threshold, so excess connections wait in the OS accept backlog
+//! instead of piling into the job queue or spawning unbounded threads.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Decrements the pool's pending counter even when the job panics.
+struct PendingGuard<'a>(&'a AtomicUsize);
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A fixed pool of named worker threads.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    /// Jobs enqueued or running (the caller's backpressure signal: the
+    /// channel itself is unbounded, so the accept loop must stop feeding
+    /// it when this grows past its threshold).
+    pending: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (clamped to ≥ 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new(AtomicUsize::new(0));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                thread::Builder::new()
+                    .name(format!("epara-gw-{i}"))
+                    .spawn(move || loop {
+                        // Senders dropped → recv fails → worker exits.
+                        let job = match rx.lock() {
+                            Ok(guard) => guard.recv(),
+                            Err(_) => break,
+                        };
+                        match job {
+                            Ok(job) => {
+                                // Guard keeps the pending count honest and
+                                // catch_unwind keeps the pool at full
+                                // strength even if a job panics — a leaked
+                                // count would eventually freeze the accept
+                                // loop's backpressure check.
+                                let _guard = PendingGuard(&pending);
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                            }
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn gateway worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, pending }
+    }
+
+    /// Enqueue a job; returns false once the pool is shut down.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) -> bool {
+        match &self.tx {
+            Some(tx) => {
+                self.pending.fetch_add(1, Ordering::SeqCst);
+                let ok = tx.send(Box::new(f)).is_ok();
+                if !ok {
+                    self.pending.fetch_sub(1, Ordering::SeqCst);
+                }
+                ok
+            }
+            None => false,
+        }
+    }
+
+    /// Jobs enqueued or currently running.
+    pub fn pending(&self) -> usize {
+        self.pending.load(Ordering::SeqCst)
+    }
+
+    /// Close the queue and join every worker (idempotent).
+    pub fn join(&mut self) {
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs_and_joins() {
+        let done = Arc::new(AtomicUsize::new(0));
+        let mut pool = ThreadPool::new(4);
+        for _ in 0..64 {
+            let done = Arc::clone(&done);
+            assert!(pool.execute(move || {
+                done.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        pool.join();
+        assert_eq!(done.load(Ordering::SeqCst), 64);
+        assert_eq!(pool.pending(), 0, "all jobs drained");
+        // after join, execute reports shutdown
+        assert!(!pool.execute(|| {}));
+    }
+
+    #[test]
+    fn panicking_jobs_leak_neither_workers_nor_pending() {
+        let mut pool = ThreadPool::new(2);
+        for _ in 0..4 {
+            pool.execute(|| panic!("boom (expected in this test)"));
+        }
+        // the pool must still run jobs afterwards, at full strength
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let done = Arc::clone(&done);
+            pool.execute(move || {
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(done.load(Ordering::SeqCst), 8);
+        assert_eq!(pool.pending(), 0, "panicked jobs must not leak pending");
+    }
+}

@@ -1,0 +1,135 @@
+//! Route dispatch for the gateway's three endpoints.
+//!
+//! * `POST /v1/infer` — body `{"service": "<name>" | <id>, "frames": N}`;
+//!   classified into a §2.1 task category and submitted through the
+//!   admission tier.  200 with execution stats, 429 when shed, 404 for
+//!   unknown services, 400 for malformed bodies, 500 on backend failure.
+//! * `GET /metrics` — Prometheus text exposition.
+//! * `GET /healthz` — liveness probe.
+
+use std::time::Instant;
+
+use crate::configjson::{self, Json};
+use crate::core::{ServiceId, TaskCategory};
+
+use super::admission::Decision;
+use super::executor::ExecRequest;
+use super::http::{HttpRequest, HttpResponse};
+use super::Shared;
+
+fn err_json(status: u16, error: &str, detail: &str) -> HttpResponse {
+    let body = Json::obj(vec![
+        ("error", Json::str(error)),
+        ("detail", Json::str(detail)),
+    ]);
+    HttpResponse::json(status, body.to_string())
+}
+
+/// Resolve `"service"` — by zoo name (`"resnet50"`) or numeric id.
+fn resolve_service(shared: &Shared, v: &Json) -> Option<ServiceId> {
+    match v {
+        Json::Str(name) => shared
+            .table
+            .services()
+            .find(|s| s.name == *name)
+            .map(|s| s.id),
+        Json::Num(_) => {
+            let id = ServiceId(v.as_i64()? as u32);
+            shared.table.get_spec(id).map(|s| s.id)
+        }
+        _ => None,
+    }
+}
+
+fn handle_infer(shared: &Shared, req: &HttpRequest) -> HttpResponse {
+    let body = match std::str::from_utf8(&req.body)
+        .ok()
+        .and_then(|s| configjson::parse(s).ok())
+    {
+        // a parseable non-object (number/array/string) is still a
+        // malformed request shape, not an unknown service
+        Some(v @ Json::Obj(_)) => v,
+        _ => {
+            shared.telemetry.record_http_error();
+            return err_json(400, "bad_request", "body must be a JSON object");
+        }
+    };
+    let Some(service) = body.get("service").and_then(|v| resolve_service(shared, v)) else {
+        shared.telemetry.record_http_error();
+        return err_json(404, "unknown_service", "no such service in the profile table");
+    };
+    let spec = shared.table.spec(service);
+    let frames = body
+        .get("frames")
+        .and_then(Json::as_usize)
+        .map(|f| (f.max(1)).min(100_000) as u32)
+        .unwrap_or_else(|| spec.frames_per_request.max(1));
+
+    let category: TaskCategory = spec.category(shared.gpu_vram_mb);
+    // SLO budget: latency tasks bound by their latency SLO; frequency
+    // sessions by the wall-clock their rate SLO implies (F frames at
+    // min_rate fps), whichever is looser — a 120-frame 60 fps session is
+    // in-SLO when it streams out within 2 s, not within one frame's
+    // latency bound.
+    let slo_ms = match spec.slo.min_rate {
+        Some(rate) if rate > 0.0 => {
+            spec.slo.latency_ms.max(frames as f64 * 1000.0 / rate)
+        }
+        _ => spec.slo.latency_ms,
+    };
+    let name = spec.name.clone();
+    let exec_req = ExecRequest { service, frames };
+
+    // End-to-end server-side latency: queue wait + batching window + lane
+    // wait + execution.  SLO credit must see what the client sees, not
+    // just the execute() call, or goodput inflates under load.
+    let t0 = Instant::now();
+    match shared
+        .admission
+        .submit(category, exec_req, slo_ms, &*shared.executor)
+    {
+        Decision::Served(out) => {
+            let e2e_ms = t0.elapsed().as_secs_f64() * 1000.0;
+            let credit = shared.telemetry.record_ok(category, e2e_ms, slo_ms);
+            let body = Json::obj(vec![
+                ("service", Json::str(name)),
+                ("category", Json::str(super::telemetry::cat_label(category))),
+                ("batch_size", Json::num(out.batch_size as f64)),
+                ("latency_ms", Json::num(e2e_ms)),
+                ("exec_ms", Json::num(out.batch_latency_ms)),
+                ("credit", Json::num(credit)),
+            ]);
+            HttpResponse::json(200, body.to_string())
+        }
+        Decision::Shed(reason) => {
+            shared.telemetry.record_shed(category);
+            err_json(429, "shed", reason.as_str())
+        }
+        Decision::Failed(e) => {
+            shared.telemetry.record_failed(category);
+            err_json(500, "execution_failed", &format!("{e:#}"))
+        }
+    }
+}
+
+/// Dispatch one parsed request.
+pub(super) fn handle(shared: &Shared, req: &HttpRequest) -> HttpResponse {
+    match (req.method.as_str(), req.path()) {
+        ("POST", "/v1/infer") => handle_infer(shared, req),
+        ("GET", "/metrics") => HttpResponse::text(
+            200,
+            shared
+                .telemetry
+                .render_prometheus(shared.admission.depths(), shared.executor.name()),
+        ),
+        ("GET", "/healthz") => HttpResponse::text(200, "ok\n"),
+        ("GET" | "POST", "/v1/infer" | "/metrics" | "/healthz") => {
+            shared.telemetry.record_http_error();
+            err_json(405, "method_not_allowed", "unsupported method for this route")
+        }
+        _ => {
+            shared.telemetry.record_http_error();
+            err_json(404, "not_found", "routes: POST /v1/infer, GET /metrics, GET /healthz")
+        }
+    }
+}

@@ -1,0 +1,303 @@
+//! Gateway observability: request counters, per-category latency
+//! percentiles, queue depths, and goodput, exported in Prometheus text
+//! exposition format at `GET /metrics`.
+//!
+//! Goodput follows the crate's §3.3 accounting (`metrics` module):
+//! latency-sensitive requests earn 1.0 credit when they complete within
+//! their SLO and 0 otherwise; frequency-sensitive requests earn
+//! fractional credit (SLO budget / achieved latency, capped at 1) so an
+//! overloaded stream that still delivers half its target rate counts as
+//! half served.  Shed (429) and failed requests earn nothing — which is
+//! exactly what makes shedding honest: the gateway never inflates goodput
+//! by accepting work it cannot finish.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::core::{Sensitivity, TaskCategory};
+use crate::util::stats::Summary;
+
+use super::admission::cat_index;
+
+/// Stable Prometheus label for a category.
+pub fn cat_label(c: TaskCategory) -> &'static str {
+    match c {
+        TaskCategory::LatencySingle => "latency_single",
+        TaskCategory::LatencyMulti => "latency_multi",
+        TaskCategory::FrequencySingle => "frequency_single",
+        TaskCategory::FrequencyMulti => "frequency_multi",
+    }
+}
+
+/// Latency samples retained per category for quantile rendering.  The
+/// gateway is long-running, so samples live in a fixed ring (recent
+/// window) rather than growing without bound; counters and credit are
+/// exact over the full lifetime.
+const RETAINED_SAMPLES: usize = 8192;
+
+#[derive(Default)]
+struct CatStats {
+    ok: u64,
+    shed: u64,
+    failed: u64,
+    credit: f64,
+    /// Ring of the most recent completion latencies (ms).
+    recent_ms: Vec<f64>,
+    /// Next overwrite slot once the ring is full.
+    ring_at: usize,
+}
+
+impl CatStats {
+    fn push_latency(&mut self, v: f64) {
+        if self.recent_ms.len() < RETAINED_SAMPLES {
+            self.recent_ms.push(v);
+        } else {
+            self.recent_ms[self.ring_at] = v;
+            self.ring_at = (self.ring_at + 1) % RETAINED_SAMPLES;
+        }
+    }
+}
+
+struct Inner {
+    cats: [CatStats; 4],
+    /// Requests rejected before classification (400/404/405/413/431).
+    http_errors: u64,
+}
+
+/// Shared gateway metrics registry (interior mutability; cheap locks —
+/// all recording is O(1) outside the percentile query).
+pub struct Telemetry {
+    started: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry {
+            started: Instant::now(),
+            inner: Mutex::new(Inner {
+                cats: [
+                    CatStats::default(),
+                    CatStats::default(),
+                    CatStats::default(),
+                    CatStats::default(),
+                ],
+                http_errors: 0,
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// §3.3 goodput credit for a completed request.
+    fn credit(category: TaskCategory, latency_ms: f64, slo_ms: f64) -> f64 {
+        match category.sensitivity() {
+            Sensitivity::Latency => {
+                if latency_ms <= slo_ms {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            // Fractional credit: delivering slower than the SLO budget is
+            // a proportionally-degraded stream, not a total loss.
+            Sensitivity::Frequency => {
+                if latency_ms <= slo_ms {
+                    1.0
+                } else {
+                    (slo_ms / latency_ms.max(1e-9)).min(1.0)
+                }
+            }
+        }
+    }
+
+    /// Record a 2xx completion; returns the goodput credit earned.
+    pub fn record_ok(&self, category: TaskCategory, latency_ms: f64, slo_ms: f64) -> f64 {
+        let credit = Self::credit(category, latency_ms, slo_ms);
+        let mut inner = self.lock();
+        let cat = &mut inner.cats[cat_index(category)];
+        cat.ok += 1;
+        cat.credit += credit;
+        cat.push_latency(latency_ms);
+        credit
+    }
+
+    /// Record a 429 shed.
+    pub fn record_shed(&self, category: TaskCategory) {
+        self.lock().cats[cat_index(category)].shed += 1;
+    }
+
+    /// Record a 5xx execution failure.
+    pub fn record_failed(&self, category: TaskCategory) {
+        self.lock().cats[cat_index(category)].failed += 1;
+    }
+
+    /// Record a request rejected before classification (4xx).
+    pub fn record_http_error(&self) {
+        self.lock().http_errors += 1;
+    }
+
+    /// Total satisfied-request credit per second since startup.
+    pub fn goodput_rps(&self) -> f64 {
+        let credit: f64 = self.lock().cats.iter().map(|c| c.credit).sum();
+        let secs = self.started.elapsed().as_secs_f64().max(1e-9);
+        credit / secs
+    }
+
+    /// Render the Prometheus text exposition.
+    pub fn render_prometheus(&self, queue_depths: [usize; 4], executor: &str) -> String {
+        let mut out = String::with_capacity(2048);
+        let inner = self.lock();
+
+        out.push_str(
+            "# HELP epara_gateway_requests_total Requests by category and outcome.\n\
+             # TYPE epara_gateway_requests_total counter\n",
+        );
+        for c in TaskCategory::ALL {
+            let label = cat_label(c);
+            let s = &inner.cats[cat_index(c)];
+            for (outcome, n) in [("ok", s.ok), ("shed", s.shed), ("failed", s.failed)] {
+                out.push_str(&format!(
+                    "epara_gateway_requests_total\
+                     {{category=\"{label}\",outcome=\"{outcome}\"}} {n}\n"
+                ));
+            }
+        }
+
+        out.push_str(
+            "# HELP epara_gateway_http_errors_total Requests rejected before \
+             classification (4xx).\n\
+             # TYPE epara_gateway_http_errors_total counter\n",
+        );
+        out.push_str(&format!(
+            "epara_gateway_http_errors_total {}\n",
+            inner.http_errors
+        ));
+
+        out.push_str(
+            "# HELP epara_gateway_latency_ms Completion latency quantiles per category \
+             (window: most recent samples).\n\
+             # TYPE epara_gateway_latency_ms summary\n",
+        );
+        for c in TaskCategory::ALL {
+            let label = cat_label(c);
+            let s = &inner.cats[cat_index(c)];
+            if s.recent_ms.is_empty() {
+                continue;
+            }
+            let mut window = Summary::new();
+            window.extend(s.recent_ms.iter().copied());
+            let (p50, p95, p99) = window.p50_p95_p99();
+            for (q, v) in [("0.5", p50), ("0.95", p95), ("0.99", p99)] {
+                out.push_str(&format!(
+                    "epara_gateway_latency_ms{{category=\"{label}\",quantile=\"{q}\"}} {v:.3}\n"
+                ));
+            }
+        }
+
+        out.push_str(
+            "# HELP epara_gateway_queue_depth Admitted (queued + executing) per category.\n\
+             # TYPE epara_gateway_queue_depth gauge\n",
+        );
+        for c in TaskCategory::ALL {
+            out.push_str(&format!(
+                "epara_gateway_queue_depth{{category=\"{}\"}} {}\n",
+                cat_label(c),
+                queue_depths[cat_index(c)]
+            ));
+        }
+
+        let credit: f64 = inner.cats.iter().map(|c| c.credit).sum();
+        drop(inner);
+        let secs = self.started.elapsed().as_secs_f64().max(1e-9);
+        out.push_str(
+            "# HELP epara_gateway_goodput_rps Satisfied-request credit per second (§3.3).\n\
+             # TYPE epara_gateway_goodput_rps gauge\n",
+        );
+        out.push_str(&format!("epara_gateway_goodput_rps {:.4}\n", credit / secs));
+
+        out.push_str(
+            "# HELP epara_gateway_uptime_seconds Seconds since gateway start.\n\
+             # TYPE epara_gateway_uptime_seconds gauge\n",
+        );
+        out.push_str(&format!("epara_gateway_uptime_seconds {secs:.1}\n"));
+
+        out.push_str(
+            "# HELP epara_gateway_info Build/backend info.\n# TYPE epara_gateway_info gauge\n",
+        );
+        out.push_str(&format!("epara_gateway_info{{executor=\"{executor}\"}} 1\n"));
+        out
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn credit_follows_slo_accounting() {
+        // latency: binary
+        assert_eq!(Telemetry::credit(TaskCategory::LatencySingle, 50.0, 100.0), 1.0);
+        assert_eq!(Telemetry::credit(TaskCategory::LatencySingle, 150.0, 100.0), 0.0);
+        // frequency: fractional past the budget
+        assert_eq!(Telemetry::credit(TaskCategory::FrequencySingle, 50.0, 100.0), 1.0);
+        let half = Telemetry::credit(TaskCategory::FrequencySingle, 200.0, 100.0);
+        assert!((half - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prometheus_counters_match_records() {
+        let t = Telemetry::new();
+        t.record_ok(TaskCategory::LatencySingle, 10.0, 100.0);
+        t.record_ok(TaskCategory::LatencySingle, 20.0, 100.0);
+        t.record_shed(TaskCategory::FrequencyMulti);
+        t.record_failed(TaskCategory::LatencyMulti);
+        t.record_http_error();
+        let text = t.render_prometheus([1, 0, 0, 2], "profile-replay");
+        assert!(text.contains(
+            "epara_gateway_requests_total{category=\"latency_single\",outcome=\"ok\"} 2"
+        ));
+        assert!(text.contains(
+            "epara_gateway_requests_total{category=\"frequency_multi\",outcome=\"shed\"} 1"
+        ));
+        assert!(text.contains(
+            "epara_gateway_requests_total{category=\"latency_multi\",outcome=\"failed\"} 1"
+        ));
+        assert!(text.contains("epara_gateway_http_errors_total 1"));
+        assert!(text.contains("epara_gateway_queue_depth{category=\"latency_single\"} 1"));
+        assert!(text.contains("epara_gateway_queue_depth{category=\"frequency_multi\"} 2"));
+        assert!(text.contains("quantile=\"0.95\""));
+        assert!(text.contains("epara_gateway_info{executor=\"profile-replay\"} 1"));
+    }
+
+    #[test]
+    fn latency_ring_is_bounded() {
+        let mut s = CatStats::default();
+        for i in 0..(RETAINED_SAMPLES + 10) {
+            s.push_latency(i as f64);
+        }
+        assert_eq!(s.recent_ms.len(), RETAINED_SAMPLES);
+        // the overwritten slots hold the newest samples
+        assert_eq!(s.recent_ms[0], RETAINED_SAMPLES as f64);
+        assert_eq!(s.recent_ms[9], (RETAINED_SAMPLES + 9) as f64);
+        assert_eq!(s.recent_ms[10], 10.0);
+    }
+
+    #[test]
+    fn goodput_counts_only_in_slo_credit() {
+        let t = Telemetry::new();
+        let c1 = t.record_ok(TaskCategory::LatencySingle, 10.0, 100.0);
+        let c2 = t.record_ok(TaskCategory::LatencySingle, 500.0, 100.0);
+        assert_eq!(c1, 1.0);
+        assert_eq!(c2, 0.0);
+        assert!(t.goodput_rps() > 0.0);
+    }
+}

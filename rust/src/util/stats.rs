@@ -88,8 +88,28 @@ impl Summary {
         self.percentile(50.0)
     }
 
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(95.0)
+    }
+
     pub fn p99(&mut self) -> f64 {
         self.percentile(99.0)
+    }
+
+    /// The standard latency-report triple in one sort (shared by the
+    /// gateway's metrics endpoint and the bench reports).
+    pub fn p50_p95_p99(&mut self) -> (f64, f64, f64) {
+        (
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+        )
+    }
+
+    /// Fold another summary's samples into this one.
+    pub fn merge(&mut self, other: &Summary) {
+        self.values.extend_from_slice(&other.values);
+        self.sorted = false;
     }
 }
 
@@ -182,6 +202,30 @@ mod tests {
         let mut s = Summary::new();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(99.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_triple_matches_singles() {
+        let mut s = Summary::new();
+        s.extend((0..1000).map(|i| i as f64));
+        let (p50, p95, p99) = s.p50_p95_p99();
+        assert_eq!(p50, s.p50());
+        assert_eq!(p95, s.p95());
+        assert_eq!(p99, s.p99());
+        assert!(p50 < p95 && p95 < p99);
+        assert!((p95 - 949.05).abs() < 1e-9, "{p95}");
+    }
+
+    #[test]
+    fn merge_combines_samples() {
+        let mut a = Summary::new();
+        a.extend([1.0, 2.0]);
+        let mut b = Summary::new();
+        b.extend([3.0, 4.0]);
+        a.merge(&b);
+        assert_eq!(a.count(), 4);
+        assert!((a.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(a.max(), 4.0);
     }
 
     #[test]

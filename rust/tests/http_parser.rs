@@ -1,0 +1,207 @@
+//! HTTP/1.1 parser robustness: malformed request lines, oversized
+//! headers, truncated bodies, keep-alive semantics, and fuzz-ish random
+//! inputs drawn from the crate's deterministic RNG.  The parser guards
+//! the gateway's front door, so every rejection path must be a clean
+//! typed error — never a panic, never a mis-parse.
+
+use std::io::BufReader;
+
+use epara::server::http::{
+    parse_request, read_response, HttpError, HttpRequest, HttpResponse, MAX_BODY_BYTES,
+    MAX_HEAD_BYTES,
+};
+use epara::util::Rng;
+
+fn parse(bytes: &[u8]) -> Result<HttpRequest, HttpError> {
+    parse_request(&mut BufReader::new(bytes))
+}
+
+#[test]
+fn well_formed_request_roundtrip() {
+    let req = parse(
+        b"POST /v1/infer?debug=1 HTTP/1.1\r\nHost: gw\r\nContent-Type: application/json\r\n\
+          Content-Length: 17\r\n\r\n{\"service\":\"x\"}!!",
+    )
+    .unwrap();
+    assert_eq!(req.method, "POST");
+    assert_eq!(req.target, "/v1/infer?debug=1");
+    assert_eq!(req.path(), "/v1/infer");
+    assert_eq!(req.header("content-type"), Some("application/json"));
+    assert_eq!(req.body.len(), 17);
+    assert!(req.keep_alive());
+}
+
+#[test]
+fn bare_lf_line_endings_accepted() {
+    let req = parse(b"GET /healthz HTTP/1.1\nHost: x\n\n").unwrap();
+    assert_eq!(req.path(), "/healthz");
+}
+
+#[test]
+fn malformed_request_lines_rejected() {
+    let cases: [&[u8]; 7] = [
+        b"GET\r\n\r\n",                          // no target/version
+        b"GET /\r\n\r\n",                        // no version
+        b"GET / HTTP/1.1 extra\r\n\r\n",         // trailing token
+        b"get / HTTP/1.1\r\n\r\n",               // lowercase method
+        b"GET relative HTTP/1.1\r\n\r\n",        // non-absolute target
+        b"GET / SPDY/3\r\n\r\n",                 // unknown protocol
+        b"GET / HTTP/2.0\r\n\r\n",               // unsupported version
+    ];
+    for c in cases {
+        match parse(c) {
+            Err(HttpError::BadRequest(_)) => {}
+            other => panic!("{:?} should be BadRequest, got {other:?}", String::from_utf8_lossy(c)),
+        }
+    }
+}
+
+#[test]
+fn malformed_headers_rejected() {
+    for c in [
+        &b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n"[..],
+        &b"GET / HTTP/1.1\r\n: empty-name\r\n\r\n"[..],
+        &b"GET / HTTP/1.1\r\nbad name: v\r\n\r\n"[..],
+        &b"GET / HTTP/1.1\r\nContent-Length: two\r\n\r\n"[..],
+        &b"GET / HTTP/1.1\r\nContent-Length: 4\r\nContent-Length: 5\r\n\r\nabcde"[..],
+        &b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"[..],
+    ] {
+        assert!(
+            matches!(parse(c), Err(HttpError::BadRequest(_))),
+            "{:?}",
+            String::from_utf8_lossy(c)
+        );
+    }
+}
+
+#[test]
+fn oversized_headers_hit_431() {
+    // one giant header value blows the head budget
+    let mut raw = b"GET / HTTP/1.1\r\nx-pad: ".to_vec();
+    raw.extend(vec![b'a'; MAX_HEAD_BYTES + 16]);
+    raw.extend(b"\r\n\r\n");
+    assert!(matches!(parse(&raw), Err(HttpError::HeadersTooLarge)));
+
+    // ... and so does an unbounded stream of small headers
+    let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+    for i in 0..4096 {
+        raw.extend(format!("x-h{i}: v\r\n").into_bytes());
+    }
+    raw.extend(b"\r\n");
+    assert!(matches!(parse(&raw), Err(HttpError::HeadersTooLarge)));
+}
+
+#[test]
+fn oversized_body_hits_413() {
+    let raw = format!(
+        "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+        MAX_BODY_BYTES + 1
+    );
+    assert!(matches!(parse(raw.as_bytes()), Err(HttpError::BodyTooLarge)));
+}
+
+#[test]
+fn truncated_bodies_and_heads_detected() {
+    // body shorter than content-length
+    assert!(matches!(
+        parse(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc"),
+        Err(HttpError::Truncated)
+    ));
+    // stream dies mid-headers
+    assert!(matches!(
+        parse(b"GET / HTTP/1.1\r\nHost: x"),
+        Err(HttpError::Truncated)
+    ));
+    // empty stream is a clean end-of-connection, not truncation
+    assert!(matches!(parse(b""), Err(HttpError::ConnectionClosed)));
+}
+
+#[test]
+fn keep_alive_vs_close_matrix() {
+    let cases = [
+        ("HTTP/1.1", None, true),
+        ("HTTP/1.1", Some("close"), false),
+        ("HTTP/1.1", Some("keep-alive"), true),
+        ("HTTP/1.0", None, false),
+        ("HTTP/1.0", Some("keep-alive"), true),
+        ("HTTP/1.0", Some("close"), false),
+    ];
+    for (version, conn, want) in cases {
+        let mut raw = format!("GET / {version}\r\n");
+        if let Some(c) = conn {
+            raw.push_str(&format!("Connection: {c}\r\n"));
+        }
+        raw.push_str("\r\n");
+        let req = parse(raw.as_bytes()).unwrap();
+        assert_eq!(req.keep_alive(), want, "{version} {conn:?}");
+    }
+}
+
+#[test]
+fn keep_alive_stream_parses_back_to_back_requests() {
+    let wire = b"GET /healthz HTTP/1.1\r\n\r\nPOST /v1/infer HTTP/1.1\r\n\
+                 Content-Length: 2\r\n\r\n{}GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n";
+    let mut reader = BufReader::new(&wire[..]);
+    let first = parse_request(&mut reader).unwrap();
+    assert_eq!(first.path(), "/healthz");
+    let second = parse_request(&mut reader).unwrap();
+    assert_eq!(second.path(), "/v1/infer");
+    assert_eq!(second.body, b"{}");
+    let third = parse_request(&mut reader).unwrap();
+    assert!(!third.keep_alive());
+    assert!(matches!(
+        parse_request(&mut reader),
+        Err(HttpError::ConnectionClosed)
+    ));
+}
+
+#[test]
+fn fuzz_random_bytes_never_panic() {
+    let mut rng = Rng::new(0xF00D);
+    for _ in 0..2000 {
+        let len = rng.below(512) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.below(256)) as u8).collect();
+        // must return, never panic; Ok is fine if the bytes happen to
+        // form a valid request
+        let _ = parse(&bytes);
+        let _ = read_response(&mut BufReader::new(&bytes[..]));
+    }
+}
+
+#[test]
+fn fuzz_mutated_valid_requests_never_panic() {
+    let mut rng = Rng::new(0xBEEF);
+    let template = b"POST /v1/infer HTTP/1.1\r\nHost: gw\r\n\
+                     Content-Length: 15\r\n\r\n{\"service\":\"a\"}";
+    for _ in 0..2000 {
+        let mut bytes = template.to_vec();
+        // flip a few random bytes / truncate at a random point
+        for _ in 0..1 + rng.below(4) {
+            let i = rng.below(bytes.len() as u64) as usize;
+            bytes[i] = rng.below(256) as u8;
+        }
+        if rng.chance(0.3) {
+            let cut = rng.below(bytes.len() as u64) as usize;
+            bytes.truncate(cut);
+        }
+        match parse(&bytes) {
+            // any typed outcome is acceptable; panics are not
+            Ok(req) => assert!(req.body.len() <= MAX_BODY_BYTES),
+            Err(_) => {}
+        }
+    }
+}
+
+#[test]
+fn response_writer_roundtrips_through_client_reader() {
+    let mut rng = Rng::new(7);
+    for status in [200u16, 400, 404, 429, 500] {
+        let body: String = (0..rng.below(64)).map(|_| 'x').collect();
+        let resp = HttpResponse::json(status, body.clone());
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire, status != 500).unwrap();
+        let (got_status, got_body) = read_response(&mut BufReader::new(&wire[..])).unwrap();
+        assert_eq!(got_status, status);
+        assert_eq!(got_body, body.as_bytes());
+    }
+}
