@@ -3,6 +3,7 @@
 #   make build       release build of the workspace (default features)
 #   make test        run the tier-1 test suite (ROADMAP verify)
 #   make bench       run every simulation-backed figure bench
+#   make bench-perf  refresh the hot-path perf baseline (BENCH_perf.json)
 #   make lint        rustfmt check + clippy (what CI's lint job runs)
 #   make check-pjrt  compile-check the feature-gated runtime path
 #   make gateway     run the serving gateway on $(GATEWAY_ADDR)
@@ -23,7 +24,7 @@ SIM_BENCHES = ablation_params fig03_motivation fig10_testbed_goodput \
 
 GATEWAY_ADDR ?= 127.0.0.1:8080
 
-.PHONY: build test bench lint check-pjrt gateway loadgen artifacts clean
+.PHONY: build test bench bench-perf lint check-pjrt gateway loadgen artifacts clean
 
 build:
 	$(CARGO) build --release --workspace
@@ -36,6 +37,11 @@ bench:
 		echo "== bench $$b"; \
 		$(CARGO) bench --bench $$b || exit 1; \
 	done
+
+# Refresh the checked-in perf baseline the CI gate compares against
+# (quick mode matches what CI runs; commit the updated BENCH_perf.json).
+bench-perf:
+	$(CARGO) bench --bench perf_hotpath -- --quick --json BENCH_perf.json
 
 lint:
 	$(CARGO) fmt --all --check

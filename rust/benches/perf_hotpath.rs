@@ -6,7 +6,14 @@
 //!  * simulator          — >= 100k events/s;
 //!  * fluid gain query   — O(1), tens of ns.
 //!
-//! Regenerate with:  cargo bench --bench perf_hotpath
+//! Usage:
+//!   cargo bench --bench perf_hotpath                      # human report
+//!   cargo bench --bench perf_hotpath -- --quick           # CI-sized run
+//!   cargo bench --bench perf_hotpath -- --json PATH       # also emit JSON
+//!
+//! `--json` writes the machine-readable record the CI perf gate compares
+//! against the checked-in baseline (`BENCH_perf.json` at the repo root;
+//! refresh with `make bench-perf` and commit the result).
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -14,7 +21,7 @@ use std::time::Instant;
 use epara::allocator::{Allocator, Overrides};
 use epara::cluster::{EdgeCloud, GpuSpec};
 use epara::core::{Request, RequestId, ServerId, ServiceId};
-use epara::handler::{decide, HandlerConfig, LocalCapacity, StateView};
+use epara::handler::{decide_with, HandlerConfig, LocalCapacity, OffloadScratch, StateView};
 use epara::placement::{sssp, FluidEval, PhiEval, PlacementItem};
 use epara::profile::zoo;
 use epara::sim::{simulate, PolicyConfig, SimConfig};
@@ -40,6 +47,7 @@ impl StateView for FlatView {
     fn slo_ms(&self, _: ServiceId) -> f64 { 500.0 }
 }
 
+/// Mean decide latency (ms) at `n` servers, steady-state scratch reuse.
 fn bench_handler(n: usize) -> f64 {
     let view = FlatView { n, theo: (0..n).map(|i| 1.0 + (i % 5) as f64).collect() };
     let req = Request {
@@ -48,30 +56,93 @@ fn bench_handler(n: usize) -> f64 {
     };
     let cfg = HandlerConfig::default();
     let mut rng = Rng::new(3);
+    let mut scratch = OffloadScratch::new();
     let reps = if n >= 10_000 { 200 } else { 5000 };
     let t0 = Instant::now();
     for _ in 0..reps {
-        let _ = decide(&req, ServerId(0), 1.0, &view, &cfg, &mut rng);
+        let _ = decide_with(&req, ServerId(0), 1.0, &view, &cfg, &mut rng, &mut scratch);
     }
     t0.elapsed().as_secs_f64() * 1000.0 / reps as f64
 }
 
+/// Resolve a `--json` path: cargo runs bench binaries with cwd set to the
+/// *package* root (rust/), but the baseline and the CI gate live at the
+/// workspace root — so relative paths are anchored there.
+fn resolve_json_path(path: &str) -> std::path::PathBuf {
+    let p = std::path::Path::new(path);
+    if p.is_absolute() {
+        p.to_path_buf()
+    } else {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(p)
+    }
+}
+
+/// Machine-readable record (the CI perf gate's schema).
+#[derive(Default)]
+struct PerfRecord {
+    quick: bool,
+    handler_decide_ns_10k: f64,
+    spf_solve_ms_1k: f64,
+    spf_solve_ms_10k: f64,
+    fluid_gain_ns: f64,
+    sim_requests_per_sec: f64,
+    events_per_sec: f64,
+}
+
+impl PerfRecord {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"schema\": 1,\n  \"provisional\": false,\n  \"quick\": {},\n  \
+             \"handler_decide_ns_10k\": {:.1},\n  \"spf_solve_ms_1k\": {:.3},\n  \
+             \"spf_solve_ms_10k\": {:.3},\n  \"fluid_gain_ns\": {:.1},\n  \
+             \"sim_requests_per_sec\": {:.1},\n  \"events_per_sec\": {:.1}\n}}\n",
+            self.quick,
+            self.handler_decide_ns_10k,
+            self.spf_solve_ms_1k,
+            self.spf_solve_ms_10k,
+            self.fluid_gain_ns,
+            self.sim_requests_per_sec,
+            self.events_per_sec,
+        )
+    }
+}
+
 fn main() {
-    println!("## L3 hot-path microbenchmarks\n");
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let mut rec = PerfRecord { quick, ..Default::default() };
+
+    println!("## L3 hot-path microbenchmarks{}\n", if quick { " (quick)" } else { "" });
 
     println!("handler decision latency (paper: <20 ms @10k servers):");
-    for n in [10usize, 100, 1000, 10_000] {
-        println!("  {n:>6} servers: {:>10.4} ms/decision", bench_handler(n));
+    let handler_sizes: &[usize] = if quick { &[100, 10_000] } else { &[10, 100, 1000, 10_000] };
+    for &n in handler_sizes {
+        let ms = bench_handler(n);
+        println!("  {n:>6} servers: {ms:>10.4} ms/decision");
+        if n == 10_000 {
+            rec.handler_decide_ns_10k = ms * 1e6;
+        }
     }
 
     println!("\nplacement solve (Fig 17c target <200 ms @10k servers):");
     let table = zoo::paper_zoo();
+    // quick mode shortens the trace, not the server counts — the gated
+    // numbers stay at the same scale points
+    let place_duration_ms = if quick { 2_000.0 } else { 10_000.0 };
     for n in [100usize, 1000, 10_000] {
+        if quick && n == 100 {
+            continue;
+        }
         let cloud = EdgeCloud::large_scale(n);
         let spec = WorkloadSpec {
             rps: 20.0 * n as f64,
             streams: (4 * n).min(40_000),
-            duration_ms: 10_000.0,
+            duration_ms: place_duration_ms,
             ..Default::default()
         };
         let reqs = generate(&spec, &table, &cloud);
@@ -88,13 +159,18 @@ fn main() {
             .collect();
         let t0 = Instant::now();
         let mut eval =
-            FluidEval::from_requests(&table, &allocs, &cloud, &reqs, 10_000.0);
+            FluidEval::from_requests(&table, &allocs, &cloud, &reqs, place_duration_ms);
         let build_ms = t0.elapsed().as_secs_f64() * 1000.0;
         let t0 = Instant::now();
         let placement = sssp(&[], &services, n, &mut eval);
         let solve_ms = t0.elapsed().as_secs_f64() * 1000.0;
         println!("  {n:>6} servers: build {build_ms:>8.1} ms, solve \
                   {solve_ms:>8.1} ms, {} items", placement.len());
+        match n {
+            1000 => rec.spf_solve_ms_1k = solve_ms,
+            10_000 => rec.spf_solve_ms_10k = solve_ms,
+            _ => {}
+        }
 
         // fluid gain query cost
         let item = PlacementItem { service: services[0], server: ServerId(0) };
@@ -106,21 +182,25 @@ fn main() {
         }
         let ns = t0.elapsed().as_secs_f64() * 1e9 / reps as f64;
         println!("          gain query: {ns:.0} ns (acc {acc:.1})");
+        if n == 10_000 {
+            rec.fluid_gain_ns = ns;
+        }
     }
 
     println!("\nsimulator event throughput:");
     let cloud = EdgeCloud::testbed();
+    let sim_duration_ms = if quick { 15_000.0 } else { 30_000.0 };
     let spec = WorkloadSpec {
         mix: Mix::Production(0),
         rps: 400.0,
-        duration_ms: 30_000.0,
+        duration_ms: sim_duration_ms,
         ..Default::default()
     };
     let reqs = generate(&spec, &table, &cloud);
     let n_reqs = reqs.len();
     let cfg = SimConfig {
         policy: PolicyConfig::epara(),
-        duration_ms: 30_000.0,
+        duration_ms: sim_duration_ms,
         ..Default::default()
     };
     let t0 = Instant::now();
@@ -128,7 +208,15 @@ fn main() {
     let wall = t0.elapsed().as_secs_f64();
     // every request generates >= 2 events (arrive + finish) + hops
     let events = (m.offered * 2) as f64 * (1.0 + m.mean_offloads());
+    rec.sim_requests_per_sec = n_reqs as f64 / wall;
+    rec.events_per_sec = events / wall;
     println!("  {n_reqs} requests / {wall:.3} s wall = {:.0} req/s, \
               ~{:.0} events/s",
-             n_reqs as f64 / wall, events / wall);
+             rec.sim_requests_per_sec, rec.events_per_sec);
+
+    if let Some(path) = json_path {
+        let out = resolve_json_path(&path);
+        std::fs::write(&out, rec.to_json()).expect("write bench JSON");
+        println!("\nwrote {}", out.display());
+    }
 }

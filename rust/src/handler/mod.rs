@@ -89,10 +89,26 @@ pub fn idle_goodput(view: &dyn StateView, server: ServerId, service: ServiceId) 
         .max(0.0)
 }
 
+/// Reusable scratch for [`decide_with`]: the Eq. (1) candidate weight
+/// buffer.  Holding one instance across a decision loop keeps the handler
+/// allocation-free in steady state — the buffer is cleared and refilled per
+/// request but its capacity is reused.
+#[derive(Debug, Default)]
+pub struct OffloadScratch {
+    weights: Vec<f64>,
+}
+
+impl OffloadScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// One §3.2 handling step for request `req` arriving at server `at`.
 ///
-/// `now_ms` is the current virtual/wall time; `rng` drives the Eq. (1)
-/// probabilistic draw (deterministic under a seed).
+/// Convenience wrapper over [`decide_with`] that allocates a fresh scratch
+/// buffer — fine for tests and one-shot calls; event loops should hold an
+/// [`OffloadScratch`] and call [`decide_with`] directly.
 pub fn decide(
     req: &Request,
     at: ServerId,
@@ -100,6 +116,23 @@ pub fn decide(
     view: &dyn StateView,
     cfg: &HandlerConfig,
     rng: &mut Rng,
+) -> Decision {
+    decide_with(req, at, now_ms, view, cfg, rng, &mut OffloadScratch::new())
+}
+
+/// One §3.2 handling step for request `req` arriving at server `at`.
+///
+/// `now_ms` is the current virtual/wall time; `rng` drives the Eq. (1)
+/// probabilistic draw (deterministic under a seed); `scratch` is the
+/// caller-owned weight buffer reused across calls.
+pub fn decide_with(
+    req: &Request,
+    at: ServerId,
+    now_ms: f64,
+    view: &dyn StateView,
+    cfg: &HandlerConfig,
+    rng: &mut Rng,
+    scratch: &mut OffloadScratch,
 ) -> Decision {
     // 1. timeout check
     let slo = view.slo_ms(req.service);
@@ -123,7 +156,8 @@ pub fn decide(
     // candidate destinations: every other server not already on the path
     // whose queued compute fits t_n + SLO (Eq. 1's feasibility filter)
     let n = view.n_servers();
-    let mut weights = vec![0.0f64; n];
+    scratch.weights.clear();
+    scratch.weights.resize(n, 0.0);
     let mut any = false;
     for m in 0..n {
         let mid = ServerId(m as u32);
@@ -136,14 +170,14 @@ pub fn decide(
         }
         let w = idle_goodput(view, mid, req.service);
         if w > 0.0 {
-            weights[m] = w;
+            scratch.weights[m] = w;
             any = true;
         }
     }
     if !any {
         return Decision::ResourceInsufficient;
     }
-    match rng.weighted_index(&weights) {
+    match rng.weighted_index(&scratch.weights) {
         Some(m) => Decision::Offload(ServerId(m as u32)),
         None => Decision::ResourceInsufficient,
     }
@@ -284,6 +318,24 @@ mod tests {
         let d = decide(&req(0, vec![]), ServerId(0), 1.0, &view,
                        &HandlerConfig::default(), &mut Rng::new(1));
         assert_eq!(d, Decision::ResourceInsufficient);
+    }
+
+    #[test]
+    fn decide_with_reused_scratch_matches_fresh() {
+        let mut view = Mock { n: 3, slo: 100.0, ..Default::default() };
+        view.theo.insert(1, 9.0);
+        view.theo.insert(2, 6.0);
+        let cfg = HandlerConfig::default();
+        let mut scratch = OffloadScratch::new();
+        for seed in 0..10 {
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            let fresh = decide(&req(0, vec![]), ServerId(0), 1.0, &view, &cfg, &mut a);
+            let reused = decide_with(
+                &req(0, vec![]), ServerId(0), 1.0, &view, &cfg, &mut b, &mut scratch,
+            );
+            assert_eq!(fresh, reused, "seed {seed}");
+        }
     }
 
     #[test]

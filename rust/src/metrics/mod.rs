@@ -106,6 +106,38 @@ impl Metrics {
         self.offload_counts.mean()
     }
 
+    /// Canonical bit-exact fingerprint of a run: every outcome counter plus
+    /// the f64 accumulators rendered as raw bits, per-service credits
+    /// sorted by id.  The determinism golden test compares this across
+    /// engine refactors to prove data-structure swaps are
+    /// semantics-preserving — any drift in goodput accounting, outcome
+    /// counts, or per-service credit flips a hex digit.
+    pub fn fingerprint(&self) -> String {
+        use std::fmt::Write as _;
+        let mut per: Vec<(u32, u64)> = self
+            .per_service
+            .iter()
+            .map(|(s, v)| (s.0, v.to_bits()))
+            .collect();
+        per.sort_unstable();
+        let mut out = format!(
+            "offered={} satisfied={:016x} completed={} partial={} timeout={} \
+             offload_exceeded={} resource_insufficient={} gpu_busy={:016x}",
+            self.offered,
+            self.satisfied.to_bits(),
+            self.completed,
+            self.partial,
+            self.timeout,
+            self.offload_exceeded,
+            self.resource_insufficient,
+            self.gpu_busy_ms.to_bits(),
+        );
+        for (s, v) in per {
+            let _ = write!(out, " svc{s}={v:016x}");
+        }
+        out
+    }
+
     /// One-line report for benches.
     pub fn report(&mut self, label: &str) -> String {
         format!(
@@ -151,6 +183,26 @@ mod tests {
         m.vram_capacity_mb_ms = 100.0;
         assert!((m.gpu_utilization() - 0.95).abs() < 1e-12);
         assert!((m.vram_utilization() - 0.98).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fingerprint_is_order_independent_and_bit_exact() {
+        let build = |order: &[u32]| {
+            let mut m = Metrics::new();
+            for &s in order {
+                m.record(ServiceId(s), &Outcome::Completed { latency_ms: s as f64 }, 0);
+            }
+            m
+        };
+        let a = build(&[3, 1, 2]);
+        let b = build(&[2, 3, 1]);
+        // same multiset of outcomes → same fingerprint (per-service entries
+        // are sorted, not hash-ordered)
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let mut c = build(&[3, 1, 2]);
+        c.record(ServiceId(1), &Outcome::Partial { satisfied: 1.0, total: 3 }, 1);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        assert!(a.fingerprint().contains("svc1="));
     }
 
     #[test]

@@ -24,10 +24,15 @@ use crate::allocator::Allocation;
 use crate::cluster::EdgeCloud;
 use crate::core::{Request, ServiceId};
 use crate::profile::ProfileTable;
+use crate::util::grid::ServiceIndex;
 
 use super::{PhiEval, PlacementItem, EPSILON_SERVER};
 
-/// Per-service incremental state.
+/// Per-service incremental state, stored densely (one slot per indexed
+/// service).  The static per-replica parameters (footprint, rate) are
+/// resolved from the allocation tables once at construction so `gain`/
+/// `feasible`/`push` never touch a `HashMap` — they are the inner loop of
+/// the lazy greedy at 10k servers.
 #[derive(Clone, Debug, Default)]
 struct SvcState {
     /// Demand rate (req/s) per origin server.
@@ -41,12 +46,21 @@ struct SvcState {
     total_cap: f64,
     /// Cached contribution to φ.
     contribution: f64,
+    /// Whether the allocator produced an operator config for this service
+    /// (services without one are never feasible to place).
+    has_alloc: bool,
+    /// Compute-slot footprint of one MPS slice (GPUs × slice fraction).
+    foot_slots: f64,
+    /// VRAM footprint of one slice across its GPUs (MB).
+    foot_vram: f64,
+    /// Rate (req/s) one slice replica adds (all DP groups), undiscounted.
+    rate: f64,
 }
 
 /// The analytic evaluator.
 pub struct FluidEval<'a> {
+    #[allow(dead_code)]
     table: &'a ProfileTable,
-    allocs: &'a HashMap<ServiceId, Allocation>,
     n: usize,
     /// Per-server compute slots (GPUs) and VRAM (MB): capacity / used.
     slots_cap: Vec<f64>,
@@ -56,7 +70,10 @@ pub struct FluidEval<'a> {
     /// ε-server (cross-server) resources consumed.
     eps_slots_used: f64,
     eps_vram_used: f64,
-    svc: HashMap<ServiceId, SvcState>,
+    /// Dense index over every service that can appear in a query: the
+    /// demanded (request) services ∪ the allocated services.
+    svc_index: ServiceIndex,
+    svc: Vec<SvcState>,
     theta: Vec<PlacementItem>,
     phi: f64,
     /// Offload efficiency η.
@@ -80,19 +97,60 @@ impl<'a> FluidEval<'a> {
         requests: &[Request],
         duration_ms: f64,
     ) -> Self {
+        Self::from_demand(table, allocs, cloud, requests.iter(), duration_ms)
+    }
+
+    /// Build from any request iterator (the simulator's placement rounds
+    /// feed slab indices through this without cloning requests).
+    pub fn from_demand<'r>(
+        table: &'a ProfileTable,
+        allocs: &'a HashMap<ServiceId, Allocation>,
+        cloud: &EdgeCloud,
+        requests: impl Iterator<Item = &'r Request>,
+        duration_ms: f64,
+    ) -> Self {
         let n = cloud.n_servers();
         let headroom = 1.6;
-        let mut svc: HashMap<ServiceId, SvcState> = HashMap::new();
-        for r in requests {
-            let st = svc.entry(r.service).or_insert_with(|| SvcState {
-                demand: vec![0.0; n],
-                cap: vec![0.0; n],
-                ..Default::default()
-            });
-            // one request → req/s contribution, inflated by the
-            // peak-to-mean headroom factor
-            let w = headroom * 1000.0 / duration_ms;
-            st.demand[r.origin.0 as usize] += w;
+        // Cold path (one pass per placement solve): collect the demand
+        // pairs once, then build the dense index and arrays.
+        let pairs: Vec<(ServiceId, u32)> =
+            requests.map(|r| (r.service, r.origin.0)).collect();
+        let svc_index = ServiceIndex::new(
+            pairs.iter().map(|p| p.0).chain(allocs.keys().copied()),
+        );
+        let mut svc: Vec<SvcState> = svc_index
+            .iter()
+            .map(|(_, id)| {
+                let mut st = SvcState {
+                    demand: vec![0.0; n],
+                    cap: vec![0.0; n],
+                    ..Default::default()
+                };
+                if let Some(al) = allocs.get(&id) {
+                    let spec = table.spec(id);
+                    let gpus = al.ops.gpus() as f64;
+                    // no-MT schemes (Galaxy/DeTransformer) claim whole GPUs
+                    let slice = if al.exclusive_gpu {
+                        1.0
+                    } else {
+                        spec.compute_slice.min(1.0)
+                    };
+                    st.has_alloc = true;
+                    st.foot_slots = gpus * slice;
+                    st.foot_vram = table.vram_per_gpu(id, al.ops.mp) * gpus;
+                    st.rate = table.request_rate(id, al.ops.bs, al.ops.mp, 1)
+                        * al.ops.dp as f64;
+                }
+                st
+            })
+            .collect();
+        // one request → req/s contribution, inflated by the peak-to-mean
+        // headroom factor
+        let w = headroom * 1000.0 / duration_ms;
+        for (service, origin) in pairs {
+            let li = svc_index.get(service).expect("indexed above");
+            let st = &mut svc[li];
+            st.demand[origin as usize] += w;
             st.total_demand += w;
         }
         let slots_cap: Vec<f64> = cloud
@@ -107,7 +165,6 @@ impl<'a> FluidEval<'a> {
             .collect();
         FluidEval {
             table,
-            allocs,
             n,
             slots_used: vec![0.0; n],
             vram_used: vec![0.0; n],
@@ -115,39 +172,13 @@ impl<'a> FluidEval<'a> {
             vram_cap,
             eps_slots_used: 0.0,
             eps_vram_used: 0.0,
+            svc_index,
             svc,
             theta: Vec::new(),
             phi: 0.0,
             offload_eff: 0.9,
             eps_discount: 0.7,
             demand_headroom: headroom,
-        }
-    }
-
-    /// Resource footprint of ONE MPS slice of the deployment: (compute
-    /// slots, VRAM MB).  Placements are slice-granular — the §3.1 MT
-    /// packing *emerges* from the greedy placing multiple slices (of the
-    /// same or different services) on one GPU, exactly like MPS.
-    fn footprint(&self, service: ServiceId) -> (f64, f64) {
-        let al = &self.allocs[&service];
-        let spec = self.table.spec(service);
-        let gpus = al.ops.gpus() as f64;
-        // no-MT schemes (Galaxy/DeTransformer) claim whole GPUs
-        let slice = if al.exclusive_gpu { 1.0 } else { spec.compute_slice.min(1.0) };
-        let slots = gpus * slice;
-        let vram = self.table.vram_per_gpu(service, al.ops.mp) * gpus;
-        (slots, vram)
-    }
-
-    /// Rate (req/s) one slice replica adds (all DP groups).
-    fn rate(&self, service: ServiceId, eps: bool) -> f64 {
-        let al = &self.allocs[&service];
-        let base = self.table.request_rate(service, al.ops.bs, al.ops.mp, 1)
-            * al.ops.dp as f64;
-        if eps {
-            base * self.eps_discount
-        } else {
-            base
         }
     }
 
@@ -176,7 +207,10 @@ impl<'a> FluidEval<'a> {
 
     /// Demand rate seen for a service (for tests / reports).
     pub fn demand_of(&self, service: ServiceId) -> f64 {
-        self.svc.get(&service).map(|s| s.total_demand).unwrap_or(0.0)
+        self.svc_index
+            .get(service)
+            .map(|li| self.svc[li].total_demand)
+            .unwrap_or(0.0)
     }
 }
 
@@ -186,12 +220,12 @@ impl PhiEval for FluidEval<'_> {
     }
 
     fn gain(&mut self, item: PlacementItem) -> f64 {
-        let st = match self.svc.get(&item.service) {
-            Some(s) => s,
-            None => return 0.0, // no demand for this service this period
+        let st = match self.svc_index.get(item.service) {
+            Some(li) if self.svc[li].total_demand > 0.0 => &self.svc[li],
+            _ => return 0.0, // no demand for this service this period
         };
         let eps = item.server == EPSILON_SERVER;
-        let r = self.rate(item.service, eps);
+        let r = if eps { st.rate * self.eps_discount } else { st.rate };
         let (new_overlap, new_total) = if eps {
             (st.local_overlap, st.total_cap + r)
         } else {
@@ -211,10 +245,14 @@ impl PhiEval for FluidEval<'_> {
     }
 
     fn feasible(&self, item: PlacementItem) -> bool {
-        if !self.allocs.contains_key(&item.service) {
+        let st = match self.svc_index.get(item.service) {
+            Some(li) => &self.svc[li],
+            None => return false,
+        };
+        if !st.has_alloc {
             return false;
         }
-        let (s, v) = self.footprint(item.service);
+        let (s, v) = (st.foot_slots, st.foot_vram);
         if item.server == EPSILON_SERVER {
             let (fs, fv) = self.eps_free();
             s <= fs + 1e-9 && v <= fv + 1e-9
@@ -229,22 +267,21 @@ impl PhiEval for FluidEval<'_> {
     }
 
     fn push(&mut self, item: PlacementItem) {
-        let (s, v) = self.footprint(item.service);
         let eps = item.server == EPSILON_SERVER;
-        let r = self.rate(item.service, eps);
-        if eps {
-            self.eps_slots_used += s;
-            self.eps_vram_used += v;
-        } else {
-            let n = item.server.0 as usize;
-            self.slots_used[n] += s;
-            self.vram_used[n] += v;
-        }
-        if let Some(st) = self.svc.get_mut(&item.service) {
+        if let Some(li) = self.svc_index.get(item.service) {
+            let eff = self.offload_eff;
+            let eps_discount = self.eps_discount;
+            let st = &mut self.svc[li];
+            let (s, v) = (st.foot_slots, st.foot_vram);
+            let r = if eps { st.rate * eps_discount } else { st.rate };
             if eps {
+                self.eps_slots_used += s;
+                self.eps_vram_used += v;
                 st.total_cap += r;
             } else {
                 let n = item.server.0 as usize;
+                self.slots_used[n] += s;
+                self.vram_used[n] += v;
                 let d = st.demand[n];
                 let c = st.cap[n];
                 st.local_overlap += (c + r).min(d) - c.min(d);
@@ -254,8 +291,7 @@ impl PhiEval for FluidEval<'_> {
             let old = st.contribution;
             let unserved = (st.total_demand - st.local_overlap).max(0.0);
             let idle = (st.total_cap - st.local_overlap).max(0.0);
-            st.contribution =
-                st.local_overlap + self.offload_eff * unserved.min(idle);
+            st.contribution = st.local_overlap + eff * unserved.min(idle);
             self.phi += st.contribution - old;
         }
         self.theta.push(item);
@@ -272,8 +308,8 @@ impl PhiEval for FluidEval<'_> {
     ) -> Option<Vec<PlacementItem>> {
         let mut out = Vec::new();
         for &l in services {
-            if let Some(st) = self.svc.get(&l) {
-                for (n, d) in st.demand.iter().enumerate() {
+            if let Some(li) = self.svc_index.get(l) {
+                for (n, d) in self.svc[li].demand.iter().enumerate() {
                     if *d > 0.0 {
                         out.push(PlacementItem {
                             service: l,

@@ -13,8 +13,9 @@
 //!   guarantee, and the reason Fig. 17c's placement latency stays sub-
 //!   200 ms at 10k servers.
 
-use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+
+use crate::util::heap::{Keyed, MaxScoreKey};
 
 use super::{PhiEval, PlacementItem};
 
@@ -67,29 +68,16 @@ pub fn spf_greedy<E: PhiEval>(
     }
 }
 
-#[derive(PartialEq)]
-struct HeapEntry {
-    gain: f64,
+/// Lazy-greedy heap payload: the candidate plus the Θ size when its gain
+/// was computed (staleness marker).  Ordering (max-heap by gain) comes from
+/// the shared [`Keyed`]/[`MaxScoreKey`] helper in `util::heap`.
+#[derive(Clone, Copy)]
+struct LazyCand {
     item: PlacementItem,
-    /// Θ size when `gain` was computed (staleness marker).
     epoch: usize,
 }
 
-impl Eq for HeapEntry {}
-
-impl PartialOrd for HeapEntry {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for HeapEntry {
-    fn cmp(&self, other: &Self) -> Ordering {
-        self.gain
-            .partial_cmp(&other.gain)
-            .unwrap_or(Ordering::Equal)
-    }
-}
+type LazyEntry = Keyed<MaxScoreKey, LazyCand>;
 
 /// Accelerated lazy greedy over a *set* candidate pool (repeatable items).
 pub fn spf_lazy<E: PhiEval>(candidates: &[PlacementItem], eval: &mut E) {
@@ -98,25 +86,29 @@ pub fn spf_lazy<E: PhiEval>(candidates: &[PlacementItem], eval: &mut E) {
     // marginal gain, and submodularity guarantees their gain can never
     // become positive later.  This keeps Fig. 17c under the paper's
     // 200 ms envelope (measured: 295 ms → ~120 ms at 10k servers).
-    let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::with_capacity(candidates.len());
+    let mut heap: BinaryHeap<LazyEntry> = BinaryHeap::with_capacity(candidates.len());
     for &item in candidates {
         if eval.feasible(item) {
             let gain = eval.gain(item);
             if gain > 1e-12 {
-                heap.push(HeapEntry { gain, item, epoch: usize::MAX });
+                heap.push(Keyed::new(
+                    MaxScoreKey(gain),
+                    LazyCand { item, epoch: usize::MAX },
+                ));
             }
         }
     }
 
     let mut epoch = 0usize;
     while let Some(top) = heap.pop() {
-        if !eval.feasible(top.item) {
+        let item = top.value.item;
+        if !eval.feasible(item) {
             continue; // resource-exhausted candidate: drop permanently
         }
-        let fresh = if top.epoch == epoch {
-            top.gain
+        let fresh = if top.value.epoch == epoch {
+            top.key.0
         } else {
-            eval.gain(top.item)
+            eval.gain(item)
         };
         if fresh <= 1e-12 {
             // submodularity: every other stale entry is an upper bound that
@@ -125,26 +117,26 @@ pub fn spf_lazy<E: PhiEval>(candidates: &[PlacementItem], eval: &mut E) {
             // *stale* positive entries whose fresh value is positive for a
             // different item.  Re-insert only if this entry was stale and
             // the heap still has entries promising more.
-            if top.epoch != epoch && heap.peek().is_some_and(|n| n.gain > 1e-12) {
-                heap.push(HeapEntry { gain: fresh, item: top.item, epoch });
+            if top.value.epoch != epoch && heap.peek().is_some_and(|n| n.key.0 > 1e-12) {
+                heap.push(Keyed::new(MaxScoreKey(fresh), LazyCand { item, epoch }));
                 continue;
             }
             break;
         }
         // is the freshly-computed gain still the best available?
-        if heap.peek().is_none_or(|next| fresh >= next.gain) {
-            eval.push(top.item);
+        if heap.peek().is_none_or(|next| fresh >= next.key.0) {
+            eval.push(item);
             epoch += 1;
             // set semantics: the item stays available — re-insert with its
             // post-push gain as the new upper bound
-            if eval.feasible(top.item) {
-                let g = eval.gain(top.item);
+            if eval.feasible(item) {
+                let g = eval.gain(item);
                 if g > 1e-12 {
-                    heap.push(HeapEntry { gain: g, item: top.item, epoch });
+                    heap.push(Keyed::new(MaxScoreKey(g), LazyCand { item, epoch }));
                 }
             }
         } else {
-            heap.push(HeapEntry { gain: fresh, item: top.item, epoch });
+            heap.push(Keyed::new(MaxScoreKey(fresh), LazyCand { item, epoch }));
         }
     }
 }

@@ -296,9 +296,16 @@ impl HttpResponse {
         }
     }
 
-    /// Serialize onto the wire with explicit framing.
-    pub fn write_to<W: Write>(&self, w: &mut W, keep_alive: bool) -> std::io::Result<()> {
-        let head = format!(
+    /// Serialize head + body into `out` (cleared first).  Writing into a
+    /// caller-owned buffer lets the connection loop reuse one allocation
+    /// across every response on a keep-alive connection instead of building
+    /// a fresh `String` per request.
+    pub fn serialize_into(&self, out: &mut Vec<u8>, keep_alive: bool) {
+        out.clear();
+        // write! into a Vec<u8> cannot fail (io::Write for Vec is
+        // infallible); the head is formatted directly into `out`.
+        let _ = write!(
+            out,
             "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
             self.status,
             reason(self.status),
@@ -306,9 +313,28 @@ impl HttpResponse {
             self.body.len(),
             if keep_alive { "keep-alive" } else { "close" },
         );
-        w.write_all(head.as_bytes())?;
-        w.write_all(&self.body)?;
+        out.extend_from_slice(&self.body);
+    }
+
+    /// Serialize through `buf` (reused across requests on a connection) and
+    /// put the whole response on the wire in one write.
+    pub fn write_buffered<W: Write>(
+        &self,
+        w: &mut W,
+        keep_alive: bool,
+        buf: &mut Vec<u8>,
+    ) -> std::io::Result<()> {
+        self.serialize_into(buf, keep_alive);
+        w.write_all(buf)?;
         w.flush()
+    }
+
+    /// Serialize onto the wire with explicit framing.  Convenience wrapper
+    /// allocating a one-shot buffer — tests and single responses; the
+    /// connection loop uses [`HttpResponse::write_buffered`].
+    pub fn write_to<W: Write>(&self, w: &mut W, keep_alive: bool) -> std::io::Result<()> {
+        let mut buf = Vec::with_capacity(128 + self.body.len());
+        self.write_buffered(w, keep_alive, &mut buf)
     }
 }
 
@@ -401,5 +427,22 @@ mod tests {
         let (status, body) = read_response(&mut BufReader::new(&wire[..])).unwrap();
         assert_eq!(status, 429);
         assert_eq!(body, resp.body);
+    }
+
+    #[test]
+    fn buffered_serialization_matches_write_to() {
+        // The reusable-buffer path must put byte-identical framing on the
+        // wire, including when the buffer is reused across responses of
+        // different sizes.
+        let big = HttpResponse::json(200, format!("{{\"pad\":\"{}\"}}", "x".repeat(512)));
+        let small = HttpResponse::text(404, "nope");
+        let mut buf = Vec::new();
+        for (resp, keep_alive) in [(&big, true), (&small, false), (&big, false)] {
+            let mut direct = Vec::new();
+            resp.write_to(&mut direct, keep_alive).unwrap();
+            let mut wire = Vec::new();
+            resp.write_buffered(&mut wire, keep_alive, &mut buf).unwrap();
+            assert_eq!(wire, direct);
+        }
     }
 }

@@ -240,6 +240,10 @@ fn handle_connection(stream: TcpStream, shared: &Shared, stop: &AtomicBool) {
     };
     let mut reader = BufReader::new(stream);
     let mut idle_polls = 0u32;
+    // Per-connection response buffer: every response on this connection is
+    // serialized into it (head + body, one write) instead of allocating a
+    // fresh String/Vec per request.
+    let mut out_buf: Vec<u8> = Vec::with_capacity(1024);
 
     loop {
         if stop.load(Ordering::SeqCst) || signal_received() {
@@ -250,7 +254,9 @@ fn handle_connection(stream: TcpStream, shared: &Shared, stop: &AtomicBool) {
                 idle_polls = 0;
                 let keep_alive = req.keep_alive();
                 let resp = router::handle(shared, &req);
-                if resp.write_to(&mut writer, keep_alive).is_err() || !keep_alive {
+                if resp.write_buffered(&mut writer, keep_alive, &mut out_buf).is_err()
+                    || !keep_alive
+                {
                     return;
                 }
             }
@@ -271,7 +277,7 @@ fn handle_connection(stream: TcpStream, shared: &Shared, stop: &AtomicBool) {
                         status,
                         format!("{{\"error\":\"{}\"}}", http::reason(status)),
                     );
-                    let _ = resp.write_to(&mut writer, false);
+                    let _ = resp.write_buffered(&mut writer, false, &mut out_buf);
                 }
                 return;
             }

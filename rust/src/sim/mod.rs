@@ -12,7 +12,6 @@
 //! Policies (EPARA + the six baselines) parameterize the same engine via
 //! [`PolicyConfig`] so comparisons isolate scheduling, not bookkeeping.
 
-use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use crate::allocator::{Allocation, Allocator, Overrides};
@@ -21,12 +20,14 @@ use crate::core::{
     DeviceId, Outcome, Request, Sensitivity, ServerId, ServiceId,
 };
 use crate::handler::{
-    decide, Decision, HandlerConfig, LocalCapacity, StateView,
+    decide_with, Decision, HandlerConfig, LocalCapacity, OffloadScratch, StateView,
 };
 use crate::metrics::Metrics;
 use crate::placement::{sssp, FluidEval, PhiEval, PlacementItem, EPSILON_SERVER};
 use crate::profile::ProfileTable;
 use crate::sync::{SyncConfig, SyncNet};
+use crate::util::grid::{ServiceIndex, StateGrid};
+use crate::util::heap::{Keyed, MinTimeKey};
 use crate::util::Rng;
 
 pub mod policy;
@@ -39,45 +40,30 @@ pub use policy::{OffloadMode, PlacementMode, PolicyConfig};
 // events
 // --------------------------------------------------------------------------
 
+/// High bit of `Finish::dep` marks a device-backed deployment (replaces the
+/// old `usize::MAX - dep` encoding and keeps the payload at 4 bytes).
+const DEVICE_FLAG: u32 = 1 << 31;
+
+/// Event payloads are index-sized: requests live in a slab owned by the
+/// simulator and events carry `u32` slab indices, so pushing an event never
+/// allocates (the old encoding boxed a `Request` clone per arrival/hop).
 #[derive(Debug)]
 enum EventKind {
-    /// Request reaches a server (user arrival or offload landing).
-    Arrive(Box<Request>, ServerId),
-    /// A deployment finishes its current job.
-    Finish { server: ServerId, dep: usize },
+    /// Request (slab index) reaches a server (user arrival or offload
+    /// landing).
+    Arrive { req: u32, at: ServerId },
+    /// A deployment finishes its current job (`dep` may carry
+    /// [`DEVICE_FLAG`]).
+    Finish { server: ServerId, dep: u32 },
     /// Periodic sync round completes.
     SyncRound,
     /// Periodic service re-placement (§3.4 coarse granularity).
     PlacementRound,
 }
 
-struct Event {
-    at_ms: f64,
-    seq: u64,
-    kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.at_ms == other.at_ms && self.seq == other.seq
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap by time (then seq for determinism)
-        other
-            .at_ms
-            .partial_cmp(&self.at_ms)
-            .unwrap_or(Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
-    }
-}
+/// Min-heap ordering (time, then seq for determinism) comes from the shared
+/// `util::heap` key types — see `MinTimeKey`.
+type Event = Keyed<MinTimeKey, EventKind>;
 
 // --------------------------------------------------------------------------
 // deployments: batch-amortized processors
@@ -115,7 +101,8 @@ struct Deployment {
     in_flight: u32,
     /// Sum of queued work (ms) — the §3.2 queued-compute signal.
     queued_ms: f64,
-    queue: VecDeque<Request>,
+    /// Waiting requests as slab indices (the slab owns the `Request`s).
+    queue: VecDeque<u32>,
 }
 
 impl Deployment {
@@ -160,7 +147,8 @@ struct SyncedEntry {
 // --------------------------------------------------------------------------
 
 struct SimView<'a> {
-    snap: &'a HashMap<(u32, u32), SyncedEntry>,
+    snap: &'a StateGrid<SyncedEntry>,
+    svc_index: &'a ServiceIndex,
     servers: &'a [SimServer],
     sync: &'a SyncNet,
     table: &'a ProfileTable,
@@ -172,8 +160,12 @@ struct SimView<'a> {
 }
 
 impl SimView<'_> {
+    #[inline]
     fn entry(&self, s: ServerId, l: ServiceId) -> SyncedEntry {
-        self.snap.get(&(s.0, l.0)).copied().unwrap_or_default()
+        match self.svc_index.get(l) {
+            Some(li) => *self.snap.get(s.0 as usize, li),
+            None => SyncedEntry::default(),
+        }
     }
 }
 
@@ -285,6 +277,12 @@ impl Default for SimConfig {
 }
 
 /// The simulator.
+///
+/// §Perf (DESIGN.md): all per-`(server, service)` state lives in dense
+/// [`StateGrid`] arenas addressed through a [`ServiceIndex`] built once at
+/// construction; the event loop is allocation-free in steady state —
+/// requests live in a slab, events carry `u32` indices, and the per-window
+/// accumulators are reused scratch vectors.
 pub struct Simulator<'a> {
     pub table: &'a ProfileTable,
     pub cloud: EdgeCloud,
@@ -292,19 +290,31 @@ pub struct Simulator<'a> {
     pub allocs: HashMap<ServiceId, Allocation>,
     pub placement: Vec<PlacementItem>,
     servers: Vec<SimServer>,
-    snap: HashMap<(u32, u32), SyncedEntry>,
+    /// Dense ServiceId → grid-column map over the trace's service universe.
+    svc_index: ServiceIndex,
+    /// Synced snapshot per (server, service).
+    snap: StateGrid<SyncedEntry>,
     sync: SyncNet,
     events: BinaryHeap<Event>,
     seq: u64,
     pub metrics: Metrics,
     rng: Rng,
-    /// Completed items per (server, service) since last sync (actual p).
-    window_done: HashMap<(u32, u32), f64>,
+    /// Completed credit per (server, service) since last sync (actual p).
+    window_done: StateGrid<f64>,
     last_sync_ms: f64,
     /// When the current placement was applied (0 = offline pre-placement).
     placement_applied_at_ms: f64,
-    /// Arrivals since the last placement round (the next round's R^T).
-    window_requests: Vec<Request>,
+    /// All requests of the run; events and queues refer to slab indices.
+    slab: Vec<Request>,
+    /// First-hop arrivals (slab indices) since the last placement round
+    /// (the next round's R^T).
+    window_requests: Vec<u32>,
+    /// Reusable per-service accumulators for snapshot/sync rounds.
+    scratch_theo: Vec<f64>,
+    scratch_queued: Vec<f64>,
+    scratch_seen: Vec<bool>,
+    /// Reusable Eq. (1) weight buffer for the handler.
+    offload_scratch: OffloadScratch,
 }
 
 impl<'a> Simulator<'a> {
@@ -396,20 +406,31 @@ impl<'a> Simulator<'a> {
         };
 
         let n = cloud.n_servers();
+        // Service universe of the run: every service in the trace (allocs
+        // and placement are derived from the same set).  Grid columns and
+        // the FluidEval index share this ordering.
+        let svc_index = ServiceIndex::new(services.iter().copied());
+        let ns = svc_index.len();
         let mut sim = Simulator {
             table,
             cloud,
             servers: (0..n).map(|_| SimServer::default()).collect(),
-            snap: HashMap::new(),
+            svc_index,
+            snap: StateGrid::new(n, ns),
             sync: SyncNet::new(n, cfg.sync),
             events: BinaryHeap::new(),
             seq: 0,
             metrics: Metrics::new(),
             rng: Rng::new(cfg.seed),
-            window_done: HashMap::new(),
+            window_done: StateGrid::new(n, ns),
             last_sync_ms: 0.0,
             placement_applied_at_ms: 0.0,
+            slab: Vec::new(),
             window_requests: Vec::new(),
+            scratch_theo: vec![0.0; ns],
+            scratch_queued: vec![0.0; ns],
+            scratch_seen: vec![false; ns],
+            offload_scratch: OffloadScratch::new(),
             allocs,
             placement: placement.clone(),
             cfg,
@@ -489,7 +510,9 @@ impl<'a> Simulator<'a> {
                 .min_by(|a, b| {
                     let va = self.table.spec(*a.0).vram_mb;
                     let vb = self.table.spec(*b.0).vram_mb;
-                    va.partial_cmp(&vb).unwrap()
+                    // tie-break on id: `allocs` iterates in hash order, and
+                    // equal-VRAM ties must not depend on it
+                    va.partial_cmp(&vb).unwrap().then(a.0.cmp(b.0))
                 });
             if let Some((&svc, al)) = candidate {
                 let slow = 1.0 / gpu.compute.max(1e-3);
@@ -523,33 +546,53 @@ impl<'a> Simulator<'a> {
     /// Fill the synced snapshot with theoretical rates (placement known
     /// cloud-wide after each placement round).
     fn prime_snapshot(&mut self) {
-        for (si, srv) in self.servers.iter().enumerate() {
-            let mut per_service: HashMap<u32, f64> = HashMap::new();
-            for d in &srv.deployments {
+        let ns = self.svc_index.len();
+        for si in 0..self.servers.len() {
+            self.scratch_theo[..ns].fill(0.0);
+            self.scratch_seen[..ns].fill(false);
+            for d in &self.servers[si].deployments {
                 if !d.retired {
-                    *per_service.entry(d.service.0).or_insert(0.0) += d.req_rate;
+                    if let Some(li) = self.svc_index.get(d.service) {
+                        self.scratch_theo[li] += d.req_rate;
+                        self.scratch_seen[li] = true;
+                    }
                 }
             }
-            for (svc, theo) in per_service {
-                self.snap.insert(
-                    (si as u32, svc),
-                    SyncedEntry { theoretical: theo, actual: 0.0, queued_ms: 0.0 },
-                );
+            for li in 0..ns {
+                if self.scratch_seen[li] {
+                    *self.snap.get_mut(si, li) = SyncedEntry {
+                        theoretical: self.scratch_theo[li],
+                        actual: 0.0,
+                        queued_ms: 0.0,
+                    };
+                }
             }
         }
     }
 
     fn push_event(&mut self, at_ms: f64, kind: EventKind) {
         self.seq += 1;
-        self.events.push(Event { at_ms, seq: self.seq, kind });
+        self.events
+            .push(Keyed::new(MinTimeKey { at_ms, seq: self.seq }, kind));
     }
 
     /// Run the trace to completion; returns final metrics.
+    ///
+    /// `requests` should be the same trace handed to [`Simulator::new`]
+    /// (placement demand and the service index are derived from it); the
+    /// vector is moved into the simulator's request slab unchanged.
     pub fn run(&mut self, requests: Vec<Request>) -> &mut Metrics {
-        for r in requests {
-            if r.arrival_ms <= self.cfg.duration_ms {
-                let origin = r.origin;
-                self.push_event(r.arrival_ms, EventKind::Arrive(Box::new(r), origin));
+        self.slab = requests;
+        for i in 0..self.slab.len() {
+            let (arrival, origin) = {
+                let r = &self.slab[i];
+                (r.arrival_ms, r.origin)
+            };
+            if arrival <= self.cfg.duration_ms {
+                self.push_event(
+                    arrival,
+                    EventKind::Arrive { req: i as u32, at: origin },
+                );
             }
         }
         let interval = self.cfg.sync.interval_ms;
@@ -559,9 +602,9 @@ impl<'a> Simulator<'a> {
         }
 
         while let Some(ev) = self.events.pop() {
-            let now = ev.at_ms;
-            match ev.kind {
-                EventKind::Arrive(req, at) => self.handle_arrival(*req, at, now),
+            let now = ev.key.at_ms;
+            match ev.value {
+                EventKind::Arrive { req, at } => self.handle_arrival(req, at, now),
                 EventKind::Finish { server, dep } => self.handle_finish(server, dep, now),
                 EventKind::SyncRound => {
                     self.run_sync_round(now);
@@ -584,15 +627,23 @@ impl<'a> Simulator<'a> {
         &mut self.metrics
     }
 
-    fn handle_arrival(&mut self, req: Request, at: ServerId, now: f64) {
-        if req.offloads == 0 && self.cfg.replacement_interval_ms.is_some() {
+    /// Consume the accumulated metrics without cloning (leaves empty
+    /// metrics behind; the simulator is done at this point).
+    pub fn take_metrics(&mut self) -> Metrics {
+        std::mem::take(&mut self.metrics)
+    }
+
+    fn handle_arrival(&mut self, req_idx: u32, at: ServerId, now: f64) {
+        let ri = req_idx as usize;
+        if self.slab[ri].offloads == 0 && self.cfg.replacement_interval_ms.is_some() {
             // first-hop arrivals feed the next placement round's R^T
-            self.window_requests.push(req.clone());
+            self.window_requests.push(req_idx);
         }
         let decision = match self.cfg.policy.offload {
             OffloadMode::Eq1 => {
                 let view = SimView {
                     snap: &self.snap,
+                    svc_index: &self.svc_index,
                     servers: &self.servers,
                     sync: &self.sync,
                     table: self.table,
@@ -601,57 +652,78 @@ impl<'a> Simulator<'a> {
                     allow_cross_server: self.cfg.policy.allow_cross_server,
                     allow_device: self.cfg.policy.allow_device,
                 };
-                decide(&req, at, now, &view, &self.cfg.handler, &mut self.rng)
+                decide_with(
+                    &self.slab[ri],
+                    at,
+                    now,
+                    &view,
+                    &self.cfg.handler,
+                    &mut self.rng,
+                    &mut self.offload_scratch,
+                )
             }
-            other => self.baseline_decide(&req, at, now, other),
+            other => self.baseline_decide(ri, at, now, other),
         };
 
+        let (service, offloads) = {
+            let r = &self.slab[ri];
+            (r.service, r.offloads)
+        };
         match decision {
             Decision::Timeout => {
-                self.metrics.record(req.service, &Outcome::Timeout, req.offloads)
+                self.metrics.record(service, &Outcome::Timeout, offloads)
             }
-            Decision::OffloadExceeded => self.metrics.record(
-                req.service,
-                &Outcome::OffloadExceeded,
-                req.offloads,
-            ),
+            Decision::OffloadExceeded => {
+                self.metrics
+                    .record(service, &Outcome::OffloadExceeded, offloads)
+            }
             Decision::ResourceInsufficient => self.metrics.record(
-                req.service,
+                service,
                 &Outcome::ResourceInsufficient,
-                req.offloads,
+                offloads,
             ),
-            Decision::Local | Decision::CrossServerParallel => {
-                self.enqueue_local(req, at, now, decision == Decision::CrossServerParallel)
-            }
-            Decision::Device(dev) => self.enqueue_device(req, at, dev, now),
+            Decision::Local | Decision::CrossServerParallel => self.enqueue_local(
+                req_idx,
+                at,
+                now,
+                decision == Decision::CrossServerParallel,
+            ),
+            Decision::Device(dev) => self.enqueue_device(req_idx, at, dev, now),
             Decision::Offload(target) => {
-                let mut r = req;
-                r.offloads += 1;
-                r.path.push(at);
-                let spec = self.table.spec(r.service);
+                {
+                    let r = &mut self.slab[ri];
+                    r.offloads += 1;
+                    r.path.push(at);
+                }
+                let spec = self.table.spec(service);
                 // per-request scheduling latency of the policy, if any
                 let sched = self.cfg.policy.central_latency_ms(self.servers.len());
                 let transfer =
                     self.cloud.inter_server.transfer_ms(spec.payload_kb) + sched;
-                self.push_event(now + transfer, EventKind::Arrive(Box::new(r), target));
+                self.push_event(
+                    now + transfer,
+                    EventKind::Arrive { req: req_idx, at: target },
+                );
             }
         }
     }
 
     /// Baseline offload decisions (policies that don't use Eq. 1).
     fn baseline_decide(
-        &mut self,
-        req: &Request,
+        &self,
+        req_idx: usize,
         at: ServerId,
         now: f64,
         mode: OffloadMode,
     ) -> Decision {
+        let req = &self.slab[req_idx];
         let slo = self.table.spec(req.service).slo.latency_ms;
         if now - req.arrival_ms > slo {
             return Decision::Timeout;
         }
         let view = SimView {
             snap: &self.snap,
+            svc_index: &self.svc_index,
             servers: &self.servers,
             sync: &self.sync,
             table: self.table,
@@ -709,12 +781,16 @@ impl<'a> Simulator<'a> {
         }
     }
 
-    fn enqueue_local(&mut self, req: Request, at: ServerId, now: f64, cross: bool) {
+    fn enqueue_local(&mut self, req_idx: u32, at: ServerId, now: f64, cross: bool) {
+        let (service, frames, offloads) = {
+            let r = &self.slab[req_idx as usize];
+            (r.service, r.frames, r.offloads)
+        };
         let srv = &mut self.servers[at.0 as usize];
         // choose the matching deployment with minimum expected wait
         let mut best: Option<(usize, f64)> = None;
         for (i, d) in srv.deployments.iter().enumerate() {
-            if d.service != req.service || d.cross_server != cross || d.retired {
+            if d.service != service || d.cross_server != cross || d.retired {
                 continue;
             }
             let wait = d.wait_from(now);
@@ -725,7 +801,7 @@ impl<'a> Simulator<'a> {
         // fall back to any live deployment of the service
         if best.is_none() {
             for (i, d) in srv.deployments.iter().enumerate() {
-                if d.service == req.service && !d.retired {
+                if d.service == service && !d.retired {
                     let wait = d.wait_from(now);
                     if best.is_none_or(|(_, w)| wait < w) {
                         best = Some((i, wait));
@@ -737,33 +813,37 @@ impl<'a> Simulator<'a> {
             Some(b) => b,
             None => {
                 self.metrics.record(
-                    req.service,
+                    service,
                     &Outcome::ResourceInsufficient,
-                    req.offloads,
+                    offloads,
                 );
                 return;
             }
         };
         {
             let d = &mut srv.deployments[dep];
-            let svc_ms = d.service_ms(req.frames);
+            let svc_ms = d.service_ms(frames);
             d.queued_ms += svc_ms;
-            d.queue.push_back(req);
+            d.queue.push_back(req_idx);
         }
         self.start_ready(at, dep, now, false);
     }
 
-    fn enqueue_device(&mut self, req: Request, at: ServerId, dev: DeviceId, now: f64) {
+    fn enqueue_device(&mut self, req_idx: u32, at: ServerId, dev: DeviceId, now: f64) {
+        let (service, frames, offloads) = {
+            let r = &self.slab[req_idx as usize];
+            (r.service, r.frames, r.offloads)
+        };
         let srv = &mut self.servers[at.0 as usize];
         if let Some(idx) = srv.device_deps.iter().position(|(d, _)| *d == dev) {
             let d = &mut srv.device_deps[idx].1;
-            let svc_ms = d.service_ms(req.frames);
+            let svc_ms = d.service_ms(frames);
             d.queued_ms += svc_ms;
-            d.queue.push_back(req);
+            d.queue.push_back(req_idx);
             self.start_ready(at, idx, now, true);
         } else {
             self.metrics
-                .record(req.service, &Outcome::ResourceInsufficient, req.offloads);
+                .record(service, &Outcome::ResourceInsufficient, offloads);
         }
     }
 
@@ -778,19 +858,25 @@ impl<'a> Simulator<'a> {
             if d.in_flight >= d.cap {
                 return;
             }
-            let req = match d.queue.pop_front() {
+            let req_idx = match d.queue.pop_front() {
                 Some(r) => r,
                 None => return,
             };
-            let svc_ms = d.service_ms(req.frames);
+            // `slab` and `servers` are disjoint fields: reading the request
+            // while the deployment is mutably borrowed is fine.
+            let (service, frames, arrival_ms, offloads) = {
+                let r = &self.slab[req_idx as usize];
+                (r.service, r.frames, r.arrival_ms, r.offloads)
+            };
+            let svc_ms = d.service_ms(frames);
             d.queued_ms = (d.queued_ms - svc_ms).max(0.0);
             d.in_flight += 1;
 
-            let spec = self.table.spec(req.service);
+            let spec = self.table.spec(service);
             // execution cannot begin before the model finished loading
             let start = now.max(d.available_at_ms);
             let done_at = start + svc_ms;
-            let latency = done_at - req.arrival_ms;
+            let latency = done_at - arrival_ms;
             let outcome = match spec.sensitivity {
                 Sensitivity::Latency => {
                     if latency <= spec.slo.latency_ms {
@@ -803,32 +889,31 @@ impl<'a> Simulator<'a> {
                     let target = spec.slo.min_rate.unwrap_or(30.0);
                     // achieved rate across the whole request lifetime
                     let achieved =
-                        req.frames as f64 / (latency / 1000.0).max(1e-9);
+                        frames as f64 / (latency / 1000.0).max(1e-9);
                     if achieved >= target {
                         Outcome::Completed { latency_ms: latency }
                     } else {
                         let frac = (achieved / target).min(1.0);
                         Outcome::Partial {
-                            satisfied: frac * req.frames as f64,
-                            total: req.frames,
+                            satisfied: frac * frames as f64,
+                            total: frames,
                         }
                     }
                 }
             };
-            self.metrics.record(req.service, &outcome, req.offloads);
-            *self
-                .window_done
-                .entry((at.0, req.service.0))
-                .or_insert(0.0) += outcome.credit();
+            self.metrics.record(service, &outcome, offloads);
+            if let Some(li) = self.svc_index.get(service) {
+                *self.window_done.get_mut(at.0 as usize, li) += outcome.credit();
+            }
 
             if !device {
                 // GPU-time: this request's share of its batch windows;
                 // exclusive (no-MT) deployments hold the whole GPU
-                let al = &self.allocs[&req.service];
+                let al = &self.allocs[&service];
                 let slice = if al.exclusive_gpu {
                     1.0
                 } else {
-                    self.table.spec(req.service).compute_slice.min(1.0)
+                    self.table.spec(service).compute_slice.min(1.0)
                 };
                 let share = 1.0 / self.servers[at.0 as usize].deployments[dep]
                     .cap.max(1) as f64;
@@ -839,7 +924,11 @@ impl<'a> Simulator<'a> {
                 done_at,
                 EventKind::Finish {
                     server: at,
-                    dep: if device { usize::MAX - dep } else { dep },
+                    dep: if device {
+                        dep as u32 | DEVICE_FLAG
+                    } else {
+                        dep as u32
+                    },
                 },
             );
         }
@@ -853,29 +942,43 @@ impl<'a> Simulator<'a> {
             return;
         }
         let interval = self.cfg.replacement_interval_ms.unwrap_or(1.0);
-        let requests = std::mem::take(&mut self.window_requests);
+        let window = std::mem::take(&mut self.window_requests);
         let services: Vec<ServiceId> = {
-            let mut s: Vec<ServiceId> = requests.iter().map(|r| r.service).collect();
+            let mut s: Vec<ServiceId> = window
+                .iter()
+                .map(|&i| self.slab[i as usize].service)
+                .collect();
             s.sort();
             s.dedup();
             s
         };
-        let mut eval = FluidEval::from_requests(
-            self.table, &self.allocs, &self.cloud, &requests, interval);
+        let mut eval = FluidEval::from_demand(
+            self.table,
+            &self.allocs,
+            &self.cloud,
+            window.iter().map(|&i| &self.slab[i as usize]),
+            interval,
+        );
         let new_placement = sssp(&[], &services, self.cloud.n_servers(), &mut eval);
 
-        // diff: count deployments per (service, server) old vs new
-        let mut want: HashMap<(u32, u32), i32> = HashMap::new();
+        // diff: count deployments per (service, server) old vs new — dense
+        // (server × service) grid, so the additions below come out in a
+        // deterministic (server, service-id) order, unlike the former
+        // HashMap iteration.
+        let ns = self.svc_index.len();
+        let mut want = vec![0i32; self.servers.len() * ns];
         let mut eps_cursor = 0usize;
         for item in &new_placement {
             let server = if item.server == EPSILON_SERVER {
-                let s = (eps_cursor % self.servers.len()) as u32;
+                let s = eps_cursor % self.servers.len();
                 eps_cursor += 1;
                 s
             } else {
-                item.server.0
+                item.server.0 as usize
             };
-            *want.entry((item.service.0, server)).or_insert(0) += 1;
+            if let Some(li) = self.svc_index.get(item.service) {
+                want[server * ns + li] += 1;
+            }
         }
         // retire surplus live deployments, compute additions
         for (si, srv) in self.servers.iter_mut().enumerate() {
@@ -883,31 +986,39 @@ impl<'a> Simulator<'a> {
                 if d.retired {
                     continue;
                 }
-                let key = (d.service.0, si as u32);
-                match want.get_mut(&key) {
-                    Some(c) if *c > 0 => *c -= 1, // kept (no reload needed)
-                    _ => d.retired = true,
+                match self.svc_index.get(d.service) {
+                    Some(li) => {
+                        let c = &mut want[si * ns + li];
+                        if *c > 0 {
+                            *c -= 1; // kept (no reload needed)
+                        } else {
+                            d.retired = true;
+                        }
+                    }
+                    None => d.retired = true,
                 }
             }
         }
-        let additions: Vec<PlacementItem> = want
-            .into_iter()
-            .flat_map(|((svc, srv), c)| {
-                (0..c.max(0)).map(move |_| PlacementItem {
-                    service: ServiceId(svc),
-                    server: ServerId(srv),
-                })
-            })
-            .collect();
+        let mut additions: Vec<PlacementItem> = Vec::new();
+        for si in 0..self.servers.len() {
+            for li in 0..ns {
+                for _ in 0..want[si * ns + li].max(0) {
+                    additions.push(PlacementItem {
+                        service: self.svc_index.id_at(li),
+                        server: ServerId(si as u32),
+                    });
+                }
+            }
+        }
         self.placement_applied_at_ms = now;
         self.materialize_placement(&additions);
         self.placement.extend(additions);
         self.prime_snapshot();
     }
 
-    fn handle_finish(&mut self, server: ServerId, dep: usize, now: f64) {
-        let device = dep > usize::MAX / 2;
-        let idx = if device { usize::MAX - dep } else { dep };
+    fn handle_finish(&mut self, server: ServerId, dep: u32, now: f64) {
+        let device = dep & DEVICE_FLAG != 0;
+        let idx = (dep & !DEVICE_FLAG) as usize;
         {
             let d = if device {
                 &mut self.servers[server.0 as usize].device_deps[idx].1
@@ -921,37 +1032,40 @@ impl<'a> Simulator<'a> {
 
     /// Complete a sync round: refresh snapshots of actual goodput and
     /// queue depths (this is what makes the handler's view *stale*).
+    /// Allocation-free: the per-service accumulators are reused scratch
+    /// vectors, and the window counters are a flat grid reset in place.
     fn run_sync_round(&mut self, now: f64) {
         let window_s = ((now - self.last_sync_ms) / 1000.0).max(1e-9);
-        for (si, srv) in self.servers.iter().enumerate() {
-            let mut per_service: HashMap<u32, (f64, f64)> = HashMap::new();
-            for d in &srv.deployments {
+        let ns = self.svc_index.len();
+        for si in 0..self.servers.len() {
+            self.scratch_theo[..ns].fill(0.0);
+            self.scratch_queued[..ns].fill(0.0);
+            self.scratch_seen[..ns].fill(false);
+            for d in &self.servers[si].deployments {
                 if d.retired && d.queue.is_empty() {
                     continue;
                 }
-                let e = per_service.entry(d.service.0).or_insert((0.0, 0.0));
+                let Some(li) = self.svc_index.get(d.service) else {
+                    continue;
+                };
+                self.scratch_seen[li] = true;
                 if !d.retired {
-                    e.0 += d.req_rate;
+                    self.scratch_theo[li] += d.req_rate;
                 }
-                e.1 += d.queued_ms / d.cap.max(1) as f64;
+                self.scratch_queued[li] += d.queued_ms / d.cap.max(1) as f64;
             }
-            for (svc, (theo, queued)) in per_service {
-                let done = self
-                    .window_done
-                    .get(&(si as u32, svc))
-                    .copied()
-                    .unwrap_or(0.0);
-                self.snap.insert(
-                    (si as u32, svc),
-                    SyncedEntry {
-                        theoretical: theo,
+            for li in 0..ns {
+                if self.scratch_seen[li] {
+                    let done = *self.window_done.get(si, li);
+                    *self.snap.get_mut(si, li) = SyncedEntry {
+                        theoretical: self.scratch_theo[li],
                         actual: done / window_s,
-                        queued_ms: queued,
-                    },
-                );
+                        queued_ms: self.scratch_queued[li],
+                    };
+                }
             }
         }
-        self.window_done.clear();
+        self.window_done.fill(0.0);
         self.last_sync_ms = now;
         self.sync.advance(now);
     }
@@ -996,10 +1110,8 @@ impl<'a> Simulator<'a> {
         }
         // synced state zeroes out at the next round; mark immediately to
         // prevent fault propagation
-        for ((s, _l), e) in self.snap.iter_mut() {
-            if *s == server.0 {
-                e.theoretical = 0.0;
-            }
+        for e in self.snap.row_mut(server.0 as usize) {
+            e.theoretical = 0.0;
         }
     }
 }
@@ -1012,7 +1124,8 @@ pub fn simulate(
     cfg: SimConfig,
 ) -> Metrics {
     let mut sim = Simulator::new(table, cloud, &requests, cfg);
-    sim.run(requests).clone()
+    sim.run(requests);
+    sim.take_metrics()
 }
 
 #[cfg(test)]

@@ -1,0 +1,170 @@
+//! Dense `server × service` state arenas (§Perf, DESIGN.md).
+//!
+//! The sim/handler/fluid hot paths address per-`(server, service)` state on
+//! every event; tuple-keyed `HashMap<(u32, u32), _>` puts a SipHash plus a
+//! probe chain on each of those accesses and rebuilds its buckets every
+//! sync window.  [`ServiceIndex`] maps the sparse `ServiceId` space (zoo
+//! ids plus the video/HCI category offsets) onto a dense `0..n_services`
+//! range once at construction, and [`StateGrid`] stores one flat row-major
+//! `Vec` indexed by `server * n_services + service_idx` — a single bounds
+//! check and an add/mul per access, cache-line friendly when the handler
+//! scans all servers for one service.
+
+use crate::core::ServiceId;
+
+/// Slot marker for "id not in the index" in the direct lookup table.
+const SLOT_NONE: u32 = u32::MAX;
+
+/// Largest `ServiceId` for which the O(1) direct table is built; beyond it
+/// (pathological id spaces), lookup falls back to binary search over the
+/// sorted ids.
+const DIRECT_TABLE_MAX: u32 = 1 << 16;
+
+/// Immutable `ServiceId → dense index` map, built once per simulation or
+/// placement solve from the set of services that can ever be touched.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceIndex {
+    /// Sorted, deduped raw service ids; position = dense index.
+    ids: Vec<u32>,
+    /// Direct lookup table (`slots[id] = dense index`) when ids are small.
+    slots: Vec<u32>,
+}
+
+impl ServiceIndex {
+    pub fn new(ids: impl IntoIterator<Item = ServiceId>) -> Self {
+        let mut v: Vec<u32> = ids.into_iter().map(|s| s.0).collect();
+        v.sort_unstable();
+        v.dedup();
+        let slots = match v.last() {
+            Some(&max) if max < DIRECT_TABLE_MAX => {
+                let mut t = vec![SLOT_NONE; max as usize + 1];
+                for (i, &id) in v.iter().enumerate() {
+                    t[id as usize] = i as u32;
+                }
+                t
+            }
+            _ => Vec::new(),
+        };
+        ServiceIndex { ids: v, slots }
+    }
+
+    /// Number of indexed services (the grid row width).
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Dense index of `id`, or `None` if the service was never indexed.
+    #[inline]
+    pub fn get(&self, id: ServiceId) -> Option<usize> {
+        if self.slots.is_empty() {
+            self.ids.binary_search(&id.0).ok()
+        } else {
+            match self.slots.get(id.0 as usize) {
+                Some(&s) if s != SLOT_NONE => Some(s as usize),
+                _ => None,
+            }
+        }
+    }
+
+    /// `ServiceId` at dense index `idx` (inverse of [`ServiceIndex::get`]).
+    pub fn id_at(&self, idx: usize) -> ServiceId {
+        ServiceId(self.ids[idx])
+    }
+
+    /// Iterate `(dense index, ServiceId)` pairs in id order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, ServiceId)> + '_ {
+        self.ids.iter().enumerate().map(|(i, &id)| (i, ServiceId(id)))
+    }
+}
+
+/// Flat row-major `server × service` arena: `data[server * n_services +
+/// service_idx]`.  Service indices come from a [`ServiceIndex`] built over
+/// the same universe.
+#[derive(Clone, Debug)]
+pub struct StateGrid<T> {
+    n_services: usize,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> StateGrid<T> {
+    pub fn new(n_servers: usize, n_services: usize) -> Self {
+        StateGrid {
+            n_services,
+            data: vec![T::default(); n_servers * n_services],
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, server: usize, service: usize) -> &T {
+        debug_assert!(service < self.n_services || self.n_services == 0);
+        &self.data[server * self.n_services + service]
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, server: usize, service: usize) -> &mut T {
+        debug_assert!(service < self.n_services || self.n_services == 0);
+        &mut self.data[server * self.n_services + service]
+    }
+
+    /// One server's row (all services), mutable.
+    pub fn row_mut(&mut self, server: usize) -> &mut [T] {
+        let start = server * self.n_services;
+        &mut self.data[start..start + self.n_services]
+    }
+
+    /// Reset every cell (e.g. the per-window done counters after a sync).
+    pub fn fill(&mut self, value: T) {
+        self.data.fill(value);
+    }
+
+    pub fn n_services(&self) -> usize {
+        self.n_services
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_maps_sparse_ids_densely() {
+        let idx = ServiceIndex::new([ServiceId(104), ServiceId(2), ServiceId(300), ServiceId(2)]);
+        assert_eq!(idx.len(), 3);
+        assert_eq!(idx.get(ServiceId(2)), Some(0));
+        assert_eq!(idx.get(ServiceId(104)), Some(1));
+        assert_eq!(idx.get(ServiceId(300)), Some(2));
+        assert_eq!(idx.get(ServiceId(3)), None);
+        assert_eq!(idx.id_at(1), ServiceId(104));
+    }
+
+    #[test]
+    fn index_handles_empty_and_huge_ids() {
+        let empty = ServiceIndex::new([]);
+        assert!(empty.is_empty());
+        assert_eq!(empty.get(ServiceId(0)), None);
+        // ids past the direct-table bound fall back to binary search
+        let big = ServiceIndex::new([ServiceId(1 << 20), ServiceId(5)]);
+        assert_eq!(big.get(ServiceId(5)), Some(0));
+        assert_eq!(big.get(ServiceId(1 << 20)), Some(1));
+        assert_eq!(big.get(ServiceId(6)), None);
+    }
+
+    #[test]
+    fn grid_rows_are_independent() {
+        let mut g: StateGrid<f64> = StateGrid::new(3, 2);
+        *g.get_mut(1, 0) = 7.0;
+        *g.get_mut(2, 1) = 9.0;
+        assert_eq!(*g.get(1, 0), 7.0);
+        assert_eq!(*g.get(1, 1), 0.0);
+        assert_eq!(*g.get(2, 1), 9.0);
+        g.row_mut(1).fill(0.5);
+        assert_eq!(*g.get(1, 1), 0.5);
+        assert_eq!(*g.get(0, 0), 0.0);
+        g.fill(0.0);
+        assert_eq!(*g.get(1, 0), 0.0);
+    }
+}

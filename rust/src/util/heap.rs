@@ -1,0 +1,152 @@
+//! Shared binary-heap ordering helpers (§Perf).
+//!
+//! `std::collections::BinaryHeap` is a max-heap over `Ord` values, and every
+//! heap on the crate's hot paths keys on an `f64` (virtual event time in the
+//! simulator, marginal gain in the lazy greedy) that does not implement
+//! `Ord`.  [`Keyed`] carries an arbitrary payload behind a small key type
+//! that alone defines the ordering, so the `PartialEq`/`Eq`/`PartialOrd`/
+//! `Ord` boilerplate previously duplicated by `sim::Event` and
+//! `placement::spf::HeapEntry` lives here exactly once.
+
+use std::cmp::Ordering;
+
+/// Heap entry ordered solely by `key`; `value` is opaque payload.
+#[derive(Clone, Copy, Debug)]
+pub struct Keyed<K: Ord, V> {
+    pub key: K,
+    pub value: V,
+}
+
+impl<K: Ord, V> Keyed<K, V> {
+    pub fn new(key: K, value: V) -> Self {
+        Keyed { key, value }
+    }
+}
+
+impl<K: Ord, V> PartialEq for Keyed<K, V> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+
+impl<K: Ord, V> Eq for Keyed<K, V> {}
+
+impl<K: Ord, V> PartialOrd for Keyed<K, V> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<K: Ord, V> Ord for Keyed<K, V> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key.cmp(&other.key)
+    }
+}
+
+/// Min-heap key over (time, sequence number).  `BinaryHeap` is a max-heap,
+/// so the comparison is reversed: the smallest `at_ms` pops first, ties
+/// broken by the lowest `seq` — FIFO among simultaneous events, the
+/// determinism anchor of the simulator's event loop.
+#[derive(Clone, Copy, Debug)]
+pub struct MinTimeKey {
+    pub at_ms: f64,
+    pub seq: u64,
+}
+
+impl PartialEq for MinTimeKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.at_ms == other.at_ms && self.seq == other.seq
+    }
+}
+
+impl Eq for MinTimeKey {}
+
+impl PartialOrd for MinTimeKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for MinTimeKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .at_ms
+            .partial_cmp(&self.at_ms)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Max-heap key over a score: the largest `f64` pops first.  NaN compares
+/// equal to everything (callers never feed NaN; gains are differences of
+/// finite demand/capacity terms).
+#[derive(Clone, Copy, Debug)]
+pub struct MaxScoreKey(pub f64);
+
+impl PartialEq for MaxScoreKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.0 == other.0
+    }
+}
+
+impl Eq for MaxScoreKey {}
+
+impl PartialOrd for MaxScoreKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for MaxScoreKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or(Ordering::Equal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BinaryHeap;
+
+    #[test]
+    fn min_time_pops_earliest_first() {
+        let mut h: BinaryHeap<Keyed<MinTimeKey, &'static str>> = BinaryHeap::new();
+        h.push(Keyed::new(MinTimeKey { at_ms: 5.0, seq: 1 }, "late"));
+        h.push(Keyed::new(MinTimeKey { at_ms: 1.0, seq: 2 }, "early"));
+        h.push(Keyed::new(MinTimeKey { at_ms: 3.0, seq: 3 }, "mid"));
+        assert_eq!(h.pop().unwrap().value, "early");
+        assert_eq!(h.pop().unwrap().value, "mid");
+        assert_eq!(h.pop().unwrap().value, "late");
+    }
+
+    #[test]
+    fn min_time_ties_break_by_seq_fifo() {
+        // Simultaneous events must pop in insertion (seq) order regardless
+        // of heap internals — this is what makes the simulator replayable.
+        let mut h: BinaryHeap<Keyed<MinTimeKey, u64>> = BinaryHeap::new();
+        for seq in [7u64, 3, 9, 1, 5] {
+            h.push(Keyed::new(MinTimeKey { at_ms: 2.0, seq }, seq));
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| h.pop().map(|e| e.value)).collect();
+        assert_eq!(order, vec![1, 3, 5, 7, 9]);
+    }
+
+    #[test]
+    fn max_score_pops_largest_first() {
+        let mut h: BinaryHeap<Keyed<MaxScoreKey, u32>> = BinaryHeap::new();
+        h.push(Keyed::new(MaxScoreKey(1.5), 0));
+        h.push(Keyed::new(MaxScoreKey(9.0), 1));
+        h.push(Keyed::new(MaxScoreKey(4.0), 2));
+        assert_eq!(h.pop().unwrap().value, 1);
+        assert_eq!(h.pop().unwrap().value, 2);
+        assert_eq!(h.pop().unwrap().value, 0);
+    }
+
+    #[test]
+    fn keyed_ordering_ignores_payload() {
+        let a = Keyed::new(MaxScoreKey(2.0), "a");
+        let b = Keyed::new(MaxScoreKey(2.0), "b");
+        assert_eq!(a.cmp(&b), std::cmp::Ordering::Equal);
+        assert!(Keyed::new(MaxScoreKey(3.0), "x") > a);
+    }
+}

@@ -1,10 +1,15 @@
-//! In-crate substrates: deterministic RNG, statistics, and a mini
-//! property-testing harness (the offline registry has no rand/proptest).
+//! In-crate substrates: deterministic RNG, statistics, dense state arenas
+//! and heap-ordering helpers for the hot paths, and a mini property-testing
+//! harness (the offline registry has no rand/proptest).
 
+pub mod grid;
+pub mod heap;
 pub mod minitest;
 pub mod rng;
 pub mod stats;
 
+pub use grid::{ServiceIndex, StateGrid};
+pub use heap::{Keyed, MaxScoreKey, MinTimeKey};
 pub use rng::Rng;
 pub use stats::Summary;
 

@@ -1,0 +1,84 @@
+//! Determinism golden test for the simulation engine (DESIGN.md §Perf).
+//!
+//! Runs two fixed-seed scenarios — offline pre-placement and periodic
+//! re-placement — and compares the bit-exact [`Metrics::fingerprint`]
+//! (goodput credit, outcome counters, per-service credits) against a
+//! recorded fixture.  The point: engine refactors that swap data
+//! structures (e.g. the dense `server × service` arenas replacing
+//! tuple-keyed HashMaps) must be provably semantics-preserving, not just
+//! "tests still pass".
+//!
+//! The fixture is self-priming: on a machine where
+//! `tests/fixtures/sim_golden.txt` does not exist yet, the test records it
+//! and passes — commit the generated file to pin the behaviour.  To refresh
+//! after an *intentional* behaviour change, delete the fixture, rerun
+//! `cargo test -q sim_determinism_golden`, and commit the new file with the
+//! explanation in the same commit.
+
+use std::fs;
+use std::path::PathBuf;
+
+use epara::cluster::EdgeCloud;
+use epara::profile::zoo;
+use epara::sim::{simulate, PolicyConfig, SimConfig};
+use epara::workload::{generate, Mix, WorkloadSpec};
+
+fn run_scenario(replacement_interval_ms: Option<f64>) -> String {
+    let table = zoo::paper_zoo();
+    let cloud = EdgeCloud::testbed();
+    let spec = WorkloadSpec {
+        mix: Mix::Production(0),
+        rps: 60.0,
+        duration_ms: 15_000.0,
+        ..Default::default()
+    };
+    let reqs = generate(&spec, &table, &cloud);
+    let cfg = SimConfig {
+        policy: PolicyConfig::epara(),
+        duration_ms: 15_000.0,
+        replacement_interval_ms,
+        ..Default::default()
+    };
+    simulate(&table, cloud, reqs, cfg).fingerprint()
+}
+
+fn golden() -> String {
+    format!(
+        "offline: {}\nperiodic: {}\n",
+        run_scenario(None),
+        run_scenario(Some(5_000.0)),
+    )
+}
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/sim_golden.txt")
+}
+
+#[test]
+fn fixed_seed_runs_are_reproducible_in_process() {
+    // Independent of any fixture: two identical runs must agree bit for
+    // bit, including the periodic-placement path (whose re-placement diff
+    // is computed over a deterministic dense grid, not a HashMap).
+    assert_eq!(golden(), golden());
+}
+
+#[test]
+fn engine_matches_recorded_fixture() {
+    let got = golden();
+    let path = fixture_path();
+    match fs::read_to_string(&path) {
+        Ok(want) => assert_eq!(
+            got, want,
+            "sim engine output drifted from the recorded golden fixture at \
+             {path:?}.  If this change is intentional, delete the fixture, \
+             rerun this test to re-record, and commit the new file together \
+             with the change that explains it.",
+        ),
+        Err(_) => {
+            // Self-priming: no fixture recorded yet on this machine.
+            fs::create_dir_all(path.parent().expect("fixture dir")).expect("mkdir fixtures");
+            fs::write(&path, &got).expect("write fixture");
+            eprintln!("recorded sim golden fixture at {path:?} — commit it to pin the engine");
+        }
+    }
+}

@@ -1,0 +1,67 @@
+#!/usr/bin/env python3
+"""CI perf gate: compare a fresh perf_hotpath JSON against the checked-in
+baseline and fail on >30% regression on any gated metric.
+
+Usage: check_perf.py CURRENT.json BASELINE.json
+
+Baselines marked "provisional": true (no measured numbers committed yet)
+pass with a notice — refresh with `make bench-perf` on a runner-class
+machine and commit the resulting BENCH_perf.json to arm the gate.
+"""
+
+import json
+import sys
+
+# direction: higher is better
+HIGHER = ["events_per_sec", "sim_requests_per_sec"]
+# direction: lower is better
+LOWER = ["handler_decide_ns_10k", "spf_solve_ms_1k", "spf_solve_ms_10k", "fluid_gain_ns"]
+THRESHOLD = 0.30
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        cur = json.load(f)
+    with open(sys.argv[2]) as f:
+        base = json.load(f)
+
+    if base.get("provisional"):
+        print("perf baseline is provisional (no measured numbers committed yet): gate skipped")
+        print("arm it with:  make bench-perf  && git add BENCH_perf.json")
+        return 0
+    if bool(base.get("quick")) != bool(cur.get("quick")):
+        print(
+            f"warning: comparing quick={cur.get('quick')} run against "
+            f"quick={base.get('quick')} baseline — numbers may not be comparable"
+        )
+
+    failures = []
+    for key in HIGHER + LOWER:
+        b, c = base.get(key), cur.get(key)
+        if not b or not c:
+            print(f"  {key}: missing (baseline={b}, current={c}) — skipped")
+            continue
+        if key in HIGHER:
+            ratio = c / b
+            regressed = ratio < 1.0 - THRESHOLD
+        else:
+            ratio = b / c
+            regressed = c > b * (1.0 + THRESHOLD)
+        line = f"  {key}: current={c:.1f} baseline={b:.1f} ({ratio:.2f}x vs baseline, >=1 is good)"
+        print(line + ("  << REGRESSION" if regressed else ""))
+        if regressed:
+            failures.append(key)
+
+    if failures:
+        print(f"\nperf gate FAILED: >{THRESHOLD:.0%} regression on {', '.join(failures)}")
+        print("if intentional, refresh the baseline: make bench-perf && git add BENCH_perf.json")
+        return 1
+    print("\nperf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
