@@ -8,6 +8,8 @@
 #   make check-pjrt  compile-check the feature-gated runtime path
 #   make gateway     run the serving gateway on $(GATEWAY_ADDR)
 #   make loadgen     fire a mixed workload at a running gateway
+#   make scenarios   run every committed scenario spec (sim backend,
+#                    goodput floors asserted; reports in scenario-reports/)
 #   make artifacts   build the AOT artifacts via the Python pipeline (stub)
 
 CARGO ?= cargo
@@ -24,7 +26,8 @@ SIM_BENCHES = ablation_params fig03_motivation fig10_testbed_goodput \
 
 GATEWAY_ADDR ?= 127.0.0.1:8080
 
-.PHONY: build test bench bench-perf lint check-pjrt gateway loadgen artifacts clean
+.PHONY: build test bench bench-perf lint check-pjrt gateway loadgen scenarios \
+        artifacts clean
 
 build:
 	$(CARGO) build --release --workspace
@@ -44,8 +47,27 @@ bench-perf:
 	$(CARGO) bench --bench perf_hotpath -- --quick --json BENCH_perf.json
 
 lint:
+	$(PYTHON) scripts/fmt_check.py
 	$(CARGO) fmt --all --check
 	$(CARGO) clippy --workspace --all-targets -- -D warnings
+
+# Mirrors CI's `scenarios` job: every committed spec through the sim
+# backend (the binary exits non-zero on a goodput-floor violation), plus
+# the determinism fingerprint gate.
+scenarios: build
+	@mkdir -p scenario-reports
+	@set -e; for f in rust/scenarios/*.json; do \
+		n=$$(basename $$f .json); \
+		echo "== scenario $$n"; \
+		./target/release/epara scenario run $$f \
+			--json scenario-reports/$$n.json; \
+	done
+	@set -e; a=$$(./target/release/epara scenario run \
+		rust/scenarios/cascading_failure.json --seed 7 --fingerprint-only); \
+	b=$$(./target/release/epara scenario run \
+		rust/scenarios/cascading_failure.json --seed 7 --fingerprint-only); \
+	test -n "$$a" && test "$$a" = "$$b" \
+		&& echo "determinism: fingerprint stable"
 
 check-pjrt:
 	$(CARGO) check -p epara --all-targets --features pjrt

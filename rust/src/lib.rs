@@ -25,6 +25,11 @@
 //!   (`epara gateway` / `epara loadgen`).  Execution is pluggable: the
 //!   default backend replays `profile` tables on wall-clock time; the
 //!   `pjrt` feature bridges to the coordinator.
+//! * [`scenario`] — deterministic churn/fault/surge scenario engine:
+//!   declarative JSON timelines (`server_fail`, `device_leave`,
+//!   `rps_surge`, …) executed against the sim (bit-exact, golden-pinned)
+//!   and the live gateway (time-scaled) through one backend trait, with
+//!   per-phase goodput/recovery reports (`epara scenario run|list`).
 //! * [`baselines`] — InterEdge, AlpaServe, Galaxy, SERV-P, USHER,
 //!   DeTransformer comparison policies behind one trait.
 //! * `runtime` — PJRT CPU engine loading the AOT artifacts
@@ -55,6 +60,7 @@ pub mod placement;
 pub mod profile;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod scenario;
 pub mod server;
 pub mod sim;
 pub mod sync;

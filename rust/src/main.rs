@@ -26,6 +26,14 @@
 //!                   [--concurrency N] [--seed S] [--timeout-ms MS]
 //!       Drive a running gateway over real sockets with the Azure-shaped
 //!       workload generator (open- or closed-loop).
+//!   epara scenario run FILE.json [--seed N] [--backend sim|gateway]
+//!                   [--time-scale X] [--json OUT.json] [--fingerprint-only]
+//!       Execute one churn/fault/surge scenario spec end-to-end and print
+//!       the per-phase report (+ bit-exact fingerprint on the sim
+//!       backend); exits non-zero when the spec's goodput floor is
+//!       violated.
+//!   epara scenario list [DIR]
+//!       Inventory the scenario specs in DIR (default rust/scenarios).
 
 use std::collections::HashMap;
 
@@ -116,13 +124,110 @@ fn main() -> anyhow::Result<()> {
         "report" => cmd_report(&args),
         "gateway" => cmd_gateway(&args),
         "loadgen" => cmd_loadgen(&args),
+        "scenario" => cmd_scenario(&argv),
         _ => {
             eprintln!(
-                "usage: epara <serve|simulate|place|golden|report|gateway|loadgen> [--flags]\n\
+                "usage: epara <serve|simulate|place|golden|report|gateway|loadgen|scenario> \
+                 [--flags]\n\
                  see `rust/src/main.rs` docs for flags"
             );
             Ok(())
         }
+    }
+}
+
+/// `epara scenario run|list` — the churn/fault/surge scenario engine.
+fn cmd_scenario(argv: &[String]) -> anyhow::Result<()> {
+    use epara::scenario::{self, ScenarioBackend as _, ScenarioSpec};
+
+    let usage = "usage: epara scenario run FILE.json [--seed N] \
+                 [--backend sim|gateway] [--time-scale X] [--json OUT.json] \
+                 [--fingerprint-only]\n       epara scenario list [DIR]";
+    let sub = argv.get(1).map(|s| s.as_str()).unwrap_or("help");
+    let positional = argv.get(2).filter(|s| !s.starts_with("--")).cloned();
+    let args = Args::parse(&argv[2.min(argv.len())..]);
+
+    match sub {
+        "run" => {
+            let path = positional.ok_or_else(|| anyhow::anyhow!("{usage}"))?;
+            let mut spec = ScenarioSpec::from_file(std::path::Path::new(&path))?;
+            if let Some(seed) = args.0.get("seed") {
+                let seed: u64 = seed
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--seed must be an integer"))?;
+                spec.override_seed(seed);
+            }
+            let backend_name = args.str("backend", "sim");
+            let time_scale: f64 = args.get("time-scale", 200.0);
+            let backend = scenario::backend_for(&backend_name, time_scale)?;
+            let report = backend.run(&spec)?;
+            if args.flag("fingerprint-only") {
+                println!("{}", report.fingerprint());
+            } else {
+                print!("{}", report.human());
+                println!("fingerprint: {}", report.fingerprint());
+            }
+            if let Some(out) = args.0.get("json") {
+                std::fs::write(out, report.to_json().to_string())
+                    .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+                if !args.flag("fingerprint-only") {
+                    println!("report written to {out}");
+                }
+            }
+            match backend.name() {
+                // the CI gate: committed specs carry a goodput floor the
+                // deterministic sim run must hold on every PR
+                "sim" => {
+                    if let Some(floor) = spec.goodput_floor_rps {
+                        anyhow::ensure!(
+                            report.goodput_rps >= floor,
+                            "goodput floor violated for '{}': {:.2} < {floor} req/s",
+                            spec.name,
+                            report.goodput_rps
+                        );
+                    }
+                }
+                // wall-clock runs assert liveness, not exact floors
+                _ => anyhow::ensure!(
+                    report.offered > 0 && report.satisfied > 0.0,
+                    "gateway scenario '{}' produced no successful traffic",
+                    spec.name
+                ),
+            }
+            Ok(())
+        }
+        "list" => {
+            let dir = positional.unwrap_or_else(|| "rust/scenarios".to_string());
+            let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(&dir)
+                .map_err(|e| anyhow::anyhow!("reading {dir}: {e}"))?
+                .filter_map(|e| e.ok())
+                .map(|e| e.path())
+                .filter(|p| p.extension().is_some_and(|x| x == "json"))
+                .collect();
+            paths.sort();
+            for p in paths {
+                match ScenarioSpec::from_file(&p) {
+                    Ok(s) => println!(
+                        "{:24} {:>5.0}s {:>2} events  floor={:<8} {}",
+                        s.name,
+                        s.duration_ms() / 1000.0,
+                        s.timeline.len(),
+                        s.goodput_floor_rps
+                            .map(|f| format!("{f} rps"))
+                            .unwrap_or_else(|| "-".into()),
+                        s.description
+                    ),
+                    Err(e) => println!("{}: INVALID ({e:#})", p.display()),
+                }
+            }
+            Ok(())
+        }
+        "help" => {
+            eprintln!("{usage}");
+            Ok(())
+        }
+        // this command is a CI gate: a typo must fail loudly, not exit 0
+        other => anyhow::bail!("unknown scenario subcommand '{other}'\n{usage}"),
     }
 }
 

@@ -123,7 +123,8 @@ fn rows() -> Vec<Row> {
               vram_mb: 17_000.0, slice: 1.0, load_ms: 9000.0, payload_kb: 6.0,
               slo_ms: 8000.0, items: 64.0, freq_rate: Some(24.0), freq_frames: 64,
               tp_comm_ms: 4.0, pp_overhead: 0.10 },
-        Row { id: DEEPSEEK_16B, name: "deepseekv2-16b", lat_ms: 67.8, alpha: 0.05, // 46 tok/s @BS2+PP2
+        // 46 tok/s @BS2+PP2
+        Row { id: DEEPSEEK_16B, name: "deepseekv2-16b", lat_ms: 67.8, alpha: 0.05,
               vram_mb: 33_000.0, slice: 1.0, load_ms: 16_000.0, payload_kb: 6.0,
               slo_ms: 9000.0, items: 64.0, freq_rate: Some(46.0), freq_frames: 64,
               tp_comm_ms: 5.0, pp_overhead: 0.10 },

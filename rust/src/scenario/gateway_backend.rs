@@ -1,0 +1,243 @@
+//! Scenario execution against the live serving gateway (wall clock,
+//! time-scaled).
+//!
+//! The same spec that drives the simulator drives a real socket path: an
+//! in-process [`Gateway`] on an ephemeral port, a
+//! [`DegradedExecutor`]-wrapped profile-replay backend whose slowdown
+//! schedule encodes the spec's `server_fail`/`server_recover` (GPU-pool
+//! capacity loss) and `latency_skew` events, and the scenario-aware
+//! loadgen mode ([`loadgen::run_shots`]) firing the scenario trace with
+//! arrivals compressed by `time_scale`.  Surge/shift windows come in
+//! through the shared trace builder, so offered load and category
+//! balance move exactly as in the sim run.
+//!
+//! Device events have no gateway analogue (no device lanes on the wire
+//! path) and are ignored here.  Wall-clock runs are *not* bit-exact —
+//! determinism golden pinning applies to the sim backend only; reports
+//! normalize goodput to virtual time so floors stay comparable.
+
+use std::sync::Arc;
+
+use crate::cluster::EdgeCloud;
+use crate::profile::zoo;
+use crate::server::loadgen::{self, LoadgenConfig, Shot};
+use crate::server::{
+    admission::cat_index, DegradedExecutor, Executor, Gateway, GatewayConfig,
+    ProfileReplayExecutor,
+};
+
+use super::report::{self, CumRow, ScenarioReport, Totals};
+use super::spec::{ScenarioEvent, ScenarioSpec};
+use super::{trace, ScenarioBackend};
+
+/// The wall-clock backend (`--backend gateway`).
+pub struct GatewayBackend {
+    /// Virtual→wall compression (≥ 1; CI uses 100–500).
+    pub time_scale: f64,
+    /// Loadgen worker count.
+    pub concurrency: usize,
+}
+
+impl Default for GatewayBackend {
+    fn default() -> Self {
+        GatewayBackend { time_scale: 200.0, concurrency: 16 }
+    }
+}
+
+/// Composite executor slowdown in force at virtual instant `t`: latency
+/// skews multiply, and failed GPU capacity inflates service times by
+/// `1 / (1 − failed_fraction)` (the surviving pool absorbs the load).
+fn factor_at(spec: &ScenarioSpec, cloud: &EdgeCloud, t: f64) -> f64 {
+    // each server counts at most once regardless of repeated fail events
+    // (the sim treats a re-fail of a dark server as idempotent)
+    let mut failed_servers: Vec<u32> = Vec::new();
+    let mut skew = 1.0;
+    for ev in &spec.timeline {
+        if ev.at_ms > t {
+            continue;
+        }
+        match ev.kind {
+            ScenarioEvent::ServerFail { server } => {
+                let recovered = spec.timeline.iter().any(|e2| {
+                    matches!(e2.kind, ScenarioEvent::ServerRecover { server: s2 }
+                             if s2 == server)
+                        && e2.at_ms >= ev.at_ms
+                        && e2.at_ms <= t
+                });
+                if !recovered && !failed_servers.contains(&server.0) {
+                    failed_servers.push(server.0);
+                }
+            }
+            ScenarioEvent::LatencySkew { factor, duration_ms, .. } => {
+                let end = if duration_ms > 0.0 {
+                    ev.at_ms + duration_ms
+                } else {
+                    f64::INFINITY
+                };
+                if t < end {
+                    skew *= factor;
+                }
+            }
+            _ => {}
+        }
+    }
+    let failed_gpus: f64 = failed_servers
+        .iter()
+        .map(|&s| cloud.server(crate::core::ServerId(s)).gpus.len() as f64)
+        .sum();
+    let total = cloud.total_gpus().max(1) as f64;
+    let failed_frac = (failed_gpus / total).min(0.95);
+    // clamp the skew *component*, not the composite: the replay executor
+    // cannot run faster than real time, and a sub-1 skew must not cancel
+    // a concurrent capacity-loss slowdown
+    (skew.max(1.0) / (1.0 - failed_frac)).min(100.0)
+}
+
+/// Slowdown step schedule over the spec's boundaries (virtual ms).
+fn capacity_steps(spec: &ScenarioSpec, cloud: &EdgeCloud) -> Vec<(f64, f64)> {
+    spec.boundaries()
+        .iter()
+        .map(|&t| (t, factor_at(spec, cloud, t)))
+        .collect()
+}
+
+impl ScenarioBackend for GatewayBackend {
+    fn name(&self) -> &'static str {
+        "gateway"
+    }
+
+    fn run(&self, spec: &ScenarioSpec) -> crate::Result<ScenarioReport> {
+        let ts = self.time_scale.max(1.0);
+        let table = zoo::paper_zoo();
+        let cloud = spec.base.cloud.clone();
+        let reqs = trace::build_requests(spec, &table, &cloud);
+        anyhow::ensure!(
+            !reqs.is_empty(),
+            "scenario '{}' generated an empty trace",
+            spec.name
+        );
+
+        // wall-clock slowdown schedule (virtual boundaries / time scale)
+        let steps: Vec<(f64, f64)> = capacity_steps(spec, &cloud)
+            .into_iter()
+            .map(|(t, f)| (t / ts, f))
+            .collect();
+        let degraded = Arc::new(DegradedExecutor::new(
+            Arc::new(ProfileReplayExecutor::new(table.clone(), ts)),
+            steps,
+        ));
+        let executor: Arc<dyn Executor> = Arc::clone(&degraded);
+        let gw_cfg = GatewayConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
+        let mut gw = Gateway::spawn(gw_cfg, table.clone(), executor)?;
+
+        let shots: Vec<Shot> = reqs
+            .iter()
+            .map(|r| Shot {
+                arrival_ms: r.arrival_ms / ts,
+                service: r.service,
+                frames: r.frames.max(1),
+                category: cat_index(
+                    table.spec(r.service).category(zoo::P100_VRAM_MB),
+                ),
+            })
+            .collect();
+        let lg_cfg = LoadgenConfig {
+            addr: gw.local_addr().to_string(),
+            requests: shots.len(),
+            concurrency: self.concurrency.max(1),
+            ..Default::default()
+        };
+        // re-anchor the degradation clock to the traffic's own start so
+        // spawn/plan-build time does not shift the fault windows
+        degraded.arm();
+        let (lreport, outcomes) = loadgen::run_shots(&lg_cfg, shots.clone());
+        gw.shutdown();
+        anyhow::ensure!(
+            lreport.transport_errors == 0,
+            "scenario gateway run hit {} transport errors",
+            lreport.transport_errors
+        );
+
+        // cumulative rows in virtual time at boundaries + sample ticks
+        let mut ticks = spec.boundaries();
+        let mut t = spec.sample_interval_ms;
+        while t < spec.duration_ms() {
+            ticks.push(t);
+            t += spec.sample_interval_ms;
+        }
+        ticks.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ticks.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+        // shots are arrival-sorted, so one forward pass builds the rows
+        let mut rows = Vec::with_capacity(ticks.len());
+        let (mut idx, mut offered, mut satisfied, mut shed) = (0usize, 0u64, 0.0f64, 0u64);
+        for &tick in &ticks {
+            while idx < shots.len() && shots[idx].arrival_ms * ts <= tick + 1e-9 {
+                offered += 1;
+                satisfied += outcomes[idx].credit;
+                if outcomes[idx].status == 429 {
+                    shed += 1;
+                }
+                idx += 1;
+            }
+            rows.push(CumRow { at_ms: tick, offered, satisfied, shed });
+        }
+
+        let dur_s = spec.duration_ms() / 1000.0;
+        let totals = Totals {
+            offered: lreport.sent as u64,
+            satisfied: lreport.credit,
+            shed: lreport.shed as u64,
+            // goodput in virtual time: comparable across time scales
+            goodput_rps: lreport.credit / dur_s.max(1e-9),
+            slo_violation_rate: if lreport.sent == 0 {
+                0.0
+            } else {
+                (1.0 - lreport.credit / lreport.sent as f64).max(0.0)
+            },
+            metrics_fingerprint: None,
+        };
+        Ok(report::assemble(spec, "gateway", &rows, totals))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configjson::parse;
+
+    fn spec(text: &str) -> ScenarioSpec {
+        ScenarioSpec::from_json(&parse(text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn capacity_schedule_tracks_fail_recover_and_skew() {
+        let s = spec(
+            r#"{
+          "name": "t",
+          "base": {"workload": {"rps": 10.0, "duration_s": 20.0}},
+          "timeline": [
+            {"at_ms": 4000, "event": "server_fail", "server": 0},
+            {"at_ms": 10000, "event": "server_recover", "server": 0},
+            {"at_ms": 6000, "event": "latency_skew", "server": 1,
+             "factor": 2.0, "duration_ms": 2000}
+          ]
+        }"#,
+        );
+        let cloud = s.base.cloud.clone(); // testbed: 4 GPUs total, 1 on s0
+        assert!((factor_at(&s, &cloud, 0.0) - 1.0).abs() < 1e-12);
+        // 1 of 4 GPUs out: 1 / (1 - 0.25) = 4/3
+        let during_fail = factor_at(&s, &cloud, 5000.0);
+        assert!((during_fail - 4.0 / 3.0).abs() < 1e-9, "{during_fail}");
+        // skew stacks multiplicatively on the capacity loss
+        let stacked = factor_at(&s, &cloud, 7000.0);
+        assert!((stacked - 8.0 / 3.0).abs() < 1e-9, "{stacked}");
+        // skew window closed, still failed
+        let after_skew = factor_at(&s, &cloud, 9000.0);
+        assert!((after_skew - 4.0 / 3.0).abs() < 1e-9, "{after_skew}");
+        // recovered: back to clean
+        assert!((factor_at(&s, &cloud, 12_000.0) - 1.0).abs() < 1e-12);
+        // steps exist at every boundary
+        let steps = capacity_steps(&s, &cloud);
+        assert_eq!(steps.len(), s.boundaries().len());
+    }
+}

@@ -1,0 +1,62 @@
+//! Scenario engine: deterministic churn/fault/surge timelines driven
+//! against both serving backends through one trait.
+//!
+//! The ROADMAP's "handles as many scenarios as you can imagine" becomes
+//! a regression-gated surface: a [`spec::ScenarioSpec`] (JSON, seeded,
+//! validated) describes a base run plus a timeline of events —
+//! `server_fail`, `server_recover`, `device_join`/`device_leave`,
+//! `rps_surge`, `latency_skew`, `category_shift` — and a
+//! [`ScenarioBackend`] executes it end-to-end:
+//!
+//! * [`sim_backend::SimBackend`] — the event-driven simulator in virtual
+//!   time.  Fault actions inject into the sim's event heap
+//!   ([`crate::sim::FaultAction`]), surge/shift windows overlay the
+//!   trace, and the run is **bit-deterministic**: same spec + seed →
+//!   identical [`report::ScenarioReport::fingerprint`], CI's golden.
+//! * [`gateway_backend::GatewayBackend`] — the live socket gateway on
+//!   the wall clock, time-scaled: the same trace fires over real TCP
+//!   (scenario-aware loadgen mode) while a
+//!   [`crate::server::DegradedExecutor`] schedule degrades capacity on
+//!   the spec's fault windows.
+//!
+//! Reports are unified: per-phase goodput/SLO-violation/shed slices at
+//! the timeline's boundaries, recovery time per `server_fail`, JSON
+//! artifacts for CI, and goodput normalized to virtual time so the
+//! committed floors (`rust/scenarios/*.json`) gate both backends'
+//! runs comparably.  `epara scenario run|list` is the CLI surface;
+//! the CI `scenarios` job runs every committed spec on every PR.
+
+pub mod gateway_backend;
+pub mod report;
+pub mod sim_backend;
+pub mod spec;
+pub mod trace;
+
+pub use gateway_backend::GatewayBackend;
+pub use report::{PhaseReport, Recovery, ScenarioReport};
+pub use sim_backend::SimBackend;
+pub use spec::{Overlay, ScenarioEvent, ScenarioSpec, TimelineEvent};
+
+/// A backend able to execute a scenario spec end-to-end.
+pub trait ScenarioBackend {
+    /// Stable backend name (reports, CLI).
+    fn name(&self) -> &'static str;
+
+    /// Run the scenario to completion and assemble its report.
+    fn run(&self, spec: &ScenarioSpec) -> crate::Result<ScenarioReport>;
+}
+
+/// Resolve a backend by CLI name.
+pub fn backend_for(
+    name: &str,
+    time_scale: f64,
+) -> crate::Result<Box<dyn ScenarioBackend>> {
+    match name {
+        "sim" => Ok(Box::new(SimBackend)),
+        "gateway" => Ok(Box::new(GatewayBackend {
+            time_scale,
+            ..Default::default()
+        })),
+        other => anyhow::bail!("unknown scenario backend '{other}' (sim|gateway)"),
+    }
+}

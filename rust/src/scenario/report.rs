@@ -1,0 +1,456 @@
+//! Machine-readable scenario run reports.
+//!
+//! A [`ScenarioReport`] carries whole-run totals plus per-phase slices
+//! (phases are the intervals between the spec's timeline boundaries) and
+//! a recovery-time estimate for every `server_fail`.  Reports serialize
+//! to JSON (the CI artifact) and expose a bit-exact [`fingerprint`]
+//! (`ScenarioReport::fingerprint`) for golden pinning: every f64 is
+//! rendered as raw bits, so two runs match iff they are identical to the
+//! last ulp.  Goodput and SLO-violation accounting is unified across
+//! backends: `satisfied` is §3.3 fractional credit, and
+//! `slo_violation_rate = 1 − satisfied/offered`.
+
+use std::fmt::Write as _;
+
+use crate::configjson::Json;
+
+use super::spec::{ScenarioEvent, ScenarioSpec};
+
+/// One phase (boundary-to-boundary slice) of a run.
+#[derive(Clone, Debug)]
+pub struct PhaseReport {
+    /// Event names firing at the phase start ("steady" when none).
+    pub label: String,
+    pub start_ms: f64,
+    pub end_ms: f64,
+    pub offered: u64,
+    /// §3.3 goodput credit earned in the phase.
+    pub satisfied: f64,
+    /// Shed count (sim: resource-insufficient + offload-exceeded;
+    /// gateway: 429s).
+    pub shed: u64,
+    pub goodput_rps: f64,
+    pub slo_violation_rate: f64,
+}
+
+/// Recovery estimate for one `server_fail` event: time until the
+/// goodput rate first returns to ≥ 90% of the pre-fault average.
+/// `None` when the rate never returns — or when there was no measurable
+/// pre-fault rate to recover to (fault at t = 0).
+#[derive(Clone, Copy, Debug)]
+pub struct Recovery {
+    pub server: u32,
+    pub fault_at_ms: f64,
+    pub recovered_at_ms: Option<f64>,
+    pub recovery_ms: Option<f64>,
+}
+
+/// Whole-run scenario report.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    pub scenario: String,
+    pub backend: &'static str,
+    pub seed: u64,
+    pub duration_ms: f64,
+    pub offered: u64,
+    pub satisfied: f64,
+    pub shed: u64,
+    /// Goodput in *virtual* time (gateway runs divide by the virtual
+    /// horizon, so floors are comparable across time scales).
+    pub goodput_rps: f64,
+    pub slo_violation_rate: f64,
+    pub phases: Vec<PhaseReport>,
+    pub recoveries: Vec<Recovery>,
+    /// The sim backend's bit-exact [`crate::metrics::Metrics::fingerprint`]
+    /// (None on wall-clock backends).
+    pub metrics_fingerprint: Option<String>,
+}
+
+/// Cumulative counters at a virtual instant (backend-provided rows; one
+/// exists at every phase boundary by construction).
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct CumRow {
+    pub at_ms: f64,
+    pub offered: u64,
+    pub satisfied: f64,
+    pub shed: u64,
+}
+
+/// Whole-run totals a backend hands to [`assemble`].
+#[derive(Clone, Debug)]
+pub(crate) struct Totals {
+    pub offered: u64,
+    pub satisfied: f64,
+    pub shed: u64,
+    pub goodput_rps: f64,
+    pub slo_violation_rate: f64,
+    pub metrics_fingerprint: Option<String>,
+}
+
+/// Build the report from boundary-aligned cumulative rows.
+pub(crate) fn assemble(
+    spec: &ScenarioSpec,
+    backend: &'static str,
+    rows: &[CumRow],
+    totals: Totals,
+) -> ScenarioReport {
+    let duration = spec.duration_ms();
+    let row_at = |t: f64| -> CumRow {
+        if t >= duration - 1e-9 {
+            // the horizon boundary closes on the *final* row (end-of-run
+            // counters): work started before the horizon may record its
+            // outcome after it, and belongs to the last phase
+            return rows.last().copied().unwrap_or_default();
+        }
+        rows.iter()
+            .find(|r| r.at_ms >= t - 1e-6)
+            .copied()
+            .or_else(|| rows.last().copied())
+            .unwrap_or_default()
+    };
+
+    let bounds = spec.boundaries();
+    let mut phases = Vec::new();
+    for w in bounds.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        if b - a < 1e-9 {
+            continue;
+        }
+        let ra = row_at(a);
+        let rb = row_at(b);
+        let offered = rb.offered.saturating_sub(ra.offered);
+        let satisfied = (rb.satisfied - ra.satisfied).max(0.0);
+        let shed = rb.shed.saturating_sub(ra.shed);
+        phases.push(PhaseReport {
+            label: spec.labels_at(a),
+            start_ms: a,
+            end_ms: b,
+            offered,
+            satisfied,
+            shed,
+            goodput_rps: satisfied * 1000.0 / (b - a),
+            slo_violation_rate: if offered == 0 {
+                0.0
+            } else {
+                (1.0 - satisfied / offered as f64).max(0.0)
+            },
+        });
+    }
+
+    let mut recoveries = Vec::new();
+    for ev in &spec.timeline {
+        let ScenarioEvent::ServerFail { server } = ev.kind else {
+            continue;
+        };
+        let fault_at = ev.at_ms;
+        let recover_at = spec.timeline.iter().find_map(|e2| match e2.kind {
+            ScenarioEvent::ServerRecover { server: s2 }
+                if s2 == server && e2.at_ms >= fault_at =>
+            {
+                Some(e2.at_ms)
+            }
+            _ => None,
+        });
+        let pre = row_at(fault_at);
+        let pre_rate = if fault_at > 0.0 {
+            pre.satisfied * 1000.0 / fault_at
+        } else {
+            0.0
+        };
+        let search_from = recover_at.unwrap_or(fault_at);
+        let mut recovered_at = None;
+        // no measurable pre-fault rate (fault at t=0 or before any credit
+        // was earned): recovery is undetectable, not instantaneous
+        if pre_rate > 0.0 {
+            for w in rows.windows(2) {
+                let (r0, r1) = (&w[0], &w[1]);
+                if r1.at_ms <= search_from + 1e-9 {
+                    continue;
+                }
+                let dt = r1.at_ms - r0.at_ms;
+                if dt <= 1e-9 {
+                    continue;
+                }
+                let rate = (r1.satisfied - r0.satisfied) * 1000.0 / dt;
+                if rate >= 0.9 * pre_rate {
+                    recovered_at = Some(r1.at_ms);
+                    break;
+                }
+            }
+        }
+        recoveries.push(Recovery {
+            server: server.0,
+            fault_at_ms: fault_at,
+            recovered_at_ms: recovered_at,
+            recovery_ms: recovered_at.map(|t| (t - fault_at).max(0.0)),
+        });
+    }
+
+    ScenarioReport {
+        scenario: spec.name.clone(),
+        backend,
+        seed: spec.seed(),
+        duration_ms: spec.duration_ms(),
+        offered: totals.offered,
+        satisfied: totals.satisfied,
+        shed: totals.shed,
+        goodput_rps: totals.goodput_rps,
+        slo_violation_rate: totals.slo_violation_rate,
+        phases,
+        recoveries,
+        metrics_fingerprint: totals.metrics_fingerprint,
+    }
+}
+
+impl ScenarioReport {
+    /// Bit-exact run fingerprint for golden pinning (every f64 as raw
+    /// bits; embeds the sim engine's `Metrics::fingerprint` when present).
+    pub fn fingerprint(&self) -> String {
+        let mut out = format!(
+            "scenario={} backend={} seed={} offered={} satisfied={:016x} \
+             shed={} viol={:016x}",
+            self.scenario,
+            self.backend,
+            self.seed,
+            self.offered,
+            self.satisfied.to_bits(),
+            self.shed,
+            self.slo_violation_rate.to_bits(),
+        );
+        for (i, p) in self.phases.iter().enumerate() {
+            let _ = write!(
+                out,
+                " p{i}={}:{:016x}:{}",
+                p.offered,
+                p.satisfied.to_bits(),
+                p.shed
+            );
+        }
+        for r in &self.recoveries {
+            let _ = write!(
+                out,
+                " rec{}={:016x}",
+                r.server,
+                r.recovery_ms.unwrap_or(-1.0).to_bits()
+            );
+        }
+        if let Some(fp) = &self.metrics_fingerprint {
+            let _ = write!(out, " metrics[{fp}]");
+        }
+        out
+    }
+
+    /// JSON form (the CI artifact).
+    pub fn to_json(&self) -> Json {
+        let phases = self
+            .phases
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("label", Json::str(p.label.clone())),
+                    ("start_ms", Json::num(p.start_ms)),
+                    ("end_ms", Json::num(p.end_ms)),
+                    ("offered", Json::num(p.offered as f64)),
+                    ("satisfied", Json::num(p.satisfied)),
+                    ("shed", Json::num(p.shed as f64)),
+                    ("goodput_rps", Json::num(p.goodput_rps)),
+                    ("slo_violation_rate", Json::num(p.slo_violation_rate)),
+                ])
+            })
+            .collect();
+        let recoveries = self
+            .recoveries
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("server", Json::num(r.server as f64)),
+                    ("fault_at_ms", Json::num(r.fault_at_ms)),
+                    (
+                        "recovered_at_ms",
+                        r.recovered_at_ms.map(Json::num).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "recovery_ms",
+                        r.recovery_ms.map(Json::num).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("scenario", Json::str(self.scenario.clone())),
+            ("backend", Json::str(self.backend)),
+            ("seed", Json::num(self.seed as f64)),
+            ("duration_ms", Json::num(self.duration_ms)),
+            ("offered", Json::num(self.offered as f64)),
+            ("satisfied", Json::num(self.satisfied)),
+            ("shed", Json::num(self.shed as f64)),
+            ("goodput_rps", Json::num(self.goodput_rps)),
+            ("slo_violation_rate", Json::num(self.slo_violation_rate)),
+            ("phases", Json::Arr(phases)),
+            ("recoveries", Json::Arr(recoveries)),
+            (
+                "metrics_fingerprint",
+                self.metrics_fingerprint
+                    .clone()
+                    .map(Json::str)
+                    .unwrap_or(Json::Null),
+            ),
+            ("fingerprint", Json::str(self.fingerprint())),
+        ])
+    }
+
+    /// Multi-line human report.
+    pub fn human(&self) -> String {
+        let mut out = format!(
+            "scenario {} [{}] seed {}: goodput={:.2} req/s \
+             satisfied={:.1}/{} viol={:.1}% shed={}\n",
+            self.scenario,
+            self.backend,
+            self.seed,
+            self.goodput_rps,
+            self.satisfied,
+            self.offered,
+            self.slo_violation_rate * 100.0,
+            self.shed,
+        );
+        for p in &self.phases {
+            let _ = writeln!(
+                out,
+                "  {:>6.1}s–{:<6.1}s {:24} offered={:<6} goodput={:>7.2} \
+                 req/s viol={:>5.1}% shed={}",
+                p.start_ms / 1000.0,
+                p.end_ms / 1000.0,
+                p.label,
+                p.offered,
+                p.goodput_rps,
+                p.slo_violation_rate * 100.0,
+                p.shed,
+            );
+        }
+        for r in &self.recoveries {
+            match r.recovery_ms {
+                Some(ms) => {
+                    let _ = writeln!(
+                        out,
+                        "  recovery server{}: fault@{:.1}s recovered in {:.0} ms",
+                        r.server,
+                        r.fault_at_ms / 1000.0,
+                        ms,
+                    );
+                }
+                None => {
+                    let _ = writeln!(
+                        out,
+                        "  recovery server{}: fault@{:.1}s NOT recovered",
+                        r.server,
+                        r.fault_at_ms / 1000.0,
+                    );
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configjson::parse;
+
+    fn spec() -> ScenarioSpec {
+        ScenarioSpec::from_json(
+            &parse(
+                r#"{
+          "name": "t",
+          "base": {"workload": {"rps": 10.0, "duration_s": 10.0}},
+          "timeline": [
+            {"at_ms": 4000, "event": "server_fail", "server": 0},
+            {"at_ms": 6000, "event": "server_recover", "server": 0}
+          ]
+        }"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    fn rows() -> Vec<CumRow> {
+        // steady 10 credit/s until the fault, flat during [4s, 6s],
+        // steady again after recovery
+        let mut out = Vec::new();
+        for i in 0..=20 {
+            let t = i as f64 * 500.0;
+            let sat = if t <= 4000.0 {
+                t / 100.0
+            } else if t <= 6000.0 {
+                40.0
+            } else {
+                40.0 + (t - 6000.0) / 100.0
+            };
+            out.push(CumRow {
+                at_ms: t,
+                offered: (t / 100.0) as u64,
+                satisfied: sat,
+                shed: if t > 4000.0 { 5 } else { 0 },
+            });
+        }
+        out
+    }
+
+    fn totals() -> Totals {
+        Totals {
+            offered: 100,
+            satisfied: 80.0,
+            shed: 5,
+            goodput_rps: 8.0,
+            slo_violation_rate: 0.2,
+            metrics_fingerprint: Some("offered=100".into()),
+        }
+    }
+
+    #[test]
+    fn phases_slice_at_boundaries() {
+        let r = assemble(&spec(), "sim", &rows(), totals());
+        // boundaries 0, 4000, 6000, 10000 → 3 phases
+        assert_eq!(r.phases.len(), 3);
+        assert_eq!(r.phases[0].label, "steady");
+        assert_eq!(r.phases[1].label, "server_fail");
+        assert_eq!(r.phases[2].label, "server_recover");
+        // fault phase earned nothing; outer phases ran at ~10 credit/s
+        assert!(r.phases[1].satisfied < 1e-9);
+        assert!((r.phases[0].goodput_rps - 10.0).abs() < 0.2);
+        assert!((r.phases[2].goodput_rps - 10.0).abs() < 0.2);
+        assert_eq!(r.phases[1].shed, 5);
+    }
+
+    #[test]
+    fn recovery_detected_after_rate_returns() {
+        let r = assemble(&spec(), "sim", &rows(), totals());
+        assert_eq!(r.recoveries.len(), 1);
+        let rec = &r.recoveries[0];
+        assert_eq!(rec.server, 0);
+        assert_eq!(rec.fault_at_ms, 4000.0);
+        // rate returns in the first 500 ms bucket after the 6 s repair
+        assert_eq!(rec.recovered_at_ms, Some(6500.0));
+        assert_eq!(rec.recovery_ms, Some(2500.0));
+    }
+
+    #[test]
+    fn fingerprint_is_bit_sensitive_and_json_roundtrips() {
+        let a = assemble(&spec(), "sim", &rows(), totals());
+        let b = assemble(&spec(), "sim", &rows(), totals());
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let mut t = totals();
+        t.satisfied += 1e-9;
+        let c = assemble(&spec(), "sim", &rows(), t);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        // JSON parses back and carries the fingerprint verbatim
+        let j = parse(&a.to_json().to_string()).unwrap();
+        assert_eq!(
+            j.get("fingerprint").unwrap().as_str().unwrap(),
+            a.fingerprint()
+        );
+        assert_eq!(j.get("phases").unwrap().as_arr().unwrap().len(), 3);
+        assert!(!a.human().is_empty());
+    }
+}

@@ -1,0 +1,535 @@
+//! Declarative scenario specs: a base run configuration plus a timeline
+//! of churn/fault/surge events, parsed from JSON via [`crate::configjson`].
+//!
+//! ```json
+//! {
+//!   "name": "cascading_failure",
+//!   "description": "two GPU servers fail in sequence, then recover",
+//!   "base": {
+//!     "seed": 7,
+//!     "workload": {"mix": "prod0", "rps": 60.0, "duration_s": 20.0,
+//!                  "seed": 7},
+//!     "replacement_interval_ms": 2500.0
+//!   },
+//!   "goodput_floor_rps": 2.0,
+//!   "sample_interval_ms": 500.0,
+//!   "timeline": [
+//!     {"at_ms": 4000, "event": "server_fail", "server": 0},
+//!     {"at_ms": 9000, "event": "server_recover", "server": 0},
+//!     {"at_ms": 5000, "event": "rps_surge", "factor": 4.0,
+//!      "duration_ms": 3000},
+//!     {"at_ms": 6000, "event": "latency_skew", "server": 1,
+//!      "factor": 3.0, "duration_ms": 2000},
+//!     {"at_ms": 8000, "event": "category_shift", "mix": "frequency",
+//!      "factor": 1.0, "duration_ms": 4000},
+//!     {"at_ms": 3000, "event": "device_leave", "device": 2},
+//!     {"at_ms": 7000, "event": "device_join", "device": 2}
+//!   ]
+//! }
+//! ```
+//!
+//! `base` is a full [`RunConfig`] (cluster, workload, policy, sync);
+//! timeline events are validated against it (server/device ids in range,
+//! times inside the horizon, positive factors) and sorted by time.
+//! Event semantics — see DESIGN.md §Scenarios:
+//!
+//! * `server_fail` / `server_recover` — whole-server GPU outage and
+//!   repair (sim: [`crate::sim::FaultAction`]; gateway: capacity-loss
+//!   slowdown on the executor).
+//! * `device_leave` / `device_join` — edge-device churn (sim only; the
+//!   gateway has no device lanes and ignores them).
+//! * `rps_surge` — extra offered load of the base mix at
+//!   `(factor − 1) × rps` for `duration_ms` (required > 0; total ≈
+//!   factor × base).
+//! * `latency_skew` — service times on one server multiply by `factor`
+//!   for `duration_ms` (0 = rest of the run).
+//! * `category_shift` — additional traffic of a *different* mix at
+//!   `factor × rps` for `duration_ms` (required > 0; the category
+//!   balance moves).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::configjson::Json;
+use crate::core::{DeviceId, ServerId};
+use crate::sim::{FaultAction, RunConfig};
+use crate::workload::Mix;
+
+/// One timeline event kind (validated).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScenarioEvent {
+    ServerFail { server: ServerId },
+    ServerRecover { server: ServerId },
+    DeviceJoin { device: DeviceId },
+    DeviceLeave { device: DeviceId },
+    RpsSurge { factor: f64, duration_ms: f64 },
+    LatencySkew { server: ServerId, factor: f64, duration_ms: f64 },
+    CategoryShift { mix: Mix, factor: f64, duration_ms: f64 },
+}
+
+impl ScenarioEvent {
+    /// Stable short name (phase labels, reports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioEvent::ServerFail { .. } => "server_fail",
+            ScenarioEvent::ServerRecover { .. } => "server_recover",
+            ScenarioEvent::DeviceJoin { .. } => "device_join",
+            ScenarioEvent::DeviceLeave { .. } => "device_leave",
+            ScenarioEvent::RpsSurge { .. } => "rps_surge",
+            ScenarioEvent::LatencySkew { .. } => "latency_skew",
+            ScenarioEvent::CategoryShift { .. } => "category_shift",
+        }
+    }
+
+    /// Duration of the event's effect window, if it has one.
+    pub fn window_ms(&self) -> Option<f64> {
+        match self {
+            ScenarioEvent::RpsSurge { duration_ms, .. }
+            | ScenarioEvent::LatencySkew { duration_ms, .. }
+            | ScenarioEvent::CategoryShift { duration_ms, .. } => Some(*duration_ms),
+            _ => None,
+        }
+    }
+}
+
+/// One timeline entry.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TimelineEvent {
+    pub at_ms: f64,
+    pub kind: ScenarioEvent,
+}
+
+/// A trace-level overlay window derived from surge/shift events.
+#[derive(Clone, Copy, Debug)]
+pub struct Overlay {
+    pub at_ms: f64,
+    pub duration_ms: f64,
+    /// Extra offered load during the window, as a multiple of base rps.
+    pub extra_rps_factor: f64,
+    /// Mix override for the overlay traffic (None = base mix).
+    pub mix: Option<Mix>,
+}
+
+/// A parsed, validated scenario.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub description: String,
+    /// The run everything happens to (cluster, workload, policy, sync).
+    pub base: RunConfig,
+    /// CI regression floor on whole-run goodput (asserted on the sim
+    /// backend; None = no floor).
+    pub goodput_floor_rps: Option<f64>,
+    /// Periodic sampling cadence for phase/recovery accounting.
+    pub sample_interval_ms: f64,
+    /// Events sorted by time.
+    pub timeline: Vec<TimelineEvent>,
+}
+
+impl ScenarioSpec {
+    pub fn from_json(j: &Json) -> Result<ScenarioSpec> {
+        let name = j
+            .req("name")?
+            .as_str()
+            .ok_or_else(|| anyhow!("'name' must be a string"))?
+            .to_string();
+        let description = j
+            .get("description")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        let empty = Json::Obj(Vec::new());
+        let base = RunConfig::from_json(j.get("base").unwrap_or(&empty))?;
+        let goodput_floor_rps = j.get("goodput_floor_rps").and_then(Json::as_f64);
+        if let Some(f) = goodput_floor_rps {
+            if f < 0.0 {
+                bail!("'goodput_floor_rps' must be >= 0 (got {f})");
+            }
+        }
+        let sample_interval_ms = j
+            .get("sample_interval_ms")
+            .and_then(Json::as_f64)
+            .unwrap_or(500.0)
+            .max(1.0);
+
+        let mut timeline = Vec::new();
+        if let Some(arr) = j.get("timeline").and_then(Json::as_arr) {
+            for (i, e) in arr.iter().enumerate() {
+                timeline.push(parse_event(e, i, &base)?);
+            }
+        }
+        // stable sort: same-instant events keep file order
+        timeline.sort_by(|a, b| a.at_ms.partial_cmp(&b.at_ms).unwrap());
+
+        Ok(ScenarioSpec {
+            name,
+            description,
+            base,
+            goodput_floor_rps,
+            sample_interval_ms,
+            timeline,
+        })
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<ScenarioSpec> {
+        Self::from_json(&crate::configjson::from_file(path)?)
+    }
+
+    /// Virtual horizon of the run (ms).
+    pub fn duration_ms(&self) -> f64 {
+        self.base.sim.duration_ms
+    }
+
+    /// The spec's RNG root (workload seed; sim seed tracks it).
+    pub fn seed(&self) -> u64 {
+        self.base.workload.seed
+    }
+
+    /// Re-seed both RNG roots (the CLI's `--seed` override).
+    pub fn override_seed(&mut self, seed: u64) {
+        self.base.sim.seed = seed;
+        self.base.workload.seed = seed;
+    }
+
+    /// Phase boundaries: 0, every event time, every effect-window end,
+    /// and the horizon — sorted, deduplicated.
+    pub fn boundaries(&self) -> Vec<f64> {
+        let dur = self.duration_ms();
+        let mut b = vec![0.0, dur];
+        for ev in &self.timeline {
+            b.push(ev.at_ms);
+            if let Some(d) = ev.kind.window_ms() {
+                if d > 0.0 {
+                    b.push((ev.at_ms + d).min(dur));
+                }
+            }
+        }
+        b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        b.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+        b
+    }
+
+    /// Human label for the phase starting at `t` (joined event names).
+    pub fn labels_at(&self, t: f64) -> String {
+        let names: Vec<String> = self
+            .timeline
+            .iter()
+            .filter(|ev| (ev.at_ms - t).abs() < 1e-9)
+            .map(|ev| ev.kind.name().to_string())
+            .collect();
+        if names.is_empty() {
+            "steady".to_string()
+        } else {
+            names.join("+")
+        }
+    }
+
+    /// Sim-backend action script: state-mutating events plus checkpoints
+    /// at every trace-level boundary, so a [`crate::sim::SimSample`]
+    /// exists at every phase edge.
+    pub fn sim_script(&self) -> Vec<(f64, FaultAction)> {
+        let dur = self.duration_ms();
+        let mut out = Vec::new();
+        for ev in &self.timeline {
+            match ev.kind {
+                ScenarioEvent::ServerFail { server } => {
+                    out.push((ev.at_ms, FaultAction::FailServer(server)))
+                }
+                ScenarioEvent::ServerRecover { server } => {
+                    out.push((ev.at_ms, FaultAction::RecoverServer(server)))
+                }
+                ScenarioEvent::DeviceJoin { device } => {
+                    out.push((ev.at_ms, FaultAction::DeviceJoin(device)))
+                }
+                ScenarioEvent::DeviceLeave { device } => {
+                    out.push((ev.at_ms, FaultAction::DeviceLeave(device)))
+                }
+                ScenarioEvent::LatencySkew { server, factor, duration_ms } => {
+                    out.push((ev.at_ms, FaultAction::LatencySkew { server, factor }));
+                    if duration_ms > 0.0 {
+                        let end = (ev.at_ms + duration_ms).min(dur);
+                        out.push((
+                            end,
+                            FaultAction::LatencySkew { server, factor: 1.0 / factor },
+                        ));
+                    }
+                }
+                ScenarioEvent::RpsSurge { duration_ms, .. }
+                | ScenarioEvent::CategoryShift { duration_ms, .. } => {
+                    out.push((ev.at_ms, FaultAction::Checkpoint));
+                    if duration_ms > 0.0 {
+                        out.push((
+                            (ev.at_ms + duration_ms).min(dur),
+                            FaultAction::Checkpoint,
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Trace overlay windows (surge / shift), in timeline order.
+    pub fn overlays(&self) -> Vec<Overlay> {
+        let mut out = Vec::new();
+        for ev in &self.timeline {
+            match ev.kind {
+                ScenarioEvent::RpsSurge { factor, duration_ms } => {
+                    out.push(Overlay {
+                        at_ms: ev.at_ms,
+                        duration_ms,
+                        extra_rps_factor: (factor - 1.0).max(0.0),
+                        mix: None,
+                    });
+                }
+                ScenarioEvent::CategoryShift { mix, factor, duration_ms } => {
+                    out.push(Overlay {
+                        at_ms: ev.at_ms,
+                        duration_ms,
+                        extra_rps_factor: factor.max(0.0),
+                        mix: Some(mix),
+                    });
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+}
+
+fn parse_event(e: &Json, i: usize, base: &RunConfig) -> Result<TimelineEvent> {
+    let dur = base.sim.duration_ms;
+    let at_ms = e
+        .get("at_ms")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("timeline[{i}]: missing numeric 'at_ms'"))?;
+    if !(0.0..=dur).contains(&at_ms) {
+        bail!("timeline[{i}]: at_ms {at_ms} outside the run horizon [0, {dur}]");
+    }
+    let kind_str = e
+        .get("event")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("timeline[{i}]: missing 'event' name"))?;
+
+    let n = base.cloud.n_servers() as u32;
+    let server = || -> Result<ServerId> {
+        let s = e
+            .get("server")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("timeline[{i}]: '{kind_str}' needs 'server'"))?
+            as u32;
+        if s >= n {
+            bail!("timeline[{i}]: server {s} out of range (cloud has {n} servers)");
+        }
+        Ok(ServerId(s))
+    };
+    let device = || -> Result<DeviceId> {
+        let d = e
+            .get("device")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("timeline[{i}]: '{kind_str}' needs 'device'"))?
+            as u32;
+        if !base.cloud.devices.iter().any(|dd| dd.id.0 == d) {
+            bail!("timeline[{i}]: device {d} not present in the cloud");
+        }
+        Ok(DeviceId(d))
+    };
+    let factor = |default: f64| -> Result<f64> {
+        let f = e.get("factor").and_then(Json::as_f64).unwrap_or(default);
+        if f <= 0.0 {
+            bail!("timeline[{i}]: 'factor' must be > 0 (got {f})");
+        }
+        Ok(f)
+    };
+    let duration = e
+        .get("duration_ms")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0)
+        .max(0.0);
+    // surge/shift are traffic *windows*: a zero/omitted duration would
+    // silently generate no overlay traffic, so reject it up front
+    // (latency_skew keeps 0 = "rest of the run")
+    let window = || -> Result<f64> {
+        if duration <= 0.0 {
+            bail!("timeline[{i}]: '{kind_str}' needs a positive 'duration_ms'");
+        }
+        Ok(duration)
+    };
+
+    let kind = match kind_str {
+        "server_fail" => ScenarioEvent::ServerFail { server: server()? },
+        "server_recover" => ScenarioEvent::ServerRecover { server: server()? },
+        "device_join" => ScenarioEvent::DeviceJoin { device: device()? },
+        "device_leave" => ScenarioEvent::DeviceLeave { device: device()? },
+        "rps_surge" => ScenarioEvent::RpsSurge {
+            factor: factor(2.0)?,
+            duration_ms: window()?,
+        },
+        "latency_skew" => ScenarioEvent::LatencySkew {
+            server: server()?,
+            factor: factor(2.0)?,
+            duration_ms: duration,
+        },
+        "category_shift" => {
+            let mix_str = e
+                .get("mix")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("timeline[{i}]: 'category_shift' needs 'mix'"))?;
+            ScenarioEvent::CategoryShift {
+                mix: crate::sim::runcfg::parse_mix(mix_str)
+                    .map_err(|e| anyhow!("timeline[{i}]: {e}"))?,
+                factor: factor(1.0)?,
+                duration_ms: window()?,
+            }
+        }
+        other => bail!(
+            "timeline[{i}]: unknown event '{other}' (known: server_fail, \
+             server_recover, device_join, device_leave, rps_surge, \
+             latency_skew, category_shift)"
+        ),
+    };
+    Ok(TimelineEvent { at_ms, kind })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configjson::parse;
+
+    fn spec(text: &str) -> Result<ScenarioSpec> {
+        ScenarioSpec::from_json(&parse(text).unwrap())
+    }
+
+    const OK: &str = r#"{
+      "name": "t",
+      "base": {"workload": {"rps": 20.0, "duration_s": 10.0}},
+      "goodput_floor_rps": 1.0,
+      "timeline": [
+        {"at_ms": 6000, "event": "server_recover", "server": 0},
+        {"at_ms": 2000, "event": "server_fail", "server": 0},
+        {"at_ms": 3000, "event": "rps_surge", "factor": 3.0,
+         "duration_ms": 2000},
+        {"at_ms": 4000, "event": "latency_skew", "server": 1,
+         "factor": 2.0, "duration_ms": 1000}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sorts_and_validates() {
+        let s = spec(OK).unwrap();
+        assert_eq!(s.name, "t");
+        assert_eq!(s.timeline.len(), 4);
+        // sorted by time regardless of file order
+        for w in s.timeline.windows(2) {
+            assert!(w[0].at_ms <= w[1].at_ms);
+        }
+        assert_eq!(s.goodput_floor_rps, Some(1.0));
+        assert_eq!(s.duration_ms(), 10_000.0);
+    }
+
+    #[test]
+    fn boundaries_cover_events_and_window_ends() {
+        let s = spec(OK).unwrap();
+        let b = s.boundaries();
+        for t in [0.0, 2000.0, 3000.0, 4000.0, 5000.0, 6000.0, 10_000.0] {
+            assert!(
+                b.iter().any(|x| (x - t).abs() < 1e-9),
+                "missing boundary {t} in {b:?}"
+            );
+        }
+        for w in b.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn sim_script_pairs_skew_with_revert() {
+        let s = spec(OK).unwrap();
+        let script = s.sim_script();
+        let skews: Vec<_> = script
+            .iter()
+            .filter_map(|(at, a)| match a {
+                FaultAction::LatencySkew { factor, .. } => Some((*at, *factor)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(skews.len(), 2);
+        assert_eq!(skews[0], (4000.0, 2.0));
+        assert_eq!(skews[1], (5000.0, 0.5));
+        // surge contributes checkpoints, not state mutations
+        assert!(script
+            .iter()
+            .any(|(at, a)| *at == 3000.0 && *a == FaultAction::Checkpoint));
+    }
+
+    #[test]
+    fn overlays_from_surge_and_shift() {
+        let s = spec(
+            r#"{
+          "name": "t",
+          "base": {"workload": {"rps": 10.0, "duration_s": 10.0}},
+          "timeline": [
+            {"at_ms": 1000, "event": "rps_surge", "factor": 4.0,
+             "duration_ms": 2000},
+            {"at_ms": 5000, "event": "category_shift", "mix": "frequency",
+             "factor": 0.5, "duration_ms": 3000}
+          ]
+        }"#,
+        )
+        .unwrap();
+        let ov = s.overlays();
+        assert_eq!(ov.len(), 2);
+        assert!((ov[0].extra_rps_factor - 3.0).abs() < 1e-12);
+        assert!(ov[0].mix.is_none());
+        assert!((ov[1].extra_rps_factor - 0.5).abs() < 1e-12);
+        assert_eq!(ov[1].mix, Some(crate::workload::Mix::FrequencyOnly));
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        // unknown event
+        assert!(spec(
+            r#"{"name":"t","base":{},
+                "timeline":[{"at_ms":1,"event":"meteor_strike"}]}"#
+        )
+        .is_err());
+        // server out of range (testbed has 6)
+        assert!(spec(
+            r#"{"name":"t","base":{},
+                "timeline":[{"at_ms":1,"event":"server_fail","server":9}]}"#
+        )
+        .is_err());
+        // event beyond the horizon
+        assert!(spec(
+            r#"{"name":"t","base":{"workload":{"duration_s":5.0}},
+                "timeline":[{"at_ms":9000,"event":"server_fail","server":0}]}"#
+        )
+        .is_err());
+        // non-positive factor
+        assert!(spec(
+            r#"{"name":"t","base":{},
+                "timeline":[{"at_ms":1,"event":"rps_surge","factor":0}]}"#
+        )
+        .is_err());
+        // surge without a window would silently generate no traffic
+        assert!(spec(
+            r#"{"name":"t","base":{},
+                "timeline":[{"at_ms":1,"event":"rps_surge","factor":2.0}]}"#
+        )
+        .is_err());
+        // shift with zero window likewise
+        assert!(spec(
+            r#"{"name":"t","base":{},
+                "timeline":[{"at_ms":1,"event":"category_shift",
+                             "mix":"frequency","duration_ms":0}]}"#
+        )
+        .is_err());
+        // unknown device
+        assert!(spec(
+            r#"{"name":"t","base":{},
+                "timeline":[{"at_ms":1,"event":"device_join","device":99}]}"#
+        )
+        .is_err());
+        // missing name
+        assert!(spec(r#"{"base":{}}"#).is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! Deterministic workload construction for scenarios.
+//!
+//! The base trace comes straight from [`crate::workload::generate`];
+//! every surge/shift window adds an *overlay* trace — generated with a
+//! seed derived from the base seed and the overlay index (SplitMix64
+//! golden gamma), time-shifted into the window — and the union is
+//! re-sorted and re-numbered.  Everything is a pure function of the spec,
+//! so two runs of the same scenario produce bit-identical traces; the
+//! service universe (and hence allocation + initial placement) is the
+//! union over base + overlays, known at t = 0 — a mild oracle the engine
+//! documents rather than hides.
+
+use crate::cluster::EdgeCloud;
+use crate::core::{Request, RequestId};
+use crate::profile::ProfileTable;
+use crate::workload::{generate, WorkloadSpec};
+
+use super::spec::ScenarioSpec;
+
+/// Decorrelated overlay seed (SplitMix64 golden-gamma step).
+fn overlay_seed(base: u64, i: usize) -> u64 {
+    base ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i as u64 + 1)
+}
+
+/// Build the full request trace for a scenario (base + overlays), sorted
+/// by arrival with monotone ids.
+pub fn build_requests(
+    spec: &ScenarioSpec,
+    table: &ProfileTable,
+    cloud: &EdgeCloud,
+) -> Vec<Request> {
+    let base = &spec.base.workload;
+    let mut reqs = generate(base, table, cloud);
+    for (i, ov) in spec.overlays().iter().enumerate() {
+        let rps = base.rps * ov.extra_rps_factor;
+        let duration_ms = ov.duration_ms.min(spec.duration_ms() - ov.at_ms);
+        if rps <= 0.0 || duration_ms <= 0.0 {
+            continue;
+        }
+        let wspec = WorkloadSpec {
+            seed: overlay_seed(base.seed, i),
+            duration_ms,
+            rps,
+            streams: (base.streams / 2).max(8),
+            burstiness: base.burstiness,
+            mix: ov.mix.unwrap_or(base.mix),
+            services: Vec::new(),
+        };
+        let mut extra = generate(&wspec, table, cloud);
+        for r in extra.iter_mut() {
+            r.arrival_ms += ov.at_ms;
+        }
+        reqs.append(&mut extra);
+    }
+    // stable sort + append order keep equal-arrival ordering deterministic
+    reqs.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.id = RequestId(i as u64);
+    }
+    reqs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configjson::parse;
+    use crate::profile::zoo;
+    use crate::scenario::spec::ScenarioSpec;
+
+    fn spec(text: &str) -> ScenarioSpec {
+        ScenarioSpec::from_json(&parse(text).unwrap()).unwrap()
+    }
+
+    const SURGE: &str = r#"{
+      "name": "t",
+      "base": {"workload": {"rps": 40.0, "duration_s": 10.0, "seed": 3}},
+      "timeline": [
+        {"at_ms": 4000, "event": "rps_surge", "factor": 4.0,
+         "duration_ms": 2000}
+      ]
+    }"#;
+
+    #[test]
+    fn surge_densifies_only_its_window() {
+        let table = zoo::paper_zoo();
+        let s = spec(SURGE);
+        let cloud = s.base.cloud.clone();
+        let reqs = build_requests(&s, &table, &cloud);
+        let count = |a: f64, b: f64| {
+            reqs.iter().filter(|r| r.arrival_ms >= a && r.arrival_ms < b).count()
+        };
+        let before = count(2000.0, 4000.0);
+        let during = count(4000.0, 6000.0);
+        let after = count(6000.0, 8000.0);
+        assert!(
+            during as f64 > 2.0 * before.max(1) as f64,
+            "surge window not denser: before={before} during={during}"
+        );
+        assert!(
+            during as f64 > 2.0 * after.max(1) as f64,
+            "surge leaked: during={during} after={after}"
+        );
+        // sorted + monotone ids
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival_ms <= w[1].arrival_ms);
+            assert!(w[0].id < w[1].id);
+        }
+    }
+
+    #[test]
+    fn trace_is_bit_deterministic() {
+        let table = zoo::paper_zoo();
+        let s = spec(SURGE);
+        let cloud = s.base.cloud.clone();
+        let a = build_requests(&s, &table, &cloud);
+        let b = build_requests(&s, &table, &cloud);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_ms.to_bits(), y.arrival_ms.to_bits());
+            assert_eq!(x.service, y.service);
+            assert_eq!(x.origin, y.origin);
+            assert_eq!(x.frames, y.frames);
+        }
+    }
+
+    #[test]
+    fn shift_injects_the_other_mix() {
+        use crate::core::Sensitivity;
+        let table = zoo::paper_zoo();
+        let s = spec(
+            r#"{
+          "name": "t",
+          "base": {"workload": {"mix": "latency", "rps": 30.0,
+                                "duration_s": 10.0, "seed": 3}},
+          "timeline": [
+            {"at_ms": 5000, "event": "category_shift", "mix": "frequency",
+             "factor": 1.0, "duration_ms": 4000}
+          ]
+        }"#,
+        );
+        let cloud = s.base.cloud.clone();
+        let reqs = build_requests(&s, &table, &cloud);
+        let freq_before = reqs
+            .iter()
+            .filter(|r| r.arrival_ms < 5000.0)
+            .filter(|r| table.spec(r.service).sensitivity == Sensitivity::Frequency)
+            .count();
+        let freq_during = reqs
+            .iter()
+            .filter(|r| r.arrival_ms >= 5000.0 && r.arrival_ms < 9000.0)
+            .filter(|r| table.spec(r.service).sensitivity == Sensitivity::Frequency)
+            .count();
+        assert_eq!(freq_before, 0, "latency-only base leaked frequency traffic");
+        assert!(freq_during > 0, "shift window added no frequency traffic");
+    }
+}

@@ -92,6 +92,78 @@ impl Executor for ProfileReplayExecutor {
     }
 }
 
+/// Scheduled capacity degradation for scenario runs: a sorted step
+/// schedule of slowdown factors (wall-clock ms since construction →
+/// ×factor ≥ 1) applied on top of any inner backend.
+///
+/// This is the gateway's fault-injection surface: `expected_ms` grows by
+/// the current factor, so the admission tier's SLO-budget estimate sheds
+/// harder while capacity is degraded (the admission hook), and `execute`
+/// stretches the inner call by sleeping out the remainder, so lanes stay
+/// occupied proportionally longer (the executor hook).  Factors < 1 are
+/// clamped to 1 — this wrapper degrades, it never speeds up.
+pub struct DegradedExecutor {
+    inner: std::sync::Arc<dyn Executor>,
+    /// (wall ms since the armed instant, slowdown factor) steps, sorted.
+    steps: Vec<(f64, f64)>,
+    /// Schedule anchor: construction time until [`DegradedExecutor::arm`]
+    /// re-anchors it to the moment traffic actually starts.
+    started: std::sync::Mutex<std::time::Instant>,
+}
+
+impl DegradedExecutor {
+    pub fn new(inner: std::sync::Arc<dyn Executor>, mut steps: Vec<(f64, f64)>) -> Self {
+        steps.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        DegradedExecutor {
+            inner,
+            steps,
+            started: std::sync::Mutex::new(std::time::Instant::now()),
+        }
+    }
+
+    /// Re-anchor the schedule clock to *now*.  Call right before the
+    /// load starts, so gateway spawn / plan-build time does not shift
+    /// the degradation windows relative to the traffic's own clock.
+    pub fn arm(&self) {
+        *self.started.lock().unwrap_or_else(|e| e.into_inner()) =
+            std::time::Instant::now();
+    }
+
+    /// The factor in force right now (last step at or before the clock).
+    fn factor_now(&self) -> f64 {
+        let started = *self.started.lock().unwrap_or_else(|e| e.into_inner());
+        let t = started.elapsed().as_secs_f64() * 1000.0;
+        self.steps
+            .iter()
+            .rev()
+            .find(|(at, _)| t >= *at)
+            .map(|(_, f)| *f)
+            .unwrap_or(1.0)
+            .max(1.0)
+    }
+}
+
+impl Executor for DegradedExecutor {
+    fn name(&self) -> &'static str {
+        "degraded"
+    }
+
+    fn expected_ms(&self, service: ServiceId, bs: u32, frames: u32) -> f64 {
+        self.inner.expected_ms(service, bs, frames) * self.factor_now()
+    }
+
+    fn execute(&self, service: ServiceId, batch: &[ExecRequest]) -> crate::Result<ExecOutcome> {
+        let f = self.factor_now();
+        let out = self.inner.execute(service, batch)?;
+        if f > 1.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                out.batch_latency_ms * (f - 1.0) / 1000.0,
+            ));
+        }
+        Ok(ExecOutcome { batch_latency_ms: out.batch_latency_ms * f })
+    }
+}
+
 #[cfg(feature = "pjrt")]
 pub use pjrt_bridge::CoordinatorExecutor;
 
@@ -201,6 +273,30 @@ mod tests {
         let one = ex.expected_ms(ids::RESNET50, 1, 1);
         let eight = ex.expected_ms(ids::RESNET50, 8, 1);
         assert!(eight < 8.0 * one, "batching must beat serial replay");
+    }
+
+    #[test]
+    fn degraded_executor_applies_the_scheduled_factor() {
+        use std::sync::Arc;
+        let inner = Arc::new(ProfileReplayExecutor::new(zoo::paper_zoo(), 1e6));
+        let base = inner.expected_ms(ids::RESNET50, 1, 1);
+        // active-from-start 2× step plus a far-future step that must not
+        // apply yet; unsorted on purpose (the constructor sorts)
+        let ex = DegradedExecutor::new(
+            Arc::clone(&inner) as Arc<dyn Executor>,
+            vec![(1e12, 50.0), (0.0, 2.0)],
+        );
+        ex.arm(); // re-anchoring must not change which step is in force
+        let degraded = ex.expected_ms(ids::RESNET50, 1, 1);
+        assert!((degraded - base * 2.0).abs() < 1e-12, "{degraded} vs {base}");
+        let out = ex
+            .execute(ids::RESNET50, &[ExecRequest { service: ids::RESNET50, frames: 1 }])
+            .unwrap();
+        assert!((out.batch_latency_ms - base * 2.0).abs() < 1e-12);
+        // an empty schedule is a transparent wrapper
+        let clean = DegradedExecutor::new(inner as Arc<dyn Executor>, Vec::new());
+        assert!((clean.expected_ms(ids::RESNET50, 1, 1) - base).abs() < 1e-12);
+        assert_eq!(clean.name(), "degraded");
     }
 
     #[test]

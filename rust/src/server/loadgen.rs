@@ -73,6 +73,9 @@ impl Default for LoadgenConfig {
 #[derive(Clone, Debug, Default)]
 pub struct LoadReport {
     pub sent: usize,
+    /// §3.3 goodput credit summed from 200 bodies (the gateway reports
+    /// per-request credit; missing/non-JSON bodies count as 1.0).
+    pub credit: f64,
     /// 2xx completions.
     pub ok: usize,
     /// 429 sheds.
@@ -94,6 +97,7 @@ pub struct LoadReport {
 impl LoadReport {
     fn absorb(&mut self, other: LoadReport) {
         self.sent += other.sent;
+        self.credit += other.credit;
         self.ok += other.ok;
         self.shed += other.shed;
         self.http_errors += other.http_errors;
@@ -135,13 +139,26 @@ impl LoadReport {
     }
 }
 
-/// One planned shot.
+/// One planned shot.  Public: the scenario engine builds explicit plans
+/// (time-scaled scenario traces) and feeds them through [`run_shots`].
 #[derive(Clone, Copy, Debug)]
-struct Shot {
-    arrival_ms: f64,
-    service: ServiceId,
-    frames: u32,
-    category: usize,
+pub struct Shot {
+    /// Wall-clock launch offset from the run start (ms).
+    pub arrival_ms: f64,
+    pub service: ServiceId,
+    pub frames: u32,
+    /// `cat_index` of the service's §2.1 category (report bucketing).
+    pub category: usize,
+}
+
+/// Per-shot terminal observation from [`run_shots`], in plan order.
+/// `status` 0 means a transport error; `credit` is parsed from the 200
+/// body's §3.3 accounting (0 for non-2xx).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShotOutcome {
+    pub status: u16,
+    pub credit: f64,
+    pub latency_ms: f64,
 }
 
 /// Draw the shot plan from the workload generator.
@@ -195,8 +212,8 @@ impl Client {
         Ok(self.conn.as_mut().expect("connection just established"))
     }
 
-    /// POST one inference request; returns (status, latency_ms).
-    fn infer(&mut self, shot: &Shot) -> std::io::Result<(u16, f64)> {
+    /// POST one inference request; returns (status, latency_ms, body).
+    fn infer(&mut self, shot: &Shot) -> std::io::Result<(u16, f64, Vec<u8>)> {
         use std::io::Write;
         let body = format!(
             "{{\"service\":{},\"frames\":{}}}",
@@ -215,7 +232,9 @@ impl Client {
         stream.flush()?;
         let mut reader = BufReader::new(stream.try_clone()?);
         match http::read_response(&mut reader) {
-            Ok((status, _body)) => Ok((status, t0.elapsed().as_secs_f64() * 1000.0)),
+            Ok((status, resp_body)) => {
+                Ok((status, t0.elapsed().as_secs_f64() * 1000.0, resp_body))
+            }
             Err(e) => {
                 // drop the (possibly desynchronized) connection
                 self.conn = None;
@@ -225,92 +244,148 @@ impl Client {
     }
 }
 
-fn fire(client: &mut Client, shot: &Shot, report: &mut LoadReport) {
+/// §3.3 credit from a 200 body; full credit when the field is absent
+/// (non-JSON executor bodies stay compatible).
+fn parse_credit(body: &[u8]) -> f64 {
+    std::str::from_utf8(body)
+        .ok()
+        .and_then(|s| crate::configjson::parse(s).ok())
+        .and_then(|j| j.get("credit").and_then(|v| v.as_f64()))
+        .unwrap_or(1.0)
+}
+
+fn fire(client: &mut Client, shot: &Shot, report: &mut LoadReport) -> ShotOutcome {
     report.sent += 1;
     match client.infer(shot) {
-        Ok((status, latency_ms)) if (200..300).contains(&status) => {
+        Ok((status, latency_ms, body)) if (200..300).contains(&status) => {
             report.ok += 1;
             report.latency_ms.add(latency_ms);
             report.by_category[shot.category].0 += 1;
+            let credit = parse_credit(&body);
+            report.credit += credit;
+            ShotOutcome { status, credit, latency_ms }
         }
-        Ok((429, _)) => {
+        Ok((429, _, _)) => {
             report.shed += 1;
             report.by_category[shot.category].1 += 1;
+            ShotOutcome { status: 429, ..Default::default() }
         }
-        Ok((_, _)) => report.http_errors += 1,
+        Ok((status, _, _)) => {
+            report.http_errors += 1;
+            ShotOutcome { status, ..Default::default() }
+        }
         Err(_) => {
             client.conn = None;
             report.transport_errors += 1;
+            ShotOutcome::default()
         }
     }
 }
 
 /// Run the load against a gateway; blocks until every shot resolved.
 pub fn run(cfg: &LoadgenConfig, table: &ProfileTable, gpu_vram_mb: f64) -> LoadReport {
-    let shots = Arc::new(plan_shots(cfg, table, gpu_vram_mb));
+    let shots = plan_shots(cfg, table, gpu_vram_mb);
+    if cfg.closed_loop {
+        run_closed(cfg, shots)
+    } else {
+        run_shots(cfg, shots).0
+    }
+}
+
+/// Fire an explicit open-loop shot plan (the scenario engine's entry
+/// point): arrival pacing on the wall clock, per-shot outcomes returned
+/// in plan order alongside the merged report.
+pub fn run_shots(cfg: &LoadgenConfig, shots: Vec<Shot>) -> (LoadReport, Vec<ShotOutcome>) {
+    let n = shots.len();
+    let shots = Arc::new(shots);
     let n_workers = cfg.concurrency.max(1);
     let t0 = Instant::now();
     let merged = Arc::new(Mutex::new(LoadReport::default()));
+    let outcomes = Arc::new(Mutex::new(vec![ShotOutcome::default(); n]));
 
-    if cfg.closed_loop {
-        // shared cursor: each worker pulls the next shot on completion
-        let cursor = Arc::new(AtomicUsize::new(0));
-        let handles: Vec<_> = (0..n_workers)
-            .map(|w| {
-                let shots = Arc::clone(&shots);
-                let cursor = Arc::clone(&cursor);
-                let merged = Arc::clone(&merged);
-                let cfg = cfg.clone();
-                thread::Builder::new()
-                    .name(format!("epara-loadgen-{w}"))
-                    .spawn(move || {
-                        let mut client = Client::new(&cfg.addr, cfg.timeout_ms);
-                        let mut local = LoadReport::default();
-                        loop {
-                            let i = cursor.fetch_add(1, Ordering::SeqCst);
-                            if i >= shots.len() {
-                                break;
-                            }
-                            fire(&mut client, &shots[i], &mut local);
+    // open loop: round-robin shot assignment, arrival-time pacing
+    let handles: Vec<_> = (0..n_workers)
+        .map(|w| {
+            let shots = Arc::clone(&shots);
+            let merged = Arc::clone(&merged);
+            let outcomes = Arc::clone(&outcomes);
+            let cfg = cfg.clone();
+            thread::Builder::new()
+                .name(format!("epara-loadgen-{w}"))
+                .spawn(move || {
+                    let mut client = Client::new(&cfg.addr, cfg.timeout_ms);
+                    let mut local = LoadReport::default();
+                    let mut local_out: Vec<(usize, ShotOutcome)> = Vec::new();
+                    for (i, shot) in
+                        shots.iter().enumerate().skip(w).step_by(n_workers)
+                    {
+                        let due = Duration::from_secs_f64(shot.arrival_ms / 1000.0);
+                        let elapsed = t0.elapsed();
+                        if due > elapsed {
+                            thread::sleep(due - elapsed);
+                        } else if elapsed - due > Duration::from_millis(50) {
+                            local.late += 1;
                         }
-                        merge(&merged, local);
-                    })
-                    .expect("spawn loadgen worker")
-            })
-            .collect();
-        for h in handles {
-            let _ = h.join();
-        }
-    } else {
-        // open loop: round-robin shot assignment, arrival-time pacing
-        let handles: Vec<_> = (0..n_workers)
-            .map(|w| {
-                let shots = Arc::clone(&shots);
-                let merged = Arc::clone(&merged);
-                let cfg = cfg.clone();
-                thread::Builder::new()
-                    .name(format!("epara-loadgen-{w}"))
-                    .spawn(move || {
-                        let mut client = Client::new(&cfg.addr, cfg.timeout_ms);
-                        let mut local = LoadReport::default();
-                        for shot in shots.iter().skip(w).step_by(n_workers) {
-                            let due = Duration::from_secs_f64(shot.arrival_ms / 1000.0);
-                            let elapsed = t0.elapsed();
-                            if due > elapsed {
-                                thread::sleep(due - elapsed);
-                            } else if elapsed - due > Duration::from_millis(50) {
-                                local.late += 1;
-                            }
-                            fire(&mut client, shot, &mut local);
+                        local_out.push((i, fire(&mut client, shot, &mut local)));
+                    }
+                    merge(&merged, local);
+                    let mut out = outcomes.lock().unwrap_or_else(|e| e.into_inner());
+                    for (i, o) in local_out {
+                        out[i] = o;
+                    }
+                })
+                .expect("spawn loadgen worker")
+        })
+        .collect();
+    for h in handles {
+        let _ = h.join();
+    }
+
+    let mut rep = match Arc::try_unwrap(merged) {
+        Ok(m) => m.into_inner().unwrap_or_else(|e| e.into_inner()),
+        Err(arc) => arc.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+    };
+    rep.wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    let out = match Arc::try_unwrap(outcomes) {
+        Ok(m) => m.into_inner().unwrap_or_else(|e| e.into_inner()),
+        Err(arc) => arc.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+    };
+    (rep, out)
+}
+
+/// Closed-loop mode: `concurrency` workers, one request in flight each.
+fn run_closed(cfg: &LoadgenConfig, shots: Vec<Shot>) -> LoadReport {
+    let shots = Arc::new(shots);
+    let n_workers = cfg.concurrency.max(1);
+    let t0 = Instant::now();
+    let merged = Arc::new(Mutex::new(LoadReport::default()));
+    // shared cursor: each worker pulls the next shot on completion
+    let cursor = Arc::new(AtomicUsize::new(0));
+    let handles: Vec<_> = (0..n_workers)
+        .map(|w| {
+            let shots = Arc::clone(&shots);
+            let cursor = Arc::clone(&cursor);
+            let merged = Arc::clone(&merged);
+            let cfg = cfg.clone();
+            thread::Builder::new()
+                .name(format!("epara-loadgen-{w}"))
+                .spawn(move || {
+                    let mut client = Client::new(&cfg.addr, cfg.timeout_ms);
+                    let mut local = LoadReport::default();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::SeqCst);
+                        if i >= shots.len() {
+                            break;
                         }
-                        merge(&merged, local);
-                    })
-                    .expect("spawn loadgen worker")
-            })
-            .collect();
-        for h in handles {
-            let _ = h.join();
-        }
+                        let _ = fire(&mut client, &shots[i], &mut local);
+                    }
+                    merge(&merged, local);
+                })
+                .expect("spawn loadgen worker")
+        })
+        .collect();
+    for h in handles {
+        let _ = h.join();
     }
 
     let mut out = match Arc::try_unwrap(merged) {

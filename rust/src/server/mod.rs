@@ -40,7 +40,7 @@ pub mod router;
 pub mod telemetry;
 
 pub use admission::{Admission, AdmissionConfig};
-pub use executor::{Executor, ProfileReplayExecutor};
+pub use executor::{DegradedExecutor, Executor, ProfileReplayExecutor};
 pub use telemetry::Telemetry;
 
 /// Read timeout on accepted sockets.  Doubles as two deadlines: how long

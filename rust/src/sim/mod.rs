@@ -59,11 +59,66 @@ enum EventKind {
     SyncRound,
     /// Periodic service re-placement (§3.4 coarse granularity).
     PlacementRound,
+    /// Scripted scenario action (index into the fault script).
+    Fault { idx: u32 },
+    /// Periodic metrics sample (scenario phase/recovery accounting).
+    Sample,
 }
 
 /// Min-heap ordering (time, then seq for determinism) comes from the shared
 /// `util::heap` key types — see `MinTimeKey`.
 type Event = Keyed<MinTimeKey, EventKind>;
+
+// --------------------------------------------------------------------------
+// scripted faults (scenario engine)
+// --------------------------------------------------------------------------
+
+/// One scripted chaos action, applied at a virtual instant of the run
+/// (the scenario engine's injection surface; §5.3.3 generalized from the
+/// original one-shot `fail_gpu_containment`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    /// Whole-server GPU outage: live deployments retire, queued requests
+    /// drain as `ResourceInsufficient`, GPUs flag failed, and the sync
+    /// ring marks the server down (detected loss, §5.3.3).
+    FailServer(ServerId),
+    /// Bring a failed server back: GPUs heal, the ring repairs, and
+    /// service is restored — by an immediate re-placement round when
+    /// periodic re-placement is on, else by reinstating the failed
+    /// roster (both pay the Fig. 3f model-load delay).
+    RecoverServer(ServerId),
+    /// Edge device deregisters (§3.2 churn): its deployment retires.
+    DeviceLeave(DeviceId),
+    /// Edge device (re)registers and contributes a deployment again.
+    DeviceJoin(DeviceId),
+    /// Multiply the batch-window time of every live deployment on the
+    /// server (degraded clocks / thermal throttling); factor < 1 undoes
+    /// an earlier skew.
+    LatencySkew { server: ServerId, factor: f64 },
+    /// No state change: force a metrics sample at this instant (phase
+    /// boundaries for trace-level events like surges).
+    Checkpoint,
+}
+
+/// Cumulative outcome counters sampled at a virtual instant.  Deltas
+/// between samples give per-phase goodput and SLO-violation rates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimSample {
+    pub at_ms: f64,
+    pub offered: u64,
+    pub satisfied: f64,
+    pub completed: u64,
+    pub timeout: u64,
+    pub offload_exceeded: u64,
+    pub resource_insufficient: u64,
+}
+
+/// What a failed server hosted, for offline-mode recovery re-install.
+#[derive(Clone, Copy, Debug)]
+struct StashedDep {
+    service: ServiceId,
+    cross: bool,
+}
 
 // --------------------------------------------------------------------------
 // deployments: batch-amortized processors
@@ -315,6 +370,20 @@ pub struct Simulator<'a> {
     scratch_seen: Vec<bool>,
     /// Reusable Eq. (1) weight buffer for the handler.
     offload_scratch: OffloadScratch,
+    /// Scripted scenario actions, sorted by time at `run`.
+    script: Vec<(f64, FaultAction)>,
+    /// Cumulative counter samples (per scripted action + periodic ticks).
+    samples: Vec<SimSample>,
+    /// Periodic sampling cadence (None = only scripted-action samples).
+    sample_interval_ms: Option<f64>,
+    /// Per-server roster stashed at failure for offline-mode recovery.
+    stash: Vec<Vec<StashedDep>>,
+    /// Current latency-skew factor per server (1.0 = none); deployments
+    /// installed while a skew is active inherit it, so a later revert
+    /// (×1/factor) is correct for them too.
+    server_skew: Vec<f64>,
+    /// When the last placement round consumed its window (demand span).
+    last_round_ms: f64,
 }
 
 impl<'a> Simulator<'a> {
@@ -431,6 +500,12 @@ impl<'a> Simulator<'a> {
             scratch_queued: vec![0.0; ns],
             scratch_seen: vec![false; ns],
             offload_scratch: OffloadScratch::new(),
+            script: Vec::new(),
+            samples: Vec::new(),
+            sample_interval_ms: None,
+            stash: (0..n).map(|_| Vec::new()).collect(),
+            server_skew: vec![1.0; n],
+            last_round_ms: 0.0,
             allocs,
             placement: placement.clone(),
             cfg,
@@ -443,46 +518,71 @@ impl<'a> Simulator<'a> {
 
     /// Turn placement items into live deployments.
     fn materialize_placement(&mut self, placement: &[PlacementItem]) {
-        // ε deployments land on the server with most free GPUs, round-robin
+        // ε deployments land round-robin across live servers
         let mut eps_cursor = 0usize;
         for item in placement {
             // one placement = one MPS slice (mt=1); MT packing emerges
             // from multiple placements landing on the same server
-            let al = &self.allocs[&item.service];
-            let window = self.table.latency_ms(item.service, al.ops.bs, al.ops.mp, 1)
-                / al.ops.dp.max(1) as f64; // DP groups halve the window share
-            let mf = al.ops.mf.max(1);
-            let cap = al.ops.inter_request_count().max(1);
-            let req_rate = self.table
-                .request_rate(item.service, al.ops.bs, al.ops.mp, 1)
-                * al.ops.dp as f64;
             let cross = item.server == EPSILON_SERVER;
             let server = if cross {
-                let s = ServerId((eps_cursor % self.servers.len()) as u32);
-                eps_cursor += 1;
-                s
+                self.next_eps_server(&mut eps_cursor)
             } else {
                 item.server
             };
-            self.servers[server.0 as usize].deployments.push(Deployment {
-                service: item.service,
-                available_at_ms: self.placement_applied_at_ms
-                    + if self.placement_applied_at_ms > 0.0 {
-                        self.table.spec(item.service).model_load_ms
-                    } else {
-                        0.0 // initial pre-placement happens before t=0 (§2.3)
-                    },
-                retired: false,
-                window_ms: window.max(1e-3),
-                mf,
-                cap,
-                req_rate,
-                cross_server: cross,
-                in_flight: 0,
-                queued_ms: 0.0,
-                queue: VecDeque::new(),
-            });
+            self.spawn_deployment(server, item.service, cross);
         }
+    }
+
+    /// Round-robin ε-deployment target, skipping servers detected down
+    /// (§5.3.3 exclusion) — identical to plain round-robin while the
+    /// cloud is healthy, so historical runs are unaffected.
+    fn next_eps_server(&self, cursor: &mut usize) -> ServerId {
+        let n = self.servers.len();
+        for _ in 0..n {
+            let s = ServerId((*cursor % n) as u32);
+            *cursor += 1;
+            if !self.sync.is_down(s) {
+                return s;
+            }
+        }
+        // every server down: degenerate, keep the last candidate
+        ServerId(((*cursor - 1) % n) as u32)
+    }
+
+    /// Create one live deployment of `service` on `server` — shared by
+    /// initial materialization, placement rounds, and fault recovery.
+    /// Fresh deployments installed after t=0 pay the Fig. 3f model-load
+    /// delay (`placement_applied_at_ms` is the installation instant).
+    fn spawn_deployment(&mut self, server: ServerId, service: ServiceId, cross: bool) {
+        let al = &self.allocs[&service];
+        let window = self.table.latency_ms(service, al.ops.bs, al.ops.mp, 1)
+            / al.ops.dp.max(1) as f64; // DP groups halve the window share
+        let mf = al.ops.mf.max(1);
+        let cap = al.ops.inter_request_count().max(1);
+        let req_rate = self.table.request_rate(service, al.ops.bs, al.ops.mp, 1)
+            * al.ops.dp as f64;
+        let available_at_ms = self.placement_applied_at_ms
+            + if self.placement_applied_at_ms > 0.0 {
+                self.table.spec(service).model_load_ms
+            } else {
+                0.0 // initial pre-placement happens before t=0 (§2.3)
+            };
+        // installed on a throttled server: inherit its current skew (1.0
+        // while healthy, so the common path is bit-identical)
+        let skew = self.server_skew[server.0 as usize];
+        self.servers[server.0 as usize].deployments.push(Deployment {
+            service,
+            available_at_ms,
+            retired: false,
+            window_ms: (window.max(1e-3) * skew).max(1e-3),
+            mf,
+            cap,
+            req_rate: req_rate / skew,
+            cross_server: cross,
+            in_flight: 0,
+            queued_ms: 0.0,
+            queue: VecDeque::new(),
+        });
     }
 
     /// Register device GPUs as single-GPU deployments at their home server.
@@ -498,48 +598,67 @@ impl<'a> Simulator<'a> {
             .filter_map(|d| d.kind.gpu().map(|g| (d.id, d.home, g)))
             .collect();
         for (dev, home, gpu) in devices {
-            // pick the lightest single-GPU service with demand
-            let candidate = self
-                .allocs
-                .iter()
-                .filter(|(id, _)| {
-                    let spec = self.table.spec(**id);
-                    spec.fits_single_gpu(gpu.vram_mb)
-                        && spec.vram_mb <= gpu.vram_mb
-                })
-                .min_by(|a, b| {
-                    let va = self.table.spec(*a.0).vram_mb;
-                    let vb = self.table.spec(*b.0).vram_mb;
-                    // tie-break on id: `allocs` iterates in hash order, and
-                    // equal-VRAM ties must not depend on it
-                    va.partial_cmp(&vb).unwrap().then(a.0.cmp(b.0))
-                });
-            if let Some((&svc, al)) = candidate {
-                let slow = 1.0 / gpu.compute.max(1e-3);
-                let link = self.cloud.device_link(dev);
-                // device window: compute slowdown + request shipping cost
-                let window = self.table.latency_ms(svc, al.ops.bs, al.ops.mp, 1)
-                    * slow
-                    + link.transfer_ms(self.table.spec(svc).payload_kb);
-                let req_rate = self.table.request_rate(svc, al.ops.bs, al.ops.mp, 1)
-                    / slow;
-                self.servers[home.0 as usize].device_deps.push((
-                    dev,
-                    Deployment {
-                        service: svc,
-                        available_at_ms: 0.0,
-                        retired: false,
-                        window_ms: window.max(1e-3),
-                        mf: al.ops.mf.max(1),
-                        cap: al.ops.inter_request_count().max(1),
-                        req_rate,
-                        cross_server: false,
-                        in_flight: 0,
-                        queued_ms: 0.0,
-                        queue: VecDeque::new(),
-                    },
-                ));
-            }
+            self.install_device(dev, home, gpu);
+        }
+    }
+
+    /// Register one device GPU as a single-GPU deployment at its home
+    /// server (shared by construction, device churn, and server recovery).
+    /// No-op when the device already has a live deployment there.
+    fn install_device(&mut self, dev: DeviceId, home: ServerId, gpu: GpuSpec) {
+        if self.servers[home.0 as usize]
+            .device_deps
+            .iter()
+            .any(|(d, dep)| *d == dev && !dep.retired)
+        {
+            return;
+        }
+        // pick the lightest single-GPU service with demand
+        let candidate = self
+            .allocs
+            .iter()
+            .filter(|(id, _)| {
+                let spec = self.table.spec(**id);
+                spec.fits_single_gpu(gpu.vram_mb)
+                    && spec.vram_mb <= gpu.vram_mb
+            })
+            .min_by(|a, b| {
+                let va = self.table.spec(*a.0).vram_mb;
+                let vb = self.table.spec(*b.0).vram_mb;
+                // tie-break on id: `allocs` iterates in hash order, and
+                // equal-VRAM ties must not depend on it
+                va.partial_cmp(&vb).unwrap().then(a.0.cmp(b.0))
+            });
+        if let Some((&svc, al)) = candidate {
+            let slow = 1.0 / gpu.compute.max(1e-3);
+            let link = self.cloud.device_link(dev);
+            // device window: compute slowdown + request shipping cost
+            let window = self.table.latency_ms(svc, al.ops.bs, al.ops.mp, 1)
+                * slow
+                + link.transfer_ms(self.table.spec(svc).payload_kb);
+            let req_rate = self.table.request_rate(svc, al.ops.bs, al.ops.mp, 1)
+                / slow;
+            let mf = al.ops.mf.max(1);
+            let cap = al.ops.inter_request_count().max(1);
+            // device lanes ride the home server's coordination path:
+            // inherit its current skew (1.0 while healthy)
+            let skew = self.server_skew[home.0 as usize];
+            self.servers[home.0 as usize].device_deps.push((
+                dev,
+                Deployment {
+                    service: svc,
+                    available_at_ms: 0.0,
+                    retired: false,
+                    window_ms: (window.max(1e-3) * skew).max(1e-3),
+                    mf,
+                    cap,
+                    req_rate: req_rate / skew,
+                    cross_server: false,
+                    in_flight: 0,
+                    queued_ms: 0.0,
+                    queue: VecDeque::new(),
+                },
+            ));
         }
     }
 
@@ -600,6 +719,20 @@ impl<'a> Simulator<'a> {
         if let Some(p) = self.cfg.replacement_interval_ms {
             self.push_event(p, EventKind::PlacementRound);
         }
+        // scripted scenario actions interleave deterministically with the
+        // trace: stable sort keeps same-instant actions in schedule order
+        self.script.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for i in 0..self.script.len() {
+            let at = self.script[i].0;
+            self.push_event(at, EventKind::Fault { idx: i as u32 });
+        }
+        if self.sample_interval_ms.is_some() || !self.script.is_empty() {
+            // initial row: phase accounting starts from zeroed counters
+            self.record_sample(0.0);
+        }
+        if let Some(s) = self.sample_interval_ms {
+            self.push_event(s, EventKind::Sample);
+        }
 
         while let Some(ev) = self.events.pop() {
             let now = ev.key.at_ms;
@@ -620,7 +753,28 @@ impl<'a> Simulator<'a> {
                         }
                     }
                 }
+                EventKind::Fault { idx } => {
+                    // sample the counters at the instant *before* the
+                    // action applies: phases close on pre-event state
+                    self.record_sample(now);
+                    let action = self.script[idx as usize].1;
+                    self.apply_fault(action, now);
+                }
+                EventKind::Sample => {
+                    if now <= self.cfg.duration_ms {
+                        self.record_sample(now);
+                        if let Some(s) = self.sample_interval_ms {
+                            if now < self.cfg.duration_ms {
+                                self.push_event(now + s, EventKind::Sample);
+                            }
+                        }
+                    }
+                }
             }
+        }
+        if self.sample_interval_ms.is_some() || !self.script.is_empty() {
+            // final row: end-of-run counters labeled with the horizon
+            self.record_sample(self.cfg.duration_ms);
         }
         self.metrics.duration_ms = self.cfg.duration_ms;
         self.account_capacity();
@@ -835,7 +989,12 @@ impl<'a> Simulator<'a> {
             (r.service, r.frames, r.offloads)
         };
         let srv = &mut self.servers[at.0 as usize];
-        if let Some(idx) = srv.device_deps.iter().position(|(d, _)| *d == dev) {
+        // device churn appends fresh deployments: target the live one
+        if let Some(idx) = srv
+            .device_deps
+            .iter()
+            .position(|(d, dep)| *d == dev && !dep.retired)
+        {
             let d = &mut srv.device_deps[idx].1;
             let svc_ms = d.service_ms(frames);
             d.queued_ms += svc_ms;
@@ -941,7 +1100,12 @@ impl<'a> Simulator<'a> {
         if self.window_requests.is_empty() {
             return;
         }
-        let interval = self.cfg.replacement_interval_ms.unwrap_or(1.0);
+        // demand = arrivals / elapsed since the last consumed window —
+        // NOT the nominal interval: a recovery-triggered round lands
+        // mid-interval over a partial window, and scaling that by the
+        // full interval would underestimate demand several-fold
+        let span = (now - self.last_round_ms).max(1.0);
+        self.last_round_ms = now;
         let window = std::mem::take(&mut self.window_requests);
         let services: Vec<ServiceId> = {
             let mut s: Vec<ServiceId> = window
@@ -957,7 +1121,7 @@ impl<'a> Simulator<'a> {
             &self.allocs,
             &self.cloud,
             window.iter().map(|&i| &self.slab[i as usize]),
-            interval,
+            span,
         );
         let new_placement = sssp(&[], &services, self.cloud.n_servers(), &mut eval);
 
@@ -970,9 +1134,7 @@ impl<'a> Simulator<'a> {
         let mut eps_cursor = 0usize;
         for item in &new_placement {
             let server = if item.server == EPSILON_SERVER {
-                let s = eps_cursor % self.servers.len();
-                eps_cursor += 1;
-                s
+                self.next_eps_server(&mut eps_cursor).0 as usize
             } else {
                 item.server.0 as usize
             };
@@ -1100,18 +1262,233 @@ impl<'a> Simulator<'a> {
         &mut self.sync
     }
 
+    // ----------------------------------------------------------------------
+    // scripted faults + sampling (the scenario engine's injection surface)
+    // ----------------------------------------------------------------------
+
+    /// Schedule a scripted action at virtual time `at_ms`.  Call before
+    /// [`Simulator::run`]; actions are injected into the event heap and
+    /// interleave with the trace deterministically (time, then schedule
+    /// order on ties).
+    pub fn schedule_fault(&mut self, at_ms: f64, action: FaultAction) {
+        self.script.push((at_ms, action));
+    }
+
+    /// Record a [`SimSample`] every `every_ms` of virtual time, in
+    /// addition to the sample taken at every scripted action and the
+    /// final one at the horizon.
+    pub fn sample_every(&mut self, every_ms: f64) {
+        self.sample_interval_ms = Some(every_ms.max(1.0));
+    }
+
+    /// Samples collected by the last [`Simulator::run`].
+    pub fn samples(&self) -> &[SimSample] {
+        &self.samples
+    }
+
+    /// Live (non-retired) server deployments currently hosted by `server`
+    /// (device-backed deployments not included).
+    pub fn live_deployments(&self, server: ServerId) -> usize {
+        self.servers[server.0 as usize]
+            .deployments
+            .iter()
+            .filter(|d| !d.retired)
+            .count()
+    }
+
+    fn record_sample(&mut self, now: f64) {
+        self.samples.push(SimSample {
+            at_ms: now,
+            offered: self.metrics.offered,
+            satisfied: self.metrics.satisfied,
+            completed: self.metrics.completed,
+            timeout: self.metrics.timeout,
+            offload_exceeded: self.metrics.offload_exceeded,
+            resource_insufficient: self.metrics.resource_insufficient,
+        });
+    }
+
+    fn apply_fault(&mut self, action: FaultAction, now: f64) {
+        match action {
+            FaultAction::FailServer(s) => self.fail_server(s),
+            FaultAction::RecoverServer(s) => self.recover_server(s, now),
+            FaultAction::DeviceLeave(d) => self.device_leave(d),
+            FaultAction::DeviceJoin(d) => self.device_join(d),
+            FaultAction::LatencySkew { server, factor } => {
+                self.skew_server(server, factor)
+            }
+            FaultAction::Checkpoint => {}
+        }
+    }
+
+    /// Drained queue entries terminate as `ResourceInsufficient`.
+    fn record_insufficient(&mut self, drained: &[u32]) {
+        for &ri in drained {
+            let (svc, off) = {
+                let r = &self.slab[ri as usize];
+                (r.service, r.offloads)
+            };
+            self.metrics.record(svc, &Outcome::ResourceInsufficient, off);
+        }
+    }
+
     /// Inject a GPU failure (§5.3.3): the whole server's deployments of
-    /// co-parallel GPUs are terminated and excluded.
+    /// co-parallel GPUs are terminated and excluded.  Kept as the
+    /// historical name; [`Simulator::fail_server`] is the general path.
     pub fn fail_gpu_containment(&mut self, server: ServerId) {
-        // terminate services of the faulty GPU and its parallel peers
-        self.servers[server.0 as usize].deployments.clear();
-        for g in &mut self.cloud.servers[server.0 as usize].gpus {
+        self.fail_server(server);
+    }
+
+    /// Whole-server GPU outage (§5.3.3 generalized, mid-run safe): live
+    /// deployments retire (their roster is stashed for recovery), queued
+    /// requests drain as `ResourceInsufficient`, in-flight batches finish
+    /// (containment lets running work complete), GPUs flag failed, and
+    /// the sync ring marks the server down.
+    pub fn fail_server(&mut self, server: ServerId) {
+        let si = server.0 as usize;
+        let mut drained: Vec<u32> = Vec::new();
+        let mut stash: Vec<StashedDep> = Vec::new();
+        {
+            let srv = &mut self.servers[si];
+            for d in srv.deployments.iter_mut() {
+                if !d.retired {
+                    stash.push(StashedDep {
+                        service: d.service,
+                        cross: d.cross_server,
+                    });
+                    d.retired = true;
+                }
+                d.queued_ms = 0.0;
+                drained.extend(d.queue.drain(..));
+            }
+            for (_, d) in srv.device_deps.iter_mut() {
+                // the home server coordinates its devices: outage takes
+                // their lanes down too (devices re-install on recovery)
+                d.retired = true;
+                d.queued_ms = 0.0;
+                drained.extend(d.queue.drain(..));
+            }
+        }
+        self.record_insufficient(&drained);
+        if !stash.is_empty() {
+            // a repeated fail on an already-dark server must not wipe the
+            // roster stashed by the first one
+            self.stash[si] = stash;
+        }
+        for g in &mut self.cloud.servers[si].gpus {
             g.failed = true;
         }
         // synced state zeroes out at the next round; mark immediately to
         // prevent fault propagation
-        for e in self.snap.row_mut(server.0 as usize) {
+        for e in self.snap.row_mut(si) {
             e.theoretical = 0.0;
+            e.actual = 0.0;
+            e.queued_ms = 0.0;
+        }
+        self.sync.mark_down(server);
+    }
+
+    /// Bring a failed server back (§5.3.3 "manual intervention"): GPUs
+    /// heal and the ring repairs.  Service is restored by an immediate
+    /// re-placement round when periodic re-placement is active (the
+    /// solver sees the healthy GPUs again), else by reinstating the
+    /// roster stashed at failure; both pay the Fig. 3f model-load delay.
+    pub fn recover_server(&mut self, server: ServerId, now: f64) {
+        let si = server.0 as usize;
+        for g in &mut self.cloud.servers[si].gpus {
+            g.failed = false;
+        }
+        self.sync.repair(server, now);
+        let stash = std::mem::take(&mut self.stash[si]);
+        if self.cfg.replacement_interval_ms.is_some()
+            && !self.window_requests.is_empty()
+        {
+            self.run_placement_round(now);
+        } else {
+            self.placement_applied_at_ms = now;
+            for s in &stash {
+                self.spawn_deployment(server, s.service, s.cross);
+            }
+            self.prime_snapshot();
+        }
+        if self.cfg.policy.allow_device {
+            let devices: Vec<(DeviceId, GpuSpec)> = self
+                .cloud
+                .devices
+                .iter()
+                .filter(|d| d.registered && d.home == server)
+                .filter_map(|d| d.kind.gpu().map(|g| (d.id, g)))
+                .collect();
+            for (dev, gpu) in devices {
+                self.install_device(dev, server, gpu);
+            }
+        }
+    }
+
+    /// Edge device deregisters (§3.2 churn): its deployments retire and
+    /// their queues drain as `ResourceInsufficient`.
+    pub fn device_leave(&mut self, dev: DeviceId) {
+        if let Some(d) = self.cloud.devices.iter_mut().find(|d| d.id == dev) {
+            d.registered = false;
+        }
+        let mut drained: Vec<u32> = Vec::new();
+        for srv in self.servers.iter_mut() {
+            for (id, dep) in srv.device_deps.iter_mut() {
+                if *id == dev && !dep.retired {
+                    dep.retired = true;
+                    dep.queued_ms = 0.0;
+                    drained.extend(dep.queue.drain(..));
+                }
+            }
+        }
+        self.record_insufficient(&drained);
+    }
+
+    /// Edge device (re)registers with its home server and contributes a
+    /// deployment again (no-op while the home server is down — the
+    /// device re-installs on server recovery).
+    pub fn device_join(&mut self, dev: DeviceId) {
+        if !self.cfg.policy.allow_device {
+            return;
+        }
+        let info = self.cloud.devices.iter_mut().find(|d| d.id == dev).map(|d| {
+            d.registered = true;
+            (d.home, d.kind)
+        });
+        if let Some((home, kind)) = info {
+            if self.sync.is_down(home) {
+                return;
+            }
+            if let Some(gpu) = kind.gpu() {
+                self.install_device(dev, home, gpu);
+            }
+        }
+    }
+
+    /// Multiply the batch-window time of every live deployment on the
+    /// server by `factor` (> 1 slows, < 1 undoes an earlier skew).  The
+    /// synced theoretical rate follows at the next sync round.  The
+    /// server's composite skew is tracked, and deployments installed
+    /// while a skew is active inherit it — so the paired revert
+    /// (×1/factor) is correct for them as well.
+    pub fn skew_server(&mut self, server: ServerId, factor: f64) {
+        let f = factor.max(1e-3);
+        let si = server.0 as usize;
+        let mut composite = self.server_skew[si] * f;
+        if (composite - 1.0).abs() < 1e-9 {
+            composite = 1.0; // snap f64 residue from factor × 1/factor
+        }
+        self.server_skew[si] = composite;
+        let srv = &mut self.servers[si];
+        for d in srv.deployments.iter_mut().filter(|d| !d.retired) {
+            d.window_ms = (d.window_ms * f).max(1e-3);
+            d.req_rate /= f;
+        }
+        for (_, d) in srv.device_deps.iter_mut() {
+            if !d.retired {
+                d.window_ms = (d.window_ms * f).max(1e-3);
+                d.req_rate /= f;
+            }
         }
     }
 }
@@ -1207,5 +1584,78 @@ mod tests {
         let m = sim.run(reqs).clone();
         // the system keeps serving from the remaining servers
         assert!(m.satisfied > 0.0);
+    }
+
+    #[test]
+    fn scripted_fault_samples_and_recovery() {
+        let table = zoo::paper_zoo();
+        let cloud = EdgeCloud::testbed();
+        let spec = WorkloadSpec {
+            mix: Mix::Production(0),
+            rps: 40.0,
+            duration_ms: 12_000.0,
+            ..Default::default()
+        };
+        let reqs = generate(&spec, &table, &cloud);
+        let cfg = SimConfig { duration_ms: 12_000.0, ..Default::default() };
+        let mut sim = Simulator::new(&table, cloud, &reqs, cfg);
+        assert!(sim.live_deployments(ServerId(0)) > 0);
+        sim.schedule_fault(3_000.0, FaultAction::FailServer(ServerId(0)));
+        sim.schedule_fault(6_000.0, FaultAction::RecoverServer(ServerId(0)));
+        sim.sample_every(1_000.0);
+        sim.run(reqs);
+        // offline mode: recovery reinstates the failed roster
+        assert!(sim.live_deployments(ServerId(0)) > 0);
+        let samples = sim.samples();
+        assert!(samples.len() >= 12, "{}", samples.len());
+        // samples are time-sorted with monotone cumulative counters
+        for w in samples.windows(2) {
+            assert!(w[0].at_ms <= w[1].at_ms);
+            assert!(w[0].offered <= w[1].offered);
+            assert!(w[0].satisfied <= w[1].satisfied + 1e-12);
+        }
+        assert!(sim.metrics.satisfied > 0.0);
+    }
+
+    #[test]
+    fn failed_server_stays_dark_without_recovery() {
+        let table = zoo::paper_zoo();
+        let cloud = EdgeCloud::testbed();
+        let spec = WorkloadSpec {
+            mix: Mix::Production(0),
+            rps: 40.0,
+            duration_ms: 10_000.0,
+            ..Default::default()
+        };
+        let reqs = generate(&spec, &table, &cloud);
+        let cfg = SimConfig {
+            duration_ms: 10_000.0,
+            replacement_interval_ms: Some(2_500.0),
+            ..Default::default()
+        };
+        let mut sim = Simulator::new(&table, cloud, &reqs, cfg);
+        sim.schedule_fault(3_000.0, FaultAction::FailServer(ServerId(0)));
+        sim.run(reqs);
+        // periodic re-placement must not resurrect a down server
+        assert_eq!(sim.live_deployments(ServerId(0)), 0);
+        assert!(sim.metrics.satisfied > 0.0);
+    }
+
+    #[test]
+    fn device_churn_round_trips() {
+        let table = zoo::paper_zoo();
+        let cloud = EdgeCloud::testbed();
+        let spec = WorkloadSpec { rps: 20.0, duration_ms: 8_000.0, ..Default::default() };
+        let reqs = generate(&spec, &table, &cloud);
+        let cfg = SimConfig { duration_ms: 8_000.0, ..Default::default() };
+        let mut sim = Simulator::new(&table, cloud, &reqs, cfg);
+        // device 2 (Alveo U50 @ server 5) is the GPU-bearing one
+        sim.schedule_fault(2_000.0, FaultAction::DeviceLeave(DeviceId(2)));
+        sim.schedule_fault(4_000.0, FaultAction::DeviceJoin(DeviceId(2)));
+        let skew = |f: f64| FaultAction::LatencySkew { server: ServerId(1), factor: f };
+        sim.schedule_fault(5_000.0, skew(2.0));
+        sim.schedule_fault(6_000.0, skew(0.5));
+        sim.run(reqs);
+        assert!(sim.metrics.satisfied > 0.0);
     }
 }

@@ -7,7 +7,7 @@
 //!
 //! | scheme        | request-level | service-level | mode         |
 //! |---------------|---------------|---------------|--------------|
-//! | InterEdge     | no            | MP+BS+MT (aligned with EPARA) | distributed, round-robin offload |
+//! | InterEdge     | no            | MP+BS+MT (as EPARA) | distributed, round-robin offload |
 //! | AlpaServe     | no            | MP+           | centralized, refuses offloading |
 //! | Galaxy        | no            | MP (no MT)    | centralized edge devices |
 //! | SERV-P        | no            | no            | centralized NP-hard solver (latency penalty) |

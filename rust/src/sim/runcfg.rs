@@ -37,7 +37,9 @@ pub struct RunConfig {
     pub sim: SimConfig,
 }
 
-fn parse_mix(s: &str) -> Result<Mix> {
+/// Parse a mix name (`latency|frequency|mixed|prodK`) — shared with the
+/// scenario spec's `category_shift` events.
+pub(crate) fn parse_mix(s: &str) -> Result<Mix> {
     Ok(match s {
         "latency" => Mix::LatencyOnly,
         "frequency" => Mix::FrequencyOnly,

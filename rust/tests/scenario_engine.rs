@@ -1,0 +1,170 @@
+//! Scenario engine integration: recovery semantics after
+//! `server_fail` + `server_recover`, bit-exact determinism goldens,
+//! committed-spec validation with goodput floors, and a time-scaled
+//! smoke of the gateway backend over real sockets.
+
+use std::path::PathBuf;
+
+use epara::cluster::EdgeCloud;
+use epara::core::ServerId;
+use epara::profile::zoo;
+use epara::scenario::{GatewayBackend, ScenarioBackend, ScenarioSpec, SimBackend};
+use epara::sim::{FaultAction, SimConfig, Simulator};
+use epara::workload::{generate, Mix, WorkloadSpec};
+
+fn spec_from(text: &str) -> ScenarioSpec {
+    ScenarioSpec::from_json(&epara::configjson::parse(text).unwrap()).unwrap()
+}
+
+const RECOVERY_SPEC: &str = r#"{
+  "name": "recovery_t",
+  "description": "fail + recover with periodic re-placement",
+  "base": {
+    "seed": 7,
+    "workload": {"mix": "prod0", "rps": 60.0, "duration_s": 16.0, "seed": 7},
+    "replacement_interval_ms": 2500.0
+  },
+  "sample_interval_ms": 500.0,
+  "timeline": [
+    {"at_ms": 4000, "event": "server_fail", "server": 0},
+    {"at_ms": 8000, "event": "server_recover", "server": 0}
+  ]
+}"#;
+
+#[test]
+fn scenario_fingerprint_bit_exact_across_runs() {
+    // the determinism golden: two identical scenario runs must agree bit
+    // for bit — including the embedded Metrics::fingerprint
+    let a = SimBackend.run(&spec_from(RECOVERY_SPEC)).unwrap();
+    let b = SimBackend.run(&spec_from(RECOVERY_SPEC)).unwrap();
+    assert_eq!(a.fingerprint(), b.fingerprint());
+    assert!(a.metrics_fingerprint.is_some());
+    assert_eq!(a.metrics_fingerprint, b.metrics_fingerprint);
+    assert!(a.offered > 0);
+    assert_eq!(a.phases.len(), 3);
+    assert_eq!(a.recoveries.len(), 1);
+}
+
+#[test]
+fn seed_override_changes_the_run() {
+    let mut s1 = spec_from(RECOVERY_SPEC);
+    let mut s2 = spec_from(RECOVERY_SPEC);
+    s1.override_seed(21);
+    s2.override_seed(22);
+    let a = SimBackend.run(&s1).unwrap();
+    let b = SimBackend.run(&s2).unwrap();
+    assert_ne!(a.fingerprint(), b.fingerprint());
+}
+
+#[test]
+fn recovery_restores_service_on_the_recovered_server() {
+    // engine-level check of the satellite requirement: after
+    // server_fail + server_recover, periodic re-placement restores
+    // service on the recovered server; without recovery it stays dark
+    let table = zoo::paper_zoo();
+    let wspec = WorkloadSpec {
+        mix: Mix::Production(0),
+        rps: 60.0,
+        duration_ms: 16_000.0,
+        ..Default::default()
+    };
+    let run = |recover: bool| {
+        let cloud = EdgeCloud::testbed();
+        let reqs = generate(&wspec, &table, &cloud);
+        let cfg = SimConfig {
+            duration_ms: 16_000.0,
+            replacement_interval_ms: Some(2_500.0),
+            ..Default::default()
+        };
+        let mut sim = Simulator::new(&table, cloud, &reqs, cfg);
+        sim.schedule_fault(4_000.0, FaultAction::FailServer(ServerId(0)));
+        if recover {
+            sim.schedule_fault(8_000.0, FaultAction::RecoverServer(ServerId(0)));
+        }
+        sim.sample_every(500.0);
+        sim.run(reqs);
+        (sim.live_deployments(ServerId(0)), sim.take_metrics())
+    };
+    let (live_rec, m_rec) = run(true);
+    let (live_norec, m_norec) = run(false);
+    assert!(live_rec > 0, "recovered server hosts no live deployments");
+    assert_eq!(live_norec, 0, "failed server must stay dark without recovery");
+    assert!(m_rec.satisfied > 0.0 && m_norec.satisfied > 0.0);
+    // restored capacity must not hurt goodput (small tolerance: the
+    // probabilistic offload paths diverge after the recovery point)
+    assert!(
+        m_rec.satisfied >= m_norec.satisfied * 0.95,
+        "recovery hurt goodput: {} vs {}",
+        m_rec.satisfied,
+        m_norec.satisfied
+    );
+}
+
+#[test]
+fn committed_scenarios_parse_run_and_hold_their_floors() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("scenarios");
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .expect("rust/scenarios must exist")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    paths.sort();
+    assert!(
+        paths.len() >= 6,
+        "expected the committed scenario matrix, found {}",
+        paths.len()
+    );
+    for p in &paths {
+        let spec = ScenarioSpec::from_file(p)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", p.display()));
+        let report = SimBackend
+            .run(&spec)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", p.display()));
+        assert!(report.offered > 0, "{}: no traffic", spec.name);
+        assert!(!report.phases.is_empty(), "{}: no phases", spec.name);
+        if let Some(floor) = spec.goodput_floor_rps {
+            assert!(
+                report.goodput_rps >= floor,
+                "{}: goodput {:.2} req/s below the committed floor {floor}",
+                spec.name,
+                report.goodput_rps
+            );
+        }
+    }
+}
+
+#[test]
+fn gateway_backend_time_scaled_smoke() {
+    // the same spec machinery over real TCP: surge + skew, 100x
+    // time-scaled so the whole run fits in about a wall-clock second
+    let spec = spec_from(
+        r#"{
+      "name": "gw_smoke",
+      "description": "tiny surge + skew through the live gateway",
+      "base": {
+        "seed": 11,
+        "workload": {"mix": "prod0", "rps": 40.0, "duration_s": 4.0,
+                     "seed": 11}
+      },
+      "sample_interval_ms": 500.0,
+      "timeline": [
+        {"at_ms": 1000, "event": "rps_surge", "factor": 3.0,
+         "duration_ms": 1000},
+        {"at_ms": 2000, "event": "latency_skew", "server": 0,
+         "factor": 2.0, "duration_ms": 1000}
+      ]
+    }"#,
+    );
+    let backend = GatewayBackend { time_scale: 100.0, concurrency: 8 };
+    assert_eq!(backend.name(), "gateway");
+    let report = backend.run(&spec).unwrap();
+    assert_eq!(report.backend, "gateway");
+    assert!(report.offered > 0);
+    assert!(report.satisfied > 0.0, "no request earned credit");
+    assert!(!report.phases.is_empty());
+    assert!(report.metrics_fingerprint.is_none());
+    // phase totals cover the whole run
+    let phase_offered: u64 = report.phases.iter().map(|p| p.offered).sum();
+    assert_eq!(phase_offered, report.offered);
+}

@@ -7,6 +7,11 @@ Usage: check_perf.py CURRENT.json BASELINE.json
 Baselines marked "provisional": true (no measured numbers committed yet)
 pass with a notice — refresh with `make bench-perf` on a runner-class
 machine and commit the resulting BENCH_perf.json to arm the gate.
+
+A gated metric key present in only one of the two files is a hard error
+(exit 1) with an explicit message, never a KeyError/traceback: a key that
+silently disappears from the bench output would otherwise un-arm its
+gate without anyone noticing.
 """
 
 import json
@@ -19,30 +24,43 @@ LOWER = ["handler_decide_ns_10k", "spf_solve_ms_1k", "spf_solve_ms_10k", "fluid_
 THRESHOLD = 0.30
 
 
-def main() -> int:
-    if len(sys.argv) != 3:
-        print(__doc__)
-        return 2
-    with open(sys.argv[1]) as f:
-        cur = json.load(f)
-    with open(sys.argv[2]) as f:
-        base = json.load(f)
+def compare(cur, base):
+    """Compare two perf records over the gated metric keys.
 
-    if base.get("provisional"):
-        print("perf baseline is provisional (no measured numbers committed yet): gate skipped")
-        print("arm it with:  make bench-perf  && git add BENCH_perf.json")
-        return 0
-    if bool(base.get("quick")) != bool(cur.get("quick")):
-        print(
-            f"warning: comparing quick={cur.get('quick')} run against "
-            f"quick={base.get('quick')} baseline — numbers may not be comparable"
-        )
-
-    failures = []
+    Returns (regressions, key_errors, lines): metric names that regressed
+    past THRESHOLD, human-readable key/value consistency errors, and the
+    per-metric report lines.
+    """
+    regressions, key_errors, lines = [], [], []
     for key in HIGHER + LOWER:
-        b, c = base.get(key), cur.get(key)
-        if not b or not c:
-            print(f"  {key}: missing (baseline={b}, current={c}) — skipped")
+        in_b, in_c = key in base, key in cur
+        if not in_b and not in_c:
+            lines.append(f"  {key}: absent from both runs - skipped")
+            continue
+        if in_b and not in_c:
+            key_errors.append(
+                f"{key}: present in the baseline but missing from the current "
+                f"run - did the bench stop emitting it?"
+            )
+            continue
+        if in_c and not in_b:
+            key_errors.append(
+                f"{key}: present in the current run but missing from the "
+                f"baseline - refresh the baseline to start gating it"
+            )
+            continue
+        try:
+            b, c = float(base[key]), float(cur[key])
+        except (TypeError, ValueError):
+            key_errors.append(
+                f"{key}: non-numeric value (baseline={base[key]!r}, "
+                f"current={cur[key]!r})"
+            )
+            continue
+        if b <= 0 or c <= 0:
+            key_errors.append(
+                f"{key}: non-positive value (baseline={b}, current={c})"
+            )
             continue
         if key in HIGHER:
             ratio = c / b
@@ -51,16 +69,54 @@ def main() -> int:
             ratio = b / c
             regressed = c > b * (1.0 + THRESHOLD)
         line = f"  {key}: current={c:.1f} baseline={b:.1f} ({ratio:.2f}x vs baseline, >=1 is good)"
-        print(line + ("  << REGRESSION" if regressed else ""))
+        lines.append(line + ("  << REGRESSION" if regressed else ""))
         if regressed:
-            failures.append(key)
+            regressions.append(key)
+    return regressions, key_errors, lines
 
-    if failures:
-        print(f"\nperf gate FAILED: >{THRESHOLD:.0%} regression on {', '.join(failures)}")
-        print("if intentional, refresh the baseline: make bench-perf && git add BENCH_perf.json")
-        return 1
-    print("\nperf gate passed")
-    return 0
+
+def gate(cur, base):
+    """Full gate on two parsed records: returns (exit_code, output_lines)."""
+    if base.get("provisional"):
+        return 0, [
+            "perf baseline is provisional (no measured numbers committed yet): gate skipped",
+            "arm it with:  make bench-perf  && git add BENCH_perf.json",
+        ]
+    out = []
+    if bool(base.get("quick")) != bool(cur.get("quick")):
+        out.append(
+            f"warning: comparing quick={cur.get('quick')} run against "
+            f"quick={base.get('quick')} baseline - numbers may not be comparable"
+        )
+    regressions, key_errors, lines = compare(cur, base)
+    out.extend(lines)
+    if key_errors:
+        out.append("")
+        out.append("perf gate ERROR: metric keys out of sync between baseline and current run:")
+        out.extend(f"  {e}" for e in key_errors)
+        out.append("fix the bench output or refresh the baseline: make bench-perf && git add BENCH_perf.json")
+        return 1, out
+    if regressions:
+        out.append("")
+        out.append(f"perf gate FAILED: >{THRESHOLD:.0%} regression on {', '.join(regressions)}")
+        out.append("if intentional, refresh the baseline: make bench-perf && git add BENCH_perf.json")
+        return 1, out
+    out.append("")
+    out.append("perf gate passed")
+    return 0, out
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        cur = json.load(f)
+    with open(sys.argv[2]) as f:
+        base = json.load(f)
+    code, lines = gate(cur, base)
+    print("\n".join(lines))
+    return code
 
 
 if __name__ == "__main__":

@@ -1,0 +1,47 @@
+#!/usr/bin/env python3
+"""Toolchain-free formatting gate for the Rust tree.
+
+Checks the mechanical invariants every .rs file must satisfy under the
+pinned rustfmt profile (rustfmt.toml): no tabs, no trailing whitespace,
+max_width = 100 columns, and a final newline.  CI's lint job runs this
+before the real `cargo fmt --check`, so formatting breakage is visible
+even in environments without a Rust toolchain; it is a precheck, NOT a
+substitute for rustfmt.
+"""
+
+import pathlib
+import sys
+
+MAX_COLS = 100
+ROOTS = ["rust/src", "rust/tests", "rust/benches", "examples"]
+
+
+def violations(root_dirs=ROOTS):
+    bad = []
+    for root in root_dirs:
+        for p in sorted(pathlib.Path(root).rglob("*.rs")):
+            text = p.read_text(encoding="utf-8")
+            if text and not text.endswith("\n"):
+                bad.append(f"{p}: missing final newline")
+            for i, line in enumerate(text.splitlines(), 1):
+                if "\t" in line:
+                    bad.append(f"{p}:{i}: tab character")
+                if line != line.rstrip():
+                    bad.append(f"{p}:{i}: trailing whitespace")
+                if len(line) > MAX_COLS:
+                    bad.append(f"{p}:{i}: {len(line)} cols (max {MAX_COLS})")
+    return bad
+
+
+def main() -> int:
+    bad = violations()
+    if bad:
+        print("\n".join(bad))
+        print(f"\nfmt_check: {len(bad)} violation(s)")
+        return 1
+    print("fmt_check: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,115 @@
+"""Smoke tests for the CI perf gate (scripts/check_perf.py).
+
+Run from the repository root:  python3 -m unittest discover -s scripts
+(unittest discovery puts `scripts` on sys.path, so check_perf imports
+directly).
+"""
+
+import unittest
+
+import check_perf
+
+
+def record(**overrides):
+    base = {
+        "events_per_sec": 100_000.0,
+        "sim_requests_per_sec": 5_000.0,
+        "handler_decide_ns_10k": 2_000.0,
+        "spf_solve_ms_1k": 20.0,
+        "spf_solve_ms_10k": 180.0,
+        "fluid_gain_ns": 40.0,
+    }
+    base.update(overrides)
+    return base
+
+
+class CompareTests(unittest.TestCase):
+    def test_identical_records_pass(self):
+        regressions, key_errors, _ = check_perf.compare(record(), record())
+        self.assertEqual(regressions, [])
+        self.assertEqual(key_errors, [])
+
+    def test_higher_is_better_regression_detected(self):
+        cur = record(events_per_sec=100_000.0 * 0.5)  # -50% throughput
+        regressions, key_errors, _ = check_perf.compare(cur, record())
+        self.assertIn("events_per_sec", regressions)
+        self.assertEqual(key_errors, [])
+
+    def test_lower_is_better_regression_detected(self):
+        cur = record(spf_solve_ms_10k=180.0 * 2.0)  # 2x slower solve
+        regressions, _, _ = check_perf.compare(cur, record())
+        self.assertIn("spf_solve_ms_10k", regressions)
+
+    def test_improvement_is_not_a_regression(self):
+        cur = record(events_per_sec=200_000.0, fluid_gain_ns=10.0)
+        regressions, key_errors, _ = check_perf.compare(cur, record())
+        self.assertEqual(regressions, [])
+        self.assertEqual(key_errors, [])
+
+    def test_key_missing_from_current_is_a_clear_error(self):
+        cur = record()
+        del cur["fluid_gain_ns"]
+        regressions, key_errors, _ = check_perf.compare(cur, record())
+        self.assertEqual(regressions, [])
+        self.assertEqual(len(key_errors), 1)
+        self.assertIn("fluid_gain_ns", key_errors[0])
+        self.assertIn("missing from the current", key_errors[0])
+
+    def test_key_missing_from_baseline_is_a_clear_error(self):
+        base = record()
+        del base["events_per_sec"]
+        _, key_errors, _ = check_perf.compare(record(), base)
+        self.assertEqual(len(key_errors), 1)
+        self.assertIn("events_per_sec", key_errors[0])
+        self.assertIn("missing from the baseline", key_errors[0])
+
+    def test_key_absent_from_both_is_skipped_not_fatal(self):
+        cur, base = record(), record()
+        del cur["sim_requests_per_sec"]
+        del base["sim_requests_per_sec"]
+        regressions, key_errors, lines = check_perf.compare(cur, base)
+        self.assertEqual(regressions, [])
+        self.assertEqual(key_errors, [])
+        self.assertTrue(any("absent from both" in line for line in lines))
+
+    def test_non_numeric_value_is_a_clear_error(self):
+        cur = record(events_per_sec="fast")
+        _, key_errors, _ = check_perf.compare(cur, record())
+        self.assertEqual(len(key_errors), 1)
+        self.assertIn("non-numeric", key_errors[0])
+
+
+class GateTests(unittest.TestCase):
+    def test_provisional_baseline_skips_the_gate(self):
+        code, lines = check_perf.gate(record(), {"provisional": True})
+        self.assertEqual(code, 0)
+        self.assertTrue(any("provisional" in line for line in lines))
+
+    def test_clean_comparison_passes(self):
+        code, lines = check_perf.gate(record(), record())
+        self.assertEqual(code, 0)
+        self.assertIn("perf gate passed", lines[-1])
+
+    def test_key_mismatch_fails_with_message_not_traceback(self):
+        cur = record()
+        del cur["handler_decide_ns_10k"]
+        code, lines = check_perf.gate(cur, record())
+        self.assertEqual(code, 1)
+        joined = "\n".join(lines)
+        self.assertIn("metric keys out of sync", joined)
+        self.assertIn("handler_decide_ns_10k", joined)
+
+    def test_regression_fails(self):
+        cur = record(events_per_sec=1.0)
+        code, lines = check_perf.gate(cur, record())
+        self.assertEqual(code, 1)
+        self.assertTrue(any("perf gate FAILED" in line for line in lines))
+
+    def test_quick_mismatch_warns_but_compares(self):
+        code, lines = check_perf.gate(record(quick=True), record())
+        self.assertEqual(code, 0)
+        self.assertTrue(any("warning" in line for line in lines))
+
+
+if __name__ == "__main__":
+    unittest.main()
