@@ -8,6 +8,7 @@
 #   make check-pjrt  compile-check the feature-gated runtime path
 #   make gateway     run the serving gateway on $(GATEWAY_ADDR)
 #   make loadgen     fire a mixed workload at a running gateway
+#   make soak        512-connection reactor concurrency soak (Linux)
 #   make scenarios   run every committed scenario spec (sim backend,
 #                    goodput floors asserted; reports in scenario-reports/)
 #   make artifacts   build the AOT artifacts via the Python pipeline (stub)
@@ -26,8 +27,8 @@ SIM_BENCHES = ablation_params fig03_motivation fig10_testbed_goodput \
 
 GATEWAY_ADDR ?= 127.0.0.1:8080
 
-.PHONY: build test bench bench-perf lint check-pjrt gateway loadgen scenarios \
-        artifacts clean
+.PHONY: build test bench bench-perf lint check-pjrt gateway loadgen soak \
+        scenarios artifacts clean
 
 build:
 	$(CARGO) build --release --workspace
@@ -77,6 +78,13 @@ gateway:
 
 loadgen:
 	$(CARGO) run --release -- loadgen --addr $(GATEWAY_ADDR) --requests 200 --rps 100
+
+# The epoll-reactor concurrency soak (what CI's timeout-guarded step
+# runs): ≥512 simultaneous keep-alive connections, slow-loris clients,
+# bounded-thread and clean-shutdown assertions.  Linux-only; #[ignore]d
+# on the default test path, hence --ignored.
+soak:
+	$(CARGO) test -p epara --test gateway_concurrency -- --ignored --nocapture
 
 # The Python AOT step (Layer 1+2): lowers the JAX+Pallas models to HLO
 # text, writes weight blobs and golden fixtures, and emits manifest.json —

@@ -18,9 +18,13 @@
 //!   epara gateway   [--addr HOST:PORT] [--threads N] [--queue-cap N]
 //!                   [--window-ms MS] [--max-batch N] [--lanes N]
 //!                   [--slo-headroom X] [--time-scale X] [--backend replay|pjrt]
+//!                   [--max-conns N] [--idle-timeout-ms MS]
+//!                   [--stall-timeout-ms MS] [--legacy-threads]
 //!       Network serving gateway: POST /v1/infer, GET /metrics,
-//!       GET /healthz; category-aware admission + BS batching;
-//!       graceful shutdown on ctrl-c.
+//!       GET /healthz; category-aware admission + BS batching; epoll
+//!       reactor connection layer on Linux (idle connections cost a
+//!       table entry, not a thread; `--legacy-threads` restores the
+//!       thread-per-connection loop); graceful shutdown on ctrl-c.
 //!   epara loadgen   [--addr HOST:PORT] [--requests N] [--rps R]
 //!                   [--mix mixed|latency|frequency|prodK] [--closed-loop]
 //!                   [--concurrency N] [--seed S] [--timeout-ms MS]
@@ -245,6 +249,10 @@ fn cmd_gateway(args: &Args) -> anyhow::Result<()> {
             lanes_per_category: args.get("lanes", 1usize),
             slo_headroom: args.get("slo-headroom", 1.0f64),
         },
+        legacy_threads: args.flag("legacy-threads"),
+        max_connections: args.get("max-conns", 4096usize),
+        idle_timeout_ms: args.get("idle-timeout-ms", 30_000u64),
+        stall_timeout_ms: args.get("stall-timeout-ms", 1_000u64),
         ..Default::default()
     };
     let time_scale: f64 = args.get("time-scale", 1.0);
@@ -254,10 +262,11 @@ fn cmd_gateway(args: &Args) -> anyhow::Result<()> {
     server::install_signal_handlers();
     let gw = server::Gateway::spawn(cfg, table, executor)?;
     println!(
-        "epara gateway: listening on {} (time-scale {}x) — \
+        "epara gateway: listening on {} (time-scale {}x, {} connection layer) — \
          POST /v1/infer, GET /metrics, GET /healthz; ctrl-c to stop",
         gw.local_addr(),
-        time_scale
+        time_scale,
+        gw.connection_layer()
     );
     gw.wait();
     println!("epara gateway: shut down cleanly");

@@ -127,7 +127,15 @@ impl ScenarioBackend for GatewayBackend {
             steps,
         ));
         let executor: Arc<dyn Executor> = Arc::clone(&degraded);
-        let gw_cfg = GatewayConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
+        // Rides the default connection layer (the epoll reactor on
+        // Linux), so the scenario matrix exercises the same path a
+        // production gateway runs; the loadgen holds `concurrency`
+        // keep-alive connections, so size the table with fd headroom.
+        let gw_cfg = GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            max_connections: (self.concurrency * 4).max(64),
+            ..Default::default()
+        };
         let mut gw = Gateway::spawn(gw_cfg, table.clone(), executor)?;
 
         let shots: Vec<Shot> = reqs

@@ -179,6 +179,16 @@ impl Admission {
         [0, 1, 2, 3].map(|i| self.cats[i].depth.load(Ordering::Relaxed))
     }
 
+    /// Requests currently parked in `service`'s batching window (the
+    /// collecting leader included).  Observability hook: lets tests (and
+    /// future metrics) sequence arrivals into a window deterministically
+    /// instead of racing on thread scheduling.
+    pub fn batched_waiting(&self, service: ServiceId) -> usize {
+        let map = lock_unpoisoned(&self.batchers);
+        map.get(&service)
+            .map_or(0, |b| lock_unpoisoned(&b.state).entries.len())
+    }
+
     /// Admit, queue/batch, and execute one request; blocks the calling
     /// worker thread until the request reaches a terminal state.
     pub fn submit(

@@ -254,6 +254,91 @@ pub fn parse_request<R: BufRead>(r: &mut R) -> Result<HttpRequest, HttpError> {
     Ok(HttpRequest { body, ..req })
 }
 
+/// Outcome of one incremental parse attempt over an in-memory buffer
+/// (the reactor's interface to the parser: accumulate bytes, retry).
+#[derive(Debug)]
+pub enum BufferParse {
+    /// A full request was framed; `consumed` bytes belong to it — drain
+    /// them and keep the remainder (pipelined follow-up requests).
+    Complete { req: HttpRequest, consumed: usize },
+    /// The buffer holds a prefix of a valid request head; read more.
+    Partial,
+    /// The head is fully framed but the declared body is not: the whole
+    /// request spans `total` bytes from the start of the buffer.
+    /// Callers can skip re-parsing until that many bytes arrived —
+    /// without the hint, a drip-fed body would cost one full re-parse
+    /// (including the body allocation) per received segment.
+    PartialBody { total: usize },
+    /// The bytes already received can never frame a valid request.
+    Error(HttpError),
+}
+
+/// Incremental entry point: try to frame one request out of `buf`.
+///
+/// Reuses [`parse_request`] over a cursor, so framing semantics (limits,
+/// keep-alive rules, rejected encodings) are byte-identical to the
+/// blocking path.  End-of-buffer conditions that the blocking reader
+/// would call `ConnectionClosed`/`Truncated` mean "not enough bytes yet"
+/// here — the caller owns the socket and decides what a real EOF or
+/// stall means (close vs 408 via its own timers).
+///
+/// Head/body limits still bound buffer growth: once `MAX_HEAD_BYTES` of
+/// an unterminated head (or an oversized declared body) are buffered the
+/// verdict is `Error`, never `Partial`, so a caller that stops reading on
+/// `Error` holds at most `MAX_HEAD_BYTES + MAX_BODY_BYTES` plus one
+/// read burst of slack.
+pub fn parse_buffer(buf: &[u8]) -> BufferParse {
+    let mut cursor = std::io::Cursor::new(buf);
+    match parse_request(&mut cursor) {
+        Ok(req) => BufferParse::Complete { req, consumed: cursor.position() as usize },
+        // end of the slice before any byte: need more
+        Err(HttpError::ConnectionClosed) => BufferParse::Partial,
+        // end of the slice mid-request; a cursor never times out, but
+        // IdleTimeout is mapped defensively
+        Err(HttpError::Truncated) | Err(HttpError::IdleTimeout) => match body_span(buf) {
+            Some(total) => BufferParse::PartialBody { total },
+            None => BufferParse::Partial,
+        },
+        Err(e) => BufferParse::Error(e),
+    }
+}
+
+/// For a truncated buffer whose head is fully present: the total span
+/// (head + declared body) of the pending request.  `None` while the
+/// head itself is still incomplete.  Only meaningful after
+/// [`parse_request`] said `Truncated` — by then the head parsed cleanly,
+/// so a single well-formed `content-length` line is guaranteed.
+fn body_span(buf: &[u8]) -> Option<usize> {
+    let head_end = find_head_end(buf)?;
+    let text = std::str::from_utf8(&buf[..head_end]).ok()?;
+    for line in text.split('\n') {
+        let line = line.strip_suffix('\r').unwrap_or(line);
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                return value.trim().parse::<usize>().ok().map(|len| head_end + len);
+            }
+        }
+    }
+    None
+}
+
+/// Byte index just past the blank line terminating the head, if any.
+/// Mirrors [`read_line`]: lines end at `\n` with an optional `\r`
+/// stripped, so the head ends at the first `\n\n` or `\n\r\n`.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    for i in 0..buf.len() {
+        if buf[i] == b'\n' {
+            if buf.get(i + 1) == Some(&b'\n') {
+                return Some(i + 2);
+            }
+            if buf.get(i + 1) == Some(&b'\r') && buf.get(i + 2) == Some(&b'\n') {
+                return Some(i + 3);
+            }
+        }
+    }
+    None
+}
+
 /// Canonical reason phrase for the statuses the gateway emits.
 pub fn reason(status: u16) -> &'static str {
     match status {
@@ -427,6 +512,78 @@ mod tests {
         let (status, body) = read_response(&mut BufReader::new(&wire[..])).unwrap();
         assert_eq!(status, 429);
         assert_eq!(body, resp.body);
+    }
+
+    #[test]
+    fn parse_buffer_grows_byte_by_byte_until_complete() {
+        // The reactor feeds arbitrary read fragments: head prefixes are
+        // Partial, body prefixes report the known total span (the
+        // re-parse suppression hint), and the full wire is Complete
+        // with an exact consumed count.
+        let wire: &[u8] = b"POST /v1/infer HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcd";
+        let head_len = wire.len() - 4;
+        for cut in 0..wire.len() {
+            match parse_buffer(&wire[..cut]) {
+                BufferParse::Partial if cut < head_len => {}
+                BufferParse::PartialBody { total } if cut >= head_len => {
+                    assert_eq!(total, wire.len(), "span known once the head frames");
+                }
+                other => panic!("prefix of {cut} bytes: unexpected {other:?}"),
+            }
+        }
+        match parse_buffer(wire) {
+            BufferParse::Complete { req, consumed } => {
+                assert_eq!(consumed, wire.len());
+                assert_eq!(req.body, b"abcd");
+                assert_eq!(req.path(), "/v1/infer");
+            }
+            other => panic!("full wire must parse: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_buffer_pipelined_requests_consume_one_at_a_time() {
+        let first: &[u8] = b"POST /v1/infer HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi";
+        let second: &[u8] = b"GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut buf = first.to_vec();
+        buf.extend_from_slice(second);
+        let BufferParse::Complete { req, consumed } = parse_buffer(&buf) else {
+            panic!("first pipelined request must frame");
+        };
+        assert_eq!(consumed, first.len(), "must not consume into request two");
+        assert_eq!(req.method, "POST");
+        buf.drain(..consumed);
+        let BufferParse::Complete { req, consumed } = parse_buffer(&buf) else {
+            panic!("second pipelined request must frame");
+        };
+        assert_eq!(consumed, second.len());
+        assert_eq!(req.path(), "/healthz");
+        assert!(!req.keep_alive());
+    }
+
+    #[test]
+    fn parse_buffer_rejects_garbage_and_oversized_heads() {
+        // malformed request line: typed error, not Partial
+        assert!(matches!(
+            parse_buffer(b"NOT A REQUEST\r\n\r\n"),
+            BufferParse::Error(HttpError::BadRequest(_))
+        ));
+        // an unterminated head past MAX_HEAD_BYTES must error (bounds the
+        // reactor's buffer growth against slow-loris header drip)
+        let flood = vec![b'A'; MAX_HEAD_BYTES + 2];
+        assert!(matches!(
+            parse_buffer(&flood),
+            BufferParse::Error(HttpError::HeadersTooLarge)
+        ));
+        // declared body past the cap errors as soon as the head frames
+        let wire = format!(
+            "POST /v1/infer HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        assert!(matches!(
+            parse_buffer(wire.as_bytes()),
+            BufferParse::Error(HttpError::BodyTooLarge)
+        ));
     }
 
     #[test]

@@ -219,16 +219,20 @@ impl Client {
             "{{\"service\":{},\"frames\":{}}}",
             shot.service.0, shot.frames
         );
-        let head = format!(
+        // One write for head + body: a client thread descheduled between
+        // two sends would look like a mid-request stall to the server's
+        // slow-loris timer and draw a spurious 408.
+        let mut wire = format!(
             "POST /v1/infer HTTP/1.1\r\nhost: {}\r\ncontent-type: application/json\r\n\
              content-length: {}\r\nconnection: keep-alive\r\n\r\n",
             self.addr,
             body.len()
-        );
+        )
+        .into_bytes();
+        wire.extend_from_slice(body.as_bytes());
         let t0 = Instant::now();
         let stream = self.connect()?;
-        stream.write_all(head.as_bytes())?;
-        stream.write_all(body.as_bytes())?;
+        stream.write_all(&wire)?;
         stream.flush()?;
         let mut reader = BufReader::new(stream.try_clone()?);
         match http::read_response(&mut reader) {
@@ -433,6 +437,96 @@ mod tests {
             assert!(w[0].arrival_ms <= w[1].arrival_ms);
         }
         assert!(a.iter().all(|s| s.category < 4));
+    }
+
+    #[test]
+    fn credit_parsing_handles_malformed_and_missing_fields() {
+        // §3.3 credit comes from the 200 body; anything unparseable or
+        // absent means full credit (non-JSON executor bodies stay
+        // compatible), never a crash or a zero.
+        assert_eq!(parse_credit(b"{\"credit\":0.25}"), 0.25);
+        assert_eq!(parse_credit(b"{\"credit\":1.0,\"latency_ms\":3.5}"), 1.0);
+        assert_eq!(parse_credit(b"{\"latency_ms\":3.5}"), 1.0, "missing field");
+        assert_eq!(parse_credit(b"{\"credit\":\"half\"}"), 1.0, "non-numeric field");
+        assert_eq!(parse_credit(b"not json at all"), 1.0);
+        assert_eq!(parse_credit(b""), 1.0);
+        assert_eq!(parse_credit(&[0xff, 0xfe]), 1.0, "non-utf8");
+    }
+
+    /// Scripted stub gateway: replies per the request body's service id,
+    /// so `run_shots` outcomes are fully deterministic.
+    fn spawn_stub() -> std::net::SocketAddr {
+        use std::io::BufReader;
+        use std::net::TcpListener;
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            // serve a handful of connections, then let the thread end
+            for stream in listener.incoming().take(4) {
+                let Ok(stream) = stream else { break };
+                let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+                let mut writer = stream.try_clone().unwrap();
+                let mut reader = BufReader::new(stream);
+                while let Ok(req) = http::parse_request(&mut reader) {
+                    let service = std::str::from_utf8(&req.body)
+                        .ok()
+                        .and_then(|s| crate::configjson::parse(s).ok())
+                        .and_then(|j| j.get("service").and_then(|v| v.as_i64()))
+                        .unwrap_or(-1);
+                    let resp = match service {
+                        1 => http::HttpResponse::json(200, "{\"credit\":0.25}".into()),
+                        2 => http::HttpResponse::json(200, "malformed {{ body".into()),
+                        3 => http::HttpResponse::json(200, "{\"latency_ms\":5.0}".into()),
+                        4 => http::HttpResponse::json(429, "{\"error\":\"shed\"}".into()),
+                        5 => http::HttpResponse::json(408, "{\"error\":\"timeout\"}".into()),
+                        _ => http::HttpResponse::json(200, "{\"credit\":\"x\"}".into()),
+                    };
+                    if resp.write_to(&mut writer, true).is_err() {
+                        break;
+                    }
+                }
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn run_shots_accounts_statuses_and_credit_against_a_scripted_server() {
+        let addr = spawn_stub();
+        let shots: Vec<Shot> = (1..=6)
+            .map(|id| Shot {
+                arrival_ms: 0.0,
+                service: ServiceId(id),
+                frames: 1,
+                category: 0,
+            })
+            .collect();
+        let cfg = LoadgenConfig {
+            addr: addr.to_string(),
+            concurrency: 1, // deterministic order on one keep-alive conn
+            timeout_ms: 5_000,
+            ..Default::default()
+        };
+        let (report, outcomes) = run_shots(&cfg, shots);
+
+        assert_eq!(report.sent, 6);
+        assert_eq!(report.transport_errors, 0);
+        // 200s: credit-bearing, malformed-body, missing-field, non-numeric
+        assert_eq!(report.ok, 4);
+        assert_eq!(report.shed, 1, "the 429 counts as shed");
+        assert_eq!(report.http_errors, 1, "the 408 counts as an http error");
+        assert!((report.credit - 3.25).abs() < 1e-12, "{}", report.credit);
+        assert_eq!(report.by_category[0], (4, 1));
+
+        let statuses: Vec<u16> = outcomes.iter().map(|o| o.status).collect();
+        assert_eq!(statuses, vec![200, 200, 200, 429, 408, 200]);
+        assert!((outcomes[0].credit - 0.25).abs() < 1e-12);
+        assert_eq!(outcomes[1].credit, 1.0, "malformed 200 body → full credit");
+        assert_eq!(outcomes[2].credit, 1.0, "missing credit field → full credit");
+        assert_eq!(outcomes[3].credit, 0.0, "429 earns nothing");
+        assert_eq!(outcomes[4].credit, 0.0, "408 earns nothing");
+        assert!(outcomes[0].latency_ms > 0.0);
     }
 
     #[test]

@@ -15,16 +15,24 @@
 //!
 //! Module map:
 //! * [`http`] — hand-rolled HTTP/1.1 parse/serialize with hard limits;
-//! * [`pool`] — fixed connection-worker thread pool;
+//! * `reactor` — Linux epoll connection layer (the default): one thread
+//!   multiplexes every socket, idle keep-alive peers cost a table entry;
+//! * [`pool`] — fixed worker thread pool (request execution);
 //! * [`admission`] — category queues, SLO-budget shedding, BS batching;
 //! * [`executor`] — backend trait + profile-replay / coordinator backends;
 //! * [`router`] — `/v1/infer`, `/metrics`, `/healthz` dispatch;
 //! * [`telemetry`] — Prometheus text exposition + §3.3 goodput credit;
 //! * [`loadgen`] — socket-driving load generator (open / closed loop).
+//!
+//! Two connection layers share everything above the socket: the epoll
+//! reactor (Linux default — see `reactor.rs` and DESIGN.md §Reactor) and
+//! the legacy thread-per-connection loop (`legacy_threads: true`, or any
+//! non-Linux host), kept as a one-PR escape hatch.  Wire behavior is
+//! identical: same framing bytes, same status codes, same telemetry.
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
@@ -36,6 +44,8 @@ pub mod executor;
 pub mod http;
 pub mod loadgen;
 pub mod pool;
+#[cfg(target_os = "linux")]
+mod reactor;
 pub mod router;
 pub mod telemetry;
 
@@ -43,28 +53,35 @@ pub use admission::{Admission, AdmissionConfig};
 pub use executor::{DegradedExecutor, Executor, ProfileReplayExecutor};
 pub use telemetry::Telemetry;
 
-/// Read timeout on accepted sockets.  Doubles as two deadlines: how long
-/// an idle keep-alive connection can pin a worker before it re-checks
-/// the shutdown flag, and the per-read slow-client bound mid-request — a
-/// peer that stalls longer than this between bytes of a request gets
-/// 408 and the connection closed (slow-loris containment).
+/// Legacy path only: read timeout on accepted sockets, i.e. how often a
+/// parked worker re-checks the shutdown flag, and the per-read
+/// slow-client bound mid-request (stall → 408).  The reactor replaces
+/// this polling with table-driven timers from [`GatewayConfig`].
 const IDLE_POLL: Duration = Duration::from_millis(200);
-
-/// Idle keep-alive eviction: after this many consecutive idle polls with
-/// no new request (~30 s), the connection is closed so parked clients
-/// cannot pin the fixed worker pool indefinitely.
-const MAX_IDLE_POLLS: u32 = 150;
 
 /// Gateway configuration.
 #[derive(Clone, Debug)]
 pub struct GatewayConfig {
     /// Bind address; port 0 picks an ephemeral port.
     pub addr: String,
-    /// Connection-worker pool size.
+    /// Worker pool size: request-execution slots under the reactor, one
+    /// blocked worker per open connection under `legacy_threads`.
     pub threads: usize,
     pub admission: AdmissionConfig,
     /// GPU VRAM used for the single/multi-GPU category split (§3.1).
     pub gpu_vram_mb: f64,
+    /// Escape hatch: thread-per-connection connection layer instead of
+    /// the epoll reactor.  Implied on non-Linux hosts (no epoll there).
+    pub legacy_threads: bool,
+    /// Reactor connection-table cap (fd budget); accepts pause beyond
+    /// it and excess connections wait in the OS backlog.
+    pub max_connections: usize,
+    /// Evict an idle keep-alive connection after this long.
+    pub idle_timeout_ms: u64,
+    /// 408-and-close a peer stalled mid-request (or refusing to read a
+    /// response) for this long.  Reactor-path timer; the legacy path
+    /// keeps its fixed `IDLE_POLL` read-timeout bound.
+    pub stall_timeout_ms: u64,
 }
 
 impl Default for GatewayConfig {
@@ -74,6 +91,10 @@ impl Default for GatewayConfig {
             threads: 8,
             admission: AdmissionConfig::default(),
             gpu_vram_mb: zoo::P100_VRAM_MB,
+            legacy_threads: false,
+            max_connections: 4096,
+            idle_timeout_ms: 30_000,
+            stall_timeout_ms: 1_000,
         }
     }
 }
@@ -85,6 +106,9 @@ pub(crate) struct Shared {
     pub executor: Arc<dyn Executor>,
     pub telemetry: Telemetry,
     pub gpu_vram_mb: f64,
+    /// Open client connections (both connection layers keep it current;
+    /// exported as `epara_gateway_open_connections`).
+    pub connections: AtomicUsize,
 }
 
 /// Process-wide SIGINT/SIGTERM latch (signal handlers can only touch
@@ -125,10 +149,14 @@ pub struct Gateway {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     join: Option<thread::JoinHandle<()>>,
+    /// The connection layer actually in force (init fallback included).
+    layer: &'static str,
 }
 
 impl Gateway {
-    /// Bind, spawn the accept thread + worker pool, and return.
+    /// Bind, spawn the gateway thread (epoll reactor on Linux, the
+    /// legacy accept loop + thread-per-connection pool otherwise or with
+    /// `legacy_threads`), and return.
     pub fn spawn(
         cfg: GatewayConfig,
         table: ProfileTable,
@@ -145,21 +173,82 @@ impl Gateway {
             executor,
             telemetry: Telemetry::new(),
             gpu_vram_mb: cfg.gpu_vram_mb,
+            connections: AtomicUsize::new(0),
         });
         let stop = Arc::new(AtomicBool::new(false));
-        let accept_stop = Arc::clone(&stop);
+        let thread_stop = Arc::clone(&stop);
         let threads = cfg.threads;
+        // Legacy idle eviction derives from the same knob as the
+        // reactor's idle timer.
+        let idle_polls = (cfg.idle_timeout_ms / IDLE_POLL.as_millis() as u64).max(1) as u32;
 
+        #[cfg(target_os = "linux")]
+        let reactor_cfg = (!cfg.legacy_threads).then(|| reactor::ReactorConfig {
+            threads,
+            // connection tokens pack the slot index into 32 bits
+            max_connections: cfg.max_connections.clamp(1, u32::MAX as usize >> 1),
+            // request backlog the pool + admission tier can usefully
+            // hold: beyond it, newly accepted connections could only rot
+            pending_cap: threads.max(1) * 4 + cfg.admission.queue_cap * 4,
+            idle_timeout: Duration::from_millis(cfg.idle_timeout_ms.max(1)),
+            stall_timeout: Duration::from_millis(cfg.stall_timeout_ms.max(1)),
+        });
+
+        // The reactor is built HERE, on the spawning thread, so the
+        // layer the gateway reports is the one actually in force — an
+        // init failure (epoll/pipe fd exhaustion) falls back to the
+        // legacy loop before `spawn` returns, not silently afterwards.
+        #[cfg(target_os = "linux")]
+        let (engine, layer) = match reactor_cfg {
+            Some(rcfg) => {
+                let r = reactor::Reactor::new(
+                    listener,
+                    Arc::clone(&shared),
+                    Arc::clone(&stop),
+                    rcfg,
+                );
+                match r {
+                    Ok(reactor) => (Ok(reactor), "epoll-reactor"),
+                    Err((listener, e)) => {
+                        crate::log_at!(
+                            crate::util::LogLevel::Warn,
+                            "gateway: epoll reactor init failed ({e}); \
+                             falling back to thread-per-connection"
+                        );
+                        (Err(listener), "thread-per-connection")
+                    }
+                }
+            }
+            None => (Err(listener), "thread-per-connection"),
+        };
+        #[cfg(target_os = "linux")]
+        let join = thread::Builder::new().name("epara-gateway".into()).spawn(move || {
+            match engine {
+                Ok(reactor) => reactor.run(),
+                Err(listener) => accept_loop(listener, shared, thread_stop, threads, idle_polls),
+            }
+        })?;
+
+        #[cfg(not(target_os = "linux"))]
+        let layer = "thread-per-connection";
+        #[cfg(not(target_os = "linux"))]
         let join = thread::Builder::new()
             .name("epara-gateway".into())
-            .spawn(move || accept_loop(listener, shared, accept_stop, threads))?;
+            .spawn(move || accept_loop(listener, shared, thread_stop, threads, idle_polls))?;
 
-        Ok(Gateway { addr, stop, join: Some(join) })
+        Ok(Gateway { addr, stop, join: Some(join), layer })
     }
 
     /// The bound address (resolves port 0).
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The connection layer in force: `"epoll-reactor"` or
+    /// `"thread-per-connection"` (legacy flag, non-Linux host, or
+    /// reactor init fallback).
+    pub fn connection_layer(&self) -> &'static str {
+        self.layer
     }
 
     /// Signal shutdown and join the accept thread (which drains and joins
@@ -185,17 +274,21 @@ impl Drop for Gateway {
     }
 }
 
-/// Accept connections until shutdown; graceful on SIGINT/SIGTERM.
+/// Legacy accept loop: one pool worker per connection (escape hatch and
+/// non-Linux fallback); graceful on SIGINT/SIGTERM.
 fn accept_loop(
     listener: TcpListener,
     shared: Arc<Shared>,
     stop: Arc<AtomicBool>,
     threads: usize,
+    max_idle_polls: u32,
 ) {
     let mut pool = pool::ThreadPool::new(threads);
     // Backpressure: beyond this many queued + running connections, stop
     // accepting and let the OS backlog (and ultimately the client) wait —
-    // the job channel itself is unbounded.
+    // the job channel itself is unbounded.  (Here pool depth IS the
+    // connection count; the reactor re-derives this signal from its
+    // connection table + request backlog — see reactor.rs.)
     let max_pending = threads.max(1) * 4;
     loop {
         if stop.load(Ordering::SeqCst) || signal_received() {
@@ -209,7 +302,7 @@ fn accept_loop(
             Ok((stream, _peer)) => {
                 let shared = Arc::clone(&shared);
                 let stop = Arc::clone(&stop);
-                pool.execute(move || handle_connection(stream, &shared, &stop));
+                pool.execute(move || handle_connection(stream, &shared, &stop, max_idle_polls));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 thread::sleep(Duration::from_millis(5));
@@ -225,8 +318,19 @@ fn accept_loop(
     pool.join();
 }
 
+/// Decrements the open-connection gauge on every exit path.
+struct ConnGauge<'a>(&'a AtomicUsize);
+
+impl Drop for ConnGauge<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 /// One connection: parse → route → respond, looping on keep-alive.
-fn handle_connection(stream: TcpStream, shared: &Shared, stop: &AtomicBool) {
+fn handle_connection(stream: TcpStream, shared: &Shared, stop: &AtomicBool, max_idle_polls: u32) {
+    shared.connections.fetch_add(1, Ordering::Relaxed);
+    let _gauge = ConnGauge(&shared.connections);
     // Accepted sockets inherit non-blocking from the listener on some
     // platforms; force blocking + a bounded read timeout.
     if stream.set_nonblocking(false).is_err() {
@@ -264,7 +368,7 @@ fn handle_connection(stream: TcpStream, shared: &Shared, stop: &AtomicBool) {
             // re-check shutdown, evict if parked too long, keep listening.
             Err(http::HttpError::IdleTimeout) => {
                 idle_polls += 1;
-                if idle_polls >= MAX_IDLE_POLLS {
+                if idle_polls >= max_idle_polls {
                     return;
                 }
             }

@@ -1,12 +1,14 @@
-//! Fixed-size worker thread pool for connection handling.
+//! Fixed-size worker thread pool for request execution.
 //!
 //! The gateway's concurrency model mirrors the paper's per-GPU executor
 //! processes: a bounded set of OS threads drains an mpsc job queue.  No
 //! async runtime exists in the offline registry, and a fixed pool keeps
-//! the memory footprint flat under connection floods: the accept loop
-//! watches [`ThreadPool::pending`] and stops accepting past its
-//! threshold, so excess connections wait in the OS accept backlog
-//! instead of piling into the job queue or spawning unbounded threads.
+//! the memory footprint flat under load.  Under the epoll reactor each
+//! job is one admitted *request* (parse/IO stay on the reactor thread);
+//! under the legacy connection layer each job is a whole connection.
+//! Either way the owner watches [`ThreadPool::pending`] as its backlog
+//! signal — the channel itself is unbounded, so feeding must stop past a
+//! threshold (the reactor folds this into its accept gate).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;

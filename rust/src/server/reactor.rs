@@ -1,0 +1,1067 @@
+//! Epoll reactor: the gateway's connection layer (Linux).
+//!
+//! The legacy model parked one pool worker per open connection, so
+//! concurrency was capped near `GatewayConfig.threads` and every idle
+//! keep-alive peer cost a blocked thread plus a 200 ms poll loop.  The
+//! reactor inverts that: ONE thread owns every socket through a Linux
+//! epoll instance, idle connections cost a table entry, and the worker
+//! pool shrinks to its real job — executing admitted requests.
+//!
+//! Data flow per connection (state machine, see DESIGN.md §Reactor):
+//!
+//! ```text
+//!   accept ─→ Reading ──complete request──→ Executing ──completion──→ Writing
+//!                ↑                            (pool job)                 │
+//!                └────────────── keep-alive, wbuf drained ──────────────┘
+//! ```
+//!
+//! * **Reading** — level-triggered `EPOLLIN`; bytes accumulate in `rbuf`
+//!   and are re-framed with [`http::parse_buffer`] (identical limits and
+//!   semantics to the blocking parser).  Protocol errors answer
+//!   400/413/431 and close; EOF mid-request answers 408.
+//! * **Executing** — epoll interest drops to 0 (the response must be
+//!   written before any pipelined follow-up is parsed, so socket
+//!   readiness is irrelevant); the parsed request runs on the worker
+//!   pool, which serializes the response and hands the bytes back
+//!   through the [`CompletionHub`] + wakeup pipe.
+//! * **Writing** — drain `wbuf` until done (`EPOLLOUT` only while the
+//!   socket pushes back).  Then: close (`Connection: close` / error),
+//!   or parse the next pipelined request straight out of `rbuf`, or
+//!   return to Reading.
+//!
+//! Timers replace the old read-timeout polling: a connection stalled
+//! mid-request (or mid-response) longer than `stall_timeout` gets 408 /
+//! closed (slow-loris containment); an idle keep-alive connection past
+//! `idle_timeout` is evicted.  Executing connections are exempt — the
+//! admission tier and executor bound that phase.  Timer granularity is
+//! one reactor tick (`TICK_MS`).
+//!
+//! The epoll/pipe shim binds the libc symbols directly (std already
+//! links libc on unix; the offline registry carries no libc crate).
+//! Constants cover the x86/x86_64/aarch64 Linux ABIs CI runs on.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::raw::{c_int, c_void};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::http::{self, BufferParse};
+use super::pool::ThreadPool;
+use super::{router, Shared};
+
+/// Raw epoll / pipe shim over the libc the std runtime already links.
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const O_NONBLOCK: c_int = 0o4000;
+    pub const O_CLOEXEC: c_int = 0o2000000;
+
+    /// Linux's `struct epoll_event`: packed on x86/x86_64 (the 64-bit
+    /// data member follows the 32-bit mask with no padding), naturally
+    /// aligned elsewhere (aarch64) — mirroring the kernel ABI.
+    #[repr(C)]
+    #[cfg_attr(any(target_arch = "x86", target_arch = "x86_64"), repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout_ms: c_int,
+        ) -> c_int;
+        pub fn pipe2(fds: *mut c_int, flags: c_int) -> c_int;
+        pub fn close(fd: c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    }
+}
+
+/// Reactor tick: epoll_wait timeout, i.e. timer granularity and the
+/// worst-case latency of noticing the shutdown flag.
+const TICK_MS: c_int = 50;
+
+/// Bounded wait for in-flight responses on shutdown before force-close.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(5);
+
+/// Backoff after an accept() failure (EMFILE/ENFILE under fd
+/// exhaustion): the listener stays muted this long before the gate may
+/// re-arm it, so a persistent error cannot busy-spin the reactor.
+const ACCEPT_ERROR_BACKOFF: Duration = Duration::from_millis(250);
+
+/// Max bytes one connection may drain per readiness pass.  A peer that
+/// streams continuously would otherwise never hit `EAGAIN`, trapping
+/// the single reactor thread and growing `rbuf` without bound; with the
+/// budget, level-triggered epoll simply re-delivers readiness on the
+/// next pass, so connections round-robin fairly and `rbuf` stays within
+/// the parser caps plus one burst of slack.
+const READ_BURST_BYTES: usize = 64 * 1024;
+
+/// epoll user-data for the listening socket.
+const LISTENER_TOKEN: u64 = u64::MAX;
+/// epoll user-data for the wakeup-pipe read end.
+const WAKE_TOKEN: u64 = u64::MAX - 1;
+
+/// Connection tokens carry slot index + generation so a late event or
+/// completion can never touch a recycled slot.
+fn pack(idx: usize, gen: u32) -> u64 {
+    ((gen as u64) << 32) | idx as u64
+}
+
+fn unpack(token: u64) -> (usize, u32) {
+    ((token & 0xffff_ffff) as usize, (token >> 32) as u32)
+}
+
+/// Accept-gate overload signal.  The legacy loop paused accepts on pool
+/// depth because each pool job WAS a connection; under the reactor pool
+/// depth tracks in-flight *requests*, so the signal is re-derived from
+/// connection-table occupancy (the fd budget) plus the request backlog
+/// relative to what the pool and admission tier can usefully hold —
+/// beyond `pending_cap`, newly accepted work could only rot in queues.
+pub(crate) fn should_pause_accepts(
+    open_conns: usize,
+    max_conns: usize,
+    pool_pending: usize,
+    pending_cap: usize,
+) -> bool {
+    open_conns >= max_conns || pool_pending >= pending_cap
+}
+
+/// Thin RAII epoll instance.
+struct Epoll {
+    fd: c_int,
+}
+
+impl Epoll {
+    fn new() -> std::io::Result<Epoll> {
+        let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: c_int, fd: c_int, events: u32, token: u64) -> std::io::Result<()> {
+        let mut ev = sys::EpollEvent { events, data: token };
+        let rc = unsafe { sys::epoll_ctl(self.fd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn del(&self, fd: c_int) {
+        let rc = unsafe { sys::epoll_ctl(self.fd, sys::EPOLL_CTL_DEL, fd, std::ptr::null_mut()) };
+        let _ = rc; // closing the fd detaches it anyway
+    }
+
+    /// Wait one tick; EINTR and errors report as an empty batch.
+    fn wait(&self, events: &mut [sys::EpollEvent], timeout_ms: c_int) -> usize {
+        let rc = unsafe {
+            sys::epoll_wait(self.fd, events.as_mut_ptr(), events.len() as c_int, timeout_ms)
+        };
+        if rc < 0 {
+            0
+        } else {
+            rc as usize
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.fd) };
+    }
+}
+
+/// Nonblocking self-pipe: workers write a byte to rouse the reactor out
+/// of `epoll_wait` when a completion lands.
+struct WakePipe {
+    read_fd: c_int,
+    write_fd: c_int,
+}
+
+impl WakePipe {
+    fn new() -> std::io::Result<WakePipe> {
+        let mut fds = [0 as c_int; 2];
+        let rc = unsafe { sys::pipe2(fds.as_mut_ptr(), sys::O_NONBLOCK | sys::O_CLOEXEC) };
+        if rc < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(WakePipe { read_fd: fds[0], write_fd: fds[1] })
+    }
+
+    /// Discard all pending wake bytes (the completion queue is the
+    /// authoritative signal; the pipe only interrupts the wait).
+    fn drain_bytes(&self) {
+        let mut buf = [0u8; 256];
+        loop {
+            let n = unsafe { sys::read(self.read_fd, buf.as_mut_ptr() as *mut c_void, buf.len()) };
+            if n < buf.len() as isize {
+                break; // EAGAIN / EOF / short read: drained
+            }
+        }
+    }
+}
+
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.read_fd);
+            sys::close(self.write_fd);
+        }
+    }
+}
+
+/// A finished request on its way back to the reactor.
+struct Completion {
+    token: u64,
+    /// Fully serialized response (head + body).
+    bytes: Vec<u8>,
+    keep_alive: bool,
+}
+
+/// Worker → reactor handoff: queue under a mutex plus a wake byte.  The
+/// write fd is borrowed from the reactor-owned [`WakePipe`], which the
+/// reactor keeps alive until after the pool has joined.
+struct CompletionHub {
+    queue: Mutex<Vec<Completion>>,
+    wake_fd: c_int,
+}
+
+impl CompletionHub {
+    fn push(&self, c: Completion) {
+        self.queue.lock().unwrap_or_else(|e| e.into_inner()).push(c);
+        let byte = [1u8];
+        // Full pipe (EAGAIN) is fine: a wake is already pending.
+        let _ = unsafe { sys::write(self.wake_fd, byte.as_ptr() as *const c_void, 1) };
+    }
+
+    fn drain(&self) -> Vec<Completion> {
+        std::mem::take(&mut *self.queue.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
+/// Per-connection lifecycle phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ConnState {
+    /// Accumulating request bytes; epoll interest `EPOLLIN`.
+    Reading,
+    /// Request handed to the pool; epoll interest 0.
+    Executing,
+    /// Draining `wbuf`; `EPOLLOUT` only while the socket pushes back.
+    Writing,
+}
+
+struct Conn {
+    stream: TcpStream,
+    state: ConnState,
+    /// Unparsed request bytes (bounded by the parser's head/body caps).
+    rbuf: Vec<u8>,
+    /// Known total span of the pending request (head + declared body),
+    /// from `BufferParse::PartialBody`; re-parsing is skipped until
+    /// `rbuf` holds this many bytes, so a drip-fed body costs one final
+    /// parse instead of one full re-parse (with body allocation) per
+    /// received segment.  0 = unknown, parse on every arrival.
+    need: usize,
+    /// Serialized response being drained.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    close_after_write: bool,
+    /// Current epoll mask (avoids redundant `EPOLL_CTL_MOD`s).
+    interest: u32,
+    /// Last byte of I/O progress (timer base).
+    last_activity: Instant,
+}
+
+/// Index-stable connection table with generation-tagged slots.
+#[derive(Default)]
+struct Slab {
+    slots: Vec<Option<Conn>>,
+    gens: Vec<u32>,
+    free: Vec<usize>,
+    live: usize,
+}
+
+impl Slab {
+    fn insert(&mut self, conn: Conn) -> usize {
+        self.live += 1;
+        if let Some(idx) = self.free.pop() {
+            self.slots[idx] = Some(conn);
+            idx
+        } else {
+            self.slots.push(Some(conn));
+            self.gens.push(0);
+            self.slots.len() - 1
+        }
+    }
+
+    fn remove(&mut self, idx: usize) -> Option<Conn> {
+        let conn = self.slots.get_mut(idx)?.take()?;
+        self.gens[idx] = self.gens[idx].wrapping_add(1);
+        self.free.push(idx);
+        self.live -= 1;
+        Some(conn)
+    }
+}
+
+/// How far one nonblocking write pass got.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum WriteStatus {
+    /// Everything up to `buf.len()` is on the wire.
+    Done,
+    /// Socket pushed back (`EAGAIN`); re-arm `EPOLLOUT` and resume at
+    /// the updated position.
+    Blocked,
+    /// Peer is gone; close the connection.
+    Closed,
+}
+
+/// Push `buf[*pos..]` into a nonblocking sink, advancing `*pos`.
+pub(crate) fn pump_write<W: Write>(w: &mut W, buf: &[u8], pos: &mut usize) -> WriteStatus {
+    while *pos < buf.len() {
+        match w.write(&buf[*pos..]) {
+            Ok(0) => return WriteStatus::Closed,
+            Ok(n) => *pos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return WriteStatus::Blocked,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return WriteStatus::Closed,
+        }
+    }
+    WriteStatus::Done
+}
+
+/// Reactor tuning handed down from [`super::GatewayConfig`].
+#[derive(Clone, Debug)]
+pub(crate) struct ReactorConfig {
+    /// Worker-pool size (request execution, not connections).
+    pub threads: usize,
+    /// Connection-table occupancy cap (fd budget).
+    pub max_connections: usize,
+    /// Pool backlog past which accepts pause (see
+    /// [`should_pause_accepts`]).
+    pub pending_cap: usize,
+    /// Evict idle keep-alive connections after this long.
+    pub idle_timeout: Duration,
+    /// 408-and-close a connection stalled mid-request / mid-response.
+    pub stall_timeout: Duration,
+}
+
+/// The reactor itself: built on the spawning thread (so init failure can
+/// fall back to the legacy path), then `run()` on the gateway thread.
+pub(crate) struct Reactor {
+    epoll: Epoll,
+    wake: WakePipe,
+    hub: Arc<CompletionHub>,
+    listener: Option<TcpListener>,
+    conns: Slab,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+    cfg: ReactorConfig,
+    accepting: bool,
+    /// While set, the accept gate must not re-arm the listener (error
+    /// backoff); cleared once the deadline passes.
+    accept_mute_until: Option<Instant>,
+    stopping: bool,
+}
+
+impl Reactor {
+    /// Build the epoll instance + wakeup pipe and register the listener.
+    /// On failure the listener is handed back so the caller can fall
+    /// back to the thread-per-connection loop.
+    pub(crate) fn new(
+        listener: TcpListener,
+        shared: Arc<Shared>,
+        stop: Arc<AtomicBool>,
+        cfg: ReactorConfig,
+    ) -> Result<Reactor, (TcpListener, std::io::Error)> {
+        let epoll = match Epoll::new() {
+            Ok(e) => e,
+            Err(e) => return Err((listener, e)),
+        };
+        let wake = match WakePipe::new() {
+            Ok(w) => w,
+            Err(e) => return Err((listener, e)),
+        };
+        if let Err(e) =
+            epoll.ctl(sys::EPOLL_CTL_ADD, listener.as_raw_fd(), sys::EPOLLIN, LISTENER_TOKEN)
+        {
+            return Err((listener, e));
+        }
+        if let Err(e) = epoll.ctl(sys::EPOLL_CTL_ADD, wake.read_fd, sys::EPOLLIN, WAKE_TOKEN) {
+            return Err((listener, e));
+        }
+        let hub = Arc::new(CompletionHub { queue: Mutex::new(Vec::new()), wake_fd: wake.write_fd });
+        Ok(Reactor {
+            epoll,
+            wake,
+            hub,
+            listener: Some(listener),
+            conns: Slab::default(),
+            shared,
+            stop,
+            cfg,
+            accepting: true,
+            accept_mute_until: None,
+            stopping: false,
+        })
+    }
+
+    /// Event loop; returns after a graceful drain once shutdown latches.
+    pub(crate) fn run(mut self) {
+        let mut pool = ThreadPool::new(self.cfg.threads);
+        let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; 256];
+        loop {
+            if self.stop.load(Ordering::SeqCst) || super::signal_received() {
+                break;
+            }
+            let n = self.epoll.wait(&mut events, TICK_MS);
+            for ev in events.iter().take(n) {
+                let (mask, token) = (ev.events, ev.data);
+                match token {
+                    LISTENER_TOKEN => self.accept_burst(&pool),
+                    WAKE_TOKEN => self.wake.drain_bytes(),
+                    t => self.conn_event(t, mask, &pool),
+                }
+            }
+            self.process_completions(&pool);
+            self.expire_timers(&pool);
+            self.update_accept_gate(&pool);
+        }
+        self.drain_shutdown(&pool);
+        pool.join();
+    }
+
+    /// Accept until `EAGAIN` or the overload gate closes.
+    fn accept_burst(&mut self, pool: &ThreadPool) {
+        let Some(listener) = self.listener.take() else { return };
+        loop {
+            if should_pause_accepts(
+                self.conns.live,
+                self.cfg.max_connections,
+                pool.pending(),
+                self.cfg.pending_cap,
+            ) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _peer)) => self.register_conn(stream),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    // EMFILE/ENFILE etc: log and mute the listener until
+                    // a backoff deadline — the gate refuses to re-arm it
+                    // before then, so a persistent error cannot spin the
+                    // loop or flood the log.
+                    crate::log_at!(crate::util::LogLevel::Warn, "gateway accept error: {e}");
+                    let fd = listener.as_raw_fd();
+                    if self.epoll.ctl(sys::EPOLL_CTL_MOD, fd, 0, LISTENER_TOKEN).is_ok() {
+                        self.accepting = false;
+                        self.accept_mute_until = Some(Instant::now() + ACCEPT_ERROR_BACKOFF);
+                    }
+                    break;
+                }
+            }
+        }
+        self.listener = Some(listener);
+    }
+
+    fn register_conn(&mut self, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let fd = stream.as_raw_fd();
+        let idx = self.conns.insert(Conn {
+            stream,
+            state: ConnState::Reading,
+            rbuf: Vec::new(),
+            need: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            close_after_write: false,
+            interest: sys::EPOLLIN,
+            last_activity: Instant::now(),
+        });
+        let token = pack(idx, self.conns.gens[idx]);
+        if self.epoll.ctl(sys::EPOLL_CTL_ADD, fd, sys::EPOLLIN, token).is_err() {
+            self.conns.remove(idx);
+            return;
+        }
+        self.shared.connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn conn_event(&mut self, token: u64, mask: u32, pool: &ThreadPool) {
+        let (idx, gen) = unpack(token);
+        if self.conns.gens.get(idx).copied() != Some(gen) {
+            return; // stale event for a recycled slot
+        }
+        let Some(state) = self.conns.slots.get(idx).and_then(|s| s.as_ref()).map(|c| c.state)
+        else {
+            return;
+        };
+        let readable = mask & (sys::EPOLLIN | sys::EPOLLHUP | sys::EPOLLERR) != 0;
+        let writable = mask & (sys::EPOLLOUT | sys::EPOLLHUP | sys::EPOLLERR) != 0;
+        let broken = mask & (sys::EPOLLHUP | sys::EPOLLERR) != 0;
+        match state {
+            ConnState::Reading if readable => self.do_read(idx, pool),
+            ConnState::Writing if writable => self.do_write(idx, pool),
+            // Executing has interest 0, but the kernel reports
+            // EPOLLHUP/EPOLLERR regardless: an aborted peer (RST) must
+            // be dropped here, or the level-triggered event would spin
+            // the loop hot until the request completes.  The generation
+            // check drops the late completion.  A half-closed peer that
+            // still awaits its response raises neither flag.
+            ConnState::Executing if broken => self.close_conn(idx),
+            _ => {}
+        }
+    }
+
+    /// Drain the socket into `rbuf` (bounded per pass), then try to
+    /// frame a request.
+    fn do_read(&mut self, idx: usize, pool: &ThreadPool) {
+        let mut eof = false;
+        {
+            let Some(conn) = self.conns.slots[idx].as_mut() else { return };
+            let mut tmp = [0u8; 4096];
+            let mut budget = READ_BURST_BYTES;
+            loop {
+                if budget == 0 {
+                    break; // fairness cap; epoll re-delivers readiness
+                }
+                match (&conn.stream).read(&mut tmp) {
+                    Ok(0) => {
+                        eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.rbuf.extend_from_slice(&tmp[..n]);
+                        conn.last_activity = Instant::now();
+                        budget = budget.saturating_sub(n);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        eof = true; // ECONNRESET and friends
+                        break;
+                    }
+                }
+            }
+        }
+        self.advance_read(idx, eof, pool);
+    }
+
+    /// Re-frame `rbuf`; dispatch / wait / error out as the bytes demand.
+    fn advance_read(&mut self, idx: usize, eof: bool, pool: &ThreadPool) {
+        let verdict = {
+            let Some(conn) = self.conns.slots[idx].as_ref() else { return };
+            if !eof && conn.rbuf.len() < conn.need {
+                return; // known-incomplete body: skip the re-parse
+            }
+            http::parse_buffer(&conn.rbuf)
+        };
+        match verdict {
+            BufferParse::Complete { req, consumed } => {
+                if let Some(conn) = self.conns.slots[idx].as_mut() {
+                    conn.rbuf.drain(..consumed);
+                    conn.need = 0;
+                }
+                self.dispatch(idx, req, pool);
+            }
+            BufferParse::Partial => {
+                if eof {
+                    let empty =
+                        self.conns.slots[idx].as_ref().is_none_or(|c| c.rbuf.is_empty());
+                    if empty {
+                        // clean end of a keep-alive connection
+                        self.close_conn(idx);
+                    } else {
+                        // peer died mid-request: 408, mirroring the
+                        // blocking path's Truncated handling
+                        self.respond_error(idx, &http::HttpError::Truncated, pool);
+                    }
+                }
+                // else: wait for more bytes (or the stall timer)
+            }
+            BufferParse::PartialBody { total } => {
+                if eof {
+                    // head arrived, body never will
+                    self.respond_error(idx, &http::HttpError::Truncated, pool);
+                } else if let Some(conn) = self.conns.slots[idx].as_mut() {
+                    conn.need = total;
+                }
+            }
+            BufferParse::Error(e) => self.respond_error(idx, &e, pool),
+        }
+    }
+
+    /// Hand one parsed request to the worker pool.
+    fn dispatch(&mut self, idx: usize, req: http::HttpRequest, pool: &ThreadPool) {
+        let token = pack(idx, self.conns.gens[idx]);
+        let keep_alive = req.keep_alive();
+        if let Some(conn) = self.conns.slots[idx].as_mut() {
+            conn.state = ConnState::Executing;
+            conn.last_activity = Instant::now();
+        } else {
+            return;
+        }
+        self.set_interest(idx, 0);
+        let shared = Arc::clone(&self.shared);
+        let hub = Arc::clone(&self.hub);
+        let accepted = pool.execute(move || {
+            // The reactor exempts Executing connections from every
+            // timer, so the job MUST hand back a completion on every
+            // exit path — including an unwind out of the router or
+            // executor (the pool catches the panic).  The guard's
+            // fallback is an empty close-only completion, mirroring the
+            // legacy path, which dropped the socket without a response
+            // when a connection worker panicked.
+            struct Finish {
+                hub: Arc<CompletionHub>,
+                token: u64,
+                payload: Option<(Vec<u8>, bool)>,
+            }
+            impl Drop for Finish {
+                fn drop(&mut self) {
+                    let (bytes, keep_alive) = self.payload.take().unwrap_or((Vec::new(), false));
+                    self.hub.push(Completion { token: self.token, bytes, keep_alive });
+                }
+            }
+            let mut finish = Finish { hub, token, payload: None };
+            let resp = router::handle(&shared, &req);
+            let mut bytes = Vec::with_capacity(192 + resp.body.len());
+            resp.serialize_into(&mut bytes, keep_alive);
+            finish.payload = Some((bytes, keep_alive));
+        });
+        if !accepted {
+            // pool already shut down (only possible mid-drain)
+            self.close_conn(idx);
+        }
+    }
+
+    /// Move finished responses from the hub onto their connections.
+    fn process_completions(&mut self, pool: &ThreadPool) {
+        for c in self.hub.drain() {
+            let (idx, gen) = unpack(c.token);
+            if self.conns.gens.get(idx).copied() != Some(gen) {
+                continue; // connection died while the request ran
+            }
+            let Some(conn) = self.conns.slots[idx].as_mut() else { continue };
+            conn.wbuf = c.bytes;
+            conn.wpos = 0;
+            conn.close_after_write = !c.keep_alive;
+            conn.state = ConnState::Writing;
+            conn.last_activity = Instant::now();
+            self.do_write(idx, pool);
+        }
+    }
+
+    /// Drain `wbuf`; on completion route to close / next request.
+    fn do_write(&mut self, idx: usize, pool: &ThreadPool) {
+        let (status, progressed) = {
+            let Some(conn) = self.conns.slots[idx].as_mut() else { return };
+            let before = conn.wpos;
+            let Conn { stream, wbuf, wpos, .. } = conn;
+            let mut sink = &*stream;
+            let status = pump_write(&mut sink, wbuf, wpos);
+            (status, *wpos != before)
+        };
+        if progressed {
+            if let Some(conn) = self.conns.slots[idx].as_mut() {
+                conn.last_activity = Instant::now();
+            }
+        }
+        match status {
+            WriteStatus::Done => self.finish_response(idx, pool),
+            WriteStatus::Blocked => self.set_interest(idx, sys::EPOLLOUT),
+            WriteStatus::Closed => self.close_conn(idx),
+        }
+    }
+
+    /// A response hit the wire: close, or serve the next pipelined
+    /// request, or go back to waiting for one.
+    fn finish_response(&mut self, idx: usize, pool: &ThreadPool) {
+        let close = {
+            let Some(conn) = self.conns.slots[idx].as_mut() else { return };
+            conn.wbuf.clear();
+            conn.wpos = 0;
+            conn.close_after_write
+        };
+        let stopping = self.stopping || self.stop.load(Ordering::SeqCst);
+        if close || stopping || super::signal_received() {
+            self.close_conn(idx);
+            return;
+        }
+        if let Some(conn) = self.conns.slots[idx].as_mut() {
+            conn.state = ConnState::Reading;
+            conn.last_activity = Instant::now();
+        }
+        // a pipelined follow-up may already be buffered — serve it now,
+        // BEFORE touching epoll interest: if it dispatches, interest
+        // stays 0 and no MOD syscalls are spent on the back-to-back case
+        self.advance_read(idx, false, pool);
+        let still_reading =
+            self.conns.slots[idx].as_ref().is_some_and(|c| c.state == ConnState::Reading);
+        if still_reading {
+            self.set_interest(idx, sys::EPOLLIN);
+        }
+    }
+
+    /// Answer a protocol violation (or stall) and close — same statuses,
+    /// bodies, and telemetry as the legacy connection loop.
+    fn respond_error(&mut self, idx: usize, e: &http::HttpError, pool: &ThreadPool) {
+        let Some(status) = e.status() else {
+            self.close_conn(idx);
+            return;
+        };
+        self.shared.telemetry.record_http_error();
+        let resp = http::HttpResponse::json(
+            status,
+            format!("{{\"error\":\"{}\"}}", http::reason(status)),
+        );
+        {
+            let Some(conn) = self.conns.slots[idx].as_mut() else { return };
+            let mut bytes = Vec::with_capacity(192);
+            resp.serialize_into(&mut bytes, false);
+            conn.wbuf = bytes;
+            conn.wpos = 0;
+            conn.close_after_write = true;
+            conn.state = ConnState::Writing;
+            conn.rbuf.clear(); // never parse past a poisoned prefix
+            conn.last_activity = Instant::now();
+        }
+        self.do_write(idx, pool);
+    }
+
+    fn set_interest(&mut self, idx: usize, mask: u32) {
+        let gen = self.conns.gens[idx];
+        let Some(conn) = self.conns.slots[idx].as_mut() else { return };
+        if conn.interest == mask {
+            return;
+        }
+        let fd = conn.stream.as_raw_fd();
+        if self.epoll.ctl(sys::EPOLL_CTL_MOD, fd, mask, pack(idx, gen)).is_ok() {
+            conn.interest = mask;
+        }
+    }
+
+    fn close_conn(&mut self, idx: usize) {
+        if let Some(conn) = self.conns.remove(idx) {
+            self.epoll.del(conn.stream.as_raw_fd());
+            self.shared.connections.fetch_sub(1, Ordering::Relaxed);
+            // dropping the stream closes the fd
+        }
+    }
+
+    /// Slow-loris / idle eviction sweep (one pass per tick).
+    fn expire_timers(&mut self, pool: &ThreadPool) {
+        enum Due {
+            Nothing,
+            Stall,
+            Evict,
+        }
+        let now = Instant::now();
+        for idx in 0..self.conns.slots.len() {
+            let due = match self.conns.slots[idx].as_ref() {
+                None => continue,
+                Some(c) => {
+                    let quiet = now.duration_since(c.last_activity);
+                    match c.state {
+                        // bounded by admission + executor, not the peer
+                        ConnState::Executing => Due::Nothing,
+                        ConnState::Reading if !c.rbuf.is_empty() => {
+                            // mid-request silence → 408; a peer still
+                            // dripping bytes resets the clock (parity
+                            // with the legacy per-read timeout) but its
+                            // CPU cost is bounded by the `need` gate
+                            if quiet >= self.cfg.stall_timeout {
+                                Due::Stall
+                            } else {
+                                Due::Nothing
+                            }
+                        }
+                        ConnState::Reading => {
+                            if quiet >= self.cfg.idle_timeout {
+                                Due::Evict // parked keep-alive peer
+                            } else {
+                                Due::Nothing
+                            }
+                        }
+                        ConnState::Writing => {
+                            if quiet >= self.cfg.stall_timeout {
+                                Due::Evict // peer refuses to read
+                            } else {
+                                Due::Nothing
+                            }
+                        }
+                    }
+                }
+            };
+            match due {
+                Due::Stall => self.respond_error(idx, &http::HttpError::Truncated, pool),
+                Due::Evict => self.close_conn(idx),
+                Due::Nothing => {}
+            }
+        }
+    }
+
+    /// Re-arm or mute the listener as the overload signal moves.
+    fn update_accept_gate(&mut self, pool: &ThreadPool) {
+        if let Some(until) = self.accept_mute_until {
+            if Instant::now() < until {
+                return; // accept-error backoff still in force
+            }
+            self.accept_mute_until = None;
+        }
+        let Some(listener) = &self.listener else { return };
+        let want = !should_pause_accepts(
+            self.conns.live,
+            self.cfg.max_connections,
+            pool.pending(),
+            self.cfg.pending_cap,
+        );
+        if want == self.accepting {
+            return;
+        }
+        let mask = if want { sys::EPOLLIN } else { 0 };
+        let fd = listener.as_raw_fd();
+        if self.epoll.ctl(sys::EPOLL_CTL_MOD, fd, mask, LISTENER_TOKEN).is_ok() {
+            self.accepting = want;
+        }
+    }
+
+    /// Graceful drain, in a fixed order that makes the latch race-free:
+    /// (1) the listener closes first, so no connection can be born after
+    /// the decision to stop; (2) connections owed nothing (Reading, with
+    /// or without a partial request) close immediately — matching the
+    /// legacy loop, which also abandoned half-received requests on stop;
+    /// (3) connections owed a response (Executing/Writing) are drained
+    /// through the normal completion/write path under a grace deadline —
+    /// `finish_response` sees `stopping` and closes instead of parsing
+    /// pipelined follow-ups; (4) leftovers force-close, and the caller
+    /// joins the pool (queued jobs still run; their completions land on
+    /// bumped generations and are dropped).
+    fn drain_shutdown(&mut self, pool: &ThreadPool) {
+        self.stopping = true;
+        if let Some(l) = self.listener.take() {
+            self.epoll.del(l.as_raw_fd());
+            drop(l);
+        }
+        for idx in 0..self.conns.slots.len() {
+            let reading = matches!(
+                self.conns.slots[idx].as_ref().map(|c| c.state),
+                Some(ConnState::Reading)
+            );
+            if reading {
+                self.close_conn(idx);
+            }
+        }
+        let deadline = Instant::now() + SHUTDOWN_GRACE;
+        let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; 64];
+        while self.conns.live > 0 && Instant::now() < deadline {
+            let n = self.epoll.wait(&mut events, TICK_MS);
+            for ev in events.iter().take(n) {
+                let (mask, token) = (ev.events, ev.data);
+                match token {
+                    WAKE_TOKEN => self.wake.drain_bytes(),
+                    LISTENER_TOKEN => {}
+                    t => self.conn_event(t, mask, pool),
+                }
+            }
+            self.process_completions(pool);
+        }
+        for idx in 0..self.conns.slots.len() {
+            self.close_conn(idx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::zoo;
+    use crate::server::{Gateway, GatewayConfig, ProfileReplayExecutor};
+    use std::io::BufReader;
+    use std::net::TcpStream;
+
+    fn spawn_gateway(cfg: GatewayConfig) -> Gateway {
+        let table = zoo::paper_zoo();
+        let executor = Arc::new(ProfileReplayExecutor::new(table.clone(), 1e6));
+        Gateway::spawn(cfg, table, executor).expect("gateway spawn")
+    }
+
+    fn ephemeral(cfg: GatewayConfig) -> GatewayConfig {
+        GatewayConfig { addr: "127.0.0.1:0".into(), threads: 2, ..cfg }
+    }
+
+    #[test]
+    fn accept_gate_pauses_on_occupancy_or_backlog() {
+        // fd budget exhausted
+        assert!(should_pause_accepts(8, 8, 0, 32));
+        assert!(should_pause_accepts(9, 8, 0, 32));
+        // request backlog past what pool + admission can usefully hold
+        assert!(should_pause_accepts(0, 8, 32, 32));
+        // healthy
+        assert!(!should_pause_accepts(7, 8, 31, 32));
+        assert!(!should_pause_accepts(0, 8, 0, 32));
+    }
+
+    #[test]
+    fn pump_write_survives_eagain_and_reports_dead_peers() {
+        /// Accepts up to `budget` bytes per refill, then EAGAINs.
+        struct Throttle {
+            accepted: Vec<u8>,
+            budget: usize,
+        }
+        impl Write for Throttle {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                if self.budget == 0 {
+                    return Err(std::io::ErrorKind::WouldBlock.into());
+                }
+                let n = buf.len().min(self.budget);
+                self.accepted.extend_from_slice(&buf[..n]);
+                self.budget -= n;
+                Ok(n)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+
+        let data = b"0123456789";
+        let mut pos = 0usize;
+        let mut w = Throttle { accepted: Vec::new(), budget: 4 };
+        assert_eq!(pump_write(&mut w, data, &mut pos), WriteStatus::Blocked);
+        assert_eq!(pos, 4, "partial progress before EAGAIN must persist");
+        w.budget = 3;
+        assert_eq!(pump_write(&mut w, data, &mut pos), WriteStatus::Blocked);
+        assert_eq!(pos, 7);
+        w.budget = usize::MAX;
+        assert_eq!(pump_write(&mut w, data, &mut pos), WriteStatus::Done);
+        assert_eq!(pos, data.len());
+        assert_eq!(w.accepted, data, "resumed writes must not duplicate or drop bytes");
+
+        struct Dead;
+        impl Write for Dead {
+            fn write(&mut self, _: &[u8]) -> std::io::Result<usize> {
+                Ok(0)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut pos = 0usize;
+        assert_eq!(pump_write(&mut Dead, data, &mut pos), WriteStatus::Closed);
+    }
+
+    #[test]
+    fn reactor_serves_pipelined_requests_from_one_segment() {
+        let mut gw = spawn_gateway(ephemeral(GatewayConfig::default()));
+        assert_eq!(gw.connection_layer(), "epoll-reactor");
+        let stream = TcpStream::connect(gw.local_addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let wire = "GET /healthz HTTP/1.1\r\nhost: x\r\n\r\n\
+                    GET /healthz HTTP/1.1\r\nhost: x\r\nconnection: close\r\n\r\n";
+        (&stream).write_all(wire.as_bytes()).unwrap();
+        let mut reader = BufReader::new(stream);
+        for i in 0..2 {
+            let (status, body) = http::read_response(&mut reader).expect("pipelined response");
+            assert_eq!(status, 200, "response {i}");
+            assert_eq!(body, b"ok\n");
+        }
+        gw.shutdown();
+    }
+
+    #[test]
+    fn reactor_answers_mid_request_stall_with_408() {
+        let mut gw = spawn_gateway(ephemeral(GatewayConfig {
+            stall_timeout_ms: 150,
+            idle_timeout_ms: 60_000,
+            ..Default::default()
+        }));
+        let stream = TcpStream::connect(gw.local_addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        // half a request head, then silence: the stall timer must 408
+        (&stream).write_all(b"POST /v1/infer HTTP/1.1\r\ncontent-le").unwrap();
+        let mut reader = BufReader::new(stream);
+        let (status, _) = http::read_response(&mut reader).expect("stall must be answered");
+        assert_eq!(status, 408);
+        // and the connection is closed afterwards
+        assert!(matches!(
+            http::read_response(&mut reader),
+            Err(http::HttpError::ConnectionClosed)
+        ));
+        gw.shutdown();
+    }
+
+    #[test]
+    fn reactor_evicts_idle_keepalive_connections() {
+        let mut gw = spawn_gateway(ephemeral(GatewayConfig {
+            idle_timeout_ms: 200,
+            stall_timeout_ms: 5_000,
+            ..Default::default()
+        }));
+        let stream = TcpStream::connect(gw.local_addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        // no request at all: eviction closes the socket without a response
+        let mut reader = BufReader::new(stream);
+        assert!(matches!(
+            http::read_response(&mut reader),
+            Err(http::HttpError::ConnectionClosed)
+        ));
+        gw.shutdown();
+    }
+
+    #[test]
+    fn accept_gate_defers_connections_past_the_table_cap() {
+        let mut gw = spawn_gateway(ephemeral(GatewayConfig {
+            max_connections: 1,
+            ..Default::default()
+        }));
+        let addr = gw.local_addr();
+
+        // connection A occupies the single table slot
+        let a = TcpStream::connect(addr).unwrap();
+        a.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        (&a).write_all(b"GET /healthz HTTP/1.1\r\nhost: x\r\n\r\n").unwrap();
+        let mut ra = BufReader::new(a.try_clone().unwrap());
+        let (status, _) = http::read_response(&mut ra).unwrap();
+        assert_eq!(status, 200);
+
+        // connection B handshakes into the backlog but must not be
+        // served while A holds the only slot
+        let b = TcpStream::connect(addr).unwrap();
+        (&b).write_all(b"GET /healthz HTTP/1.1\r\nhost: x\r\n\r\n").unwrap();
+        b.set_read_timeout(Some(Duration::from_millis(400))).unwrap();
+        let mut rb = BufReader::new(b.try_clone().unwrap());
+        assert!(
+            matches!(http::read_response(&mut rb), Err(http::HttpError::IdleTimeout)),
+            "B must wait in the backlog while the table is full"
+        );
+
+        // freeing A's slot lets the gate re-open and B get served
+        drop(ra);
+        drop(a);
+        b.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let (status, _) = http::read_response(&mut rb).expect("B served after A closed");
+        assert_eq!(status, 200);
+        gw.shutdown();
+    }
+}

@@ -118,9 +118,13 @@ pub(super) fn handle(shared: &Shared, req: &HttpRequest) -> HttpResponse {
         ("POST", "/v1/infer") => handle_infer(shared, req),
         ("GET", "/metrics") => HttpResponse::text(
             200,
-            shared
-                .telemetry
-                .render_prometheus(shared.admission.depths(), shared.executor.name()),
+            shared.telemetry.render_prometheus(
+                shared.admission.depths(),
+                shared.executor.name(),
+                shared
+                    .connections
+                    .load(std::sync::atomic::Ordering::Relaxed),
+            ),
         ),
         ("GET", "/healthz") => HttpResponse::text(200, "ok\n"),
         ("GET" | "POST", "/v1/infer" | "/metrics" | "/healthz") => {

@@ -147,7 +147,12 @@ impl Telemetry {
     }
 
     /// Render the Prometheus text exposition.
-    pub fn render_prometheus(&self, queue_depths: [usize; 4], executor: &str) -> String {
+    pub fn render_prometheus(
+        &self,
+        queue_depths: [usize; 4],
+        executor: &str,
+        open_connections: usize,
+    ) -> String {
         let mut out = String::with_capacity(2048);
         let inner = self.lock();
 
@@ -209,6 +214,13 @@ impl Telemetry {
             ));
         }
 
+        out.push_str(
+            "# HELP epara_gateway_open_connections Currently open client connections \
+             (reactor table occupancy).\n\
+             # TYPE epara_gateway_open_connections gauge\n",
+        );
+        out.push_str(&format!("epara_gateway_open_connections {open_connections}\n"));
+
         let credit: f64 = inner.cats.iter().map(|c| c.credit).sum();
         drop(inner);
         let secs = self.started.elapsed().as_secs_f64().max(1e-9);
@@ -261,7 +273,7 @@ mod tests {
         t.record_shed(TaskCategory::FrequencyMulti);
         t.record_failed(TaskCategory::LatencyMulti);
         t.record_http_error();
-        let text = t.render_prometheus([1, 0, 0, 2], "profile-replay");
+        let text = t.render_prometheus([1, 0, 0, 2], "profile-replay", 7);
         assert!(text.contains(
             "epara_gateway_requests_total{category=\"latency_single\",outcome=\"ok\"} 2"
         ));
@@ -274,6 +286,7 @@ mod tests {
         assert!(text.contains("epara_gateway_http_errors_total 1"));
         assert!(text.contains("epara_gateway_queue_depth{category=\"latency_single\"} 1"));
         assert!(text.contains("epara_gateway_queue_depth{category=\"frequency_multi\"} 2"));
+        assert!(text.contains("epara_gateway_open_connections 7"));
         assert!(text.contains("quantile=\"0.95\""));
         assert!(text.contains("epara_gateway_info{executor=\"profile-replay\"} 1"));
     }

@@ -1,0 +1,37 @@
+//! Shared Prometheus-scrape helpers for the gateway integration suites
+//! (`gateway_e2e`, `gateway_concurrency`).  One copy, so a change to
+//! the exposition format cannot silently desynchronize the suites.
+#![allow(dead_code)] // each test target uses a subset
+
+/// Sum `epara_gateway_requests_total` across categories for one outcome.
+pub fn counter_sum(metrics: &str, outcome: &str) -> u64 {
+    let needle = format!("outcome=\"{outcome}\"");
+    metrics
+        .lines()
+        .filter(|l| l.starts_with("epara_gateway_requests_total{") && l.contains(&needle))
+        .filter_map(|l| l.rsplit(' ').next().and_then(|v| v.parse::<u64>().ok()))
+        .sum()
+}
+
+/// One labelled `epara_gateway_requests_total` counter value.
+pub fn counter_value(metrics: &str, category: &str, outcome: &str) -> u64 {
+    let prefix = format!(
+        "epara_gateway_requests_total{{category=\"{category}\",outcome=\"{outcome}\"}}"
+    );
+    metrics
+        .lines()
+        .find(|l| l.starts_with(&prefix))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
+/// A single un-labelled metric value by name (gauges, plain counters).
+pub fn value(metrics: &str, name: &str) -> u64 {
+    metrics
+        .lines()
+        .find(|l| l.starts_with(&format!("{name} ")))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}

@@ -24,6 +24,9 @@ use epara::server::loadgen::{self, LoadgenConfig};
 use epara::server::{AdmissionConfig, Gateway, GatewayConfig, ProfileReplayExecutor};
 use epara::workload::Mix;
 
+mod common;
+use common::{counter_sum, counter_value};
+
 /// Pretend-faster GPU: paper-scale latencies shrink 400x so the whole
 /// run fits a CI budget while still sleeping on the real wall clock.
 const TIME_SCALE: f64 = 400.0;
@@ -68,29 +71,6 @@ fn post_infer(addr: &str, service: u32, frames: u32) -> u16 {
         ),
     );
     status
-}
-
-/// Sum `epara_gateway_requests_total` across categories for one outcome.
-fn counter_sum(metrics: &str, outcome: &str) -> u64 {
-    let needle = format!("outcome=\"{outcome}\"");
-    metrics
-        .lines()
-        .filter(|l| l.starts_with("epara_gateway_requests_total{") && l.contains(&needle))
-        .filter_map(|l| l.rsplit(' ').next().and_then(|v| v.parse::<u64>().ok()))
-        .sum()
-}
-
-/// One labelled counter value.
-fn counter_value(metrics: &str, category: &str, outcome: &str) -> u64 {
-    let prefix = format!(
-        "epara_gateway_requests_total{{category=\"{category}\",outcome=\"{outcome}\"}}"
-    );
-    metrics
-        .lines()
-        .find(|l| l.starts_with(&prefix))
-        .and_then(|l| l.rsplit(' ').next())
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(0)
 }
 
 #[test]

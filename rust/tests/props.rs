@@ -445,6 +445,336 @@ fn prop_workload_rosters_span_categories() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Gateway admission-tier invariants (randomized arrival orders)
+// ---------------------------------------------------------------------------
+
+mod admission_props {
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::{Arc, Barrier, Mutex};
+
+    use epara::core::{Sensitivity, ServiceId, TaskCategory};
+    use epara::server::admission::{Admission, AdmissionConfig, Decision, ShedReason};
+    use epara::server::executor::{ExecOutcome, ExecRequest, Executor};
+    use epara::util::minitest::forall;
+
+    /// Instant executor with a constant latency model, a release latch
+    /// (execute blocks until opened), and per-batch frames recording.
+    struct ProbeExec {
+        expected_ms: f64,
+        released: AtomicBool,
+        batches: Mutex<Vec<Vec<u32>>>,
+    }
+
+    impl ProbeExec {
+        fn new(expected_ms: f64, released: bool) -> ProbeExec {
+            ProbeExec {
+                expected_ms,
+                released: AtomicBool::new(released),
+                batches: Mutex::new(Vec::new()),
+            }
+        }
+
+        fn release(&self) {
+            self.released.store(true, Ordering::SeqCst);
+        }
+
+        fn widths(&self) -> Vec<usize> {
+            self.batches.lock().unwrap().iter().map(|b| b.len()).collect()
+        }
+    }
+
+    impl Executor for ProbeExec {
+        fn name(&self) -> &'static str {
+            "probe"
+        }
+
+        fn expected_ms(&self, _s: ServiceId, _bs: u32, _f: u32) -> f64 {
+            self.expected_ms
+        }
+
+        fn execute(&self, _s: ServiceId, batch: &[ExecRequest]) -> epara::Result<ExecOutcome> {
+            while !self.released.load(Ordering::SeqCst) {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            let frames: Vec<u32> = batch.iter().map(|r| r.frames).collect();
+            self.batches.lock().unwrap().push(frames);
+            Ok(ExecOutcome { batch_latency_ms: self.expected_ms })
+        }
+    }
+
+    fn req(frames: u32) -> ExecRequest {
+        ExecRequest { service: ServiceId(104), frames }
+    }
+
+    /// Per-category admitted depth is hard-capped at `queue_cap`: when
+    /// K > C requests storm one category simultaneously, exactly C are
+    /// admitted (and served) and K − C shed with QueueFull — regardless
+    /// of arrival interleaving.
+    #[test]
+    fn prop_admission_queue_bound_is_exact_under_storms() {
+        forall(
+            111,
+            6,
+            |rng| {
+                let cap = 1 + rng.below(5) as usize;
+                let over = 1 + rng.below(8) as usize;
+                (cap, cap + over)
+            },
+            |&(cap, k)| {
+                let adm = Arc::new(Admission::new(AdmissionConfig {
+                    queue_cap: cap,
+                    window_ms: 1,
+                    max_batch: 4,
+                    lanes_per_category: 1,
+                    slo_headroom: 1.0,
+                }));
+                // latch closed: admitted requests pile up on the lane /
+                // inside execute, pinning the category at its depth cap
+                let ex = Arc::new(ProbeExec::new(0.01, false));
+                let barrier = Arc::new(Barrier::new(k));
+                let sheds_done = Arc::new(AtomicUsize::new(0));
+                let handles: Vec<_> = (0..k)
+                    .map(|_| {
+                        let (adm, ex, barrier) =
+                            (Arc::clone(&adm), Arc::clone(&ex), Arc::clone(&barrier));
+                        let sheds_done = Arc::clone(&sheds_done);
+                        std::thread::spawn(move || {
+                            barrier.wait();
+                            let d = adm.submit(TaskCategory::LatencySingle, req(1), 1e12, &*ex);
+                            if matches!(d, Decision::Shed(_)) {
+                                sheds_done.fetch_add(1, Ordering::SeqCst);
+                            }
+                            d
+                        })
+                    })
+                    .collect();
+                // Sheds return immediately (they never touch the latch),
+                // and the FIRST shed can only happen once `cap` arrivals
+                // are already admitted — so k − cap completed sheds
+                // proves every arrival has passed the gate while the
+                // latch still pins the admitted set in place.
+                let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+                while sheds_done.load(Ordering::SeqCst) < k - cap {
+                    if std::time::Instant::now() > deadline {
+                        return Err(format!(
+                            "sheds never reached {}: {} (depths {:?})",
+                            k - cap,
+                            sheds_done.load(Ordering::SeqCst),
+                            adm.depths()
+                        ));
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                if adm.depths()[0] != cap {
+                    return Err(format!(
+                        "with the latch closed the admitted depth must sit at \
+                         cap {cap}: {:?}",
+                        adm.depths()
+                    ));
+                }
+                ex.release();
+                let mut served = 0;
+                let mut shed = 0;
+                for h in handles {
+                    match h.join().expect("submitter") {
+                        Decision::Served(_) => served += 1,
+                        Decision::Shed(ShedReason::QueueFull) => shed += 1,
+                        other => return Err(format!("unexpected decision {other:?}")),
+                    }
+                }
+                if served != cap || shed != k - cap {
+                    return Err(format!(
+                        "cap {cap}, {k} arrivals: served {served}, shed {shed}"
+                    ));
+                }
+                if adm.depths() != [0, 0, 0, 0] {
+                    return Err(format!("depth leak: {:?}", adm.depths()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Sequential randomized arrivals make the shed decision a pure
+    /// predicate: with the queue empty and lanes free, a request is shed
+    /// iff its own SLO budget is blown — latency traffic at its BS=1
+    /// cost, frequency traffic at the amortized share of a full batch.
+    /// Shed requests are exactly those past the budget, never more.
+    #[test]
+    fn prop_slo_budget_sheds_exactly_the_doomed() {
+        const MAX_BATCH: usize = 4;
+        forall(
+            112,
+            40,
+            |rng| {
+                let exec_ms = 0.5 + rng.next_f64() * 20.0;
+                let n = 5 + rng.below(20) as usize;
+                let seq: Vec<(usize, f64)> = (0..n)
+                    .map(|_| {
+                        // random category + an SLO that straddles the
+                        // shed boundary from both sides
+                        (rng.below(4) as usize, exec_ms * (0.1 + rng.next_f64() * 2.0))
+                    })
+                    .collect();
+                (exec_ms, seq)
+            },
+            |(exec_ms, seq)| {
+                let adm = Admission::new(AdmissionConfig {
+                    queue_cap: 64,
+                    window_ms: 0, // lone leaders must not dawdle
+                    max_batch: MAX_BATCH,
+                    lanes_per_category: 1,
+                    slo_headroom: 1.0,
+                });
+                let ex = ProbeExec::new(*exec_ms, true);
+                for &(cat_idx, slo_ms) in seq {
+                    let category = TaskCategory::ALL[cat_idx];
+                    let est = match category.sensitivity() {
+                        Sensitivity::Latency => *exec_ms,
+                        Sensitivity::Frequency => *exec_ms / MAX_BATCH as f64,
+                    };
+                    let should_shed = est > slo_ms;
+                    let d = adm.submit(category, req(1), slo_ms, &ex);
+                    match (should_shed, d) {
+                        (true, Decision::Shed(ShedReason::SloBudget)) => {}
+                        (false, Decision::Served(_)) => {}
+                        (want, got) => {
+                            return Err(format!(
+                                "cat {cat_idx} est {est} slo {slo_ms}: \
+                                 want shed={want}, got {got:?}"
+                            ));
+                        }
+                    }
+                }
+                if adm.depths() != [0, 0, 0, 0] {
+                    return Err(format!("depth leak: {:?}", adm.depths()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// FIFO within a category's batching window: arrivals sequenced
+    /// through `batched_waiting` land in one batch in exactly arrival
+    /// order, and the batch leader takes exactly `max_batch`.
+    #[test]
+    fn prop_batching_window_preserves_fifo_arrival_order() {
+        forall(
+            113,
+            8,
+            |rng| 2 + rng.below(5) as usize,
+            |&k| {
+                let adm = Arc::new(Admission::new(AdmissionConfig {
+                    queue_cap: 64,
+                    window_ms: 5_000, // the window must close on max_batch
+                    max_batch: k,
+                    lanes_per_category: 1,
+                    slo_headroom: 1.0,
+                }));
+                let ex = Arc::new(ProbeExec::new(0.01, true));
+                let handles: Vec<_> = (0..k)
+                    .map(|i| {
+                        let (adm, ex) = (Arc::clone(&adm), Arc::clone(&ex));
+                        std::thread::spawn(move || {
+                            // deterministic arrival order: wait until
+                            // exactly i earlier entries sit in the window
+                            let deadline = std::time::Instant::now()
+                                + std::time::Duration::from_secs(10);
+                            while adm.batched_waiting(ServiceId(104)) != i {
+                                assert!(
+                                    std::time::Instant::now() < deadline,
+                                    "arrival sequencing stuck at {i}"
+                                );
+                                std::thread::yield_now();
+                            }
+                            adm.submit(
+                                TaskCategory::FrequencySingle,
+                                req(100 + i as u32),
+                                1e12,
+                                &*ex,
+                            )
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    match h.join().expect("submitter") {
+                        Decision::Served(out) if out.batch_size == k => {}
+                        other => return Err(format!("want batch of {k}, got {other:?}")),
+                    }
+                }
+                let batches = ex.batches.lock().unwrap();
+                if batches.len() != 1 {
+                    return Err(format!("want one batch, got {batches:?}"));
+                }
+                let want: Vec<u32> = (0..k as u32).map(|i| 100 + i).collect();
+                if batches[0] != want {
+                    return Err(format!("FIFO violated: {:?} != {want:?}", batches[0]));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Randomized concurrent frequency traffic: the batch leader never
+    /// exceeds `max_batch` per execution, and every arrival is served
+    /// exactly once (widths sum to the arrival count).
+    #[test]
+    fn prop_batch_leader_never_exceeds_max_batch() {
+        forall(
+            114,
+            6,
+            |rng| {
+                let max_batch = 1 + rng.below(4) as usize;
+                let n = 4 + rng.below(16) as usize;
+                let window_ms = rng.below(3);
+                (max_batch, n, window_ms)
+            },
+            |&(max_batch, n, window_ms)| {
+                let adm = Arc::new(Admission::new(AdmissionConfig {
+                    queue_cap: 64,
+                    window_ms,
+                    max_batch,
+                    lanes_per_category: 2,
+                    slo_headroom: 1.0,
+                }));
+                let ex = Arc::new(ProbeExec::new(0.01, true));
+                let barrier = Arc::new(Barrier::new(n));
+                let handles: Vec<_> = (0..n)
+                    .map(|i| {
+                        let (adm, ex, barrier) =
+                            (Arc::clone(&adm), Arc::clone(&ex), Arc::clone(&barrier));
+                        std::thread::spawn(move || {
+                            barrier.wait();
+                            adm.submit(
+                                TaskCategory::FrequencyMulti,
+                                req(i as u32),
+                                1e12,
+                                &*ex,
+                            )
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    if !matches!(h.join().expect("submitter"), Decision::Served(_)) {
+                        return Err("uncontended frequency submit must serve".into());
+                    }
+                }
+                let widths = ex.widths();
+                if widths.iter().any(|&w| w > max_batch) {
+                    return Err(format!("BS cap {max_batch} violated: {widths:?}"));
+                }
+                if widths.iter().sum::<usize>() != n {
+                    return Err(format!(
+                        "{n} arrivals but widths {widths:?} (lost or duplicated)"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
 #[test]
 fn prop_sync_delay_monotone_in_scale() {
     use epara::sync::SyncConfig;
