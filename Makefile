@@ -8,7 +8,8 @@
 #   make check-pjrt  compile-check the feature-gated runtime path
 #   make gateway     run the serving gateway on $(GATEWAY_ADDR)
 #   make loadgen     fire a mixed workload at a running gateway
-#   make soak        512-connection reactor concurrency soak (Linux)
+#   make soak        reactor concurrency soaks: 512-connection single
+#                    shard + 4×512 multi-shard failover (Linux)
 #   make scenarios   run every committed scenario spec (sim backend,
 #                    goodput floors asserted; reports in scenario-reports/)
 #   make artifacts   build the AOT artifacts via the Python pipeline (stub)
@@ -79,10 +80,12 @@ gateway:
 loadgen:
 	$(CARGO) run --release -- loadgen --addr $(GATEWAY_ADDR) --requests 200 --rps 100
 
-# The epoll-reactor concurrency soak (what CI's timeout-guarded step
-# runs): ≥512 simultaneous keep-alive connections, slow-loris clients,
-# bounded-thread and clean-shutdown assertions.  Linux-only; #[ignore]d
-# on the default test path, hence --ignored.
+# The epoll-reactor concurrency soaks (what CI's timeout-guarded step
+# runs): ≥512 simultaneous keep-alive connections + slow-loris clients
+# on one shard, then 4 shards × 512 connections with a mid-run
+# shard-fail/recover cycle; bounded-thread and clean-shutdown assertions
+# throughout.  Linux-only; #[ignore]d on the default test path, hence
+# --ignored.
 soak:
 	$(CARGO) test -p epara --test gateway_concurrency -- --ignored --nocapture
 

@@ -15,16 +15,20 @@
 //!       Execute every golden fixture through PJRT and verify numerics.
 //!   epara report    [--artifacts DIR]
 //!       Print the manifest inventory.
-//!   epara gateway   [--addr HOST:PORT] [--threads N] [--queue-cap N]
-//!                   [--window-ms MS] [--max-batch N] [--lanes N]
-//!                   [--slo-headroom X] [--time-scale X] [--backend replay|pjrt]
-//!                   [--max-conns N] [--idle-timeout-ms MS]
-//!                   [--stall-timeout-ms MS] [--legacy-threads]
+//!   epara gateway   [--addr HOST:PORT] [--shards N] [--threads N]
+//!                   [--queue-cap N] [--window-ms MS] [--max-batch N]
+//!                   [--lanes N] [--slo-headroom X] [--time-scale X]
+//!                   [--backend replay|pjrt] [--max-conns N]
+//!                   [--idle-timeout-ms MS] [--stall-timeout-ms MS]
+//!                   [--legacy-threads]
 //!       Network serving gateway: POST /v1/infer, GET /metrics,
 //!       GET /healthz; category-aware admission + BS batching; epoll
 //!       reactor connection layer on Linux (idle connections cost a
 //!       table entry, not a thread; `--legacy-threads` restores the
-//!       thread-per-connection loop); graceful shutdown on ctrl-c.
+//!       thread-per-connection loop); `--shards N` scales the reactor
+//!       out to N in-process shards behind one accept-dispatch thread
+//!       (per-shard `/metrics` gauges; see DESIGN.md §Sharding);
+//!       graceful shutdown on ctrl-c.
 //!   epara loadgen   [--addr HOST:PORT] [--requests N] [--rps R]
 //!                   [--mix mixed|latency|frequency|prodK] [--closed-loop]
 //!                   [--concurrency N] [--seed S] [--timeout-ms MS]
@@ -253,6 +257,7 @@ fn cmd_gateway(args: &Args) -> anyhow::Result<()> {
         max_connections: args.get("max-conns", 4096usize),
         idle_timeout_ms: args.get("idle-timeout-ms", 30_000u64),
         stall_timeout_ms: args.get("stall-timeout-ms", 1_000u64),
+        shards: args.get("shards", 1usize),
         ..Default::default()
     };
     let time_scale: f64 = args.get("time-scale", 1.0);

@@ -11,12 +11,24 @@
 //! through the shared trace builder, so offered load and category
 //! balance move exactly as in the sim run.
 //!
+//! `shard_fail` / `shard_recover` events act on the gateway's own
+//! connection-layer fabric: the spec's `shards` count sizes
+//! [`GatewayConfig::shards`], and a control thread fires
+//! [`crate::server::ShardControl::fail`]/[`recover`] at the events'
+//! time-scaled wall offsets while the load is running.  A shard kill
+//! drops that shard's open connections, so runs with shard events
+//! tolerate transport errors (the loadgen reconnects and the dispatcher
+//! re-routes); all other specs still require a zero-transport-error run.
+//!
 //! Device events have no gateway analogue (no device lanes on the wire
 //! path) and are ignored here.  Wall-clock runs are *not* bit-exact —
 //! determinism golden pinning applies to the sim backend only; reports
 //! normalize goodput to virtual time so floors stay comparable.
+//!
+//! [`recover`]: crate::server::ShardControl::recover
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::cluster::EdgeCloud;
 use crate::profile::zoo;
@@ -134,6 +146,7 @@ impl ScenarioBackend for GatewayBackend {
         let gw_cfg = GatewayConfig {
             addr: "127.0.0.1:0".into(),
             max_connections: (self.concurrency * 4).max(64),
+            shards: spec.shards,
             ..Default::default()
         };
         let mut gw = Gateway::spawn(gw_cfg, table.clone(), executor)?;
@@ -155,13 +168,58 @@ impl ScenarioBackend for GatewayBackend {
             concurrency: self.concurrency.max(1),
             ..Default::default()
         };
+        // shard fail/recover fire on the wall clock through the fabric's
+        // control handle, at the same time-scaled offsets the loadgen
+        // paces arrivals by (timeline is already time-sorted)
+        let shard_script: Vec<(f64, bool, usize)> = spec
+            .timeline
+            .iter()
+            .filter_map(|ev| match ev.kind {
+                ScenarioEvent::ShardFail { shard } => {
+                    Some((ev.at_ms / ts, false, shard as usize))
+                }
+                ScenarioEvent::ShardRecover { shard } => {
+                    Some((ev.at_ms / ts, true, shard as usize))
+                }
+                _ => None,
+            })
+            .collect();
+        let has_shard_events = !shard_script.is_empty();
+
         // re-anchor the degradation clock to the traffic's own start so
         // spawn/plan-build time does not shift the fault windows
         degraded.arm();
+        let control = gw.shard_control();
+        let t0 = Instant::now();
+        let control_join = has_shard_events.then(|| {
+            std::thread::Builder::new()
+                .name("epara-scenario-shardctl".into())
+                .spawn(move || {
+                    for (wall_ms, up, shard) in shard_script {
+                        let due = Duration::from_secs_f64(wall_ms / 1000.0);
+                        let elapsed = t0.elapsed();
+                        if due > elapsed {
+                            std::thread::sleep(due - elapsed);
+                        }
+                        if up {
+                            control.recover(shard);
+                        } else {
+                            control.fail(shard);
+                        }
+                    }
+                })
+                .expect("spawn scenario shard control")
+        });
         let (lreport, outcomes) = loadgen::run_shots(&lg_cfg, shots.clone());
+        if let Some(j) = control_join {
+            let _ = j.join();
+        }
         gw.shutdown();
+        // a shard kill drops that shard's open connections mid-request —
+        // those surface as client transport errors by design, so only
+        // shard-free runs hold the zero-transport-error invariant
         anyhow::ensure!(
-            lreport.transport_errors == 0,
+            has_shard_events || lreport.transport_errors == 0,
             "scenario gateway run hit {} transport errors",
             lreport.transport_errors
         );
@@ -247,5 +305,26 @@ mod tests {
         // steps exist at every boundary
         let steps = capacity_steps(&s, &cloud);
         assert_eq!(steps.len(), s.boundaries().len());
+    }
+
+    #[test]
+    fn shard_events_leave_executor_capacity_alone() {
+        // shard faults are connection-layer outages: the executor keeps
+        // full capacity and the dispatcher routes around the dark shard
+        let s = spec(
+            r#"{
+          "name": "t",
+          "base": {"workload": {"rps": 10.0, "duration_s": 20.0}},
+          "shards": 2,
+          "timeline": [
+            {"at_ms": 4000, "event": "shard_fail", "shard": 1},
+            {"at_ms": 10000, "event": "shard_recover", "shard": 1}
+          ]
+        }"#,
+        );
+        let cloud = s.base.cloud.clone();
+        for t in [0.0, 5000.0, 12_000.0] {
+            assert!((factor_at(&s, &cloud, t) - 1.0).abs() < 1e-12);
+        }
     }
 }

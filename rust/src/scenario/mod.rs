@@ -5,7 +5,8 @@
 //! a regression-gated surface: a [`spec::ScenarioSpec`] (JSON, seeded,
 //! validated) describes a base run plus a timeline of events —
 //! `server_fail`, `server_recover`, `device_join`/`device_leave`,
-//! `rps_surge`, `latency_skew`, `category_shift` — and a
+//! `rps_surge`, `latency_skew`, `category_shift`,
+//! `shard_fail`/`shard_recover` — and a
 //! [`ScenarioBackend`] executes it end-to-end:
 //!
 //! * [`sim_backend::SimBackend`] — the event-driven simulator in virtual

@@ -33,12 +33,15 @@ pub struct PhaseReport {
     pub slo_violation_rate: f64,
 }
 
-/// Recovery estimate for one `server_fail` event: time until the
-/// goodput rate first returns to ≥ 90% of the pre-fault average.
-/// `None` when the rate never returns — or when there was no measurable
-/// pre-fault rate to recover to (fault at t = 0).
+/// Recovery estimate for one `server_fail` (or, in
+/// `ScenarioReport::shard_recoveries`, one `shard_fail`) event: time
+/// until the goodput rate first returns to ≥ 90% of the pre-fault
+/// average.  `None` when the rate never returns — or when there was no
+/// measurable pre-fault rate to recover to (fault at t = 0).
 #[derive(Clone, Copy, Debug)]
 pub struct Recovery {
+    /// The failed server id — or the failed shard index when this row
+    /// lives in `shard_recoveries`.
     pub server: u32,
     pub fault_at_ms: f64,
     pub recovered_at_ms: Option<f64>,
@@ -61,6 +64,9 @@ pub struct ScenarioReport {
     pub slo_violation_rate: f64,
     pub phases: Vec<PhaseReport>,
     pub recoveries: Vec<Recovery>,
+    /// Recovery rows for `shard_fail` events (`server` holds the shard
+    /// index); empty on specs without shard faults.
+    pub shard_recoveries: Vec<Recovery>,
     /// The sim backend's bit-exact [`crate::metrics::Metrics::fingerprint`]
     /// (None on wall-clock backends).
     pub metrics_fingerprint: Option<String>,
@@ -137,53 +143,75 @@ pub(crate) fn assemble(
         });
     }
 
-    let mut recoveries = Vec::new();
-    for ev in &spec.timeline {
-        let ScenarioEvent::ServerFail { server } = ev.kind else {
-            continue;
-        };
-        let fault_at = ev.at_ms;
-        let recover_at = spec.timeline.iter().find_map(|e2| match e2.kind {
-            ScenarioEvent::ServerRecover { server: s2 }
-                if s2 == server && e2.at_ms >= fault_at =>
-            {
-                Some(e2.at_ms)
-            }
-            _ => None,
-        });
+    // shared rate-return detector: the instant the goodput rate first
+    // climbs back to ≥ 90% of the pre-fault average, searching from the
+    // repair event (or the fault itself when no repair is scripted)
+    let detect = |fault_at: f64, search_from: f64| -> Option<f64> {
         let pre = row_at(fault_at);
         let pre_rate = if fault_at > 0.0 {
             pre.satisfied * 1000.0 / fault_at
         } else {
             0.0
         };
-        let search_from = recover_at.unwrap_or(fault_at);
-        let mut recovered_at = None;
         // no measurable pre-fault rate (fault at t=0 or before any credit
         // was earned): recovery is undetectable, not instantaneous
-        if pre_rate > 0.0 {
-            for w in rows.windows(2) {
-                let (r0, r1) = (&w[0], &w[1]);
-                if r1.at_ms <= search_from + 1e-9 {
-                    continue;
-                }
-                let dt = r1.at_ms - r0.at_ms;
-                if dt <= 1e-9 {
-                    continue;
-                }
-                let rate = (r1.satisfied - r0.satisfied) * 1000.0 / dt;
-                if rate >= 0.9 * pre_rate {
-                    recovered_at = Some(r1.at_ms);
-                    break;
-                }
+        if pre_rate <= 0.0 {
+            return None;
+        }
+        for w in rows.windows(2) {
+            let (r0, r1) = (&w[0], &w[1]);
+            if r1.at_ms <= search_from + 1e-9 {
+                continue;
+            }
+            let dt = r1.at_ms - r0.at_ms;
+            if dt <= 1e-9 {
+                continue;
+            }
+            let rate = (r1.satisfied - r0.satisfied) * 1000.0 / dt;
+            if rate >= 0.9 * pre_rate {
+                return Some(r1.at_ms);
             }
         }
-        recoveries.push(Recovery {
-            server: server.0,
+        None
+    };
+    let row_for = |id: u32, fault_at: f64, recover_at: Option<f64>| -> Recovery {
+        let recovered_at = detect(fault_at, recover_at.unwrap_or(fault_at));
+        Recovery {
+            server: id,
             fault_at_ms: fault_at,
             recovered_at_ms: recovered_at,
             recovery_ms: recovered_at.map(|t| (t - fault_at).max(0.0)),
-        });
+        }
+    };
+
+    let mut recoveries = Vec::new();
+    let mut shard_recoveries = Vec::new();
+    for ev in &spec.timeline {
+        match ev.kind {
+            ScenarioEvent::ServerFail { server } => {
+                let recover_at = spec.timeline.iter().find_map(|e2| match e2.kind {
+                    ScenarioEvent::ServerRecover { server: s2 }
+                        if s2 == server && e2.at_ms >= ev.at_ms =>
+                    {
+                        Some(e2.at_ms)
+                    }
+                    _ => None,
+                });
+                recoveries.push(row_for(server.0, ev.at_ms, recover_at));
+            }
+            ScenarioEvent::ShardFail { shard } => {
+                let recover_at = spec.timeline.iter().find_map(|e2| match e2.kind {
+                    ScenarioEvent::ShardRecover { shard: s2 }
+                        if s2 == shard && e2.at_ms >= ev.at_ms =>
+                    {
+                        Some(e2.at_ms)
+                    }
+                    _ => None,
+                });
+                shard_recoveries.push(row_for(shard, ev.at_ms, recover_at));
+            }
+            _ => {}
+        }
     }
 
     ScenarioReport {
@@ -198,6 +226,7 @@ pub(crate) fn assemble(
         slo_violation_rate: totals.slo_violation_rate,
         phases,
         recoveries,
+        shard_recoveries,
         metrics_fingerprint: totals.metrics_fingerprint,
     }
 }
@@ -234,6 +263,14 @@ impl ScenarioReport {
                 r.recovery_ms.unwrap_or(-1.0).to_bits()
             );
         }
+        for r in &self.shard_recoveries {
+            let _ = write!(
+                out,
+                " srec{}={:016x}",
+                r.server,
+                r.recovery_ms.unwrap_or(-1.0).to_bits()
+            );
+        }
         if let Some(fp) = &self.metrics_fingerprint {
             let _ = write!(out, " metrics[{fp}]");
         }
@@ -258,23 +295,29 @@ impl ScenarioReport {
                 ])
             })
             .collect();
+        let recovery_row = |key: &'static str, r: &Recovery| {
+            Json::obj(vec![
+                (key, Json::num(r.server as f64)),
+                ("fault_at_ms", Json::num(r.fault_at_ms)),
+                (
+                    "recovered_at_ms",
+                    r.recovered_at_ms.map(Json::num).unwrap_or(Json::Null),
+                ),
+                (
+                    "recovery_ms",
+                    r.recovery_ms.map(Json::num).unwrap_or(Json::Null),
+                ),
+            ])
+        };
         let recoveries = self
             .recoveries
             .iter()
-            .map(|r| {
-                Json::obj(vec![
-                    ("server", Json::num(r.server as f64)),
-                    ("fault_at_ms", Json::num(r.fault_at_ms)),
-                    (
-                        "recovered_at_ms",
-                        r.recovered_at_ms.map(Json::num).unwrap_or(Json::Null),
-                    ),
-                    (
-                        "recovery_ms",
-                        r.recovery_ms.map(Json::num).unwrap_or(Json::Null),
-                    ),
-                ])
-            })
+            .map(|r| recovery_row("server", r))
+            .collect();
+        let shard_recoveries = self
+            .shard_recoveries
+            .iter()
+            .map(|r| recovery_row("shard", r))
             .collect();
         Json::obj(vec![
             ("scenario", Json::str(self.scenario.clone())),
@@ -288,6 +331,7 @@ impl ScenarioReport {
             ("slo_violation_rate", Json::num(self.slo_violation_rate)),
             ("phases", Json::Arr(phases)),
             ("recoveries", Json::Arr(recoveries)),
+            ("shard_recoveries", Json::Arr(shard_recoveries)),
             (
                 "metrics_fingerprint",
                 self.metrics_fingerprint
@@ -327,12 +371,17 @@ impl ScenarioReport {
                 p.shed,
             );
         }
-        for r in &self.recoveries {
+        let rows = self
+            .recoveries
+            .iter()
+            .map(|r| ("server", r))
+            .chain(self.shard_recoveries.iter().map(|r| ("shard", r)));
+        for (what, r) in rows {
             match r.recovery_ms {
                 Some(ms) => {
                     let _ = writeln!(
                         out,
-                        "  recovery server{}: fault@{:.1}s recovered in {:.0} ms",
+                        "  recovery {what}{}: fault@{:.1}s recovered in {:.0} ms",
                         r.server,
                         r.fault_at_ms / 1000.0,
                         ms,
@@ -341,7 +390,7 @@ impl ScenarioReport {
                 None => {
                     let _ = writeln!(
                         out,
-                        "  recovery server{}: fault@{:.1}s NOT recovered",
+                        "  recovery {what}{}: fault@{:.1}s NOT recovered",
                         r.server,
                         r.fault_at_ms / 1000.0,
                     );
@@ -433,6 +482,41 @@ mod tests {
         // rate returns in the first 500 ms bucket after the 6 s repair
         assert_eq!(rec.recovered_at_ms, Some(6500.0));
         assert_eq!(rec.recovery_ms, Some(2500.0));
+    }
+
+    #[test]
+    fn shard_recoveries_tracked_separately_and_fingerprinted() {
+        // same shape as the server-fail spec, but the outage is a
+        // gateway connection-layer shard
+        let s = ScenarioSpec::from_json(
+            &parse(
+                r#"{
+          "name": "t",
+          "base": {"workload": {"rps": 10.0, "duration_s": 10.0}},
+          "shards": 2,
+          "timeline": [
+            {"at_ms": 4000, "event": "shard_fail", "shard": 1},
+            {"at_ms": 6000, "event": "shard_recover", "shard": 1}
+          ]
+        }"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let r = assemble(&s, "gateway", &rows(), totals());
+        assert!(r.recoveries.is_empty(), "no server faults in this spec");
+        assert_eq!(r.shard_recoveries.len(), 1);
+        let rec = &r.shard_recoveries[0];
+        assert_eq!(rec.server, 1, "holds the shard index");
+        assert_eq!(rec.fault_at_ms, 4000.0);
+        assert_eq!(rec.recovered_at_ms, Some(6500.0));
+        assert_eq!(rec.recovery_ms, Some(2500.0));
+        assert!(r.fingerprint().contains(" srec1="));
+        let j = parse(&r.to_json().to_string()).unwrap();
+        let sr = j.get("shard_recoveries").unwrap().as_arr().unwrap();
+        assert_eq!(sr.len(), 1);
+        assert_eq!(sr[0].get("shard").unwrap().as_f64().unwrap(), 1.0);
+        assert!(r.human().contains("recovery shard1"));
     }
 
     #[test]

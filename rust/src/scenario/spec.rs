@@ -23,14 +23,19 @@
 //!     {"at_ms": 8000, "event": "category_shift", "mix": "frequency",
 //!      "factor": 1.0, "duration_ms": 4000},
 //!     {"at_ms": 3000, "event": "device_leave", "device": 2},
-//!     {"at_ms": 7000, "event": "device_join", "device": 2}
+//!     {"at_ms": 7000, "event": "device_join", "device": 2},
+//!     {"at_ms": 5000, "event": "shard_fail", "shard": 1},
+//!     {"at_ms": 10000, "event": "shard_recover", "shard": 1}
 //!   ]
 //! }
 //! ```
 //!
 //! `base` is a full [`RunConfig`] (cluster, workload, policy, sync);
-//! timeline events are validated against it (server/device ids in range,
-//! times inside the horizon, positive factors) and sorted by time.
+//! the optional top-level `shards` (default 1) sizes the gateway
+//! backend's connection-layer fabric and bounds `shard` ids in the
+//! timeline.  Timeline events are validated against both (server /
+//! device / shard ids in range, times inside the horizon, positive
+//! factors) and sorted by time.
 //! Event semantics — see DESIGN.md §Scenarios:
 //!
 //! * `server_fail` / `server_recover` — whole-server GPU outage and
@@ -46,6 +51,11 @@
 //! * `category_shift` — additional traffic of a *different* mix at
 //!   `factor × rps` for `duration_ms` (required > 0; the category
 //!   balance moves).
+//! * `shard_fail` / `shard_recover` — kill and revive one gateway
+//!   connection-layer shard (gateway: the accept dispatcher routes
+//!   around it via [`crate::server::ShardControl`]; sim: no connection
+//!   layer exists, so these only checkpoint the metrics at the
+//!   boundary — the floor measures the gateway run).
 
 use anyhow::{anyhow, bail, Result};
 
@@ -64,6 +74,8 @@ pub enum ScenarioEvent {
     RpsSurge { factor: f64, duration_ms: f64 },
     LatencySkew { server: ServerId, factor: f64, duration_ms: f64 },
     CategoryShift { mix: Mix, factor: f64, duration_ms: f64 },
+    ShardFail { shard: u32 },
+    ShardRecover { shard: u32 },
 }
 
 impl ScenarioEvent {
@@ -77,6 +89,8 @@ impl ScenarioEvent {
             ScenarioEvent::RpsSurge { .. } => "rps_surge",
             ScenarioEvent::LatencySkew { .. } => "latency_skew",
             ScenarioEvent::CategoryShift { .. } => "category_shift",
+            ScenarioEvent::ShardFail { .. } => "shard_fail",
+            ScenarioEvent::ShardRecover { .. } => "shard_recover",
         }
     }
 
@@ -121,6 +135,9 @@ pub struct ScenarioSpec {
     pub goodput_floor_rps: Option<f64>,
     /// Periodic sampling cadence for phase/recovery accounting.
     pub sample_interval_ms: f64,
+    /// Gateway connection-layer shard count (default 1; the sim backend
+    /// has no connection layer and ignores it).
+    pub shards: usize,
     /// Events sorted by time.
     pub timeline: Vec<TimelineEvent>,
 }
@@ -150,11 +167,15 @@ impl ScenarioSpec {
             .and_then(Json::as_f64)
             .unwrap_or(500.0)
             .max(1.0);
+        let shards = j.get("shards").and_then(Json::as_usize).unwrap_or(1);
+        if shards == 0 {
+            bail!("'shards' must be >= 1");
+        }
 
         let mut timeline = Vec::new();
         if let Some(arr) = j.get("timeline").and_then(Json::as_arr) {
             for (i, e) in arr.iter().enumerate() {
-                timeline.push(parse_event(e, i, &base)?);
+                timeline.push(parse_event(e, i, &base, shards)?);
             }
         }
         // stable sort: same-instant events keep file order
@@ -166,6 +187,7 @@ impl ScenarioSpec {
             base,
             goodput_floor_rps,
             sample_interval_ms,
+            shards,
             timeline,
         })
     }
@@ -263,6 +285,12 @@ impl ScenarioSpec {
                         ));
                     }
                 }
+                // the sim has no connection-layer shards; checkpoint so
+                // a sample exists at the boundary and the phase slicing
+                // stays aligned with the gateway run
+                ScenarioEvent::ShardFail { .. } | ScenarioEvent::ShardRecover { .. } => {
+                    out.push((ev.at_ms, FaultAction::Checkpoint));
+                }
             }
         }
         out
@@ -296,7 +324,12 @@ impl ScenarioSpec {
     }
 }
 
-fn parse_event(e: &Json, i: usize, base: &RunConfig) -> Result<TimelineEvent> {
+fn parse_event(
+    e: &Json,
+    i: usize,
+    base: &RunConfig,
+    shards: usize,
+) -> Result<TimelineEvent> {
     let dur = base.sim.duration_ms;
     let at_ms = e
         .get("at_ms")
@@ -332,6 +365,19 @@ fn parse_event(e: &Json, i: usize, base: &RunConfig) -> Result<TimelineEvent> {
             bail!("timeline[{i}]: device {d} not present in the cloud");
         }
         Ok(DeviceId(d))
+    };
+    let shard = || -> Result<u32> {
+        let s = e
+            .get("shard")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("timeline[{i}]: '{kind_str}' needs 'shard'"))?;
+        if s >= shards {
+            bail!(
+                "timeline[{i}]: shard {s} out of range (spec declares \
+                 {shards} shard(s))"
+            );
+        }
+        Ok(s as u32)
     };
     let factor = |default: f64| -> Result<f64> {
         let f = e.get("factor").and_then(Json::as_f64).unwrap_or(default);
@@ -381,10 +427,12 @@ fn parse_event(e: &Json, i: usize, base: &RunConfig) -> Result<TimelineEvent> {
                 duration_ms: window()?,
             }
         }
+        "shard_fail" => ScenarioEvent::ShardFail { shard: shard()? },
+        "shard_recover" => ScenarioEvent::ShardRecover { shard: shard()? },
         other => bail!(
             "timeline[{i}]: unknown event '{other}' (known: server_fail, \
              server_recover, device_join, device_leave, rps_surge, \
-             latency_skew, category_shift)"
+             latency_skew, category_shift, shard_fail, shard_recover)"
         ),
     };
     Ok(TimelineEvent { at_ms, kind })
@@ -485,6 +533,40 @@ mod tests {
     }
 
     #[test]
+    fn shard_events_parse_validate_and_checkpoint_the_sim() {
+        let s = spec(
+            r#"{
+          "name": "t",
+          "base": {"workload": {"rps": 10.0, "duration_s": 10.0}},
+          "shards": 2,
+          "timeline": [
+            {"at_ms": 2000, "event": "shard_fail", "shard": 1},
+            {"at_ms": 6000, "event": "shard_recover", "shard": 1}
+          ]
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(s.shards, 2);
+        assert_eq!(
+            s.timeline[0].kind,
+            ScenarioEvent::ShardFail { shard: 1 }
+        );
+        assert_eq!(s.timeline[0].kind.name(), "shard_fail");
+        assert_eq!(s.timeline[1].kind.name(), "shard_recover");
+        assert_eq!(s.timeline[0].kind.window_ms(), None);
+        // boundaries land on both events; phases label them
+        assert_eq!(s.labels_at(2000.0), "shard_fail");
+        // the sim backend gets checkpoints, never a state mutation
+        let script = s.sim_script();
+        assert_eq!(script.len(), 2);
+        assert!(script
+            .iter()
+            .all(|(_, a)| *a == FaultAction::Checkpoint));
+        // and no trace overlay is generated
+        assert!(s.overlays().is_empty());
+    }
+
+    #[test]
     fn rejects_bad_specs() {
         // unknown event
         assert!(spec(
@@ -531,5 +613,19 @@ mod tests {
         .is_err());
         // missing name
         assert!(spec(r#"{"base":{}}"#).is_err());
+        // shard id out of range (default shards = 1)
+        assert!(spec(
+            r#"{"name":"t","base":{},
+                "timeline":[{"at_ms":1,"event":"shard_fail","shard":1}]}"#
+        )
+        .is_err());
+        // shard_fail without a shard id
+        assert!(spec(
+            r#"{"name":"t","base":{},"shards":2,
+                "timeline":[{"at_ms":1,"event":"shard_fail"}]}"#
+        )
+        .is_err());
+        // zero shards
+        assert!(spec(r#"{"name":"t","base":{},"shards":0}"#).is_err());
     }
 }

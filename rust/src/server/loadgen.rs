@@ -221,11 +221,17 @@ impl Client {
         );
         // One write for head + body: a client thread descheduled between
         // two sends would look like a mid-request stall to the server's
-        // slow-loris timer and draw a spurious 408.
+        // slow-loris timer and draw a spurious 408.  The category header
+        // is advisory: a sharded gateway's accept dispatcher peeks it to
+        // give same-category connections shard affinity.
+        let label = super::telemetry::cat_label(
+            crate::core::TaskCategory::ALL[shot.category.min(3)],
+        );
         let mut wire = format!(
             "POST /v1/infer HTTP/1.1\r\nhost: {}\r\ncontent-type: application/json\r\n\
-             content-length: {}\r\nconnection: keep-alive\r\n\r\n",
+             x-epara-category: {}\r\ncontent-length: {}\r\nconnection: keep-alive\r\n\r\n",
             self.addr,
+            label,
             body.len()
         )
         .into_bytes();

@@ -22,13 +22,20 @@
 //! * [`executor`] — backend trait + profile-replay / coordinator backends;
 //! * [`router`] — `/v1/infer`, `/metrics`, `/healthz` dispatch;
 //! * [`telemetry`] — Prometheus text exposition + §3.3 goodput credit;
-//! * [`loadgen`] — socket-driving load generator (open / closed loop).
+//! * [`loadgen`] — socket-driving load generator (open / closed loop);
+//! * `shard` — multi-gateway shard fabric: per-shard state, the shared
+//!   membership ring, and the deterministic connection router.
 //!
 //! Two connection layers share everything above the socket: the epoll
 //! reactor (Linux default — see `reactor.rs` and DESIGN.md §Reactor) and
 //! the legacy thread-per-connection loop (`legacy_threads: true`, or any
 //! non-Linux host), kept as a one-PR escape hatch.  Wire behavior is
 //! identical: same framing bytes, same status codes, same telemetry.
+//!
+//! `GatewayConfig { shards: N }` scales the reactor layer out: N shards
+//! — each a full reactor + pool + admission column — behind one
+//! listener and an accept-dispatch thread (DESIGN.md §Sharding).  The
+//! default of 1 preserves the single-reactor path bit-for-bit.
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -47,10 +54,12 @@ pub mod pool;
 #[cfg(target_os = "linux")]
 mod reactor;
 pub mod router;
+mod shard;
 pub mod telemetry;
 
 pub use admission::{Admission, AdmissionConfig};
 pub use executor::{DegradedExecutor, Executor, ProfileReplayExecutor};
+pub use shard::ShardControl;
 pub use telemetry::Telemetry;
 
 /// Legacy path only: read timeout on accepted sockets, i.e. how often a
@@ -82,6 +91,12 @@ pub struct GatewayConfig {
     /// response) for this long.  Reactor-path timer; the legacy path
     /// keeps its fixed `IDLE_POLL` read-timeout bound.
     pub stall_timeout_ms: u64,
+    /// Gateway shards in this process: each shard runs its own epoll
+    /// reactor, connection table, worker pool, and admission instance
+    /// behind one listener (accept-dispatch routing, DESIGN.md
+    /// §Sharding).  1 preserves the single-reactor path bit-for-bit;
+    /// >1 needs the Linux reactor layer and is clamped to 1 otherwise.
+    pub shards: usize,
 }
 
 impl Default for GatewayConfig {
@@ -95,20 +110,24 @@ impl Default for GatewayConfig {
             max_connections: 4096,
             idle_timeout_ms: 30_000,
             stall_timeout_ms: 1_000,
+            shards: 1,
         }
     }
 }
 
-/// State shared by every connection worker.
+/// State shared by every connection worker of ONE shard.  The profile
+/// table, executor, and telemetry registry are process-wide (request
+/// counters aggregate across shards for free); admission queues and the
+/// connection gauge are per-shard, reached through [`shard::ShardState`].
 pub(crate) struct Shared {
     pub table: ProfileTable,
-    pub admission: Admission,
     pub executor: Arc<dyn Executor>,
-    pub telemetry: Telemetry,
+    pub telemetry: Arc<Telemetry>,
     pub gpu_vram_mb: f64,
-    /// Open client connections (both connection layers keep it current;
-    /// exported as `epara_gateway_open_connections`).
-    pub connections: AtomicUsize,
+    /// This connection layer's own shard (admission + gauges).
+    pub shard: Arc<shard::ShardState>,
+    /// Every shard in the process (metrics aggregation, routing views).
+    pub fabric: Arc<shard::Fabric>,
 }
 
 /// Process-wide SIGINT/SIGTERM latch (signal handlers can only touch
@@ -144,19 +163,25 @@ pub fn install_signal_handlers() {
 #[cfg(not(unix))]
 pub fn install_signal_handlers() {}
 
-/// A running gateway: owns the accept thread, which owns the worker pool.
+/// A running gateway: owns the accept/dispatch thread and every shard
+/// thread (each of which owns its worker pool).
 pub struct Gateway {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    join: Option<thread::JoinHandle<()>>,
+    /// Join order IS shutdown order: the accept/dispatch thread first
+    /// (no connection can be born after it exits and the listener
+    /// drops), then each shard reactor's drain.
+    joins: Vec<thread::JoinHandle<()>>,
     /// The connection layer actually in force (init fallback included).
     layer: &'static str,
+    fabric: Arc<shard::Fabric>,
 }
 
 impl Gateway {
-    /// Bind, spawn the gateway thread (epoll reactor on Linux, the
+    /// Bind, spawn the gateway thread(s) (epoll reactor on Linux, the
     /// legacy accept loop + thread-per-connection pool otherwise or with
-    /// `legacy_threads`), and return.
+    /// `legacy_threads`; `shards > 1` spawns one reactor per shard plus
+    /// the accept-dispatch thread), and return.
     pub fn spawn(
         cfg: GatewayConfig,
         table: ProfileTable,
@@ -167,15 +192,33 @@ impl Gateway {
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
 
+        let mut shards = cfg.shards.max(1);
+        if shards > 1 && (cfg.legacy_threads || !cfg!(target_os = "linux")) {
+            crate::log_at!(
+                crate::util::LogLevel::Warn,
+                "gateway: {shards} shards need the Linux epoll reactor; running 1 shard"
+            );
+            shards = 1;
+        }
+        let fabric = Arc::new(shard::Fabric::new(shards, cfg.admission));
+        let telemetry = Arc::new(Telemetry::new());
+        let stop = Arc::new(AtomicBool::new(false));
+
+        #[cfg(target_os = "linux")]
+        if shards > 1 {
+            return Gateway::spawn_sharded(
+                &cfg, table, executor, listener, addr, fabric, telemetry, stop,
+            );
+        }
+
         let shared = Arc::new(Shared {
             table,
-            admission: Admission::new(cfg.admission),
             executor,
-            telemetry: Telemetry::new(),
+            telemetry,
             gpu_vram_mb: cfg.gpu_vram_mb,
-            connections: AtomicUsize::new(0),
+            shard: fabric.shard(0),
+            fabric: Arc::clone(&fabric),
         });
-        let stop = Arc::new(AtomicBool::new(false));
         let thread_stop = Arc::clone(&stop);
         let threads = cfg.threads;
         // Legacy idle eviction derives from the same knob as the
@@ -236,7 +279,72 @@ impl Gateway {
             .name("epara-gateway".into())
             .spawn(move || accept_loop(listener, shared, thread_stop, threads, idle_polls))?;
 
-        Ok(Gateway { addr, stop, join: Some(join), layer })
+        Ok(Gateway { addr, stop, joins: vec![join], layer, fabric })
+    }
+
+    /// Multi-shard spawn: N sharded reactors (no listener of their own)
+    /// fed by one accept-dispatch thread.  No legacy fallback — a shard
+    /// that cannot build its reactor fails the spawn, after stopping the
+    /// shards already running.
+    #[cfg(target_os = "linux")]
+    #[allow(clippy::too_many_arguments)] // internal: called from spawn only
+    fn spawn_sharded(
+        cfg: &GatewayConfig,
+        table: ProfileTable,
+        executor: Arc<dyn Executor>,
+        listener: TcpListener,
+        addr: SocketAddr,
+        fabric: Arc<shard::Fabric>,
+        telemetry: Arc<Telemetry>,
+        stop: Arc<AtomicBool>,
+    ) -> crate::Result<Gateway> {
+        let n = fabric.shard_count();
+        // Each shard gets an equal slice of the process fd budget; the
+        // thread count scales as shards × (pool + reactor) + dispatcher.
+        let per_shard_conns = (cfg.max_connections / n).clamp(1, u32::MAX as usize >> 1);
+        let mut intakes = Vec::with_capacity(n);
+        let mut joins: Vec<thread::JoinHandle<()>> = Vec::with_capacity(n + 1);
+        for i in 0..n {
+            let shared = Arc::new(Shared {
+                table: table.clone(),
+                executor: Arc::clone(&executor),
+                telemetry: Arc::clone(&telemetry),
+                gpu_vram_mb: cfg.gpu_vram_mb,
+                shard: fabric.shard(i),
+                fabric: Arc::clone(&fabric),
+            });
+            let rcfg = reactor::ReactorConfig {
+                threads: cfg.threads,
+                max_connections: per_shard_conns,
+                pending_cap: cfg.threads.max(1) * 4 + cfg.admission.queue_cap * 4,
+                idle_timeout: Duration::from_millis(cfg.idle_timeout_ms.max(1)),
+                stall_timeout: Duration::from_millis(cfg.stall_timeout_ms.max(1)),
+            };
+            let built = reactor::Reactor::new_sharded(shared, Arc::clone(&stop), rcfg);
+            let (reactor, intake) = match built {
+                Ok(v) => v,
+                Err(e) => {
+                    stop.store(true, Ordering::SeqCst);
+                    for j in joins {
+                        let _ = j.join();
+                    }
+                    return Err(anyhow::anyhow!("gateway shard {i}: reactor init failed: {e}"));
+                }
+            };
+            intakes.push(intake);
+            joins.push(
+                thread::Builder::new()
+                    .name(format!("epara-gw-shard{i}"))
+                    .spawn(move || reactor.run())?,
+            );
+        }
+        let d_fabric = Arc::clone(&fabric);
+        let d_stop = Arc::clone(&stop);
+        let dispatcher = thread::Builder::new()
+            .name("epara-gw-accept".into())
+            .spawn(move || dispatch_loop(listener, d_fabric, intakes, d_stop))?;
+        joins.insert(0, dispatcher);
+        Ok(Gateway { addr, stop, joins, layer: "epoll-reactor-shards", fabric })
     }
 
     /// The bound address (resolves port 0).
@@ -244,25 +352,52 @@ impl Gateway {
         self.addr
     }
 
-    /// The connection layer in force: `"epoll-reactor"` or
+    /// The connection layer in force: `"epoll-reactor"`,
+    /// `"epoll-reactor-shards"` (shards > 1), or
     /// `"thread-per-connection"` (legacy flag, non-Linux host, or
     /// reactor init fallback).
     pub fn connection_layer(&self) -> &'static str {
         self.layer
     }
 
-    /// Signal shutdown and join the accept thread (which drains and joins
-    /// every connection worker).  Idempotent.
+    /// Number of gateway shards in this process (1 unless spawned with
+    /// `GatewayConfig { shards: N > 1 }` on the reactor layer).
+    pub fn shards(&self) -> usize {
+        self.fabric.shard_count()
+    }
+
+    /// Mark shard `i` failed: the dispatcher routes around it and its
+    /// reactor sheds every connection it owns within one tick.  Sibling
+    /// shards keep serving.  Returns false for an out-of-range index.
+    pub fn fail_shard(&self, i: usize) -> bool {
+        self.fabric.fail(i)
+    }
+
+    /// Bring a failed shard back: the membership ring repairs and the
+    /// dispatcher resumes routing new connections to it.
+    pub fn recover_shard(&self, i: usize) -> bool {
+        self.fabric.recover(i)
+    }
+
+    /// Cheap cloneable handle for failing/recovering shards from another
+    /// thread (scenario control loops) while the gateway serves.
+    pub fn shard_control(&self) -> ShardControl {
+        ShardControl { fabric: Arc::clone(&self.fabric) }
+    }
+
+    /// Signal shutdown and join every gateway thread, accept/dispatch
+    /// thread first (so no connection is born mid-drain), then each
+    /// shard's reactor drain (which joins its worker pool).  Idempotent.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(j) = self.join.take() {
+        for j in self.joins.drain(..) {
             let _ = j.join();
         }
     }
 
     /// Block until the gateway exits on its own (SIGINT/SIGTERM latch).
     pub fn wait(mut self) {
-        if let Some(j) = self.join.take() {
+        for j in self.joins.drain(..) {
             let _ = j.join();
         }
     }
@@ -318,6 +453,84 @@ fn accept_loop(
     pool.join();
 }
 
+/// Accept-dispatch loop (shard mode): ONE thread owns the listener and
+/// routes each accepted connection to a shard — category-aware when the
+/// client's first bytes already arrived, least-loaded otherwise.
+/// Chosen over SO_REUSEPORT so routing can see category and load; the
+/// tradeoff is documented in DESIGN.md §Sharding.
+#[cfg(target_os = "linux")]
+fn dispatch_loop(
+    listener: TcpListener,
+    fabric: Arc<shard::Fabric>,
+    intakes: Vec<Arc<reactor::Intake>>,
+    stop: Arc<AtomicBool>,
+) {
+    use shard::RouteDecision;
+    /// Membership-ring gossip cadence (dispatcher heartbeat).
+    const RING_BEAT: Duration = Duration::from_millis(250);
+    let mut router = shard::ShardRouter::default();
+    // At most one connection waits here under backpressure; while it
+    // waits the listener is not drained, so the OS backlog holds the
+    // rest — the same stance as the single-shard accept gate.
+    let mut held: Option<(TcpStream, Option<usize>)> = None;
+    let mut last_beat = std::time::Instant::now();
+    loop {
+        if stop.load(Ordering::SeqCst) || signal_received() {
+            break;
+        }
+        if last_beat.elapsed() >= RING_BEAT {
+            fabric.advance_ring();
+            last_beat = std::time::Instant::now();
+        }
+        let (stream, hint) = match held.take() {
+            Some(pending) => pending,
+            None => match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let hint = peek_category(&stream);
+                    (stream, hint)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    thread::sleep(Duration::from_millis(2));
+                    continue;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    crate::log_at!(crate::util::LogLevel::Warn, "gateway accept error: {e}");
+                    thread::sleep(Duration::from_millis(20));
+                    continue;
+                }
+            },
+        };
+        match router.route(hint, &fabric.views()) {
+            RouteDecision::Shard(i) => intakes[i].push(stream),
+            RouteDecision::Backpressure => {
+                held = Some((stream, hint));
+                thread::sleep(Duration::from_millis(2));
+            }
+            // every shard down: refuse (close) rather than queue forever
+            RouteDecision::Refuse => drop(stream),
+        }
+    }
+    // The listener drops HERE, before any shard reactor exits: shutdown
+    // joins the dispatcher first, so no connection can be born after the
+    // decision to stop and every accepted one reaches a draining shard.
+}
+
+/// Best-effort category peek: a hint exists only when the client's first
+/// bytes already arrived at accept time (one nonblocking peek, no
+/// waiting — most connections route by load instead).
+#[cfg(target_os = "linux")]
+fn peek_category(stream: &TcpStream) -> Option<usize> {
+    if stream.set_nonblocking(true).is_err() {
+        return None;
+    }
+    let mut buf = [0u8; 512];
+    match stream.peek(&mut buf) {
+        Ok(n) if n > 0 => shard::category_hint(&buf[..n]),
+        _ => None,
+    }
+}
+
 /// Decrements the open-connection gauge on every exit path.
 struct ConnGauge<'a>(&'a AtomicUsize);
 
@@ -329,8 +542,8 @@ impl Drop for ConnGauge<'_> {
 
 /// One connection: parse → route → respond, looping on keep-alive.
 fn handle_connection(stream: TcpStream, shared: &Shared, stop: &AtomicBool, max_idle_polls: u32) {
-    shared.connections.fetch_add(1, Ordering::Relaxed);
-    let _gauge = ConnGauge(&shared.connections);
+    shared.shard.connections.fetch_add(1, Ordering::Relaxed);
+    let _gauge = ConnGauge(&shared.shard.connections);
     // Accepted sockets inherit non-blocking from the listener on some
     // platforms; force blocking + a bounded read timeout.
     if stream.set_nonblocking(false).is_err() {

@@ -230,6 +230,30 @@ impl Drop for WakePipe {
     }
 }
 
+/// Dispatcher → reactor handoff of freshly accepted connections (shard
+/// mode): queue under a mutex plus a wake byte, mirroring
+/// [`CompletionHub`].  The write fd is borrowed from the reactor-owned
+/// [`WakePipe`]; the shutdown order (dispatcher joins before the shard
+/// reactors exit — see `Gateway::shutdown`) keeps it valid for every
+/// push.
+pub(crate) struct Intake {
+    queue: Mutex<Vec<TcpStream>>,
+    wake_fd: c_int,
+}
+
+impl Intake {
+    pub(crate) fn push(&self, stream: TcpStream) {
+        self.queue.lock().unwrap_or_else(|e| e.into_inner()).push(stream);
+        let byte = [1u8];
+        // Full pipe (EAGAIN) is fine: a wake is already pending.
+        let _ = unsafe { sys::write(self.wake_fd, byte.as_ptr() as *const c_void, 1) };
+    }
+
+    fn drain(&self) -> Vec<TcpStream> {
+        std::mem::take(&mut *self.queue.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
 /// A finished request on its way back to the reactor.
 struct Completion {
     token: u64,
@@ -380,6 +404,9 @@ pub(crate) struct Reactor {
     /// backoff); cleared once the deadline passes.
     accept_mute_until: Option<Instant>,
     stopping: bool,
+    /// Shard mode: connections arrive here from the accept-dispatch
+    /// thread instead of a listener.
+    intake: Option<Arc<Intake>>,
 }
 
 impl Reactor {
@@ -421,7 +448,39 @@ impl Reactor {
             accepting: true,
             accept_mute_until: None,
             stopping: false,
+            intake: None,
         })
+    }
+
+    /// Shard-mode constructor: no listener — connections arrive through
+    /// the returned [`Intake`] from the accept-dispatch thread.  There
+    /// is no legacy fallback for a shard (the caller fails spawn
+    /// instead), so init errors surface as plain `io::Error`.
+    pub(crate) fn new_sharded(
+        shared: Arc<Shared>,
+        stop: Arc<AtomicBool>,
+        cfg: ReactorConfig,
+    ) -> std::io::Result<(Reactor, Arc<Intake>)> {
+        let epoll = Epoll::new()?;
+        let wake = WakePipe::new()?;
+        epoll.ctl(sys::EPOLL_CTL_ADD, wake.read_fd, sys::EPOLLIN, WAKE_TOKEN)?;
+        let hub = Arc::new(CompletionHub { queue: Mutex::new(Vec::new()), wake_fd: wake.write_fd });
+        let intake = Arc::new(Intake { queue: Mutex::new(Vec::new()), wake_fd: wake.write_fd });
+        let reactor = Reactor {
+            epoll,
+            wake,
+            hub,
+            listener: None,
+            conns: Slab::default(),
+            shared,
+            stop,
+            cfg,
+            accepting: false,
+            accept_mute_until: None,
+            stopping: false,
+            intake: Some(Arc::clone(&intake)),
+        };
+        Ok((reactor, intake))
     }
 
     /// Event loop; returns after a graceful drain once shutdown latches.
@@ -441,12 +500,54 @@ impl Reactor {
                     t => self.conn_event(t, mask, &pool),
                 }
             }
+            self.drain_intake();
             self.process_completions(&pool);
             self.expire_timers(&pool);
+            self.shard_tick(&pool);
             self.update_accept_gate(&pool);
         }
         self.drain_shutdown(&pool);
         pool.join();
+    }
+
+    /// Shard mode: move dispatcher-handed connections into the table.
+    /// A downed shard (or a stopping reactor) drops them instead — the
+    /// peer sees a clean close and the dispatcher's routing view stops
+    /// sending more within one tick.
+    fn drain_intake(&mut self) {
+        let streams = match &self.intake {
+            Some(intake) => intake.drain(),
+            None => return,
+        };
+        if streams.is_empty() {
+            return;
+        }
+        let down = self.shared.shard.down.load(Ordering::SeqCst);
+        for stream in streams {
+            if down || self.stopping {
+                drop(stream);
+            } else {
+                self.register_conn(stream);
+            }
+        }
+    }
+
+    /// Per-tick shard-fabric duties (no-ops while healthy at shards=1):
+    /// publish this shard's saturation for the dispatcher's routing
+    /// view, and shed every owned connection while the shard is failed.
+    fn shard_tick(&mut self, pool: &ThreadPool) {
+        if self.shared.shard.down.load(Ordering::SeqCst) {
+            for idx in 0..self.conns.slots.len() {
+                self.close_conn(idx);
+            }
+        }
+        let saturated = should_pause_accepts(
+            self.conns.live,
+            self.cfg.max_connections,
+            pool.pending(),
+            self.cfg.pending_cap,
+        );
+        self.shared.shard.saturated.store(saturated, Ordering::Relaxed);
     }
 
     /// Accept until `EAGAIN` or the overload gate closes.
@@ -505,7 +606,7 @@ impl Reactor {
             self.conns.remove(idx);
             return;
         }
-        self.shared.connections.fetch_add(1, Ordering::Relaxed);
+        self.shared.shard.connections.fetch_add(1, Ordering::Relaxed);
     }
 
     fn conn_event(&mut self, token: u64, mask: u32, pool: &ThreadPool) {
@@ -765,7 +866,7 @@ impl Reactor {
     fn close_conn(&mut self, idx: usize) {
         if let Some(conn) = self.conns.remove(idx) {
             self.epoll.del(conn.stream.as_raw_fd());
-            self.shared.connections.fetch_sub(1, Ordering::Relaxed);
+            self.shared.shard.connections.fetch_sub(1, Ordering::Relaxed);
             // dropping the stream closes the fd
         }
     }
@@ -831,12 +932,15 @@ impl Reactor {
             self.accept_mute_until = None;
         }
         let Some(listener) = &self.listener else { return };
-        let want = !should_pause_accepts(
-            self.conns.live,
-            self.cfg.max_connections,
-            pool.pending(),
-            self.cfg.pending_cap,
-        );
+        // A failed single-shard gateway mutes its own listener too, so
+        // fail/recover semantics are uniform across shard counts.
+        let want = !self.shared.shard.down.load(Ordering::SeqCst)
+            && !should_pause_accepts(
+                self.conns.live,
+                self.cfg.max_connections,
+                pool.pending(),
+                self.cfg.pending_cap,
+            );
         if want == self.accepting {
             return;
         }
@@ -1026,6 +1130,67 @@ mod tests {
             http::read_response(&mut reader),
             Err(http::HttpError::ConnectionClosed)
         ));
+        gw.shutdown();
+    }
+
+    /// One `connection: close` exchange against the gateway; write
+    /// errors are folded into the read result (a refused connection may
+    /// EPIPE the request before the EOF is observed).
+    fn exchange(addr: std::net::SocketAddr, path: &str) -> Option<(u16, Vec<u8>)> {
+        let stream = TcpStream::connect(addr).ok()?;
+        stream.set_read_timeout(Some(Duration::from_secs(10))).ok()?;
+        let wire = format!("GET {path} HTTP/1.1\r\nhost: x\r\nconnection: close\r\n\r\n");
+        let _ = (&stream).write_all(wire.as_bytes());
+        let mut reader = BufReader::new(stream);
+        http::read_response(&mut reader).ok()
+    }
+
+    #[test]
+    fn sharded_gateway_serves_and_survives_shard_failure() {
+        let mut gw = spawn_gateway(ephemeral(GatewayConfig {
+            shards: 2,
+            ..Default::default()
+        }));
+        assert_eq!(gw.connection_layer(), "epoll-reactor-shards");
+        assert_eq!(gw.shards(), 2);
+        let addr = gw.local_addr();
+
+        for i in 0..8 {
+            let (status, _) = exchange(addr, "/healthz").expect("healthy fabric");
+            assert_eq!(status, 200, "request {i}");
+        }
+        // whichever shard serves the scrape, gauges cover the fabric
+        let (status, body) = exchange(addr, "/metrics").expect("metrics");
+        assert_eq!(status, 200);
+        let text = String::from_utf8_lossy(&body);
+        assert!(text.contains("epara_gateway_open_connections{shard=\"0\"}"));
+        assert!(text.contains("epara_gateway_open_connections{shard=\"1\"}"));
+        assert!(text.contains("epara_gateway_shards 2"));
+
+        // fail BOTH shards: new connections are refused cleanly
+        assert!(gw.fail_shard(0));
+        assert!(gw.fail_shard(1));
+        std::thread::sleep(Duration::from_millis(150)); // > one reactor tick
+        assert!(
+            exchange(addr, "/healthz").is_none(),
+            "a fully-failed fabric must refuse new connections"
+        );
+
+        // recover one shard: service resumes on the surviving column
+        assert!(gw.recover_shard(0));
+        let mut served = false;
+        for _ in 0..100 {
+            if matches!(exchange(addr, "/healthz"), Some((200, _))) {
+                served = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(served, "a recovered shard must serve new connections");
+        let (_, body) = exchange(addr, "/metrics").expect("metrics after recovery");
+        let text = String::from_utf8_lossy(&body);
+        assert!(text.contains("epara_gateway_shard_up{shard=\"0\"} 1"));
+        assert!(text.contains("epara_gateway_shard_up{shard=\"1\"} 0"));
         gw.shutdown();
     }
 

@@ -85,6 +85,7 @@ fn handle_infer(shared: &Shared, req: &HttpRequest) -> HttpResponse {
     // just the execute() call, or goodput inflates under load.
     let t0 = Instant::now();
     match shared
+        .shard
         .admission
         .submit(category, exec_req, slo_ms, &*shared.executor)
     {
@@ -116,14 +117,15 @@ fn handle_infer(shared: &Shared, req: &HttpRequest) -> HttpResponse {
 pub(super) fn handle(shared: &Shared, req: &HttpRequest) -> HttpResponse {
     match (req.method.as_str(), req.path()) {
         ("POST", "/v1/infer") => handle_infer(shared, req),
+        // Aggregated across the whole fabric no matter which shard
+        // serves the scrape: queue depths sum over every shard's
+        // admission instance, connections render per-shard + total.
         ("GET", "/metrics") => HttpResponse::text(
             200,
             shared.telemetry.render_prometheus(
-                shared.admission.depths(),
+                shared.fabric.depths_sum(),
                 shared.executor.name(),
-                shared
-                    .connections
-                    .load(std::sync::atomic::Ordering::Relaxed),
+                &shared.fabric.conn_stats(),
             ),
         ),
         ("GET", "/healthz") => HttpResponse::text(200, "ok\n"),

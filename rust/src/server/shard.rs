@@ -1,0 +1,407 @@
+//! Multi-gateway shard fabric: process-internal scale-out of the
+//! connection layer (ROADMAP "multi-gateway sharding").
+//!
+//! A **shard** is one complete serving column: an epoll reactor with its
+//! own connection table, its own worker pool, and its own [`Admission`]
+//! instance.  `GatewayConfig { shards: N }` runs N of them in one
+//! process behind a single listener; an accept-dispatch thread routes
+//! each accepted connection to a shard (category-aware when the client's
+//! first bytes already arrived, least-loaded otherwise — see
+//! [`ShardRouter`] and DESIGN.md §Sharding for the tradeoff against
+//! SO_REUSEPORT).
+//!
+//! Shards share state through the [`Fabric`]: per-shard atomics
+//! (connection gauge, down/saturated flags) are the dispatcher's
+//! fast-path routing view, and the existing `sync/` ring is the
+//! authoritative membership record — `fail`/`recover` update both, the
+//! dispatcher heartbeats the ring, and `/metrics` reads shard liveness
+//! from the ring so the exposition reflects what placement would see.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::core::ServerId;
+use crate::sync::{SyncConfig, SyncNet};
+
+use super::admission::{Admission, AdmissionConfig};
+
+/// Category-affinity slack: a hinted shard is honored while its load is
+/// within this many connections of the least-loaded available shard, so
+/// affinity cannot starve balancing under skewed category mixes.
+const AFFINITY_SLACK: usize = 8;
+
+/// One shard's slice of the gateway: its admission instance plus the
+/// atomics its reactor publishes and the dispatcher reads.
+pub(crate) struct ShardState {
+    /// This shard's own category queues / batching / shedding tier.
+    pub admission: Admission,
+    /// Open client connections owned by this shard's reactor
+    /// (exported as `epara_gateway_open_connections{shard=...}`).
+    pub connections: AtomicUsize,
+    /// Failed: the dispatcher routes around it and its reactor sheds
+    /// every connection it owns until recovery.
+    pub down: AtomicBool,
+    /// Published by the reactor each tick from its accept-gate signal;
+    /// the dispatcher backpressures instead of routing here.
+    pub saturated: AtomicBool,
+}
+
+/// Everything the shards share: the per-shard states and the sync ring
+/// that records membership (§3.4 applied to in-process shards).
+pub(crate) struct Fabric {
+    shards: Vec<Arc<ShardState>>,
+    ring: Mutex<SyncNet>,
+    started: Instant,
+}
+
+impl Fabric {
+    pub fn new(n: usize, admission: AdmissionConfig) -> Fabric {
+        let shards = (0..n)
+            .map(|_| {
+                Arc::new(ShardState {
+                    admission: Admission::new(admission),
+                    connections: AtomicUsize::new(0),
+                    down: AtomicBool::new(false),
+                    saturated: AtomicBool::new(false),
+                })
+            })
+            .collect();
+        Fabric {
+            shards,
+            ring: Mutex::new(SyncNet::new(n, SyncConfig::default())),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, i: usize) -> Arc<ShardState> {
+        Arc::clone(&self.shards[i])
+    }
+
+    fn now_ms(&self) -> f64 {
+        self.started.elapsed().as_secs_f64() * 1000.0
+    }
+
+    fn ring(&self) -> std::sync::MutexGuard<'_, SyncNet> {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// One gossip round over the live membership (dispatcher heartbeat).
+    pub fn advance_ring(&self) {
+        let now = self.now_ms();
+        self.ring().advance(now);
+    }
+
+    /// Fail a shard: down flag for the routing fast path, ring mark for
+    /// the membership record.  Returns false for an out-of-range index.
+    pub fn fail(&self, i: usize) -> bool {
+        let Some(s) = self.shards.get(i) else { return false };
+        s.down.store(true, Ordering::SeqCst);
+        self.ring().mark_down(ServerId(i as u32));
+        true
+    }
+
+    /// Recover a failed shard (ring repair + routing re-enabled).
+    pub fn recover(&self, i: usize) -> bool {
+        let Some(s) = self.shards.get(i) else { return false };
+        s.down.store(false, Ordering::SeqCst);
+        let now = self.now_ms();
+        self.ring().repair(ServerId(i as u32), now);
+        true
+    }
+
+    /// Routing snapshot for [`ShardRouter::route`].
+    pub fn views(&self) -> Vec<ShardView> {
+        self.shards
+            .iter()
+            .map(|s| ShardView {
+                load: s.connections.load(Ordering::Relaxed),
+                down: s.down.load(Ordering::SeqCst),
+                saturated: s.saturated.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// `/metrics` aggregation input: per-shard (open connections, up).
+    /// Liveness is read from the ring, not the fast-path flag, so the
+    /// exposition reflects the authoritative membership record.
+    pub fn conn_stats(&self) -> Vec<(usize, bool)> {
+        let ring = self.ring();
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                (s.connections.load(Ordering::Relaxed), !ring.is_down(ServerId(i as u32)))
+            })
+            .collect()
+    }
+
+    /// Queue depths summed across every shard's admission instance.
+    pub fn depths_sum(&self) -> [usize; 4] {
+        let mut total = [0usize; 4];
+        for s in &self.shards {
+            let d = s.admission.depths();
+            for (t, v) in total.iter_mut().zip(d) {
+                *t += v;
+            }
+        }
+        total
+    }
+}
+
+/// Cheap cloneable handle for failing/recovering shards from outside the
+/// gateway (scenario control threads drive `shard_fail` through it).
+#[derive(Clone)]
+pub struct ShardControl {
+    pub(crate) fabric: Arc<Fabric>,
+}
+
+impl ShardControl {
+    /// Mark a shard failed; see [`super::Gateway::fail_shard`].
+    pub fn fail(&self, shard: usize) -> bool {
+        self.fabric.fail(shard)
+    }
+
+    /// Recover a failed shard; see [`super::Gateway::recover_shard`].
+    pub fn recover(&self, shard: usize) -> bool {
+        self.fabric.recover(shard)
+    }
+}
+
+/// Where one accepted connection should go.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum RouteDecision {
+    /// Hand the connection to this shard's intake.
+    Shard(usize),
+    /// Every live shard is saturated: hold the connection and retry
+    /// (the OS backlog absorbs the rest, like the single-shard gate).
+    Backpressure,
+    /// No live shard at all: drop the connection.
+    Refuse,
+}
+
+/// One shard as the router sees it (a point-in-time copy, so a routing
+/// decision is a pure function of its inputs and unit-testable).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct ShardView {
+    pub load: usize,
+    pub down: bool,
+    pub saturated: bool,
+}
+
+impl ShardView {
+    fn available(&self) -> bool {
+        !self.down && !self.saturated
+    }
+}
+
+/// Deterministic connection router: category affinity within a load
+/// slack, least-loaded otherwise, rotating-cursor tie-break so equal
+/// loads spread round-robin instead of piling onto shard 0.
+#[derive(Default)]
+pub(crate) struct ShardRouter {
+    cursor: usize,
+}
+
+impl ShardRouter {
+    pub fn route(&mut self, hint: Option<usize>, shards: &[ShardView]) -> RouteDecision {
+        let n = shards.len();
+        if n == 0 || shards.iter().all(|s| s.down) {
+            return RouteDecision::Refuse;
+        }
+        let Some(min_load) =
+            shards.iter().filter(|s| s.available()).map(|s| s.load).min()
+        else {
+            return RouteDecision::Backpressure;
+        };
+        // Category affinity: same category → same shard (its admission
+        // queues batch same-service traffic), unless that shard is
+        // already loaded past the balancing slack.
+        if let Some(h) = hint {
+            let a = h % n;
+            if shards[a].available() && shards[a].load <= min_load + AFFINITY_SLACK {
+                return RouteDecision::Shard(a);
+            }
+        }
+        for off in 0..n {
+            let i = (self.cursor + off) % n;
+            if shards[i].available() && shards[i].load == min_load {
+                self.cursor = (i + 1) % n;
+                return RouteDecision::Shard(i);
+            }
+        }
+        // unreachable: min_load came from an available shard
+        RouteDecision::Backpressure
+    }
+}
+
+/// Best-effort category hint from a connection's first bytes: the
+/// loadgen (and any cooperating client) sends `x-epara-category` so the
+/// dispatcher can route without parsing the full request.  Returns the
+/// category index (0..4).  Absent/unparseable → None (route by load).
+pub(crate) fn category_hint(prefix: &[u8]) -> Option<usize> {
+    for line in prefix.split(|&b| b == b'\n') {
+        let line = line.strip_suffix(b"\r").unwrap_or(line);
+        if line.is_empty() {
+            return None; // end of head: no hint header present
+        }
+        let Some(colon) = line.iter().position(|&b| b == b':') else {
+            continue; // request line
+        };
+        let (name, rest) = line.split_at(colon);
+        if !name.eq_ignore_ascii_case(b"x-epara-category") {
+            continue;
+        }
+        let value = rest[1..].trim_ascii().to_ascii_lowercase();
+        return match value.as_slice() {
+            b"0" | b"latency_single" => Some(0),
+            b"1" | b"latency_multi" => Some(1),
+            b"2" | b"frequency_single" => Some(2),
+            b"3" | b"frequency_multi" => Some(3),
+            _ => None,
+        };
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(load: usize) -> ShardView {
+        ShardView { load, down: false, saturated: false }
+    }
+
+    #[test]
+    fn routing_is_deterministic_for_a_fixed_sequence() {
+        // Two routers fed the same (hint, views) sequence must agree on
+        // every decision — the dispatch order is a pure function.
+        let sequence: Vec<(Option<usize>, Vec<ShardView>)> = (0..32)
+            .map(|i| {
+                let hint = if i % 3 == 0 { Some(i % 4) } else { None };
+                let views = vec![view(i % 5), view((i + 2) % 5), view(1), view(0)];
+                (hint, views)
+            })
+            .collect();
+        let mut a = ShardRouter::default();
+        let mut b = ShardRouter::default();
+        for (hint, views) in &sequence {
+            assert_eq!(a.route(*hint, views), b.route(*hint, views));
+        }
+    }
+
+    #[test]
+    fn equal_loads_spread_round_robin() {
+        let mut r = ShardRouter::default();
+        let views = vec![view(0); 4];
+        let picks: Vec<_> = (0..8).map(|_| r.route(None, &views)).collect();
+        let expect: Vec<_> =
+            (0..8).map(|i| RouteDecision::Shard(i % 4)).collect();
+        assert_eq!(picks, expect, "cursor must rotate over equal loads");
+    }
+
+    #[test]
+    fn least_loaded_wins_without_a_hint() {
+        let mut r = ShardRouter::default();
+        let views = vec![view(9), view(3), view(7), view(5)];
+        assert_eq!(r.route(None, &views), RouteDecision::Shard(1));
+    }
+
+    #[test]
+    fn category_affinity_holds_within_slack_only() {
+        let mut r = ShardRouter::default();
+        // hinted shard within AFFINITY_SLACK of the minimum: honored
+        let views = vec![view(0), view(AFFINITY_SLACK), view(0), view(0)];
+        assert_eq!(r.route(Some(1), &views), RouteDecision::Shard(1));
+        // past the slack: balancing wins over affinity
+        let views = vec![view(0), view(AFFINITY_SLACK + 1), view(0), view(0)];
+        assert_eq!(r.route(Some(1), &views), RouteDecision::Shard(0));
+        // hint wraps modulo the shard count
+        let views = vec![view(0), view(0)];
+        assert_eq!(r.route(Some(3), &views), RouteDecision::Shard(1));
+    }
+
+    #[test]
+    fn failed_shard_rerouted_without_poisoning_siblings() {
+        let mut r = ShardRouter::default();
+        let mut views = vec![view(0); 4];
+        views[2].down = true;
+        // a hint pointing at the failed shard lands on a live sibling
+        for _ in 0..8 {
+            match r.route(Some(2), &views) {
+                RouteDecision::Shard(i) => assert_ne!(i, 2, "routed to a down shard"),
+                d => panic!("expected a live shard, got {d:?}"),
+            }
+        }
+        // siblings keep receiving traffic in rotation
+        let picks: Vec<_> = (0..6).map(|_| r.route(None, &views)).collect();
+        for d in &picks {
+            assert!(matches!(d, RouteDecision::Shard(i) if *i != 2), "{d:?}");
+        }
+    }
+
+    #[test]
+    fn saturation_backpressures_and_total_loss_refuses() {
+        let mut r = ShardRouter::default();
+        let mut views = vec![view(0); 2];
+        views[0].saturated = true;
+        views[1].saturated = true;
+        assert_eq!(r.route(None, &views), RouteDecision::Backpressure);
+        views[0].down = true;
+        views[1].down = true;
+        assert_eq!(r.route(None, &views), RouteDecision::Refuse);
+        assert_eq!(r.route(None, &[]), RouteDecision::Refuse);
+    }
+
+    #[test]
+    fn category_hint_parses_labels_digits_and_noise() {
+        let wire = b"POST /v1/infer HTTP/1.1\r\nhost: x\r\n\
+                     x-epara-category: latency_multi\r\n\r\n";
+        assert_eq!(category_hint(wire), Some(1));
+        assert_eq!(category_hint(b"GET / HTTP/1.1\r\nX-EPARA-CATEGORY: 3\r\n\r\n"), Some(3));
+        assert_eq!(
+            category_hint(b"GET / HTTP/1.1\r\nx-epara-category: FREQUENCY_SINGLE\r\n\r\n"),
+            Some(2)
+        );
+        // header absent from a complete head
+        assert_eq!(category_hint(b"GET / HTTP/1.1\r\nhost: x\r\n\r\n"), None);
+        // unknown value, empty input, partial head without the header
+        assert_eq!(category_hint(b"GET / HTTP/1.1\r\nx-epara-category: nope\r\n\r\n"), None);
+        assert_eq!(category_hint(b""), None);
+        assert_eq!(category_hint(b"POST /v1/infer HTTP/1.1\r\nhost"), None);
+    }
+
+    #[test]
+    fn fabric_fail_recover_tracks_flags_and_ring() {
+        let f = Fabric::new(4, AdmissionConfig::default());
+        assert_eq!(f.shard_count(), 4);
+        assert!(f.views().iter().all(|v| !v.down));
+        assert!(f.conn_stats().iter().all(|&(_, up)| up));
+
+        assert!(f.fail(2));
+        assert!(f.views()[2].down, "fast-path flag must follow fail()");
+        assert!(!f.conn_stats()[2].1, "ring must record the failure");
+        assert!(!f.fail(9), "out-of-range index is refused");
+
+        f.advance_ring(); // a down shard stays down across gossip rounds
+        assert!(!f.conn_stats()[2].1);
+
+        assert!(f.recover(2));
+        assert!(!f.views()[2].down);
+        assert!(f.conn_stats()[2].1);
+    }
+
+    #[test]
+    fn fabric_aggregates_connections_and_depths() {
+        let f = Fabric::new(3, AdmissionConfig::default());
+        f.shard(0).connections.store(5, Ordering::Relaxed);
+        f.shard(2).connections.store(7, Ordering::Relaxed);
+        let stats = f.conn_stats();
+        assert_eq!(stats.iter().map(|&(n, _)| n).sum::<usize>(), 12);
+        assert_eq!(f.depths_sum(), [0, 0, 0, 0], "idle admissions sum to zero");
+    }
+}

@@ -146,12 +146,15 @@ impl Telemetry {
         credit / secs
     }
 
-    /// Render the Prometheus text exposition.
+    /// Render the Prometheus text exposition.  `shards` carries one
+    /// `(open_connections, up)` entry per gateway shard: a single entry
+    /// renders the classic single-reactor exposition byte-for-byte,
+    /// more than one adds per-shard gauges next to the process totals.
     pub fn render_prometheus(
         &self,
         queue_depths: [usize; 4],
         executor: &str,
-        open_connections: usize,
+        shards: &[(usize, bool)],
     ) -> String {
         let mut out = String::with_capacity(2048);
         let inner = self.lock();
@@ -219,7 +222,36 @@ impl Telemetry {
              (reactor table occupancy).\n\
              # TYPE epara_gateway_open_connections gauge\n",
         );
-        out.push_str(&format!("epara_gateway_open_connections {open_connections}\n"));
+        if shards.len() > 1 {
+            for (i, (open, _)) in shards.iter().enumerate() {
+                out.push_str(&format!(
+                    "epara_gateway_open_connections{{shard=\"{i}\"}} {open}\n"
+                ));
+            }
+        }
+        // the un-labelled line is the process total either way, so
+        // single-metric scrapers keep working across shard counts
+        let open_total: usize = shards.iter().map(|(open, _)| open).sum();
+        out.push_str(&format!("epara_gateway_open_connections {open_total}\n"));
+
+        if shards.len() > 1 {
+            out.push_str(
+                "# HELP epara_gateway_shard_up Shard liveness per the membership ring \
+                 (1 = routable).\n\
+                 # TYPE epara_gateway_shard_up gauge\n",
+            );
+            for (i, (_, up)) in shards.iter().enumerate() {
+                out.push_str(&format!(
+                    "epara_gateway_shard_up{{shard=\"{i}\"}} {}\n",
+                    u8::from(*up)
+                ));
+            }
+            out.push_str(
+                "# HELP epara_gateway_shards Gateway shards in this process.\n\
+                 # TYPE epara_gateway_shards gauge\n",
+            );
+            out.push_str(&format!("epara_gateway_shards {}\n", shards.len()));
+        }
 
         let credit: f64 = inner.cats.iter().map(|c| c.credit).sum();
         drop(inner);
@@ -273,7 +305,7 @@ mod tests {
         t.record_shed(TaskCategory::FrequencyMulti);
         t.record_failed(TaskCategory::LatencyMulti);
         t.record_http_error();
-        let text = t.render_prometheus([1, 0, 0, 2], "profile-replay", 7);
+        let text = t.render_prometheus([1, 0, 0, 2], "profile-replay", &[(7, true)]);
         assert!(text.contains(
             "epara_gateway_requests_total{category=\"latency_single\",outcome=\"ok\"} 2"
         ));
@@ -289,6 +321,27 @@ mod tests {
         assert!(text.contains("epara_gateway_open_connections 7"));
         assert!(text.contains("quantile=\"0.95\""));
         assert!(text.contains("epara_gateway_info{executor=\"profile-replay\"} 1"));
+        // single-shard exposition carries NO shard-labelled series — the
+        // `--shards 1` output stays bit-identical to the pre-shard era
+        assert!(!text.contains("shard="));
+        assert!(!text.contains("epara_gateway_shards "));
+    }
+
+    #[test]
+    fn prometheus_multi_shard_gauges_sum_to_process_totals() {
+        let t = Telemetry::new();
+        t.record_ok(TaskCategory::LatencySingle, 10.0, 100.0);
+        let shards = [(3, true), (0, false), (4, true)];
+        let text = t.render_prometheus([0, 0, 0, 0], "profile-replay", &shards);
+        assert!(text.contains("epara_gateway_open_connections{shard=\"0\"} 3"));
+        assert!(text.contains("epara_gateway_open_connections{shard=\"1\"} 0"));
+        assert!(text.contains("epara_gateway_open_connections{shard=\"2\"} 4"));
+        // un-labelled process total = sum of the per-shard gauges
+        assert!(text.contains("epara_gateway_open_connections 7\n"));
+        assert!(text.contains("epara_gateway_shard_up{shard=\"0\"} 1"));
+        assert!(text.contains("epara_gateway_shard_up{shard=\"1\"} 0"));
+        assert!(text.contains("epara_gateway_shard_up{shard=\"2\"} 1"));
+        assert!(text.contains("epara_gateway_shards 3"));
     }
 
     #[test]

@@ -35,3 +35,15 @@ pub fn value(metrics: &str, name: &str) -> u64 {
         .and_then(|v| v.parse().ok())
         .unwrap_or(0)
 }
+
+/// One shard-labelled gauge value, e.g.
+/// `epara_gateway_open_connections{shard="2"} 17`.  `None` when the
+/// exposition carries no line for that shard.
+pub fn shard_value(metrics: &str, name: &str, shard: usize) -> Option<u64> {
+    let prefix = format!("{name}{{shard=\"{shard}\"}} ");
+    metrics
+        .lines()
+        .find(|l| l.starts_with(&prefix))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+}

@@ -13,16 +13,23 @@
 //! (c) clean shutdown: the reactor closes every held socket and joins
 //!     every thread.
 //!
+//! A second soak (`shard_fabric_soaks_4x_connections...`) scales the
+//! same criteria to the multi-shard fabric: 4 shards × 512 connections,
+//! per-shard `/metrics` gauges summing to the process total, a mid-run
+//! `shard_fail`/recover cycle that must not poison sibling shards, and
+//! a thread budget of shards × (pool + reactor) + dispatcher.
+//!
 //! Linux-only by construction (epoll + `/proc/self/task`); elsewhere the
-//! test is a no-op.  Everything lives in ONE #[test] so the thread-count
-//! checks are not confounded by sibling tests in the same process.
+//! tests are no-ops.  The soaks serialize on [`SOAK_GATE`] so the
+//! thread-count checks are never confounded by a sibling soak running
+//! in the same process.
 
 #![cfg(target_os = "linux")]
 
 use std::io::{BufReader, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use epara::profile::zoo::{self, ids};
@@ -30,7 +37,11 @@ use epara::server::http;
 use epara::server::{AdmissionConfig, Gateway, GatewayConfig, ProfileReplayExecutor};
 
 mod common;
-use common::{counter_sum, value as metric_value};
+use common::{counter_sum, shard_value, value as metric_value};
+
+/// Serializes the soaks: thread-count assertions are process-global, so
+/// two soaks running concurrently would read each other's threads.
+static SOAK_GATE: Mutex<()> = Mutex::new(());
 
 /// Pretend-faster GPU so modeled latencies fit the CI budget.
 const TIME_SCALE: f64 = 400.0;
@@ -138,6 +149,7 @@ fn get(addr: &str, path: &str) -> (u16, String) {
 #[test]
 #[ignore = "heavy soak: run explicitly with -- --ignored (CI guarded step / make soak)"]
 fn reactor_soaks_512_connections_with_bounded_threads() {
+    let _gate = SOAK_GATE.lock().unwrap_or_else(|e| e.into_inner());
     // -- fd budget: 512 client + 512 server sockets + slack
     let limit = rlimit::raise_nofile(2048);
     if limit < 1300 {
@@ -338,6 +350,242 @@ fn reactor_soaks_512_connections_with_bounded_threads() {
     drop(gw); // Drop after shutdown must be a no-op
 
     // threads are reaped (give /proc a moment)
+    let mut after = thread_count();
+    for _ in 0..50 {
+        if after <= threads_before {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(40));
+        after = thread_count();
+    }
+    assert!(
+        after <= threads_before,
+        "thread leak: {threads_before} tasks before, {after} after shutdown"
+    );
+}
+
+/// Shards in the fabric soak.
+const SHARDS: usize = 4;
+/// Worker-pool threads per shard (smaller pools; the fabric's aggregate
+/// is SHARDS × this).
+const SHARD_POOL: usize = 8;
+/// Total simultaneous connections: 4× the single-shard acceptance floor.
+const N_TOTAL: usize = SHARDS * N_CONNS;
+
+// Same guarded-step rationale as the single-shard soak, at 4× the
+// concurrency: ~4200 fds and a bigger wall-clock bill.
+#[test]
+#[ignore = "heavy soak: run explicitly with -- --ignored (CI guarded step / make soak)"]
+fn shard_fabric_soaks_4x_connections_with_failover() {
+    let _gate = SOAK_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    // -- fd budget: 2048 client + 2048 server sockets + slack
+    let limit = rlimit::raise_nofile(8192);
+    if limit < 4500 {
+        eprintln!("skipping shard soak: fd limit {limit} too low and not raisable");
+        return;
+    }
+
+    let threads_before = thread_count();
+    assert!(threads_before > 0, "/proc/self/task must be readable");
+
+    let table = zoo::paper_zoo();
+    let executor = Arc::new(ProfileReplayExecutor::new(table.clone(), TIME_SCALE));
+    let cfg = GatewayConfig {
+        addr: "127.0.0.1:0".into(),
+        threads: SHARD_POOL,
+        shards: SHARDS,
+        admission: AdmissionConfig {
+            queue_cap: 4,
+            window_ms: 2,
+            max_batch: 4,
+            lanes_per_category: 1,
+            slo_headroom: 1.0,
+        },
+        max_connections: 8192, // per-shard cap = 8192 / SHARDS
+        idle_timeout_ms: 120_000,
+        stall_timeout_ms: STALL_MS,
+        ..Default::default()
+    };
+    let mut gw = Gateway::spawn(cfg, table, executor).expect("gateway spawn");
+    assert_eq!(gw.connection_layer(), "epoll-reactor-shards");
+    assert_eq!(gw.shards(), SHARDS);
+    let addr = gw.local_addr().to_string();
+
+    let (status, body) = get(&addr, "/healthz");
+    assert_eq!((status, body.as_str()), (200, "ok\n"));
+
+    // -- (b) thread budget: shards × (pool + reactor) + dispatcher + margin
+    let threads_gateway = thread_count();
+    let spawn_budget = threads_before + SHARDS * (SHARD_POOL + 1) + 1 + 3;
+    assert!(
+        threads_gateway <= spawn_budget,
+        "fabric spawned too many threads: {threads_before} -> {threads_gateway} \
+         (budget {spawn_budget})"
+    );
+
+    // -- 4× the single-shard concurrency, still just table entries
+    let mut conns: Vec<Conn> = (0..N_TOTAL).map(|_| Conn::open(&addr)).collect();
+    let t0 = Instant::now();
+    let metrics = loop {
+        let (status, metrics) = get(&addr, "/metrics");
+        assert_eq!(status, 200);
+        if metric_value(&metrics, "epara_gateway_open_connections") > N_TOTAL as u64 {
+            break metrics;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "fabric never registered all {N_TOTAL} connections"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    let threads_idle = thread_count();
+    assert!(
+        threads_idle <= threads_gateway,
+        "open connections must not cost threads: \
+         {threads_gateway} before vs {threads_idle} with {N_TOTAL} conns"
+    );
+
+    // -- per-shard gauges: every shard carries load (least-loaded
+    // dispatch spreads 2048 idle conns) and the labelled lines sum to
+    // the un-labelled process total
+    assert_eq!(metric_value(&metrics, "epara_gateway_shards"), SHARDS as u64);
+    let mut labelled_sum = 0;
+    for s in 0..SHARDS {
+        let open = shard_value(&metrics, "epara_gateway_open_connections", s)
+            .unwrap_or_else(|| panic!("missing shard {s} gauge in:\n{metrics}"));
+        assert!(open > 0, "shard {s} got no connections");
+        assert_eq!(
+            shard_value(&metrics, "epara_gateway_shard_up", s),
+            Some(1),
+            "shard {s} must report up"
+        );
+        labelled_sum += open;
+    }
+    assert_eq!(
+        labelled_sum,
+        metric_value(&metrics, "epara_gateway_open_connections"),
+        "per-shard gauges must sum to the process total"
+    );
+
+    // -- one traffic round over every connection
+    let per_worker = N_TOTAL / N_WORKERS;
+    let ok_total = Arc::new(AtomicUsize::new(0));
+    let shed_total = Arc::new(AtomicUsize::new(0));
+    let other_total = Arc::new(AtomicUsize::new(0));
+    let mut workers = Vec::new();
+    for w in 0..N_WORKERS {
+        let mut chunk: Vec<Conn> = conns.drain(..per_worker).collect();
+        let (ok, shed, other) =
+            (Arc::clone(&ok_total), Arc::clone(&shed_total), Arc::clone(&other_total));
+        workers.push(std::thread::spawn(move || {
+            for (i, conn) in chunk.iter_mut().enumerate() {
+                let service = if (w + i) % 2 == 0 {
+                    ids::RESNET50.0
+                } else {
+                    ids::UNET.0 + ids::VIDEO_OFFSET
+                };
+                match conn.infer(service, 1) {
+                    s if (200..300).contains(&s) => ok.fetch_add(1, Ordering::SeqCst),
+                    429 => shed.fetch_add(1, Ordering::SeqCst),
+                    _ => other.fetch_add(1, Ordering::SeqCst),
+                };
+            }
+            chunk
+        }));
+    }
+    let budget = threads_gateway + N_WORKERS + 4;
+    for _ in 0..10 {
+        std::thread::sleep(Duration::from_millis(20));
+        let now = thread_count();
+        assert!(now <= budget, "thread count {now} exceeded budget {budget} mid-soak");
+    }
+    for h in workers {
+        conns.extend(h.join().expect("driver thread"));
+    }
+    assert_eq!(conns.len(), N_TOTAL, "every connection survived the soak");
+
+    let solo = conns[0].infer(ids::RESNET50.0, 1);
+    assert_eq!(solo, 200, "an idle fabric must serve a single request");
+
+    // -- (a) /metrics process totals equal the client-observed counts
+    let client_ok = ok_total.load(Ordering::SeqCst) + 1;
+    let client_shed = shed_total.load(Ordering::SeqCst);
+    assert_eq!(other_total.load(Ordering::SeqCst), 0);
+    assert_eq!(client_ok + client_shed, N_TOTAL + 1);
+    let (status, metrics) = get(&addr, "/metrics");
+    assert_eq!(status, 200);
+    assert_eq!(counter_sum(&metrics, "ok"), client_ok as u64, "ok counters drifted");
+    assert_eq!(counter_sum(&metrics, "shed"), client_shed as u64, "shed counters drifted");
+    assert_eq!(counter_sum(&metrics, "failed"), 0);
+
+    // -- shard_fail: shard 0 goes dark, drains its connections, and the
+    // siblings keep serving
+    assert!(gw.fail_shard(0));
+    let t0 = Instant::now();
+    loop {
+        let (_, m) = get(&addr, "/metrics");
+        if shard_value(&m, "epara_gateway_open_connections", 0) == Some(0)
+            && shard_value(&m, "epara_gateway_shard_up", 0) == Some(0)
+        {
+            assert!(
+                metric_value(&m, "epara_gateway_open_connections") < N_TOTAL as u64,
+                "failed shard's connections must leave the process total"
+            );
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "failed shard never drained its connections"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let mut survivor = Conn::open(&addr);
+    assert_eq!(
+        survivor.infer(ids::RESNET50.0, 1),
+        200,
+        "sibling shards must keep serving while shard 0 is down"
+    );
+
+    // -- recover: the dispatcher's least-loaded routing sends the next
+    // connections to the (now empty) shard 0
+    assert!(gw.recover_shard(0));
+    let mut refill: Vec<Conn> = Vec::new();
+    let t0 = Instant::now();
+    loop {
+        refill.push(Conn::open(&addr));
+        let (_, m) = get(&addr, "/metrics");
+        if shard_value(&m, "epara_gateway_open_connections", 0).unwrap_or(0) > 0
+            && shard_value(&m, "epara_gateway_shard_up", 0) == Some(1)
+        {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "recovered shard never accepted a new connection"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    for conn in refill.iter_mut() {
+        assert_eq!(conn.infer(ids::RESNET50.0, 1), 200, "post-recovery request failed");
+    }
+
+    // -- (c) clean shutdown across the whole fabric
+    gw.shutdown();
+    assert!(
+        TcpStream::connect(&addr).is_err(),
+        "listener must be closed after shutdown"
+    );
+    assert!(
+        matches!(
+            http::read_response(&mut survivor.reader),
+            Err(http::HttpError::ConnectionClosed)
+        ),
+        "held connections must see EOF after shutdown"
+    );
+    drop(refill);
+    drop(conns);
+    drop(gw);
+
     let mut after = thread_count();
     for _ in 0..50 {
         if after <= threads_before {

@@ -1,7 +1,8 @@
 //! Scenario engine integration: recovery semantics after
 //! `server_fail` + `server_recover`, bit-exact determinism goldens,
-//! committed-spec validation with goodput floors, and a time-scaled
-//! smoke of the gateway backend over real sockets.
+//! committed-spec validation with goodput floors, and time-scaled
+//! smokes of the gateway backend over real sockets (including a
+//! `shard_fail`/`shard_recover` cycle on the multi-shard fabric).
 
 use std::path::PathBuf;
 
@@ -167,4 +168,48 @@ fn gateway_backend_time_scaled_smoke() {
     // phase totals cover the whole run
     let phase_offered: u64 = report.phases.iter().map(|p| p.offered).sum();
     assert_eq!(phase_offered, report.offered);
+}
+
+#[test]
+fn gateway_backend_routes_around_a_failed_shard() {
+    // two connection-layer shards; the scenario control thread kills
+    // shard 1 mid-run and revives it, while the accept dispatcher keeps
+    // traffic flowing through shard 0 (on non-Linux hosts the gateway
+    // clamps to one shard and the control calls no-op — the run must
+    // still complete and earn credit)
+    let spec = spec_from(
+        r#"{
+      "name": "gw_shard_smoke",
+      "description": "shard kill + revive through the live gateway",
+      "base": {
+        "seed": 11,
+        "workload": {"mix": "prod0", "rps": 40.0, "duration_s": 6.0,
+                     "seed": 11}
+      },
+      "sample_interval_ms": 500.0,
+      "shards": 2,
+      "timeline": [
+        {"at_ms": 2000, "event": "shard_fail", "shard": 1},
+        {"at_ms": 4000, "event": "shard_recover", "shard": 1}
+      ]
+    }"#,
+    );
+    let backend = GatewayBackend { time_scale: 100.0, concurrency: 8 };
+    let report = backend.run(&spec).unwrap();
+    assert_eq!(report.backend, "gateway");
+    assert!(report.offered > 0);
+    assert!(
+        report.satisfied > 0.0,
+        "the surviving shard must keep earning credit"
+    );
+    // shard faults are accounted separately from server faults
+    assert!(report.recoveries.is_empty());
+    assert_eq!(report.shard_recoveries.len(), 1);
+    assert_eq!(report.shard_recoveries[0].server, 1);
+    assert_eq!(report.shard_recoveries[0].fault_at_ms, 2000.0);
+    assert!(report.fingerprint().contains("srec1="));
+    // boundaries at 0 / 2000 / 4000 / 6000 → three phases
+    assert_eq!(report.phases.len(), 3);
+    assert_eq!(report.phases[1].label, "shard_fail");
+    assert_eq!(report.phases[2].label, "shard_recover");
 }
