@@ -4,7 +4,8 @@
 //!  * handler decision   — <20 ms at 10k servers (paper §5.3.1; we aim µs);
 //!  * placement solve    — <200 ms at 10k servers (Fig. 17c);
 //!  * simulator          — >= 100k events/s;
-//!  * fluid gain query   — O(1), tens of ns.
+//!  * fluid gain query   — O(1), tens of ns;
+//!  * cache score        — weight-cache admit/warm_frac, sub-µs.
 //!
 //! Usage:
 //!   cargo bench --bench perf_hotpath                      # human report
@@ -85,6 +86,7 @@ struct PerfRecord {
     spf_solve_ms_1k: f64,
     spf_solve_ms_10k: f64,
     fluid_gain_ns: f64,
+    cache_score_ns: f64,
     sim_requests_per_sec: f64,
     events_per_sec: f64,
 }
@@ -95,12 +97,14 @@ impl PerfRecord {
             "{{\n  \"schema\": 1,\n  \"provisional\": false,\n  \"quick\": {},\n  \
              \"handler_decide_ns_10k\": {:.1},\n  \"spf_solve_ms_1k\": {:.3},\n  \
              \"spf_solve_ms_10k\": {:.3},\n  \"fluid_gain_ns\": {:.1},\n  \
+             \"cache_score_ns\": {:.1},\n  \
              \"sim_requests_per_sec\": {:.1},\n  \"events_per_sec\": {:.1}\n}}\n",
             self.quick,
             self.handler_decide_ns_10k,
             self.spf_solve_ms_1k,
             self.spf_solve_ms_10k,
             self.fluid_gain_ns,
+            self.cache_score_ns,
             self.sim_requests_per_sec,
             self.events_per_sec,
         )
@@ -186,6 +190,29 @@ fn main() {
             rec.fluid_gain_ns = ns;
         }
     }
+
+    println!("\nweight-cache scoring (admit + warm_frac, DESIGN.md §Model cache):");
+    // The per-spawn / per-gain cache hot path: half the ops mutate LRU
+    // state (admit), half are the read-only residency probe placement
+    // scoring issues (warm_frac).  Deterministic stream — timestamps are
+    // the loop counter, services rotate through the whole zoo.
+    let zoo_ids: Vec<ServiceId> = table.services().map(|s| s.id).collect();
+    let mut fabric = epara::modelcache::CacheFabric::new(&table, 64, 24_000.0);
+    let cache_reps = if quick { 200_000 } else { 1_000_000 };
+    let mut acc = 0.0;
+    let t0 = Instant::now();
+    for i in 0..cache_reps {
+        let server = ServerId((i % 64) as u32);
+        let svc = zoo_ids[i % zoo_ids.len()];
+        if i % 2 == 0 {
+            acc += fabric.admit(server, svc, i as f64).bytes_loaded_mb;
+        } else {
+            acc += fabric.warm_frac(server, svc);
+        }
+    }
+    let cache_ns = t0.elapsed().as_secs_f64() * 1e9 / cache_reps as f64;
+    println!("  admit/warm_frac mix: {cache_ns:.0} ns/op (acc {acc:.1})");
+    rec.cache_score_ns = cache_ns;
 
     println!("\nsimulator event throughput:");
     let cloud = EdgeCloud::testbed();

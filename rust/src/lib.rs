@@ -14,6 +14,10 @@
 //! * [`placement`] — state-aware submodular service placement
 //!   (§3.3, Algorithms 1–2, the 1/(1+P) bound of Eq. 3 / Appendix A).
 //! * [`sync`] — ring-reduce information synchronization (§3.4).
+//! * [`modelcache`] — per-server weight caches with family-aware partial
+//!   loads: deterministic LRU over backbone/delta byte footprints, so
+//!   recovery and re-placement pay only for bytes not already resident
+//!   (capacity 0 disables it and reproduces flat Fig. 3f loads exactly).
 //! * [`cluster`], [`profile`], [`workload`] — the edge-cloud substrate:
 //!   servers/GPUs/devices/links, offline profiling tables, and the
 //!   Azure-trace-shaped workload generator.
@@ -56,6 +60,7 @@ pub mod coordinator;
 pub mod core;
 pub mod handler;
 pub mod metrics;
+pub mod modelcache;
 pub mod placement;
 pub mod profile;
 #[cfg(feature = "pjrt")]

@@ -20,7 +20,7 @@
 //!                   [--lanes N] [--slo-headroom X] [--time-scale X]
 //!                   [--backend replay|pjrt] [--max-conns N]
 //!                   [--idle-timeout-ms MS] [--stall-timeout-ms MS]
-//!                   [--legacy-threads]
+//!                   [--legacy-threads] [--cache-capacity-mb MB]
 //!       Network serving gateway: POST /v1/infer, GET /metrics,
 //!       GET /healthz; category-aware admission + BS batching; epoll
 //!       reactor connection layer on Linux (idle connections cost a
@@ -28,7 +28,9 @@
 //!       thread-per-connection loop); `--shards N` scales the reactor
 //!       out to N in-process shards behind one accept-dispatch thread
 //!       (per-shard `/metrics` gauges; see DESIGN.md §Sharding);
-//!       graceful shutdown on ctrl-c.
+//!       `--cache-capacity-mb N` turns on the per-shard weight cache
+//!       (`epara_cache_*` series on /metrics); graceful shutdown on
+//!       ctrl-c.
 //!   epara loadgen   [--addr HOST:PORT] [--requests N] [--rps R]
 //!                   [--mix mixed|latency|frequency|prodK] [--closed-loop]
 //!                   [--concurrency N] [--seed S] [--timeout-ms MS]
@@ -258,6 +260,7 @@ fn cmd_gateway(args: &Args) -> anyhow::Result<()> {
         idle_timeout_ms: args.get("idle-timeout-ms", 30_000u64),
         stall_timeout_ms: args.get("stall-timeout-ms", 1_000u64),
         shards: args.get("shards", 1usize),
+        cache_capacity_mb: args.get("cache-capacity-mb", 0.0f64),
         ..Default::default()
     };
     let time_scale: f64 = args.get("time-scale", 1.0);

@@ -38,6 +38,22 @@ pub struct Metrics {
     /// VRAM in use (MB·ms integral) and capacity.
     pub vram_used_mb_ms: f64,
     pub vram_capacity_mb_ms: f64,
+    /// Whether the weight-cache subsystem was enabled for this run.
+    /// Gates the cache section of [`Metrics::fingerprint`] so capacity-0
+    /// runs reproduce the pre-cache fingerprints byte-for-byte.
+    pub cache_enabled: bool,
+    /// Weight-cache admissions by outcome (modelcache subsystem).
+    pub cache_hits: u64,
+    pub cache_partial: u64,
+    pub cache_misses: u64,
+    /// Bytes actually transferred for model loads / saved by residency.
+    pub cache_bytes_loaded_mb: f64,
+    pub cache_bytes_saved_mb: f64,
+    /// Total model-load delay paid across all deployment spawns (ms).
+    /// Accumulated on the cache-disabled path too (flat loads), so
+    /// cache-aware vs cache-blind runs are directly comparable — but it
+    /// is NOT part of the base fingerprint.
+    pub model_load_ms_total: f64,
 }
 
 impl Metrics {
@@ -135,6 +151,21 @@ impl Metrics {
         for (s, v) in per {
             let _ = write!(out, " svc{s}={v:016x}");
         }
+        // Cache section only when the subsystem ran: a disabled cache
+        // must reproduce the historical fingerprint byte-for-byte.
+        if self.cache_enabled {
+            let _ = write!(
+                out,
+                " cache[h={} p={} m={} loaded={:016x} saved={:016x} \
+                 loadms={:016x}]",
+                self.cache_hits,
+                self.cache_partial,
+                self.cache_misses,
+                self.cache_bytes_loaded_mb.to_bits(),
+                self.cache_bytes_saved_mb.to_bits(),
+                self.model_load_ms_total.to_bits(),
+            );
+        }
         out
     }
 
@@ -203,6 +234,23 @@ mod tests {
         c.record(ServiceId(1), &Outcome::Partial { satisfied: 1.0, total: 3 }, 1);
         assert_ne!(a.fingerprint(), c.fingerprint());
         assert!(a.fingerprint().contains("svc1="));
+    }
+
+    #[test]
+    fn cache_section_only_fingerprints_when_enabled() {
+        let mut m = Metrics::new();
+        m.record(ServiceId(0), &Outcome::Completed { latency_ms: 1.0 }, 0);
+        m.cache_hits = 3;
+        m.cache_misses = 1;
+        m.model_load_ms_total = 550.0;
+        // disabled: counters may exist (blind-run bookkeeping) but the
+        // fingerprint must stay byte-identical to a cache-less build
+        let disabled = m.fingerprint();
+        assert!(!disabled.contains("cache["), "{disabled}");
+        m.cache_enabled = true;
+        let enabled = m.fingerprint();
+        assert!(enabled.contains("cache[h=3 p=0 m=1"), "{enabled}");
+        assert!(enabled.starts_with(&disabled));
     }
 
     #[test]

@@ -1,0 +1,238 @@
+//! Deterministic LRU core shared by the weight cache and the Fig. 17b
+//! cache-policy placement baselines.
+//!
+//! One eviction implementation, two consumers:
+//!
+//!   * [`crate::modelcache::WeightCache`] — capacity-bounded byte cache of
+//!     model weights per server (backbones + per-model deltas);
+//!   * [`crate::placement::cache_baselines`] — unbounded ranking-only use
+//!     (touch every request, read back MRU-first order).
+//!
+//! Determinism contract: recency ties are broken by a monotone insertion
+//! sequence, then by key order, so identical touch streams always produce
+//! identical eviction and ranking orders — no HashMap iteration anywhere.
+
+/// One resident entry: a key with a byte footprint and a recency stamp.
+#[derive(Clone, Copy, Debug)]
+struct Entry<K> {
+    key: K,
+    bytes_mb: f64,
+    /// Virtual time of the last touch.
+    last_ms: f64,
+    /// Monotone tie-breaker: later touches get larger sequence numbers.
+    seq: u64,
+}
+
+/// A deterministic LRU over keyed byte footprints.
+///
+/// `capacity_mb <= 0.0` means *unbounded* — the ranking-only mode used by
+/// the placement baselines, where nothing ever evicts.
+#[derive(Clone, Debug)]
+pub struct LruCore<K: Copy + Ord> {
+    capacity_mb: f64,
+    used_mb: f64,
+    seq: u64,
+    entries: Vec<Entry<K>>,
+}
+
+impl<K: Copy + Ord> LruCore<K> {
+    pub fn new(capacity_mb: f64) -> Self {
+        Self { capacity_mb, used_mb: 0.0, seq: 0, entries: Vec::new() }
+    }
+
+    pub fn capacity_mb(&self) -> f64 {
+        self.capacity_mb
+    }
+
+    pub fn used_mb(&self) -> f64 {
+        self.used_mb
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, key: K) -> bool {
+        self.entries.iter().any(|e| e.key == key)
+    }
+
+    fn position(&self, key: K) -> Option<usize> {
+        self.entries.iter().position(|e| e.key == key)
+    }
+
+    /// Refresh `key`'s recency stamp, inserting a zero-byte entry if the
+    /// key is new.  This is the ranking-only entry point: zero-byte
+    /// entries never trigger eviction.
+    pub fn touch_at(&mut self, key: K, at_ms: f64) {
+        self.seq += 1;
+        let seq = self.seq;
+        match self.position(key) {
+            Some(i) => {
+                let e = &mut self.entries[i];
+                // Recency only moves forward: out-of-order touches (e.g.
+                // a request trace replayed per-service) must not demote.
+                if at_ms >= e.last_ms {
+                    e.last_ms = at_ms;
+                    e.seq = seq;
+                }
+            }
+            None => self.entries.push(Entry { key, bytes_mb: 0.0, last_ms: at_ms, seq }),
+        }
+    }
+
+    /// Insert `key` with a byte footprint (or refresh it if resident),
+    /// evicting least-recently-used entries until the footprint fits.
+    /// Returns the evicted `(key, bytes_mb)` pairs, oldest first.
+    ///
+    /// An entry larger than the whole capacity still loads (a server must
+    /// be able to host its assigned model); it simply evicts everything
+    /// else and the cache runs oversubscribed until it is retired.
+    pub fn insert(&mut self, key: K, bytes_mb: f64, at_ms: f64) -> Vec<(K, f64)> {
+        self.seq += 1;
+        let seq = self.seq;
+        if let Some(i) = self.position(key) {
+            let e = &mut self.entries[i];
+            self.used_mb += bytes_mb - e.bytes_mb;
+            e.bytes_mb = bytes_mb;
+            if at_ms >= e.last_ms {
+                e.last_ms = at_ms;
+                e.seq = seq;
+            }
+            return Vec::new();
+        }
+        let mut evicted = Vec::new();
+        if self.capacity_mb > 0.0 {
+            while self.used_mb + bytes_mb > self.capacity_mb && !self.entries.is_empty() {
+                let victim = self.lru_index();
+                let e = self.entries.swap_remove(victim);
+                self.used_mb -= e.bytes_mb;
+                evicted.push((e.key, e.bytes_mb));
+            }
+        }
+        self.used_mb += bytes_mb;
+        self.entries.push(Entry { key, bytes_mb, last_ms: at_ms, seq });
+        evicted
+    }
+
+    /// Remove `key` if resident, returning its byte footprint.
+    pub fn remove(&mut self, key: K) -> Option<f64> {
+        let i = self.position(key)?;
+        let e = self.entries.swap_remove(i);
+        self.used_mb -= e.bytes_mb;
+        Some(e.bytes_mb)
+    }
+
+    /// Drop everything (server failure: VRAM contents are gone).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.used_mb = 0.0;
+    }
+
+    /// Index of the least-recently-used entry: smallest `(last_ms, seq)`,
+    /// key order as the final deterministic tie-break.
+    fn lru_index(&self) -> usize {
+        let mut best = 0usize;
+        for i in 1..self.entries.len() {
+            let (a, b) = (&self.entries[i], &self.entries[best]);
+            let older = a.last_ms < b.last_ms
+                || (a.last_ms == b.last_ms
+                    && (a.seq < b.seq || (a.seq == b.seq && a.key < b.key)));
+            if older {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Keys most-recently-used first (largest `(last_ms, seq)` first, key
+    /// order breaking exact ties) — the Fig. 17b LRU ranking.
+    pub fn ranked(&self) -> Vec<K> {
+        let mut order: Vec<&Entry<K>> = self.entries.iter().collect();
+        order.sort_by(|a, b| {
+            b.last_ms
+                .partial_cmp(&a.last_ms)
+                .unwrap()
+                .then(b.seq.cmp(&a.seq))
+                .then(a.key.cmp(&b.key))
+        });
+        order.iter().map(|e| e.key).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recent_first() {
+        let mut lru = LruCore::new(100.0);
+        lru.insert(1u32, 40.0, 0.0);
+        lru.insert(2u32, 40.0, 1.0);
+        // touching 1 makes 2 the LRU victim
+        lru.touch_at(1, 2.0);
+        let evicted = lru.insert(3u32, 40.0, 3.0);
+        assert_eq!(evicted, vec![(2, 40.0)]);
+        assert!(lru.contains(1) && lru.contains(3) && !lru.contains(2));
+        assert!((lru.used_mb() - 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oversized_entry_still_loads() {
+        let mut lru = LruCore::new(50.0);
+        lru.insert(1u32, 30.0, 0.0);
+        let evicted = lru.insert(2u32, 80.0, 1.0);
+        assert_eq!(evicted, vec![(1, 30.0)]);
+        assert!(lru.contains(2));
+        assert!(lru.used_mb() > lru.capacity_mb()); // oversubscribed, by design
+    }
+
+    #[test]
+    fn unbounded_mode_never_evicts_and_ranks_mru_first() {
+        let mut lru = LruCore::new(0.0);
+        lru.touch_at(10u32, 0.0);
+        lru.touch_at(20u32, 5.0);
+        lru.touch_at(10u32, 9.0);
+        lru.touch_at(30u32, 9.0); // exact-time tie → later seq wins
+        assert_eq!(lru.ranked(), vec![30, 10, 20]);
+        assert_eq!(lru.len(), 3);
+    }
+
+    #[test]
+    fn out_of_order_touch_does_not_demote() {
+        let mut lru = LruCore::new(0.0);
+        lru.touch_at(1u32, 10.0);
+        lru.touch_at(1u32, 3.0); // stale timestamp ignored
+        lru.touch_at(2u32, 5.0);
+        assert_eq!(lru.ranked(), vec![1, 2]);
+    }
+
+    #[test]
+    fn remove_and_clear_restore_capacity() {
+        let mut lru = LruCore::new(100.0);
+        lru.insert(1u32, 60.0, 0.0);
+        assert_eq!(lru.remove(1), Some(60.0));
+        assert_eq!(lru.remove(1), None);
+        lru.insert(2u32, 60.0, 1.0);
+        lru.clear();
+        assert!(lru.is_empty());
+        assert_eq!(lru.used_mb(), 0.0);
+    }
+
+    #[test]
+    fn identical_streams_evict_identically() {
+        let run = || {
+            let mut lru = LruCore::new(120.0);
+            let mut log = Vec::new();
+            for step in 0..50u32 {
+                let key = step % 7;
+                log.extend(lru.insert(key, 25.0, step as f64));
+            }
+            (log, lru.ranked())
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,427 @@
+//! Per-server model weight cache with family-aware partial loads.
+//!
+//! Today every deployment spawn after t=0 — recovery, churn, periodic
+//! re-placement — pays the flat Fig. 3f `model_load_ms`, as if server
+//! GPU memory were amnesiac.  This module gives each server a
+//! deterministic LRU weight cache ([`lru::LruCore`]) and a model-family
+//! graph that splits every model into a **shared backbone** plus a
+//! **per-model delta** (the PartialLoading idea, arxiv 2503.22982):
+//! loading a family sibling onto a server whose cache holds the family
+//! backbone pays only the delta bytes, and re-loading a fully resident
+//! model pays nothing.
+//!
+//! Ownership and invariants (DESIGN.md §Model cache):
+//!
+//!   * the cache is owned by the simulator / gateway, one [`WeightCache`]
+//!     per server, all behind one [`CacheFabric`];
+//!   * effective load delay = `model_load_ms × (bytes still missing /
+//!     total bytes)` — capacity 0 disables the fabric entirely and the
+//!     flat delay is reproduced bit-for-bit;
+//!   * **survival:** weights survive deployment retirement and periodic
+//!     re-placement (that is the whole point: re-adding a recently
+//!     retired model is a hit);
+//!   * **invalidation:** a server failure clears that server's cache
+//!     (VRAM does not survive a crash), so post-recovery loads are cold;
+//!     device churn within a live server leaves the cache intact.
+
+use crate::core::{ServerId, ServiceId};
+use crate::profile::zoo::ids;
+use crate::profile::ProfileTable;
+
+pub mod lru;
+
+pub use lru::LruCore;
+
+/// Cache knobs, carried in `SimConfig` / `RunConfig` (`"cache"` object).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CacheConfig {
+    /// Per-server weight-cache capacity in MB.  `0` (the default)
+    /// disables the subsystem completely — the simulator takes the
+    /// legacy flat-load path, bit-for-bit.
+    pub capacity_mb: f64,
+    /// Weight of the cache-warmth bonus in placement scoring
+    /// (`placement/fluid.rs`); only consulted when the cache is on.
+    pub warmth_weight: f64,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        Self { capacity_mb: 0.0, warmth_weight: 0.05 }
+    }
+}
+
+impl CacheConfig {
+    pub fn enabled(&self) -> bool {
+        self.capacity_mb > 0.0
+    }
+}
+
+/// What one cache admission found and what it cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheKind {
+    /// Everything resident — zero-cost (re)load.
+    Hit,
+    /// Backbone resident, delta missing (or vice versa) — partial load.
+    Partial,
+    /// Nothing resident — full cold load.
+    Miss,
+}
+
+/// Outcome of admitting one model onto one server's cache.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheOutcome {
+    pub kind: CacheKind,
+    /// Fraction of the full `model_load_ms` this load pays, in [0, 1].
+    pub load_frac: f64,
+    /// Bytes actually transferred onto the server.
+    pub bytes_loaded_mb: f64,
+    /// Bytes the cache saved versus a flat cold load.
+    pub bytes_saved_mb: f64,
+}
+
+/// Cacheable unit: a family's shared backbone, or one model's delta.
+///
+/// Backbones and deltas age independently in the LRU, so a busy family
+/// keeps its backbone warm even as individual siblings churn.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CacheKey {
+    Backbone(u32),
+    Delta(ServiceId),
+}
+
+/// Per-service split into family backbone + private delta bytes.
+#[derive(Clone, Copy, Debug)]
+struct Split {
+    service: ServiceId,
+    family: u32,
+    backbone_mb: f64,
+    delta_mb: f64,
+}
+
+/// The family graph: which services share a backbone and how the bytes
+/// split.  Families are derived from the zoo's id conventions:
+///
+///   * frequency variants (`id + VIDEO_OFFSET` / `id + HCI_OFFSET`) are
+///     the *same weights* as their base model (`insert_row` copies
+///     `vram_mb` and `model_load_ms` verbatim), so they join the base's
+///     family with backbone fraction 1.0 — the whole model is shared;
+///   * YOLOv10 / YOLOv11 (and their variants) share a detection
+///     backbone: ~60% of bytes are common, 40% are per-version heads;
+///   * every other model is a singleton family (backbone = all bytes,
+///     but no sibling ever shares it, so the split is inert).
+#[derive(Clone, Debug)]
+pub struct FamilyGraph {
+    splits: Vec<Split>,
+}
+
+/// Fraction of YOLO-family bytes living in the shared backbone.
+const YOLO_BACKBONE_FRAC: f64 = 0.6;
+
+impl FamilyGraph {
+    pub fn from_table(table: &ProfileTable) -> Self {
+        let mut splits: Vec<Split> = table
+            .services()
+            .map(|spec| {
+                let (family, backbone_frac) = Self::family_of(spec.id);
+                let backbone_mb = spec.vram_mb * backbone_frac;
+                Split {
+                    service: spec.id,
+                    family,
+                    backbone_mb,
+                    delta_mb: (spec.vram_mb - backbone_mb).max(0.0),
+                }
+            })
+            .collect();
+        splits.sort_by_key(|s| s.service);
+        Self { splits }
+    }
+
+    /// Family id + backbone fraction for a service.  Frequency variants
+    /// collapse onto their base id so e.g. `YOLOV10 + VIDEO_OFFSET`
+    /// lands in the YOLO family too.
+    fn family_of(id: ServiceId) -> (u32, f64) {
+        let base = id.0 % ids::VIDEO_OFFSET;
+        let is_variant = id.0 >= ids::VIDEO_OFFSET && id.0 < ids::TINY_LLM.0;
+        if base == ids::YOLOV10.0 || base == ids::YOLOV11.0 {
+            // One detection family across both versions and all variants.
+            return (ids::YOLOV10.0, YOLO_BACKBONE_FRAC);
+        }
+        if is_variant {
+            // Same weights as the base model: backbone is everything.
+            return (base, 1.0);
+        }
+        (id.0, 1.0)
+    }
+
+    fn split(&self, service: ServiceId) -> Option<&Split> {
+        self.splits
+            .binary_search_by_key(&service, |s| s.service)
+            .ok()
+            .map(|i| &self.splits[i])
+    }
+
+    /// (family id, backbone MB, delta MB) for a service; unknown services
+    /// (e.g. raw device lanes) fall back to a singleton zero split.
+    pub fn split_of(&self, service: ServiceId) -> (u32, f64, f64) {
+        match self.split(service) {
+            Some(s) => (s.family, s.backbone_mb, s.delta_mb),
+            None => (service.0, 0.0, 0.0),
+        }
+    }
+}
+
+/// One server's weight cache: an LRU over backbone/delta byte footprints.
+#[derive(Clone, Debug)]
+pub struct WeightCache {
+    lru: LruCore<CacheKey>,
+}
+
+impl WeightCache {
+    fn new(capacity_mb: f64) -> Self {
+        Self { lru: LruCore::new(capacity_mb) }
+    }
+
+    pub fn used_mb(&self) -> f64 {
+        self.lru.used_mb()
+    }
+
+    pub fn resident(&self, key: CacheKey) -> bool {
+        self.lru.contains(key)
+    }
+}
+
+/// All servers' caches plus the shared family graph.
+#[derive(Clone, Debug)]
+pub struct CacheFabric {
+    families: FamilyGraph,
+    per_server: Vec<WeightCache>,
+    capacity_mb: f64,
+}
+
+impl CacheFabric {
+    pub fn new(table: &ProfileTable, n_servers: usize, capacity_mb: f64) -> Self {
+        Self {
+            families: FamilyGraph::from_table(table),
+            per_server: (0..n_servers).map(|_| WeightCache::new(capacity_mb)).collect(),
+            capacity_mb,
+        }
+    }
+
+    pub fn families(&self) -> &FamilyGraph {
+        &self.families
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.per_server.len()
+    }
+
+    fn cache_mut(&mut self, server: ServerId) -> Option<&mut WeightCache> {
+        self.per_server.get_mut(server.0 as usize)
+    }
+
+    fn cache(&self, server: ServerId) -> Option<&WeightCache> {
+        self.per_server.get(server.0 as usize)
+    }
+
+    /// Load `service` onto `server` at virtual time `now_ms`: figure out
+    /// which of its backbone/delta pieces are already resident, admit the
+    /// missing ones (evicting LRU victims as needed), and report the
+    /// fraction of the full load this spawn actually pays.
+    pub fn admit(
+        &mut self,
+        server: ServerId,
+        service: ServiceId,
+        now_ms: f64,
+    ) -> CacheOutcome {
+        let (family, backbone_mb, delta_mb) = self.families.split_of(service);
+        let total = backbone_mb + delta_mb;
+        let Some(cache) = self.cache_mut(server) else {
+            // Unknown server (shouldn't happen): behave like a cold load.
+            return CacheOutcome {
+                kind: CacheKind::Miss,
+                load_frac: 1.0,
+                bytes_loaded_mb: total,
+                bytes_saved_mb: 0.0,
+            };
+        };
+        if total <= 0.0 {
+            // Zero-footprint service (device lane): nothing to cache.
+            return CacheOutcome {
+                kind: CacheKind::Hit,
+                load_frac: 0.0,
+                bytes_loaded_mb: 0.0,
+                bytes_saved_mb: 0.0,
+            };
+        }
+        let backbone_key = CacheKey::Backbone(family);
+        let delta_key = CacheKey::Delta(service);
+        let mut missing = 0.0;
+        if backbone_mb > 0.0 {
+            if cache.lru.contains(backbone_key) {
+                cache.lru.touch_at(backbone_key, now_ms);
+            } else {
+                missing += backbone_mb;
+                cache.lru.insert(backbone_key, backbone_mb, now_ms);
+            }
+        }
+        if delta_mb > 0.0 {
+            if cache.lru.contains(delta_key) {
+                cache.lru.touch_at(delta_key, now_ms);
+            } else {
+                missing += delta_mb;
+                cache.lru.insert(delta_key, delta_mb, now_ms);
+            }
+        }
+        let load_frac = (missing / total).clamp(0.0, 1.0);
+        let kind = if missing <= 0.0 {
+            CacheKind::Hit
+        } else if missing < total {
+            CacheKind::Partial
+        } else {
+            CacheKind::Miss
+        };
+        CacheOutcome {
+            kind,
+            load_frac,
+            bytes_loaded_mb: missing,
+            bytes_saved_mb: total - missing,
+        }
+    }
+
+    /// Fraction of `service`'s bytes already resident on `server`,
+    /// in [0, 1] — the placement warmth signal.  Read-only: no touches,
+    /// no admissions, so scoring candidates never perturbs cache state.
+    pub fn warm_frac(&self, server: ServerId, service: ServiceId) -> f64 {
+        let (family, backbone_mb, delta_mb) = self.families.split_of(service);
+        let total = backbone_mb + delta_mb;
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let Some(cache) = self.cache(server) else { return 0.0 };
+        let mut warm = 0.0;
+        if backbone_mb > 0.0 && cache.resident(CacheKey::Backbone(family)) {
+            warm += backbone_mb;
+        }
+        if delta_mb > 0.0 && cache.resident(CacheKey::Delta(service)) {
+            warm += delta_mb;
+        }
+        (warm / total).clamp(0.0, 1.0)
+    }
+
+    /// Server failure: VRAM contents are gone, the cache goes cold.
+    pub fn invalidate(&mut self, server: ServerId) {
+        if let Some(cache) = self.cache_mut(server) {
+            cache.lru.clear();
+        }
+    }
+
+    pub fn capacity_mb(&self) -> f64 {
+        self.capacity_mb
+    }
+
+    pub fn used_mb(&self, server: ServerId) -> f64 {
+        self.cache(server).map_or(0.0, |c| c.used_mb())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::zoo;
+
+    fn fabric(capacity_mb: f64) -> CacheFabric {
+        CacheFabric::new(&zoo::paper_zoo(), 4, capacity_mb)
+    }
+
+    #[test]
+    fn cold_then_warm_then_invalidated() {
+        let mut f = fabric(32_000.0);
+        let s = ServerId(0);
+        let first = f.admit(s, ids::RESNET50, 0.0);
+        assert_eq!(first.kind, CacheKind::Miss);
+        assert!((first.load_frac - 1.0).abs() < 1e-12);
+        let again = f.admit(s, ids::RESNET50, 100.0);
+        assert_eq!(again.kind, CacheKind::Hit);
+        assert_eq!(again.load_frac, 0.0);
+        assert!(again.bytes_saved_mb > 0.0);
+        f.invalidate(s);
+        let after = f.admit(s, ids::RESNET50, 200.0);
+        assert_eq!(after.kind, CacheKind::Miss);
+    }
+
+    #[test]
+    fn family_sibling_pays_only_the_delta() {
+        let mut f = fabric(32_000.0);
+        let s = ServerId(1);
+        f.admit(s, ids::YOLOV10, 0.0);
+        let sibling = f.admit(s, ids::YOLOV11, 10.0);
+        assert_eq!(sibling.kind, CacheKind::Partial);
+        // Backbone (60%) is shared, so only ~40% of bytes load.
+        assert!(
+            (sibling.load_frac - (1.0 - YOLO_BACKBONE_FRAC)).abs() < 1e-9,
+            "load_frac {}",
+            sibling.load_frac
+        );
+        assert!(sibling.bytes_saved_mb > sibling.bytes_loaded_mb);
+    }
+
+    #[test]
+    fn frequency_variant_shares_full_weights_with_base() {
+        let mut f = fabric(32_000.0);
+        let s = ServerId(2);
+        f.admit(s, ids::RESNET50, 0.0);
+        let variant =
+            f.admit(s, ServiceId(ids::RESNET50.0 + ids::VIDEO_OFFSET), 5.0);
+        // Same weights: the variant's backbone (everything) is resident.
+        assert_eq!(variant.kind, CacheKind::Hit);
+        assert_eq!(variant.load_frac, 0.0);
+    }
+
+    #[test]
+    fn eviction_makes_reload_cold_again() {
+        // Capacity fits one large model at a time.
+        let mut f = fabric(4_000.0);
+        let s = ServerId(0);
+        f.admit(s, ids::QWEN_1_5B, 0.0); // 3600 MB
+        let other = f.admit(s, ids::QWEN_1_5B, 1.0);
+        assert_eq!(other.kind, CacheKind::Hit);
+        // A second large model evicts the first...
+        f.admit(s, ServiceId(ids::QWEN_1_5B.0 + ids::HCI_OFFSET), 2.0);
+        // (the HCI variant shares weights, so force a real evictor)
+        f.admit(s, ids::RESNET50, 3.0);
+        f.admit(s, ids::UNET, 4.0);
+        f.admit(s, ids::BERT, 5.0);
+        // ...eventually qwen's backbone ages out of the 4 GB cache.
+        let reload = f.admit(s, ids::QWEN_1_5B, 100.0);
+        assert_eq!(reload.kind, CacheKind::Miss, "expected qwen evicted");
+    }
+
+    #[test]
+    fn warm_frac_tracks_residency_per_server() {
+        let mut f = fabric(32_000.0);
+        f.admit(ServerId(0), ids::YOLOV10, 0.0);
+        assert!((f.warm_frac(ServerId(0), ids::YOLOV10) - 1.0).abs() < 1e-12);
+        // Sibling is backbone-warm only.
+        let frac = f.warm_frac(ServerId(0), ids::YOLOV11);
+        assert!((frac - YOLO_BACKBONE_FRAC).abs() < 1e-9, "frac {frac}");
+        // Other servers stay cold.
+        assert_eq!(f.warm_frac(ServerId(1), ids::YOLOV10), 0.0);
+        // warm_frac is read-only: probing did not admit the sibling.
+        assert_eq!(f.used_mb(ServerId(1)), 0.0);
+    }
+
+    #[test]
+    fn admissions_are_deterministic() {
+        let run = || {
+            let mut f = fabric(8_000.0);
+            let mut log = Vec::new();
+            for step in 0..40u32 {
+                let svc = ServiceId(step % 12);
+                let out = f.admit(ServerId(step % 4), svc, step as f64);
+                log.push((out.kind, out.bytes_loaded_mb.to_bits()));
+            }
+            log
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -10,6 +10,7 @@ use std::collections::HashMap;
 use crate::allocator::Allocation;
 use crate::cluster::EdgeCloud;
 use crate::core::{Request, ServerId, ServiceId};
+use crate::modelcache::LruCore;
 use crate::profile::ProfileTable;
 
 use super::{PhiEval, PlacementItem};
@@ -27,21 +28,26 @@ pub enum CachePolicy {
 }
 
 /// Rank services by the policy over the period's request history.
+///
+/// LRU recency comes from the same deterministic [`LruCore`] the
+/// modelcache weight cache evicts with — one eviction/recency
+/// implementation for both Fig. 17b and the weight cache (and ties on
+/// arrival time break deterministically instead of by hash order).
 pub fn rank_services(policy: CachePolicy, requests: &[Request]) -> Vec<ServiceId> {
+    if policy == CachePolicy::Lru {
+        let mut lru: LruCore<ServiceId> = LruCore::new(0.0); // ranking-only
+        for r in requests {
+            lru.touch_at(r.service, r.arrival_ms);
+        }
+        return lru.ranked();
+    }
     let mut freq: HashMap<ServiceId, u64> = HashMap::new();
-    let mut last: HashMap<ServiceId, f64> = HashMap::new();
     for r in requests {
         *freq.entry(r.service).or_insert(0) += 1;
-        let e = last.entry(r.service).or_insert(r.arrival_ms);
-        if r.arrival_ms > *e {
-            *e = r.arrival_ms;
-        }
     }
     let mut ids: Vec<ServiceId> = freq.keys().cloned().collect();
     match policy {
-        CachePolicy::Lru => {
-            ids.sort_by(|a, b| last[b].partial_cmp(&last[a]).unwrap())
-        }
+        CachePolicy::Lru => unreachable!("handled above"),
         CachePolicy::Lfu => ids.sort_by(|a, b| freq[b].cmp(&freq[a])),
         CachePolicy::Mfu => ids.sort_by(|a, b| freq[a].cmp(&freq[b])),
     }
@@ -131,6 +137,31 @@ mod tests {
         assert_eq!(rank_services(CachePolicy::Lru, &h)[0], ServiceId(2));
         assert_eq!(rank_services(CachePolicy::Lfu, &h)[0], ServiceId(1));
         assert_eq!(rank_services(CachePolicy::Mfu, &h)[0], ServiceId(2));
+    }
+
+    #[test]
+    fn lru_ranking_ties_break_deterministically() {
+        // Same last-arrival instant: the shared LruCore breaks the tie by
+        // touch order (later touch = more recent), not by hash order.
+        let mk = |id, svc, t| Request {
+            id: RequestId(id),
+            service: ServiceId(svc),
+            arrival_ms: t,
+            origin: ServerId(0),
+            frames: 1,
+            path: vec![],
+            offloads: 0,
+        };
+        let h = vec![mk(0, 5, 10.0), mk(1, 4, 10.0)];
+        assert_eq!(
+            rank_services(CachePolicy::Lru, &h),
+            vec![ServiceId(4), ServiceId(5)]
+        );
+        // and identically on every call
+        assert_eq!(
+            rank_services(CachePolicy::Lru, &h),
+            rank_services(CachePolicy::Lru, &h)
+        );
     }
 
     #[test]

@@ -85,6 +85,11 @@ pub struct FluidEval<'a> {
     /// requests", §2.2) find slack capacity.  The sim still replays the
     /// raw trace — headroom only shapes Θ.
     pub demand_headroom: f64,
+    /// Cache-warmth bonus (modelcache subsystem), dense server×service
+    /// resident-byte fractions in [0,1].  `None` (the default) leaves
+    /// `gain` exactly the φ delta — bit-for-bit the historical scoring.
+    warmth: Option<Vec<f64>>,
+    warmth_weight: f64,
 }
 
 impl<'a> FluidEval<'a> {
@@ -179,7 +184,36 @@ impl<'a> FluidEval<'a> {
             offload_eff: 0.9,
             eps_discount: 0.7,
             demand_headroom: headroom,
+            warmth: None,
+            warmth_weight: 0.0,
         }
+    }
+
+    /// Install a cache-warmth preference: `warm(server, service)` returns
+    /// the fraction of the service's weight bytes already resident on the
+    /// server (0 = cold, 1 = fully loaded).  `gain` then adds a **static
+    /// per-item bonus** `weight · rate · warm_frac` for real (non-ε)
+    /// servers, steering re-placement rounds toward servers that avoid
+    /// cold loads when fluid gains tie or nearly tie.
+    ///
+    /// The bonus is deliberately NOT folded into φ or `push`: it is
+    /// constant per item while base gains only shrink as Θ grows, so the
+    /// lazy greedy's stale-gain upper bounds stay valid, and φ remains
+    /// comparable across cache-on/off runs.
+    pub fn set_warmth(
+        &mut self,
+        weight: f64,
+        warm: impl Fn(usize, ServiceId) -> f64,
+    ) {
+        let ns = self.svc.len();
+        let mut w = vec![0.0; self.n * ns];
+        for (li, id) in self.svc_index.iter() {
+            for server in 0..self.n {
+                w[server * ns + li] = warm(server, id).clamp(0.0, 1.0);
+            }
+        }
+        self.warmth = Some(w);
+        self.warmth_weight = weight;
     }
 
     fn contribution(&self, st: &SvcState) -> f64 {
@@ -220,10 +254,11 @@ impl PhiEval for FluidEval<'_> {
     }
 
     fn gain(&mut self, item: PlacementItem) -> f64 {
-        let st = match self.svc_index.get(item.service) {
-            Some(li) if self.svc[li].total_demand > 0.0 => &self.svc[li],
+        let li = match self.svc_index.get(item.service) {
+            Some(li) if self.svc[li].total_demand > 0.0 => li,
             _ => return 0.0, // no demand for this service this period
         };
+        let st = &self.svc[li];
         let eps = item.server == EPSILON_SERVER;
         let r = if eps { st.rate * self.eps_discount } else { st.rate };
         let (new_overlap, new_total) = if eps {
@@ -241,7 +276,20 @@ impl PhiEval for FluidEval<'_> {
             total_demand: st.total_demand,
             ..Default::default()
         };
-        self.contribution(&probe) - st.contribution
+        let base = self.contribution(&probe) - st.contribution;
+        // Cache-warmth preference (see `set_warmth`): static per-item
+        // bonus, so gains stay a valid lazy-greedy priority.
+        if !eps {
+            if let Some(w) = self.warmth.as_ref() {
+                let server = item.server.0 as usize;
+                if server < self.n {
+                    let ns = self.svc.len();
+                    return base
+                        + self.warmth_weight * st.rate * w[server * ns + li];
+                }
+            }
+        }
+        base
     }
 
     fn feasible(&self, item: PlacementItem) -> bool {
@@ -375,6 +423,25 @@ mod tests {
             e.push(item);
             assert!((e.phi() - before - g).abs() < 1e-9, "incremental mismatch");
         }
+    }
+
+    #[test]
+    fn warmth_breaks_ties_toward_warm_servers() {
+        let table = zoo::paper_zoo();
+        let cloud = EdgeCloud::uniform(2, 2, GpuSpec::P100, Link::SWITCH_10G);
+        let allocs = setup(&table, &[ids::RESNET50]);
+        // symmetric demand: both servers tie on fluid gain
+        let reqs = requests_uniform(ids::RESNET50, 50, 2);
+        let mut e =
+            FluidEval::from_requests(&table, &allocs, &cloud, &reqs, 1000.0);
+        let item = |n| PlacementItem { service: ids::RESNET50, server: ServerId(n) };
+        let (c0, c1) = (e.gain(item(0)), e.gain(item(1)));
+        assert!((c0 - c1).abs() < 1e-9, "not symmetric: {c0} vs {c1}");
+        // server 1 holds the weights: its gain rises, server 0's doesn't
+        e.set_warmth(0.05, |server, _| if server == 1 { 1.0 } else { 0.0 });
+        let (g0, g1) = (e.gain(item(0)), e.gain(item(1)));
+        assert!(g1 > g0, "warm server not preferred: {g1} <= {g0}");
+        assert_eq!(g0.to_bits(), c0.to_bits(), "cold gain must be untouched");
     }
 
     #[test]

@@ -245,7 +245,13 @@ impl ScenarioBackend for GatewayBackend {
                 }
                 idx += 1;
             }
-            rows.push(CumRow { at_ms: tick, offered, satisfied, shed });
+            rows.push(CumRow {
+                at_ms: tick,
+                offered,
+                satisfied,
+                shed,
+                ..Default::default()
+            });
         }
 
         let dur_s = spec.duration_ms() / 1000.0;
@@ -261,6 +267,9 @@ impl ScenarioBackend for GatewayBackend {
                 (1.0 - lreport.credit / lreport.sent as f64).max(0.0)
             },
             metrics_fingerprint: None,
+            // the gateway's cache counters live on /metrics
+            // (epara_cache_*), not in the wall-clock scenario report
+            ..Default::default()
         };
         Ok(report::assemble(spec, "gateway", &rows, totals))
     }

@@ -31,6 +31,13 @@ pub struct PhaseReport {
     pub shed: u64,
     pub goodput_rps: f64,
     pub slo_violation_rate: f64,
+    /// Weight-cache admissions inside the phase (modelcache subsystem;
+    /// all zero when the cache is off or the backend doesn't track it).
+    pub cache_hits: u64,
+    pub cache_partial: u64,
+    pub cache_misses: u64,
+    pub cache_bytes_loaded_mb: f64,
+    pub cache_bytes_saved_mb: f64,
 }
 
 /// Recovery estimate for one `server_fail` (or, in
@@ -70,6 +77,16 @@ pub struct ScenarioReport {
     /// The sim backend's bit-exact [`crate::metrics::Metrics::fingerprint`]
     /// (None on wall-clock backends).
     pub metrics_fingerprint: Option<String>,
+    /// Whole-run weight-cache totals (modelcache subsystem).
+    pub cache_hits: u64,
+    pub cache_partial: u64,
+    pub cache_misses: u64,
+    pub cache_bytes_loaded_mb: f64,
+    pub cache_bytes_saved_mb: f64,
+    /// Total model-load delay paid across deployment spawns (ms);
+    /// tracked by the sim backend whether or not the cache is on, so
+    /// cache-aware and cache-blind runs compare directly.
+    pub model_load_ms_total: f64,
 }
 
 /// Cumulative counters at a virtual instant (backend-provided rows; one
@@ -80,10 +97,16 @@ pub(crate) struct CumRow {
     pub offered: u64,
     pub satisfied: f64,
     pub shed: u64,
+    /// Cumulative weight-cache admissions (zero when the cache is off).
+    pub cache_hits: u64,
+    pub cache_partial: u64,
+    pub cache_misses: u64,
+    pub cache_bytes_loaded_mb: f64,
+    pub cache_bytes_saved_mb: f64,
 }
 
 /// Whole-run totals a backend hands to [`assemble`].
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub(crate) struct Totals {
     pub offered: u64,
     pub satisfied: f64,
@@ -91,6 +114,12 @@ pub(crate) struct Totals {
     pub goodput_rps: f64,
     pub slo_violation_rate: f64,
     pub metrics_fingerprint: Option<String>,
+    pub cache_hits: u64,
+    pub cache_partial: u64,
+    pub cache_misses: u64,
+    pub cache_bytes_loaded_mb: f64,
+    pub cache_bytes_saved_mb: f64,
+    pub model_load_ms_total: f64,
 }
 
 /// Build the report from boundary-aligned cumulative rows.
@@ -140,6 +169,15 @@ pub(crate) fn assemble(
             } else {
                 (1.0 - satisfied / offered as f64).max(0.0)
             },
+            cache_hits: rb.cache_hits.saturating_sub(ra.cache_hits),
+            cache_partial: rb.cache_partial.saturating_sub(ra.cache_partial),
+            cache_misses: rb.cache_misses.saturating_sub(ra.cache_misses),
+            cache_bytes_loaded_mb: (rb.cache_bytes_loaded_mb
+                - ra.cache_bytes_loaded_mb)
+                .max(0.0),
+            cache_bytes_saved_mb: (rb.cache_bytes_saved_mb
+                - ra.cache_bytes_saved_mb)
+                .max(0.0),
         });
     }
 
@@ -228,10 +266,23 @@ pub(crate) fn assemble(
         recoveries,
         shard_recoveries,
         metrics_fingerprint: totals.metrics_fingerprint,
+        cache_hits: totals.cache_hits,
+        cache_partial: totals.cache_partial,
+        cache_misses: totals.cache_misses,
+        cache_bytes_loaded_mb: totals.cache_bytes_loaded_mb,
+        cache_bytes_saved_mb: totals.cache_bytes_saved_mb,
+        model_load_ms_total: totals.model_load_ms_total,
     }
 }
 
 impl ScenarioReport {
+    /// Whether the run recorded any weight-cache activity.  Gates the
+    /// cache fingerprint tokens so cache-off runs keep their historical
+    /// fingerprints byte-for-byte.
+    pub fn cache_active(&self) -> bool {
+        self.cache_hits + self.cache_partial + self.cache_misses > 0
+    }
+
     /// Bit-exact run fingerprint for golden pinning (every f64 as raw
     /// bits; embeds the sim engine's `Metrics::fingerprint` when present).
     pub fn fingerprint(&self) -> String {
@@ -271,6 +322,31 @@ impl ScenarioReport {
                 r.recovery_ms.unwrap_or(-1.0).to_bits()
             );
         }
+        // Cache tokens only when the run had cache activity: per-phase
+        // hit/partial/miss plus byte movements, then the run totals.
+        if self.cache_active() {
+            for (i, p) in self.phases.iter().enumerate() {
+                let _ = write!(
+                    out,
+                    " c{i}={}:{}:{}:{:016x}:{:016x}",
+                    p.cache_hits,
+                    p.cache_partial,
+                    p.cache_misses,
+                    p.cache_bytes_loaded_mb.to_bits(),
+                    p.cache_bytes_saved_mb.to_bits(),
+                );
+            }
+            let _ = write!(
+                out,
+                " cachetot={}:{}:{}:{:016x}:{:016x}:{:016x}",
+                self.cache_hits,
+                self.cache_partial,
+                self.cache_misses,
+                self.cache_bytes_loaded_mb.to_bits(),
+                self.cache_bytes_saved_mb.to_bits(),
+                self.model_load_ms_total.to_bits(),
+            );
+        }
         if let Some(fp) = &self.metrics_fingerprint {
             let _ = write!(out, " metrics[{fp}]");
         }
@@ -292,6 +368,14 @@ impl ScenarioReport {
                     ("shed", Json::num(p.shed as f64)),
                     ("goodput_rps", Json::num(p.goodput_rps)),
                     ("slo_violation_rate", Json::num(p.slo_violation_rate)),
+                    ("cache_hits", Json::num(p.cache_hits as f64)),
+                    ("cache_partial", Json::num(p.cache_partial as f64)),
+                    ("cache_misses", Json::num(p.cache_misses as f64)),
+                    (
+                        "cache_bytes_loaded_mb",
+                        Json::num(p.cache_bytes_loaded_mb),
+                    ),
+                    ("cache_bytes_saved_mb", Json::num(p.cache_bytes_saved_mb)),
                 ])
             })
             .collect();
@@ -333,6 +417,17 @@ impl ScenarioReport {
             ("recoveries", Json::Arr(recoveries)),
             ("shard_recoveries", Json::Arr(shard_recoveries)),
             (
+                "cache",
+                Json::obj(vec![
+                    ("hits", Json::num(self.cache_hits as f64)),
+                    ("partial", Json::num(self.cache_partial as f64)),
+                    ("misses", Json::num(self.cache_misses as f64)),
+                    ("bytes_loaded_mb", Json::num(self.cache_bytes_loaded_mb)),
+                    ("bytes_saved_mb", Json::num(self.cache_bytes_saved_mb)),
+                ]),
+            ),
+            ("model_load_ms_total", Json::num(self.model_load_ms_total)),
+            (
                 "metrics_fingerprint",
                 self.metrics_fingerprint
                     .clone()
@@ -369,6 +464,19 @@ impl ScenarioReport {
                 p.goodput_rps,
                 p.slo_violation_rate * 100.0,
                 p.shed,
+            );
+        }
+        if self.cache_active() {
+            let _ = writeln!(
+                out,
+                "  cache: hits={} partial={} misses={} loaded={:.0} MB \
+                 saved={:.0} MB load-delay={:.0} ms",
+                self.cache_hits,
+                self.cache_partial,
+                self.cache_misses,
+                self.cache_bytes_loaded_mb,
+                self.cache_bytes_saved_mb,
+                self.model_load_ms_total,
             );
         }
         let rows = self
@@ -441,6 +549,7 @@ mod tests {
                 offered: (t / 100.0) as u64,
                 satisfied: sat,
                 shed: if t > 4000.0 { 5 } else { 0 },
+                ..Default::default()
             });
         }
         out
@@ -454,6 +563,7 @@ mod tests {
             goodput_rps: 8.0,
             slo_violation_rate: 0.2,
             metrics_fingerprint: Some("offered=100".into()),
+            ..Default::default()
         }
     }
 
@@ -517,6 +627,49 @@ mod tests {
         assert_eq!(sr.len(), 1);
         assert_eq!(sr[0].get("shard").unwrap().as_f64().unwrap(), 1.0);
         assert!(r.human().contains("recovery shard1"));
+    }
+
+    #[test]
+    fn cache_tokens_fingerprint_only_when_active() {
+        // no cache activity: historical fingerprint, byte-for-byte
+        let off = assemble(&spec(), "sim", &rows(), totals());
+        assert!(!off.cache_active());
+        assert!(!off.fingerprint().contains(" c0="), "{}", off.fingerprint());
+        assert!(!off.fingerprint().contains("cachetot="));
+        // with activity: per-phase tokens + totals appear, sliced by phase
+        let mut cached_rows = rows();
+        for r in cached_rows.iter_mut() {
+            if r.at_ms > 6000.0 {
+                r.cache_hits = 2;
+                r.cache_misses = 1;
+                r.cache_bytes_loaded_mb = 420.0;
+                r.cache_bytes_saved_mb = 840.0;
+            }
+        }
+        let mut t = totals();
+        t.cache_hits = 2;
+        t.cache_misses = 1;
+        t.cache_bytes_loaded_mb = 420.0;
+        t.cache_bytes_saved_mb = 840.0;
+        t.model_load_ms_total = 550.0;
+        let on = assemble(&spec(), "sim", &cached_rows, t);
+        assert!(on.cache_active());
+        let fp = on.fingerprint();
+        assert!(fp.contains(" c0=0:0:0:"), "{fp}");
+        assert!(fp.contains(" c2=2:0:1:"), "phase 2 holds the admissions: {fp}");
+        assert!(fp.contains(" cachetot=2:0:1:"), "{fp}");
+        // recovery-phase slice picked the deltas up
+        assert_eq!(on.phases[2].cache_hits, 2);
+        assert_eq!(on.phases[2].cache_misses, 1);
+        // JSON carries the cache object
+        let j = parse(&on.to_json().to_string()).unwrap();
+        let c = j.get("cache").unwrap();
+        assert_eq!(c.get("hits").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(
+            j.get("model_load_ms_total").unwrap().as_f64().unwrap(),
+            550.0
+        );
+        assert!(on.human().contains("cache: hits=2"));
     }
 
     #[test]

@@ -44,6 +44,11 @@ impl ScenarioBackend for SimBackend {
                 offered: s.offered,
                 satisfied: s.satisfied,
                 shed: s.resource_insufficient + s.offload_exceeded,
+                cache_hits: s.cache_hits,
+                cache_partial: s.cache_partial,
+                cache_misses: s.cache_misses,
+                cache_bytes_loaded_mb: s.cache_bytes_loaded_mb,
+                cache_bytes_saved_mb: s.cache_bytes_saved_mb,
             })
             .collect();
         let m = sim.take_metrics();
@@ -58,6 +63,12 @@ impl ScenarioBackend for SimBackend {
                 (1.0 - m.satisfaction_ratio()).max(0.0)
             },
             metrics_fingerprint: Some(m.fingerprint()),
+            cache_hits: m.cache_hits,
+            cache_partial: m.cache_partial,
+            cache_misses: m.cache_misses,
+            cache_bytes_loaded_mb: m.cache_bytes_loaded_mb,
+            cache_bytes_saved_mb: m.cache_bytes_saved_mb,
+            model_load_ms_total: m.model_load_ms_total,
         };
         Ok(report::assemble(spec, "sim", &rows, totals))
     }

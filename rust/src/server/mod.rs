@@ -40,10 +40,12 @@
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Duration;
+use std::time::Instant;
 
+use crate::modelcache::CacheFabric;
 use crate::profile::{zoo, ProfileTable};
 
 pub mod admission;
@@ -97,6 +99,11 @@ pub struct GatewayConfig {
     /// §Sharding).  1 preserves the single-reactor path bit-for-bit;
     /// >1 needs the Linux reactor layer and is clamped to 1 otherwise.
     pub shards: usize,
+    /// Weight-cache capacity in MB for the gateway's resident-model view
+    /// (modelcache subsystem).  0 disables the cache: no admissions are
+    /// tracked and `/metrics` exposes no `epara_cache_*` series, keeping
+    /// the exposition byte-identical to a cache-less build.
+    pub cache_capacity_mb: f64,
 }
 
 impl Default for GatewayConfig {
@@ -111,6 +118,7 @@ impl Default for GatewayConfig {
             idle_timeout_ms: 30_000,
             stall_timeout_ms: 1_000,
             shards: 1,
+            cache_capacity_mb: 0.0,
         }
     }
 }
@@ -128,6 +136,41 @@ pub(crate) struct Shared {
     pub shard: Arc<shard::ShardState>,
     /// Every shard in the process (metrics aggregation, routing views).
     pub fabric: Arc<shard::Fabric>,
+    /// Process-wide weight cache (`cache_capacity_mb > 0`), one slot per
+    /// shard; `None` keeps the request path and `/metrics` exposition
+    /// byte-identical to a cache-less gateway.
+    pub cache: Option<Arc<GatewayCache>>,
+    /// Which cache slot this shard admits into.
+    pub cache_server: crate::core::ServerId,
+}
+
+/// Process-wide gateway weight-cache view: the [`CacheFabric`] sized to
+/// one slot per shard, behind a mutex (admissions mutate LRU recency).
+/// Timestamps are wall-clock ms since the gateway spawned, so recency
+/// ordering follows real request order.
+pub(crate) struct GatewayCache {
+    fabric: Mutex<CacheFabric>,
+    started: Instant,
+}
+
+impl GatewayCache {
+    fn new(table: &ProfileTable, shards: usize, capacity_mb: f64) -> Self {
+        GatewayCache {
+            fabric: Mutex::new(CacheFabric::new(table, shards, capacity_mb)),
+            started: Instant::now(),
+        }
+    }
+
+    /// Admit `service` into shard-slot `server` and return what the load
+    /// would cost (hit / partial / miss plus byte accounting).
+    pub(crate) fn admit(
+        &self,
+        server: crate::core::ServerId,
+        service: crate::core::ServiceId,
+    ) -> crate::modelcache::CacheOutcome {
+        let now_ms = self.started.elapsed().as_secs_f64() * 1000.0;
+        self.fabric.lock().unwrap().admit(server, service, now_ms)
+    }
 }
 
 /// Process-wide SIGINT/SIGTERM latch (signal handlers can only touch
@@ -203,11 +246,14 @@ impl Gateway {
         let fabric = Arc::new(shard::Fabric::new(shards, cfg.admission));
         let telemetry = Arc::new(Telemetry::new());
         let stop = Arc::new(AtomicBool::new(false));
+        // One cache slot per shard; capacity 0 → no fabric at all.
+        let cache = (cfg.cache_capacity_mb > 0.0)
+            .then(|| Arc::new(GatewayCache::new(&table, shards, cfg.cache_capacity_mb)));
 
         #[cfg(target_os = "linux")]
         if shards > 1 {
             return Gateway::spawn_sharded(
-                &cfg, table, executor, listener, addr, fabric, telemetry, stop,
+                &cfg, table, executor, listener, addr, fabric, telemetry, stop, cache,
             );
         }
 
@@ -218,6 +264,8 @@ impl Gateway {
             gpu_vram_mb: cfg.gpu_vram_mb,
             shard: fabric.shard(0),
             fabric: Arc::clone(&fabric),
+            cache,
+            cache_server: crate::core::ServerId(0),
         });
         let thread_stop = Arc::clone(&stop);
         let threads = cfg.threads;
@@ -297,6 +345,7 @@ impl Gateway {
         fabric: Arc<shard::Fabric>,
         telemetry: Arc<Telemetry>,
         stop: Arc<AtomicBool>,
+        cache: Option<Arc<GatewayCache>>,
     ) -> crate::Result<Gateway> {
         let n = fabric.shard_count();
         // Each shard gets an equal slice of the process fd budget; the
@@ -312,6 +361,8 @@ impl Gateway {
                 gpu_vram_mb: cfg.gpu_vram_mb,
                 shard: fabric.shard(i),
                 fabric: Arc::clone(&fabric),
+                cache: cache.clone(),
+                cache_server: crate::core::ServerId(i as u32),
             });
             let rcfg = reactor::ReactorConfig {
                 threads: cfg.threads,

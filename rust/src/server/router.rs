@@ -90,6 +90,15 @@ fn handle_infer(shared: &Shared, req: &HttpRequest) -> HttpResponse {
         .submit(category, exec_req, slo_ms, &*shared.executor)
     {
         Decision::Served(out) => {
+            // Weight-cache admission: record whether this service's
+            // weights were resident on this shard's slot (hit /
+            // family-partial / cold miss), feeding the `epara_cache_*`
+            // series.  Only executed requests touch the cache — a shed
+            // request never loads weights.  Disabled caches skip this
+            // entirely: no series, no lock.
+            if let Some(cache) = shared.cache.as_deref() {
+                shared.telemetry.record_cache(cache.admit(shared.cache_server, service));
+            }
             let e2e_ms = t0.elapsed().as_secs_f64() * 1000.0;
             let credit = shared.telemetry.record_ok(category, e2e_ms, slo_ms);
             let body = Json::obj(vec![

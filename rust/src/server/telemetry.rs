@@ -62,6 +62,13 @@ struct Inner {
     cats: [CatStats; 4],
     /// Requests rejected before classification (400/404/405/413/431).
     http_errors: u64,
+    /// Weight-cache admissions (modelcache subsystem; all zero — and the
+    /// `epara_cache_*` series absent — while the cache is off).
+    cache_hits: u64,
+    cache_partial: u64,
+    cache_misses: u64,
+    cache_bytes_loaded_mb: f64,
+    cache_bytes_saved_mb: f64,
 }
 
 /// Shared gateway metrics registry (interior mutability; cheap locks —
@@ -83,6 +90,11 @@ impl Telemetry {
                     CatStats::default(),
                 ],
                 http_errors: 0,
+                cache_hits: 0,
+                cache_partial: 0,
+                cache_misses: 0,
+                cache_bytes_loaded_mb: 0.0,
+                cache_bytes_saved_mb: 0.0,
             }),
         }
     }
@@ -137,6 +149,18 @@ impl Telemetry {
     /// Record a request rejected before classification (4xx).
     pub fn record_http_error(&self) {
         self.lock().http_errors += 1;
+    }
+
+    /// Record one weight-cache admission (modelcache subsystem).
+    pub fn record_cache(&self, outcome: crate::modelcache::CacheOutcome) {
+        let mut inner = self.lock();
+        match outcome.kind {
+            crate::modelcache::CacheKind::Hit => inner.cache_hits += 1,
+            crate::modelcache::CacheKind::Partial => inner.cache_partial += 1,
+            crate::modelcache::CacheKind::Miss => inner.cache_misses += 1,
+        }
+        inner.cache_bytes_loaded_mb += outcome.bytes_loaded_mb;
+        inner.cache_bytes_saved_mb += outcome.bytes_saved_mb;
     }
 
     /// Total satisfied-request credit per second since startup.
@@ -253,6 +277,39 @@ impl Telemetry {
             out.push_str(&format!("epara_gateway_shards {}\n", shards.len()));
         }
 
+        // Weight-cache series appear only once the cache has seen an
+        // admission: a cache-off gateway's exposition stays byte-identical
+        // to the pre-cache era.
+        if inner.cache_hits + inner.cache_partial + inner.cache_misses > 0 {
+            out.push_str(
+                "# HELP epara_cache_admissions_total Model weight-cache \
+                 admissions by outcome.\n\
+                 # TYPE epara_cache_admissions_total counter\n",
+            );
+            for (outcome, n) in [
+                ("hit", inner.cache_hits),
+                ("partial", inner.cache_partial),
+                ("miss", inner.cache_misses),
+            ] {
+                out.push_str(&format!(
+                    "epara_cache_admissions_total{{outcome=\"{outcome}\"}} {n}\n"
+                ));
+            }
+            out.push_str(
+                "# HELP epara_cache_bytes_mb Model bytes moved (loaded) or \
+                 avoided (saved) by the weight cache, in MB.\n\
+                 # TYPE epara_cache_bytes_mb counter\n",
+            );
+            out.push_str(&format!(
+                "epara_cache_bytes_mb{{kind=\"loaded\"}} {:.3}\n",
+                inner.cache_bytes_loaded_mb
+            ));
+            out.push_str(&format!(
+                "epara_cache_bytes_mb{{kind=\"saved\"}} {:.3}\n",
+                inner.cache_bytes_saved_mb
+            ));
+        }
+
         let credit: f64 = inner.cats.iter().map(|c| c.credit).sum();
         drop(inner);
         let secs = self.started.elapsed().as_secs_f64().max(1e-9);
@@ -325,6 +382,43 @@ mod tests {
         // `--shards 1` output stays bit-identical to the pre-shard era
         assert!(!text.contains("shard="));
         assert!(!text.contains("epara_gateway_shards "));
+        // and no cache series while the cache has seen no admission
+        assert!(!text.contains("epara_cache_"));
+    }
+
+    #[test]
+    fn cache_series_render_only_after_admissions() {
+        use crate::modelcache::{CacheKind, CacheOutcome};
+        let t = Telemetry::new();
+        let zero = t.render_prometheus([0; 4], "profile-replay", &[(0, true)]);
+        assert!(!zero.contains("epara_cache_"), "cache-off must be silent");
+        t.record_cache(CacheOutcome {
+            kind: CacheKind::Miss,
+            load_frac: 1.0,
+            bytes_loaded_mb: 640.0,
+            bytes_saved_mb: 0.0,
+        });
+        t.record_cache(CacheOutcome {
+            kind: CacheKind::Partial,
+            load_frac: 0.4,
+            bytes_loaded_mb: 256.0,
+            bytes_saved_mb: 384.0,
+        });
+        t.record_cache(CacheOutcome {
+            kind: CacheKind::Hit,
+            load_frac: 0.0,
+            bytes_loaded_mb: 0.0,
+            bytes_saved_mb: 640.0,
+        });
+        let text = t.render_prometheus([0; 4], "profile-replay", &[(0, true)]);
+        assert!(text
+            .contains("epara_cache_admissions_total{outcome=\"hit\"} 1"));
+        assert!(text
+            .contains("epara_cache_admissions_total{outcome=\"partial\"} 1"));
+        assert!(text
+            .contains("epara_cache_admissions_total{outcome=\"miss\"} 1"));
+        assert!(text.contains("epara_cache_bytes_mb{kind=\"loaded\"} 896.000"));
+        assert!(text.contains("epara_cache_bytes_mb{kind=\"saved\"} 1024.000"));
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::handler::{
     decide_with, Decision, HandlerConfig, LocalCapacity, OffloadScratch, StateView,
 };
 use crate::metrics::Metrics;
+use crate::modelcache::{CacheConfig, CacheFabric, CacheKind};
 use crate::placement::{sssp, FluidEval, PhiEval, PlacementItem, EPSILON_SERVER};
 use crate::profile::ProfileTable;
 use crate::sync::{SyncConfig, SyncNet};
@@ -111,6 +112,12 @@ pub struct SimSample {
     pub timeout: u64,
     pub offload_exceeded: u64,
     pub resource_insufficient: u64,
+    /// Cumulative weight-cache admissions (all zero when the cache is off).
+    pub cache_hits: u64,
+    pub cache_partial: u64,
+    pub cache_misses: u64,
+    pub cache_bytes_loaded_mb: f64,
+    pub cache_bytes_saved_mb: f64,
 }
 
 /// What a failed server hosted, for offline-mode recovery re-install.
@@ -316,6 +323,10 @@ pub struct SimConfig {
     /// Periodic re-placement interval (§3.4 coarse granularity); None =
     /// place once from the whole trace (the paper's offline mode).
     pub replacement_interval_ms: Option<f64>,
+    /// Per-server weight cache (modelcache subsystem).  The default
+    /// capacity of 0 disables it: deployment spawns pay the flat Fig. 3f
+    /// `model_load_ms` exactly as before, bit-for-bit.
+    pub cache: CacheConfig,
 }
 
 impl Default for SimConfig {
@@ -327,6 +338,7 @@ impl Default for SimConfig {
             policy: PolicyConfig::epara(),
             duration_ms: 60_000.0,
             replacement_interval_ms: None,
+            cache: CacheConfig::default(),
         }
     }
 }
@@ -384,6 +396,9 @@ pub struct Simulator<'a> {
     server_skew: Vec<f64>,
     /// When the last placement round consumed its window (demand span).
     last_round_ms: f64,
+    /// Per-server weight caches; `None` when `cfg.cache` is disabled —
+    /// the legacy flat-load path, untouched bit-for-bit.
+    cache: Option<CacheFabric>,
 }
 
 impl<'a> Simulator<'a> {
@@ -506,10 +521,15 @@ impl<'a> Simulator<'a> {
             stash: (0..n).map(|_| Vec::new()).collect(),
             server_skew: vec![1.0; n],
             last_round_ms: 0.0,
+            cache: cfg
+                .cache
+                .enabled()
+                .then(|| CacheFabric::new(table, n, cfg.cache.capacity_mb)),
             allocs,
             placement: placement.clone(),
             cfg,
         };
+        sim.metrics.cache_enabled = sim.cache.is_some();
         sim.materialize_placement(&placement);
         sim.install_devices();
         sim.prime_snapshot();
@@ -561,12 +581,8 @@ impl<'a> Simulator<'a> {
         let cap = al.ops.inter_request_count().max(1);
         let req_rate = self.table.request_rate(service, al.ops.bs, al.ops.mp, 1)
             * al.ops.dp as f64;
-        let available_at_ms = self.placement_applied_at_ms
-            + if self.placement_applied_at_ms > 0.0 {
-                self.table.spec(service).model_load_ms
-            } else {
-                0.0 // initial pre-placement happens before t=0 (§2.3)
-            };
+        let available_at_ms =
+            self.placement_applied_at_ms + self.spawn_load_ms(server, service);
         // installed on a throttled server: inherit its current skew (1.0
         // while healthy, so the common path is bit-identical)
         let skew = self.server_skew[server.0 as usize];
@@ -583,6 +599,38 @@ impl<'a> Simulator<'a> {
             queued_ms: 0.0,
             queue: VecDeque::new(),
         });
+    }
+
+    /// Model-load delay one spawn pays (Fig. 3f), cache-adjusted when the
+    /// weight cache is on: only bytes not already resident on the server
+    /// cost time, so a family sibling pays its delta and a recently
+    /// retired model re-installs for free.  Initial pre-placement happens
+    /// before t=0 (§2.3): zero delay either way, but it still pre-warms
+    /// the cache so the horizon starts from a realistic resident set.
+    fn spawn_load_ms(&mut self, server: ServerId, service: ServiceId) -> f64 {
+        let now = self.placement_applied_at_ms;
+        let base = self.table.spec(service).model_load_ms;
+        let Some(fabric) = self.cache.as_mut() else {
+            if now > 0.0 {
+                self.metrics.model_load_ms_total += base;
+                return base;
+            }
+            return 0.0;
+        };
+        let out = fabric.admit(server, service, now);
+        if now <= 0.0 {
+            return 0.0; // pre-warm only
+        }
+        match out.kind {
+            CacheKind::Hit => self.metrics.cache_hits += 1,
+            CacheKind::Partial => self.metrics.cache_partial += 1,
+            CacheKind::Miss => self.metrics.cache_misses += 1,
+        }
+        self.metrics.cache_bytes_loaded_mb += out.bytes_loaded_mb;
+        self.metrics.cache_bytes_saved_mb += out.bytes_saved_mb;
+        let load_ms = base * out.load_frac;
+        self.metrics.model_load_ms_total += load_ms;
+        load_ms
     }
 
     /// Register device GPUs as single-GPU deployments at their home server.
@@ -1123,6 +1171,13 @@ impl<'a> Simulator<'a> {
             window.iter().map(|&i| &self.slab[i as usize]),
             span,
         );
+        // Cache-warmth preference: bias the greedy toward servers already
+        // holding the weights, so this round's additions avoid cold loads.
+        if let Some(fabric) = self.cache.as_ref() {
+            eval.set_warmth(self.cfg.cache.warmth_weight, |server, svc| {
+                fabric.warm_frac(ServerId(server as u32), svc)
+            });
+        }
         let new_placement = sssp(&[], &services, self.cloud.n_servers(), &mut eval);
 
         // diff: count deployments per (service, server) old vs new — dense
@@ -1305,6 +1360,11 @@ impl<'a> Simulator<'a> {
             timeout: self.metrics.timeout,
             offload_exceeded: self.metrics.offload_exceeded,
             resource_insufficient: self.metrics.resource_insufficient,
+            cache_hits: self.metrics.cache_hits,
+            cache_partial: self.metrics.cache_partial,
+            cache_misses: self.metrics.cache_misses,
+            cache_bytes_loaded_mb: self.metrics.cache_bytes_loaded_mb,
+            cache_bytes_saved_mb: self.metrics.cache_bytes_saved_mb,
         });
     }
 
@@ -1384,6 +1444,12 @@ impl<'a> Simulator<'a> {
             e.theoretical = 0.0;
             e.actual = 0.0;
             e.queued_ms = 0.0;
+        }
+        // VRAM does not survive a crash: the weight cache goes cold, so
+        // post-recovery loads start from scratch (cache invariant in
+        // DESIGN.md §Model cache).  Device churn does NOT touch it.
+        if let Some(fabric) = self.cache.as_mut() {
+            fabric.invalidate(server);
         }
         self.sync.mark_down(server);
     }

@@ -109,6 +109,16 @@ impl RunConfig {
             ..Default::default()
         };
 
+        // Weight cache (modelcache subsystem): absent object or
+        // capacity_mb 0 keeps the subsystem off — the legacy flat-load
+        // path, bit-for-bit.
+        let c = j.get("cache").cloned().unwrap_or(Json::Obj(vec![]));
+        let cache_defaults = crate::modelcache::CacheConfig::default();
+        let cache = crate::modelcache::CacheConfig {
+            capacity_mb: f(&c, "capacity_mb", cache_defaults.capacity_mb),
+            warmth_weight: f(&c, "warmth_weight", cache_defaults.warmth_weight),
+        };
+
         let sim = SimConfig {
             seed: f(j, "seed", 7.0) as u64,
             handler,
@@ -118,6 +128,7 @@ impl RunConfig {
             replacement_interval_ms: j
                 .get("replacement_interval_ms")
                 .and_then(|v| v.as_f64()),
+            cache,
         };
         Ok(RunConfig { cloud, workload, sim })
     }
@@ -152,6 +163,28 @@ mod tests {
         assert_eq!(rc.sim.handler.max_offloads, 5);
         assert_eq!(rc.workload.mix, Mix::Production(0));
         assert!(rc.sim.replacement_interval_ms.is_none());
+        assert!(!rc.sim.cache.enabled(), "cache must default off");
+    }
+
+    #[test]
+    fn cache_object_parses() {
+        let rc = RunConfig::from_json(
+            &parse(r#"{"cache": {"capacity_mb": 24000.0, "warmth_weight": 0.1}}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert!(rc.sim.cache.enabled());
+        assert_eq!(rc.sim.cache.capacity_mb, 24_000.0);
+        assert_eq!(rc.sim.cache.warmth_weight, 0.1);
+        // partial object keeps per-field defaults
+        let rc2 = RunConfig::from_json(
+            &parse(r#"{"cache": {"capacity_mb": 1000.0}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            rc2.sim.cache.warmth_weight,
+            crate::modelcache::CacheConfig::default().warmth_weight
+        );
     }
 
     #[test]

@@ -1,0 +1,82 @@
+//! ISSUE acceptance: on the committed `flash_crowd_cold` scenario, the
+//! weight cache must beat a cache-blind run at a fixed seed — fewer
+//! total model-load milliseconds (load-delay amortization) or strictly
+//! higher goodput.  Also pins the qualitative cache behavior the spec
+//! was designed around: the second surge and the recovery re-spawns
+//! find warm weights, so hits MUST appear.
+
+use std::path::PathBuf;
+
+use epara::scenario::{ScenarioBackend, ScenarioSpec, SimBackend};
+
+fn load_spec() -> ScenarioSpec {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("scenarios")
+        .join("flash_crowd_cold.json");
+    ScenarioSpec::from_file(&p).expect("committed spec must parse")
+}
+
+#[test]
+fn cache_aware_beats_cache_blind_on_flash_crowd_cold() {
+    let spec = load_spec();
+    assert!(
+        spec.base.sim.cache.enabled(),
+        "flash_crowd_cold must ship with the cache on"
+    );
+
+    // cache-aware: the spec as committed
+    let aware = SimBackend.run(&spec).unwrap();
+
+    // cache-blind: same seed, same trace, capacity 0 (legacy flat loads)
+    let mut blind_spec = spec.clone();
+    blind_spec.base.sim.cache.capacity_mb = 0.0;
+    let blind = SimBackend.run(&blind_spec).unwrap();
+
+    // identical offered traffic — the comparison is apples-to-apples
+    assert_eq!(aware.offered, blind.offered);
+
+    // the cache actually engaged: admissions recorded, hits present
+    // (second surge + post-recovery re-placement re-add warm services)
+    assert!(aware.cache_hits + aware.cache_partial + aware.cache_misses > 0);
+    assert!(
+        aware.cache_hits > 0,
+        "repeat spawns on warm servers must hit (h={} p={} m={})",
+        aware.cache_hits,
+        aware.cache_partial,
+        aware.cache_misses
+    );
+    assert!(aware.cache_bytes_saved_mb > 0.0, "hits must save bytes");
+    // the blind run records no cache activity at all
+    assert_eq!(blind.cache_hits + blind.cache_partial + blind.cache_misses, 0);
+
+    // THE acceptance inequality: amortized load delay or better goodput
+    assert!(
+        aware.model_load_ms_total < blind.model_load_ms_total
+            || aware.goodput_rps > blind.goodput_rps,
+        "cache-aware must beat cache-blind: load_ms {} vs {}, goodput {} vs {}",
+        aware.model_load_ms_total,
+        blind.model_load_ms_total,
+        aware.goodput_rps,
+        blind.goodput_rps
+    );
+
+    // both runs hold the committed goodput floor
+    let floor = spec.goodput_floor_rps.expect("spec must carry a floor");
+    assert!(
+        aware.goodput_rps >= floor,
+        "aware goodput {} below floor {floor}",
+        aware.goodput_rps
+    );
+
+    // determinism: the aware run is bit-exact across executions
+    let again = SimBackend.run(&spec).unwrap();
+    assert_eq!(aware.fingerprint(), again.fingerprint());
+    assert!(
+        aware.fingerprint().contains("cachetot="),
+        "active cache must be covered by the scenario fingerprint"
+    );
+    assert!(
+        !blind.fingerprint().contains("cachetot="),
+        "disabled cache must not perturb the fingerprint"
+    );
+}

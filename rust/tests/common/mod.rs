@@ -26,6 +26,15 @@ pub fn counter_value(metrics: &str, category: &str, outcome: &str) -> u64 {
         .unwrap_or(0)
 }
 
+/// Sum `epara_cache_admissions_total` across outcomes (hit/partial/miss).
+pub fn cache_admissions_sum(metrics: &str) -> u64 {
+    metrics
+        .lines()
+        .filter(|l| l.starts_with("epara_cache_admissions_total{"))
+        .filter_map(|l| l.rsplit(' ').next().and_then(|v| v.parse::<u64>().ok()))
+        .sum()
+}
+
 /// A single un-labelled metric value by name (gauges, plain counters).
 pub fn value(metrics: &str, name: &str) -> u64 {
     metrics

@@ -25,7 +25,7 @@ use epara::server::{AdmissionConfig, Gateway, GatewayConfig, ProfileReplayExecut
 use epara::workload::Mix;
 
 mod common;
-use common::{counter_sum, counter_value};
+use common::{cache_admissions_sum, counter_sum, counter_value};
 
 /// Pretend-faster GPU: paper-scale latencies shrink 400x so the whole
 /// run fits a CI budget while still sleeping on the real wall clock.
@@ -91,6 +91,9 @@ fn gateway_end_to_end_over_real_sockets() {
             lanes_per_category: 1,
             slo_headroom: 1.0,
         },
+        // exercise the weight-cache request path end-to-end: large enough
+        // that the mixed zoo stays resident (mostly hits after warmup)
+        cache_capacity_mb: 200_000.0,
         ..Default::default()
     };
     let mut gw = Gateway::spawn(cfg, table.clone(), executor).expect("gateway spawn");
@@ -104,6 +107,9 @@ fn gateway_end_to_end_over_real_sockets() {
     assert_eq!(status, 200);
     assert_eq!(counter_sum(&metrics0, "ok"), 0);
     assert!(metrics0.contains("epara_gateway_info{executor=\"profile-replay\"} 1"));
+    // cache enabled but zero admissions yet: the epara_cache_* series
+    // must not render (exposition identical to a cache-less gateway)
+    assert!(!metrics0.contains("epara_cache_"), "cache series before traffic");
 
     // -- unknown routes / services are typed errors, not category traffic
     let (status, _) = get(&addr, "/nope");
@@ -181,6 +187,18 @@ fn gateway_end_to_end_over_real_sockets() {
     assert!(metrics
         .contains("epara_gateway_latency_ms{category=\"latency_multi\",quantile=\"0.99\"}"));
     assert!(metrics.contains("epara_gateway_goodput_rps "));
+    // weight cache: every SERVED request admitted exactly once (shed
+    // requests never load weights), and repeated services hit
+    assert_eq!(
+        cache_admissions_sum(&metrics),
+        ok_total,
+        "cache admissions must equal served requests"
+    );
+    assert!(
+        metrics.contains("epara_cache_admissions_total{outcome=\"hit\"}"),
+        "repeated services on a 200 GB cache must produce hits"
+    );
+    assert!(metrics.contains("epara_cache_bytes_mb{kind=\"loaded\"}"));
 
     // -- (c) clean shutdown: listener closes, workers join, no leaks
     gw.shutdown();

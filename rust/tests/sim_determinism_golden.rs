@@ -19,11 +19,15 @@ use std::fs;
 use std::path::PathBuf;
 
 use epara::cluster::EdgeCloud;
+use epara::modelcache::CacheConfig;
 use epara::profile::zoo;
 use epara::sim::{simulate, PolicyConfig, SimConfig};
 use epara::workload::{generate, Mix, WorkloadSpec};
 
-fn run_scenario(replacement_interval_ms: Option<f64>) -> String {
+fn run_scenario_with(
+    replacement_interval_ms: Option<f64>,
+    cache: CacheConfig,
+) -> String {
     let table = zoo::paper_zoo();
     let cloud = EdgeCloud::testbed();
     let spec = WorkloadSpec {
@@ -37,9 +41,14 @@ fn run_scenario(replacement_interval_ms: Option<f64>) -> String {
         policy: PolicyConfig::epara(),
         duration_ms: 15_000.0,
         replacement_interval_ms,
+        cache,
         ..Default::default()
     };
     simulate(&table, cloud, reqs, cfg).fingerprint()
+}
+
+fn run_scenario(replacement_interval_ms: Option<f64>) -> String {
+    run_scenario_with(replacement_interval_ms, CacheConfig::default())
 }
 
 fn golden() -> String {
@@ -50,8 +59,21 @@ fn golden() -> String {
     )
 }
 
+/// Cache-enabled variant of the periodic scenario (its own fixture):
+/// the fingerprint now carries the cache[h p m ...] section, so any
+/// drift in admission order, eviction, or family-delta math breaks the
+/// bit-exact comparison, not just a coarse counter.
+fn golden_cache() -> String {
+    let cache = CacheConfig { capacity_mb: 24_000.0, ..Default::default() };
+    format!("periodic+cache: {}\n", run_scenario_with(Some(5_000.0), cache))
+}
+
 fn fixture_path() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/sim_golden.txt")
+}
+
+fn cache_fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/sim_golden_cache.txt")
 }
 
 #[test]
@@ -60,6 +82,45 @@ fn fixed_seed_runs_are_reproducible_in_process() {
     // bit, including the periodic-placement path (whose re-placement diff
     // is computed over a deterministic dense grid, not a HashMap).
     assert_eq!(golden(), golden());
+}
+
+#[test]
+fn cache_aware_runs_are_reproducible_and_disabled_runs_carry_no_cache_state() {
+    // Cache-enabled fingerprints are bit-exact across runs: LRU eviction
+    // order, family-delta byte math, and warmth-biased placement are all
+    // deterministic.
+    let a = golden_cache();
+    assert_eq!(a, golden_cache());
+    assert!(
+        a.contains("cache[h="),
+        "an enabled cache must surface in the fingerprint: {a}"
+    );
+    // The default (capacity 0) run carries no cache section at all — the
+    // disabled subsystem cannot perturb the legacy fingerprint, which is
+    // exactly why `engine_matches_recorded_fixture` needs no re-record.
+    assert!(!golden().contains("cache["));
+}
+
+#[test]
+fn cache_engine_matches_recorded_fixture() {
+    let got = golden_cache();
+    let path = cache_fixture_path();
+    match fs::read_to_string(&path) {
+        Ok(want) => assert_eq!(
+            got, want,
+            "cache-aware sim output drifted from the golden fixture at \
+             {path:?}.  If this change is intentional, delete the fixture, \
+             rerun this test to re-record, and commit the new file together \
+             with the change that explains it.",
+        ),
+        Err(_) => {
+            fs::create_dir_all(path.parent().expect("fixture dir")).expect("mkdir fixtures");
+            fs::write(&path, &got).expect("write fixture");
+            eprintln!(
+                "recorded cache golden fixture at {path:?} — commit it to pin the engine"
+            );
+        }
+    }
 }
 
 #[test]

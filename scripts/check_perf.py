@@ -20,8 +20,16 @@ import sys
 # direction: higher is better
 HIGHER = ["events_per_sec", "sim_requests_per_sec"]
 # direction: lower is better
-LOWER = ["handler_decide_ns_10k", "spf_solve_ms_1k", "spf_solve_ms_10k", "fluid_gain_ns"]
+LOWER = [
+    "handler_decide_ns_10k",
+    "spf_solve_ms_1k",
+    "spf_solve_ms_10k",
+    "fluid_gain_ns",
+    "cache_score_ns",
+]
 THRESHOLD = 0.30
+# record bookkeeping, not metrics: never flagged as stray baseline keys
+METADATA_KEYS = {"schema", "provisional", "note", "quick"}
 
 
 def compare(cur, base):
@@ -87,6 +95,15 @@ def gate(cur, base):
         out.append(
             f"warning: comparing quick={cur.get('quick')} run against "
             f"quick={base.get('quick')} baseline - numbers may not be comparable"
+        )
+    # Non-gated baseline keys the current run no longer emits: warn, don't
+    # silently pass.  (Gated keys going missing are a hard error below; this
+    # catches a renamed/retired metric still lingering in the baseline so the
+    # drift is visible instead of rotting unnoticed.)
+    for key in sorted(set(base) - set(cur) - METADATA_KEYS - set(HIGHER + LOWER)):
+        out.append(
+            f"warning: baseline key '{key}' is absent from the current run "
+            f"and gated by nothing - stale baseline? refresh with make bench-perf"
         )
     regressions, key_errors, lines = compare(cur, base)
     out.extend(lines)

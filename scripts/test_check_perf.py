@@ -18,6 +18,7 @@ def record(**overrides):
         "spf_solve_ms_1k": 20.0,
         "spf_solve_ms_10k": 180.0,
         "fluid_gain_ns": 40.0,
+        "cache_score_ns": 120.0,
     }
     base.update(overrides)
     return base
@@ -78,6 +79,13 @@ class CompareTests(unittest.TestCase):
         self.assertEqual(len(key_errors), 1)
         self.assertIn("non-numeric", key_errors[0])
 
+    def test_cache_score_is_gated_lower_is_better(self):
+        self.assertIn("cache_score_ns", check_perf.LOWER)
+        cur = record(cache_score_ns=120.0 * 2.0)  # 2x slower cache scoring
+        regressions, key_errors, _ = check_perf.compare(cur, record())
+        self.assertIn("cache_score_ns", regressions)
+        self.assertEqual(key_errors, [])
+
 
 class GateTests(unittest.TestCase):
     def test_provisional_baseline_skips_the_gate(self):
@@ -109,6 +117,21 @@ class GateTests(unittest.TestCase):
         code, lines = check_perf.gate(record(quick=True), record())
         self.assertEqual(code, 0)
         self.assertTrue(any("warning" in line for line in lines))
+
+    def test_stray_baseline_key_warns_but_does_not_fail(self):
+        base = record(old_retired_metric_ms=12.0)
+        code, lines = check_perf.gate(record(), base)
+        self.assertEqual(code, 0, "\n".join(lines))
+        joined = "\n".join(lines)
+        self.assertIn("old_retired_metric_ms", joined)
+        self.assertIn("stale baseline", joined)
+        self.assertIn("perf gate passed", lines[-1])
+
+    def test_metadata_keys_are_not_stray(self):
+        base = record(schema=1, note="baseline notes", quick=False)
+        code, lines = check_perf.gate(record(), base)
+        self.assertEqual(code, 0)
+        self.assertFalse(any("stale baseline" in line for line in lines))
 
 
 if __name__ == "__main__":
