@@ -5,7 +5,8 @@
 //!  * placement solve    — <200 ms at 10k servers (Fig. 17c);
 //!  * simulator          — >= 100k events/s;
 //!  * fluid gain query   — O(1), tens of ns;
-//!  * cache score        — weight-cache admit/warm_frac, sub-µs.
+//!  * cache score        — weight-cache admit/warm_frac, sub-µs;
+//!  * resilience decide  — breaker admit/record + retry budget, sub-µs.
 //!
 //! Usage:
 //!   cargo bench --bench perf_hotpath                      # human report
@@ -25,6 +26,7 @@ use epara::core::{Request, RequestId, ServerId, ServiceId};
 use epara::handler::{decide_with, HandlerConfig, LocalCapacity, OffloadScratch, StateView};
 use epara::placement::{sssp, FluidEval, PhiEval, PlacementItem};
 use epara::profile::zoo;
+use epara::server::resilience::{Admit, Breaker, ResilienceConfig, RetryBudget};
 use epara::sim::{simulate, PolicyConfig, SimConfig};
 use epara::util::Rng;
 use epara::workload::{generate, Mix, WorkloadSpec};
@@ -87,6 +89,7 @@ struct PerfRecord {
     spf_solve_ms_10k: f64,
     fluid_gain_ns: f64,
     cache_score_ns: f64,
+    resilience_decide_ns: f64,
     sim_requests_per_sec: f64,
     events_per_sec: f64,
 }
@@ -98,6 +101,7 @@ impl PerfRecord {
              \"handler_decide_ns_10k\": {:.1},\n  \"spf_solve_ms_1k\": {:.3},\n  \
              \"spf_solve_ms_10k\": {:.3},\n  \"fluid_gain_ns\": {:.1},\n  \
              \"cache_score_ns\": {:.1},\n  \
+             \"resilience_decide_ns\": {:.1},\n  \
              \"sim_requests_per_sec\": {:.1},\n  \"events_per_sec\": {:.1}\n}}\n",
             self.quick,
             self.handler_decide_ns_10k,
@@ -105,6 +109,7 @@ impl PerfRecord {
             self.spf_solve_ms_10k,
             self.fluid_gain_ns,
             self.cache_score_ns,
+            self.resilience_decide_ns,
             self.sim_requests_per_sec,
             self.events_per_sec,
         )
@@ -213,6 +218,40 @@ fn main() {
     let cache_ns = t0.elapsed().as_secs_f64() * 1e9 / cache_reps as f64;
     println!("  admit/warm_frac mix: {cache_ns:.0} ns/op (acc {acc:.1})");
     rec.cache_score_ns = cache_ns;
+
+    println!("\nresilience decision (breaker + retry budget, DESIGN.md §Resilience):");
+    // The per-request resilience hot path: one breaker admit, one outcome
+    // record, and a budget accrue/spend pair.  The outcome stream cycles
+    // through a failure burst every 64 ops so the breaker actually walks
+    // Closed → Open → HalfOpen instead of measuring the Closed fast path
+    // alone.  Deterministic: time is the loop counter.
+    let rcfg = ResilienceConfig { enabled: true, ..Default::default() };
+    let mut breaker = Breaker::new(&rcfg);
+    let mut budget = RetryBudget::new(rcfg.retry_budget, rcfg.retry_burst);
+    let resil_reps = if quick { 200_000 } else { 1_000_000 };
+    let mut acc = 0u64;
+    let t0 = Instant::now();
+    for i in 0..resil_reps {
+        let now = i as f64;
+        budget.on_offered();
+        match breaker.admit(now) {
+            Admit::ShortCircuit { .. } => {
+                acc += 1;
+            }
+            _ => {
+                let ok = i % 64 < 48;
+                if breaker.record(now, ok) {
+                    acc += 1;
+                }
+                if !ok && budget.try_take() {
+                    acc += 1;
+                }
+            }
+        }
+    }
+    let resil_ns = t0.elapsed().as_secs_f64() * 1e9 / resil_reps as f64;
+    println!("  admit/record/budget mix: {resil_ns:.0} ns/op (acc {acc})");
+    rec.resilience_decide_ns = resil_ns;
 
     println!("\nsimulator event throughput:");
     let cloud = EdgeCloud::testbed();

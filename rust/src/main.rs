@@ -21,6 +21,7 @@
 //!                   [--backend replay|pjrt] [--max-conns N]
 //!                   [--idle-timeout-ms MS] [--stall-timeout-ms MS]
 //!                   [--legacy-threads] [--cache-capacity-mb MB]
+//!                   [--retry-budget RATIO] [--breaker ERROR_RATE]
 //!       Network serving gateway: POST /v1/infer, GET /metrics,
 //!       GET /healthz; category-aware admission + BS batching; epoll
 //!       reactor connection layer on Linux (idle connections cost a
@@ -29,7 +30,10 @@
 //!       out to N in-process shards behind one accept-dispatch thread
 //!       (per-shard `/metrics` gauges; see DESIGN.md §Sharding);
 //!       `--cache-capacity-mb N` turns on the per-shard weight cache
-//!       (`epara_cache_*` series on /metrics); graceful shutdown on
+//!       (`epara_cache_*` series on /metrics); `--retry-budget R` /
+//!       `--breaker E` switch on the request-lifecycle resilience layer
+//!       (deadline budgets, bounded retries, per-service circuit
+//!       breakers; see DESIGN.md §Resilience); graceful shutdown on
 //!       ctrl-c.
 //!   epara loadgen   [--addr HOST:PORT] [--requests N] [--rps R]
 //!                   [--mix mixed|latency|frequency|prodK] [--closed-loop]
@@ -103,6 +107,11 @@ impl Args {
             self.0.get(key).map(String::as_str),
             Some("true") | Some("1") | Some("yes")
         )
+    }
+
+    /// Whether the flag was given at all (bare or with a value).
+    fn has(&self, key: &str) -> bool {
+        self.0.contains_key(key)
     }
 }
 
@@ -261,6 +270,19 @@ fn cmd_gateway(args: &Args) -> anyhow::Result<()> {
         stall_timeout_ms: args.get("stall-timeout-ms", 1_000u64),
         shards: args.get("shards", 1usize),
         cache_capacity_mb: args.get("cache-capacity-mb", 0.0f64),
+        resilience: {
+            // either flag switches the whole resilience layer on
+            let mut r = server::ResilienceConfig::default();
+            if args.has("retry-budget") {
+                r.enabled = true;
+                r.retry_budget = args.get("retry-budget", r.retry_budget);
+            }
+            if args.has("breaker") {
+                r.enabled = true;
+                r.breaker_error_rate = args.get("breaker", r.breaker_error_rate);
+            }
+            r
+        },
         ..Default::default()
     };
     let time_scale: f64 = args.get("time-scale", 1.0);
@@ -577,6 +599,10 @@ mod tests {
         assert!(parse(&["--x", "true"]).flag("x"));
         assert!(parse(&["--x", "1"]).flag("x"));
         assert!(!parse(&["--x", "false"]).flag("x"));
+        // presence check: any form of the flag counts, absence doesn't
+        assert!(parse(&["--retry-budget", "0.2"]).has("retry-budget"));
+        assert!(parse(&["--breaker"]).has("breaker"));
+        assert!(!parse(&["--retry-budget", "0.2"]).has("breaker"));
         assert!(!parse(&[]).flag("x"));
     }
 }

@@ -54,6 +54,18 @@ pub struct Metrics {
     /// cache-aware vs cache-blind runs are directly comparable — but it
     /// is NOT part of the base fingerprint.
     pub model_load_ms_total: f64,
+    /// Whether the request-lifecycle resilience layer was enabled.
+    /// Gates the resilience fingerprint section exactly like
+    /// `cache_enabled` gates the cache section.
+    pub resilience_enabled: bool,
+    /// Executor attempts re-tried under the retry budget.
+    pub retries: u64,
+    /// Requests dropped by deadline-budget checks before/while running.
+    pub deadline_expired: u64,
+    /// Circuit-breaker transitions into Open.
+    pub breaker_trips: u64,
+    /// Requests short-circuited (fast-failed) by an open breaker.
+    pub breaker_short_circuits: u64,
 }
 
 impl Metrics {
@@ -166,6 +178,18 @@ impl Metrics {
                 self.model_load_ms_total.to_bits(),
             );
         }
+        // Resilience section, same stance: disabled runs reproduce the
+        // pre-resilience fingerprint byte-for-byte.
+        if self.resilience_enabled {
+            let _ = write!(
+                out,
+                " res[r={} x={} bt={} bs={}]",
+                self.retries,
+                self.deadline_expired,
+                self.breaker_trips,
+                self.breaker_short_circuits,
+            );
+        }
         out
     }
 
@@ -251,6 +275,27 @@ mod tests {
         let enabled = m.fingerprint();
         assert!(enabled.contains("cache[h=3 p=0 m=1"), "{enabled}");
         assert!(enabled.starts_with(&disabled));
+    }
+
+    #[test]
+    fn resilience_section_only_fingerprints_when_enabled() {
+        let mut m = Metrics::new();
+        m.record(ServiceId(0), &Outcome::Completed { latency_ms: 1.0 }, 0);
+        m.retries = 5;
+        m.breaker_trips = 1;
+        m.deadline_expired = 2;
+        let disabled = m.fingerprint();
+        assert!(!disabled.contains("res["), "{disabled}");
+        m.resilience_enabled = true;
+        let enabled = m.fingerprint();
+        assert!(enabled.contains("res[r=5 x=2 bt=1 bs=0]"), "{enabled}");
+        assert!(enabled.starts_with(&disabled));
+        // the cache and resilience sections compose in a fixed order
+        m.cache_enabled = true;
+        let both = m.fingerprint();
+        let cache_at = both.find("cache[").expect("cache section");
+        let res_at = both.find("res[").expect("res section");
+        assert!(cache_at < res_at);
     }
 
     #[test]

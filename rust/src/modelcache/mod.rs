@@ -308,6 +308,29 @@ impl CacheFabric {
         (warm / total).clamp(0.0, 1.0)
     }
 
+    /// First fully-warm family sibling of `service` on `server`, if any —
+    /// the degraded-fallback candidate while `service`'s circuit breaker
+    /// is open.  Read-only (built on [`Self::warm_frac`]): probing never
+    /// perturbs LRU state.  Deterministic: siblings are scanned in
+    /// ascending service-id order, so the same cache state always yields
+    /// the same fallback.
+    pub fn warm_sibling(
+        &self,
+        server: ServerId,
+        service: ServiceId,
+    ) -> Option<ServiceId> {
+        let (family, backbone_mb, delta_mb) = self.families.split_of(service);
+        if backbone_mb + delta_mb <= 0.0 {
+            return None;
+        }
+        self.families
+            .splits
+            .iter()
+            .filter(|s| s.family == family && s.service != service)
+            .find(|s| self.warm_frac(server, s.service) >= 1.0 - 1e-9)
+            .map(|s| s.service)
+    }
+
     /// Server failure: VRAM contents are gone, the cache goes cold.
     pub fn invalidate(&mut self, server: ServerId) {
         if let Some(cache) = self.cache_mut(server) {
@@ -408,6 +431,29 @@ mod tests {
         assert_eq!(f.warm_frac(ServerId(1), ids::YOLOV10), 0.0);
         // warm_frac is read-only: probing did not admit the sibling.
         assert_eq!(f.used_mb(ServerId(1)), 0.0);
+    }
+
+    #[test]
+    fn warm_sibling_finds_only_fully_resident_family_peers() {
+        let mut f = fabric(32_000.0);
+        let s = ServerId(0);
+        // Nothing resident: no sibling anywhere.
+        assert_eq!(f.warm_sibling(s, ids::YOLOV11), None);
+        f.admit(s, ids::YOLOV10, 0.0);
+        // v10 fully warm → it is v11's degraded stand-in ...
+        assert_eq!(f.warm_sibling(s, ids::YOLOV11), Some(ids::YOLOV10));
+        // ... but only on the server that holds it.
+        assert_eq!(f.warm_sibling(ServerId(1), ids::YOLOV11), None);
+        // A backbone-only (partially warm) peer never qualifies: v11
+        // itself is 60% warm, which must not make it v10's sibling.
+        assert_eq!(f.warm_sibling(s, ids::YOLOV10), None);
+        // Singleton families have no siblings by construction.
+        f.admit(s, ids::RESNET50, 1.0);
+        assert_eq!(f.warm_sibling(s, ids::RESNET50), None);
+        // Probing is read-only.
+        let used = f.used_mb(s);
+        f.warm_sibling(s, ids::YOLOV11);
+        assert_eq!(f.used_mb(s), used);
     }
 
     #[test]

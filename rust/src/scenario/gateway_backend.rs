@@ -34,8 +34,8 @@ use crate::cluster::EdgeCloud;
 use crate::profile::zoo;
 use crate::server::loadgen::{self, LoadgenConfig, Shot};
 use crate::server::{
-    admission::cat_index, DegradedExecutor, Executor, Gateway, GatewayConfig,
-    ProfileReplayExecutor,
+    admission::cat_index, DegradedExecutor, Executor, FaultyExecutor, Gateway,
+    GatewayConfig, ProfileReplayExecutor,
 };
 
 use super::report::{self, CumRow, ScenarioReport, Totals};
@@ -113,6 +113,30 @@ fn capacity_steps(spec: &ScenarioSpec, cloud: &EdgeCloud) -> Vec<(f64, f64)> {
         .collect()
 }
 
+/// Set/reset step schedules (virtual ms) for the spec's executor-fault
+/// windows: each `exec_fault_rate` / `exec_slowdown` event contributes a
+/// step at its start and a reset at its window end, mirroring the sim
+/// script's paired [`crate::sim::FaultAction`]s.
+fn exec_fault_steps(spec: &ScenarioSpec) -> (Vec<(f64, f64)>, Vec<(f64, f64)>) {
+    let dur = spec.duration_ms();
+    let mut fault = Vec::new();
+    let mut slow = Vec::new();
+    for ev in &spec.timeline {
+        match ev.kind {
+            ScenarioEvent::ExecFaultRate { rate, duration_ms } => {
+                fault.push((ev.at_ms, rate));
+                fault.push(((ev.at_ms + duration_ms).min(dur), 0.0));
+            }
+            ScenarioEvent::ExecSlowdown { factor, duration_ms } => {
+                slow.push((ev.at_ms, factor));
+                slow.push(((ev.at_ms + duration_ms).min(dur), 1.0));
+            }
+            _ => {}
+        }
+    }
+    (fault, slow)
+}
+
 impl ScenarioBackend for GatewayBackend {
     fn name(&self) -> &'static str {
         "gateway"
@@ -138,15 +162,40 @@ impl ScenarioBackend for GatewayBackend {
             Arc::new(ProfileReplayExecutor::new(table.clone(), ts)),
             steps,
         ));
-        let executor: Arc<dyn Executor> = Arc::clone(&degraded);
+        // executor-fault windows wrap the chain in a seeded FaultyExecutor
+        // (only when the spec scripts them: other scenarios keep the
+        // exact executor chain they always had)
+        let (fault_steps, slow_steps) = exec_fault_steps(spec);
+        let faulty = (!fault_steps.is_empty() || !slow_steps.is_empty()).then(|| {
+            Arc::new(FaultyExecutor::new(
+                Arc::clone(&degraded) as Arc<dyn Executor>,
+                fault_steps.iter().map(|&(t, v)| (t / ts, v)).collect(),
+                slow_steps.iter().map(|&(t, v)| (t / ts, v)).collect(),
+                spec.seed() ^ 0xFA17,
+            ))
+        });
+        let executor: Arc<dyn Executor> = match &faulty {
+            Some(f) => Arc::clone(f) as Arc<dyn Executor>,
+            None => Arc::clone(&degraded) as Arc<dyn Executor>,
+        };
         // Rides the default connection layer (the epoll reactor on
         // Linux), so the scenario matrix exercises the same path a
         // production gateway runs; the loadgen holds `concurrency`
         // keep-alive connections, so size the table with fd headroom.
+        // resilience rides the base sim config; its wall-clock knobs
+        // (cooldowns, backoffs) compress by the same time scale as the
+        // traffic so breaker windows line up with the virtual timeline
+        let mut resilience = spec.base.sim.resilience;
+        if resilience.enabled {
+            resilience.breaker_open_ms /= ts;
+            resilience.backoff_base_ms /= ts;
+            resilience.backoff_cap_ms /= ts;
+        }
         let gw_cfg = GatewayConfig {
             addr: "127.0.0.1:0".into(),
             max_connections: (self.concurrency * 4).max(64),
             shards: spec.shards,
+            resilience,
             ..Default::default()
         };
         let mut gw = Gateway::spawn(gw_cfg, table.clone(), executor)?;
@@ -189,6 +238,9 @@ impl ScenarioBackend for GatewayBackend {
         // re-anchor the degradation clock to the traffic's own start so
         // spawn/plan-build time does not shift the fault windows
         degraded.arm();
+        if let Some(f) = &faulty {
+            f.arm();
+        }
         let control = gw.shard_control();
         let t0 = Instant::now();
         let control_join = has_shard_events.then(|| {
@@ -214,6 +266,8 @@ impl ScenarioBackend for GatewayBackend {
         if let Some(j) = control_join {
             let _ = j.join();
         }
+        // snapshot resilience activity before tearing the gateway down
+        let rc = gw.resilience_counters().unwrap_or_default();
         gw.shutdown();
         // a shard kill drops that shard's open connections mid-request —
         // those surface as client transport errors by design, so only
@@ -267,6 +321,10 @@ impl ScenarioBackend for GatewayBackend {
                 (1.0 - lreport.credit / lreport.sent as f64).max(0.0)
             },
             metrics_fingerprint: None,
+            retries: rc.retries,
+            deadline_expired: rc.expired_total(),
+            breaker_trips: rc.breaker_trips,
+            breaker_short_circuits: rc.short_circuits,
             // the gateway's cache counters live on /metrics
             // (epara_cache_*), not in the wall-clock scenario report
             ..Default::default()
@@ -314,6 +372,30 @@ mod tests {
         // steps exist at every boundary
         let steps = capacity_steps(&s, &cloud);
         assert_eq!(steps.len(), s.boundaries().len());
+    }
+
+    #[test]
+    fn exec_fault_steps_pair_sets_with_resets() {
+        let s = spec(
+            r#"{
+          "name": "t",
+          "base": {"workload": {"rps": 10.0, "duration_s": 20.0}},
+          "timeline": [
+            {"at_ms": 2000, "event": "exec_fault_rate", "rate": 0.5,
+             "duration_ms": 3000},
+            {"at_ms": 8000, "event": "exec_slowdown", "factor": 4.0,
+             "duration_ms": 2000}
+          ]
+        }"#,
+        );
+        let (fault, slow) = exec_fault_steps(&s);
+        assert_eq!(fault, vec![(2000.0, 0.5), (5000.0, 0.0)]);
+        assert_eq!(slow, vec![(8000.0, 4.0), (10_000.0, 1.0)]);
+        // exec windows never touch the capacity-loss schedule
+        let cloud = s.base.cloud.clone();
+        for t in [0.0, 3000.0, 9000.0] {
+            assert!((factor_at(&s, &cloud, t) - 1.0).abs() < 1e-12);
+        }
     }
 
     #[test]

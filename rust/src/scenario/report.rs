@@ -38,6 +38,12 @@ pub struct PhaseReport {
     pub cache_misses: u64,
     pub cache_bytes_loaded_mb: f64,
     pub cache_bytes_saved_mb: f64,
+    /// Resilience activity inside the phase (all zero when the layer is
+    /// off or the run saw no faults).
+    pub retries: u64,
+    pub deadline_expired: u64,
+    pub breaker_trips: u64,
+    pub breaker_short_circuits: u64,
 }
 
 /// Recovery estimate for one `server_fail` (or, in
@@ -87,6 +93,11 @@ pub struct ScenarioReport {
     /// tracked by the sim backend whether or not the cache is on, so
     /// cache-aware and cache-blind runs compare directly.
     pub model_load_ms_total: f64,
+    /// Whole-run resilience totals (retry/deadline/breaker activity).
+    pub retries: u64,
+    pub deadline_expired: u64,
+    pub breaker_trips: u64,
+    pub breaker_short_circuits: u64,
 }
 
 /// Cumulative counters at a virtual instant (backend-provided rows; one
@@ -103,6 +114,11 @@ pub(crate) struct CumRow {
     pub cache_misses: u64,
     pub cache_bytes_loaded_mb: f64,
     pub cache_bytes_saved_mb: f64,
+    /// Cumulative resilience counters (zero when the layer is off).
+    pub retries: u64,
+    pub deadline_expired: u64,
+    pub breaker_trips: u64,
+    pub breaker_short_circuits: u64,
 }
 
 /// Whole-run totals a backend hands to [`assemble`].
@@ -120,6 +136,10 @@ pub(crate) struct Totals {
     pub cache_bytes_loaded_mb: f64,
     pub cache_bytes_saved_mb: f64,
     pub model_load_ms_total: f64,
+    pub retries: u64,
+    pub deadline_expired: u64,
+    pub breaker_trips: u64,
+    pub breaker_short_circuits: u64,
 }
 
 /// Build the report from boundary-aligned cumulative rows.
@@ -178,6 +198,14 @@ pub(crate) fn assemble(
             cache_bytes_saved_mb: (rb.cache_bytes_saved_mb
                 - ra.cache_bytes_saved_mb)
                 .max(0.0),
+            retries: rb.retries.saturating_sub(ra.retries),
+            deadline_expired: rb
+                .deadline_expired
+                .saturating_sub(ra.deadline_expired),
+            breaker_trips: rb.breaker_trips.saturating_sub(ra.breaker_trips),
+            breaker_short_circuits: rb
+                .breaker_short_circuits
+                .saturating_sub(ra.breaker_short_circuits),
         });
     }
 
@@ -272,6 +300,10 @@ pub(crate) fn assemble(
         cache_bytes_loaded_mb: totals.cache_bytes_loaded_mb,
         cache_bytes_saved_mb: totals.cache_bytes_saved_mb,
         model_load_ms_total: totals.model_load_ms_total,
+        retries: totals.retries,
+        deadline_expired: totals.deadline_expired,
+        breaker_trips: totals.breaker_trips,
+        breaker_short_circuits: totals.breaker_short_circuits,
     }
 }
 
@@ -281,6 +313,17 @@ impl ScenarioReport {
     /// fingerprints byte-for-byte.
     pub fn cache_active(&self) -> bool {
         self.cache_hits + self.cache_partial + self.cache_misses > 0
+    }
+
+    /// Whether the run recorded any resilience activity (retries,
+    /// deadline drops, breaker events).  Gates the resilience tokens so
+    /// resilience-off runs keep their historical fingerprints.
+    pub fn resilience_active(&self) -> bool {
+        self.retries
+            + self.deadline_expired
+            + self.breaker_trips
+            + self.breaker_short_circuits
+            > 0
     }
 
     /// Bit-exact run fingerprint for golden pinning (every f64 as raw
@@ -347,6 +390,28 @@ impl ScenarioReport {
                 self.model_load_ms_total.to_bits(),
             );
         }
+        // Resilience tokens, same stance: only when the run saw retry /
+        // deadline / breaker activity.
+        if self.resilience_active() {
+            for (i, p) in self.phases.iter().enumerate() {
+                let _ = write!(
+                    out,
+                    " r{i}={}:{}:{}:{}",
+                    p.retries,
+                    p.deadline_expired,
+                    p.breaker_trips,
+                    p.breaker_short_circuits,
+                );
+            }
+            let _ = write!(
+                out,
+                " restot={}:{}:{}:{}",
+                self.retries,
+                self.deadline_expired,
+                self.breaker_trips,
+                self.breaker_short_circuits,
+            );
+        }
         if let Some(fp) = &self.metrics_fingerprint {
             let _ = write!(out, " metrics[{fp}]");
         }
@@ -376,6 +441,13 @@ impl ScenarioReport {
                         Json::num(p.cache_bytes_loaded_mb),
                     ),
                     ("cache_bytes_saved_mb", Json::num(p.cache_bytes_saved_mb)),
+                    ("retries", Json::num(p.retries as f64)),
+                    ("deadline_expired", Json::num(p.deadline_expired as f64)),
+                    ("breaker_trips", Json::num(p.breaker_trips as f64)),
+                    (
+                        "breaker_short_circuits",
+                        Json::num(p.breaker_short_circuits as f64),
+                    ),
                 ])
             })
             .collect();
@@ -428,6 +500,21 @@ impl ScenarioReport {
             ),
             ("model_load_ms_total", Json::num(self.model_load_ms_total)),
             (
+                "resilience",
+                Json::obj(vec![
+                    ("retries", Json::num(self.retries as f64)),
+                    (
+                        "deadline_expired",
+                        Json::num(self.deadline_expired as f64),
+                    ),
+                    ("breaker_trips", Json::num(self.breaker_trips as f64)),
+                    (
+                        "breaker_short_circuits",
+                        Json::num(self.breaker_short_circuits as f64),
+                    ),
+                ]),
+            ),
+            (
                 "metrics_fingerprint",
                 self.metrics_fingerprint
                     .clone()
@@ -477,6 +564,17 @@ impl ScenarioReport {
                 self.cache_bytes_loaded_mb,
                 self.cache_bytes_saved_mb,
                 self.model_load_ms_total,
+            );
+        }
+        if self.resilience_active() {
+            let _ = writeln!(
+                out,
+                "  resilience: retries={} expired={} breaker-trips={} \
+                 short-circuits={}",
+                self.retries,
+                self.deadline_expired,
+                self.breaker_trips,
+                self.breaker_short_circuits,
             );
         }
         let rows = self
@@ -670,6 +768,49 @@ mod tests {
             550.0
         );
         assert!(on.human().contains("cache: hits=2"));
+    }
+
+    #[test]
+    fn resilience_tokens_fingerprint_only_when_active() {
+        // no resilience activity: historical fingerprint, byte-for-byte
+        let off = assemble(&spec(), "sim", &rows(), totals());
+        assert!(!off.resilience_active());
+        assert!(!off.fingerprint().contains(" r0="), "{}", off.fingerprint());
+        assert!(!off.fingerprint().contains("restot="));
+        assert!(!off.human().contains("resilience:"));
+        // with activity: per-phase tokens + totals appear, sliced by phase
+        let mut res_rows = rows();
+        for r in res_rows.iter_mut() {
+            if r.at_ms > 4000.0 {
+                r.retries = 7;
+                r.deadline_expired = 2;
+                r.breaker_trips = 1;
+                r.breaker_short_circuits = 3;
+            }
+        }
+        let mut t = totals();
+        t.retries = 7;
+        t.deadline_expired = 2;
+        t.breaker_trips = 1;
+        t.breaker_short_circuits = 3;
+        let on = assemble(&spec(), "sim", &res_rows, t);
+        assert!(on.resilience_active());
+        let fp = on.fingerprint();
+        assert!(fp.contains(" r0=0:0:0:0"), "{fp}");
+        assert!(fp.contains(" r1=7:2:1:3"), "fault phase holds the events: {fp}");
+        assert!(fp.contains(" restot=7:2:1:3"), "{fp}");
+        // fault-phase slice picked the deltas up
+        assert_eq!(on.phases[1].retries, 7);
+        assert_eq!(on.phases[1].breaker_trips, 1);
+        // JSON carries the resilience object
+        let j = parse(&on.to_json().to_string()).unwrap();
+        let r = j.get("resilience").unwrap();
+        assert_eq!(r.get("retries").unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(
+            r.get("breaker_short_circuits").unwrap().as_f64().unwrap(),
+            3.0
+        );
+        assert!(on.human().contains("resilience: retries=7"));
     }
 
     #[test]

@@ -49,6 +49,10 @@ impl ScenarioBackend for SimBackend {
                 cache_misses: s.cache_misses,
                 cache_bytes_loaded_mb: s.cache_bytes_loaded_mb,
                 cache_bytes_saved_mb: s.cache_bytes_saved_mb,
+                retries: s.retries,
+                deadline_expired: s.deadline_expired,
+                breaker_trips: s.breaker_trips,
+                breaker_short_circuits: s.breaker_short_circuits,
             })
             .collect();
         let m = sim.take_metrics();
@@ -69,6 +73,10 @@ impl ScenarioBackend for SimBackend {
             cache_bytes_loaded_mb: m.cache_bytes_loaded_mb,
             cache_bytes_saved_mb: m.cache_bytes_saved_mb,
             model_load_ms_total: m.model_load_ms_total,
+            retries: m.retries,
+            deadline_expired: m.deadline_expired,
+            breaker_trips: m.breaker_trips,
+            breaker_short_circuits: m.breaker_short_circuits,
         };
         Ok(report::assemble(spec, "sim", &rows, totals))
     }

@@ -56,6 +56,12 @@
 //!   around it via [`crate::server::ShardControl`]; sim: no connection
 //!   layer exists, so these only checkpoint the metrics at the
 //!   boundary — the floor measures the gateway run).
+//! * `exec_fault_rate` — executions fail with probability `rate` for
+//!   `duration_ms` (sim: seeded fault stream; gateway:
+//!   [`crate::server::FaultyExecutor`]).  Pairs with the resilience
+//!   layer's retries/breakers when the base enables them.
+//! * `exec_slowdown` — execution times multiply by `factor` for
+//!   `duration_ms` (backend brown-out; drives deadline expiries).
 
 use anyhow::{anyhow, bail, Result};
 
@@ -76,6 +82,12 @@ pub enum ScenarioEvent {
     CategoryShift { mix: Mix, factor: f64, duration_ms: f64 },
     ShardFail { shard: u32 },
     ShardRecover { shard: u32 },
+    /// Executor fault window: executions fail with probability `rate`
+    /// for `duration_ms` (sim: seeded draw; gateway: FaultyExecutor).
+    ExecFaultRate { rate: f64, duration_ms: f64 },
+    /// Executor brown-out: service times multiply by `factor` for
+    /// `duration_ms`.
+    ExecSlowdown { factor: f64, duration_ms: f64 },
 }
 
 impl ScenarioEvent {
@@ -91,6 +103,8 @@ impl ScenarioEvent {
             ScenarioEvent::CategoryShift { .. } => "category_shift",
             ScenarioEvent::ShardFail { .. } => "shard_fail",
             ScenarioEvent::ShardRecover { .. } => "shard_recover",
+            ScenarioEvent::ExecFaultRate { .. } => "exec_fault_rate",
+            ScenarioEvent::ExecSlowdown { .. } => "exec_slowdown",
         }
     }
 
@@ -99,7 +113,9 @@ impl ScenarioEvent {
         match self {
             ScenarioEvent::RpsSurge { duration_ms, .. }
             | ScenarioEvent::LatencySkew { duration_ms, .. }
-            | ScenarioEvent::CategoryShift { duration_ms, .. } => Some(*duration_ms),
+            | ScenarioEvent::CategoryShift { duration_ms, .. }
+            | ScenarioEvent::ExecFaultRate { duration_ms, .. }
+            | ScenarioEvent::ExecSlowdown { duration_ms, .. } => Some(*duration_ms),
             _ => None,
         }
     }
@@ -291,6 +307,20 @@ impl ScenarioSpec {
                 ScenarioEvent::ShardFail { .. } | ScenarioEvent::ShardRecover { .. } => {
                     out.push((ev.at_ms, FaultAction::Checkpoint));
                 }
+                ScenarioEvent::ExecFaultRate { rate, duration_ms } => {
+                    out.push((ev.at_ms, FaultAction::ExecFaultRate { rate }));
+                    out.push((
+                        (ev.at_ms + duration_ms).min(dur),
+                        FaultAction::ExecFaultRate { rate: 0.0 },
+                    ));
+                }
+                ScenarioEvent::ExecSlowdown { factor, duration_ms } => {
+                    out.push((ev.at_ms, FaultAction::ExecSlowdown { factor }));
+                    out.push((
+                        (ev.at_ms + duration_ms).min(dur),
+                        FaultAction::ExecSlowdown { factor: 1.0 },
+                    ));
+                }
             }
         }
         out
@@ -429,10 +459,25 @@ fn parse_event(
         }
         "shard_fail" => ScenarioEvent::ShardFail { shard: shard()? },
         "shard_recover" => ScenarioEvent::ShardRecover { shard: shard()? },
+        "exec_fault_rate" => {
+            let rate = e
+                .get("rate")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("timeline[{i}]: 'exec_fault_rate' needs 'rate'"))?;
+            if !(rate > 0.0 && rate <= 1.0) {
+                bail!("timeline[{i}]: 'rate' must be in (0, 1] (got {rate})");
+            }
+            ScenarioEvent::ExecFaultRate { rate, duration_ms: window()? }
+        }
+        "exec_slowdown" => ScenarioEvent::ExecSlowdown {
+            factor: factor(2.0)?,
+            duration_ms: window()?,
+        },
         other => bail!(
             "timeline[{i}]: unknown event '{other}' (known: server_fail, \
              server_recover, device_join, device_leave, rps_surge, \
-             latency_skew, category_shift, shard_fail, shard_recover)"
+             latency_skew, category_shift, shard_fail, shard_recover, \
+             exec_fault_rate, exec_slowdown)"
         ),
     };
     Ok(TimelineEvent { at_ms, kind })
@@ -564,6 +609,74 @@ mod tests {
             .all(|(_, a)| *a == FaultAction::Checkpoint));
         // and no trace overlay is generated
         assert!(s.overlays().is_empty());
+    }
+
+    #[test]
+    fn exec_fault_events_parse_and_pair_resets() {
+        let s = spec(
+            r#"{
+          "name": "t",
+          "base": {"workload": {"rps": 10.0, "duration_s": 10.0}},
+          "timeline": [
+            {"at_ms": 1000, "event": "exec_fault_rate", "rate": 0.4,
+             "duration_ms": 3000},
+            {"at_ms": 6000, "event": "exec_slowdown", "factor": 3.0,
+             "duration_ms": 2000}
+          ]
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(
+            s.timeline[0].kind,
+            ScenarioEvent::ExecFaultRate { rate: 0.4, duration_ms: 3000.0 }
+        );
+        assert_eq!(s.timeline[0].kind.name(), "exec_fault_rate");
+        assert_eq!(s.timeline[1].kind.window_ms(), Some(2000.0));
+        // the sim script sets the knob at the event and resets it at the
+        // window end
+        let script = s.sim_script();
+        assert!(script.contains(&(1000.0, FaultAction::ExecFaultRate { rate: 0.4 })));
+        assert!(script.contains(&(4000.0, FaultAction::ExecFaultRate { rate: 0.0 })));
+        assert!(script.contains(&(6000.0, FaultAction::ExecSlowdown { factor: 3.0 })));
+        assert!(script.contains(&(8000.0, FaultAction::ExecSlowdown { factor: 1.0 })));
+        // window ends are phase boundaries
+        let b = s.boundaries();
+        for t in [1000.0, 4000.0, 6000.0, 8000.0] {
+            assert!(b.iter().any(|x| (x - t).abs() < 1e-9), "{t} in {b:?}");
+        }
+        // fault windows are executor-side: no trace overlay
+        assert!(s.overlays().is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_exec_fault_events() {
+        // rate out of range
+        assert!(spec(
+            r#"{"name":"t","base":{},
+                "timeline":[{"at_ms":1,"event":"exec_fault_rate","rate":1.5,
+                             "duration_ms":100}]}"#
+        )
+        .is_err());
+        // missing rate
+        assert!(spec(
+            r#"{"name":"t","base":{},
+                "timeline":[{"at_ms":1,"event":"exec_fault_rate",
+                             "duration_ms":100}]}"#
+        )
+        .is_err());
+        // missing window
+        assert!(spec(
+            r#"{"name":"t","base":{},
+                "timeline":[{"at_ms":1,"event":"exec_fault_rate","rate":0.5}]}"#
+        )
+        .is_err());
+        // non-positive slowdown factor
+        assert!(spec(
+            r#"{"name":"t","base":{},
+                "timeline":[{"at_ms":1,"event":"exec_slowdown","factor":0,
+                             "duration_ms":100}]}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -28,6 +28,7 @@ use std::time::{Duration, Instant};
 use crate::core::{Sensitivity, ServiceId, TaskCategory};
 
 use super::executor::{ExecRequest, Executor};
+use super::resilience::{self, Resilience};
 
 /// Admission-tier knobs.
 #[derive(Clone, Copy, Debug)]
@@ -88,7 +89,37 @@ pub struct AdmitOutcome {
 pub enum Decision {
     Served(AdmitOutcome),
     Shed(ShedReason),
+    /// Deadline budget exhausted at the named pipeline stage (one of
+    /// [`resilience::STAGE_LABELS`]) before execution completed — the
+    /// router answers a fast 504 instead of burning lane time.
+    Expired(&'static str),
     Failed(anyhow::Error),
+}
+
+/// Resilience context threaded through [`Admission::submit_with`]: the
+/// process-wide resilience state plus this request's absolute deadline.
+/// Only built when resilience is enabled — `submit` passes `None` and
+/// takes none of the deadline/retry branches.
+pub struct ResilienceCtx<'a> {
+    pub res: &'a Resilience,
+    /// SLO-derived absolute deadline; every stage drops the request once
+    /// it has passed.
+    pub deadline: Instant,
+    /// Latency-critical requests get at most one hedged retry attempt;
+    /// frequency traffic may retry up to the configured cap.
+    pub latency: bool,
+}
+
+impl ResilienceCtx<'_> {
+    fn expired_now(&self) -> bool {
+        Instant::now() >= self.deadline
+    }
+
+    /// Count the expiry and name the stage for the 504 detail.
+    fn expire(&self, stage: usize) -> Decision {
+        self.res.note_expired(stage);
+        Decision::Expired(resilience::STAGE_LABELS[stage])
+    }
 }
 
 fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
@@ -130,7 +161,16 @@ struct CategoryLane {
     lanes: Lanes,
 }
 
-type BatchReply = std::result::Result<AdmitOutcome, String>;
+/// How a batched request failed without being served.
+#[derive(Clone, Debug)]
+enum BatchFail {
+    /// Deadline budget gone while parked in the batching window → 504.
+    Expired,
+    /// Batch execution failed terminally → 500.
+    Error(String),
+}
+
+type BatchReply = std::result::Result<AdmitOutcome, BatchFail>;
 
 /// Per-service batch collection point (frequency-sensitive traffic).
 struct Batcher {
@@ -140,7 +180,8 @@ struct Batcher {
 
 #[derive(Default)]
 struct BatchState {
-    entries: Vec<(ExecRequest, mpsc::Sender<BatchReply>)>,
+    /// (request, deadline if resilience is on, reply channel).
+    entries: Vec<(ExecRequest, Option<Instant>, mpsc::Sender<BatchReply>)>,
     /// A leader is currently collecting this window.
     collecting: bool,
 }
@@ -179,6 +220,12 @@ impl Admission {
         [0, 1, 2, 3].map(|i| self.cats[i].depth.load(Ordering::Relaxed))
     }
 
+    /// Batching-window length (ms) — also the natural client back-off
+    /// unit the router advertises in `Retry-After`.
+    pub fn window_ms(&self) -> u64 {
+        self.cfg.window_ms
+    }
+
     /// Requests currently parked in `service`'s batching window (the
     /// collecting leader included).  Observability hook: lets tests (and
     /// future metrics) sequence arrivals into a window deterministically
@@ -197,6 +244,21 @@ impl Admission {
         req: ExecRequest,
         slo_ms: f64,
         executor: &dyn Executor,
+    ) -> Decision {
+        self.submit_with(category, req, slo_ms, executor, None)
+    }
+
+    /// [`Admission::submit`] with an optional resilience context: the
+    /// request carries an SLO-derived deadline checked at every stage
+    /// (queue entry, batching window, lane wait, execution), and
+    /// transient executor failures retry under the global retry budget.
+    pub fn submit_with(
+        &self,
+        category: TaskCategory,
+        req: ExecRequest,
+        slo_ms: f64,
+        executor: &dyn Executor,
+        ctx: Option<&ResilienceCtx<'_>>,
     ) -> Decision {
         let lane = &self.cats[cat_index(category)];
 
@@ -222,31 +284,91 @@ impl Admission {
             lane.depth.fetch_sub(1, Ordering::SeqCst);
             return Decision::Shed(ShedReason::SloBudget);
         }
+        // Queue-stage deadline: the budget can already be gone by the
+        // time admission control runs (a saturated worker pool delays
+        // the submitting thread itself).
+        if let Some(c) = ctx {
+            if c.expired_now() {
+                lane.depth.fetch_sub(1, Ordering::SeqCst);
+                return c.expire(resilience::STAGE_QUEUE);
+            }
+        }
 
         let decision = match category.sensitivity() {
-            Sensitivity::Latency => self.run_direct(lane, req, executor),
-            Sensitivity::Frequency => self.run_batched(lane, req, executor),
+            Sensitivity::Latency => self.run_direct(lane, req, executor, ctx),
+            Sensitivity::Frequency => self.run_batched(lane, req, executor, ctx),
         };
         lane.depth.fetch_sub(1, Ordering::SeqCst);
         decision
     }
 
-    /// Latency path: BS = 1, straight to an execution lane.
-    fn run_direct(&self, lane: &CategoryLane, req: ExecRequest, ex: &dyn Executor) -> Decision {
+    /// Latency path: BS = 1, straight to an execution lane.  With a
+    /// resilience context, the lane wait re-checks the deadline and a
+    /// transient failure earns at most one hedged retry (latency) or
+    /// `max_retries` (when a frequency-shaped request rides this path),
+    /// each paid for by the global retry budget.
+    fn run_direct(
+        &self,
+        lane: &CategoryLane,
+        req: ExecRequest,
+        ex: &dyn Executor,
+        ctx: Option<&ResilienceCtx<'_>>,
+    ) -> Decision {
         lane.lanes.acquire();
-        let result = ex.execute(req.service, std::slice::from_ref(&req));
-        lane.lanes.release();
-        match result {
-            Ok(out) => Decision::Served(AdmitOutcome {
-                batch_latency_ms: out.batch_latency_ms,
-                batch_size: 1,
-            }),
-            Err(e) => Decision::Failed(e),
+        // Lane-stage deadline: the wait for a free lane may have
+        // consumed what was left of the budget.
+        if let Some(c) = ctx {
+            if c.expired_now() {
+                lane.lanes.release();
+                return c.expire(resilience::STAGE_LANE);
+            }
         }
+        let mut prev_backoff_ms = 0.0;
+        let mut attempts: u32 = 0;
+        let decision = loop {
+            match ex.execute(req.service, std::slice::from_ref(&req)) {
+                Ok(out) => {
+                    break Decision::Served(AdmitOutcome {
+                        batch_latency_ms: out.batch_latency_ms,
+                        batch_size: 1,
+                    })
+                }
+                Err(e) => {
+                    attempts += 1;
+                    let Some(c) = ctx else { break Decision::Failed(e) };
+                    let max = if c.latency { 1 } else { c.res.cfg().max_retries };
+                    if attempts > max {
+                        break Decision::Failed(e);
+                    }
+                    if c.expired_now() {
+                        break c.expire(resilience::STAGE_EXEC);
+                    }
+                    match c.res.try_retry(prev_backoff_ms) {
+                        Some(backoff_ms)
+                            if c.deadline
+                                > Instant::now()
+                                    + Duration::from_secs_f64(backoff_ms / 1000.0) =>
+                        {
+                            std::thread::sleep(Duration::from_secs_f64(backoff_ms / 1000.0));
+                            prev_backoff_ms = backoff_ms;
+                        }
+                        _ => break Decision::Failed(e),
+                    }
+                }
+            }
+        };
+        lane.lanes.release();
+        decision
     }
 
     /// Frequency path: leader/follower batch collection per service.
-    fn run_batched(&self, lane: &CategoryLane, req: ExecRequest, ex: &dyn Executor) -> Decision {
+    fn run_batched(
+        &self,
+        lane: &CategoryLane,
+        req: ExecRequest,
+        ex: &dyn Executor,
+        ctx: Option<&ResilienceCtx<'_>>,
+    ) -> Decision {
         let batcher = {
             let mut map = lock_unpoisoned(&self.batchers);
             Arc::clone(map.entry(req.service).or_insert_with(|| {
@@ -257,7 +379,7 @@ impl Admission {
         let (tx, rx) = mpsc::channel::<BatchReply>();
         let is_leader = {
             let mut st = lock_unpoisoned(&batcher.state);
-            st.entries.push((req, tx));
+            st.entries.push((req, ctx.map(|c| c.deadline), tx));
             if st.entries.len() >= self.cfg.max_batch {
                 batcher.cv.notify_all();
             }
@@ -270,13 +392,16 @@ impl Admission {
         };
 
         if is_leader {
-            self.lead_batch(lane, &batcher, req.service, ex);
+            self.lead_batch(lane, &batcher, req.service, ex, ctx);
         }
         // Everyone (leader included — it sent to its own channel) waits for
         // the batch verdict.
         match rx.recv() {
             Ok(Ok(out)) => Decision::Served(out),
-            Ok(Err(msg)) => Decision::Failed(anyhow::anyhow!(msg)),
+            Ok(Err(BatchFail::Expired)) => {
+                Decision::Expired(resilience::STAGE_LABELS[resilience::STAGE_WINDOW])
+            }
+            Ok(Err(BatchFail::Error(msg))) => Decision::Failed(anyhow::anyhow!(msg)),
             Err(_) => Decision::Failed(anyhow::anyhow!("batch leader disappeared")),
         }
     }
@@ -294,6 +419,7 @@ impl Admission {
         batcher: &Batcher,
         service: ServiceId,
         ex: &dyn Executor,
+        ctx: Option<&ResilienceCtx<'_>>,
     ) {
         loop {
             let deadline = Instant::now() + Duration::from_millis(self.cfg.window_ms);
@@ -312,7 +438,7 @@ impl Admission {
                 };
             }
             let take_n = st.entries.len().min(self.cfg.max_batch.max(1));
-            let entries: Vec<(ExecRequest, mpsc::Sender<BatchReply>)> =
+            let mut entries: Vec<(ExecRequest, Option<Instant>, mpsc::Sender<BatchReply>)> =
                 st.entries.drain(..take_n).collect();
             let more = !st.entries.is_empty();
             if !more {
@@ -321,9 +447,62 @@ impl Admission {
             }
             drop(st);
 
-            let reqs: Vec<ExecRequest> = entries.iter().map(|(r, _)| *r).collect();
+            // Window-stage deadline: requests whose budget expired while
+            // parked in the window answer 504 now instead of riding (and
+            // widening) a batch they can no longer profit from.
+            if let Some(c) = ctx {
+                let now = Instant::now();
+                entries.retain(|(_, dl, tx)| match dl {
+                    Some(d) if now >= *d => {
+                        c.res.note_expired(resilience::STAGE_WINDOW);
+                        let _ = tx.send(Err(BatchFail::Expired));
+                        false
+                    }
+                    _ => true,
+                });
+                if entries.is_empty() {
+                    if !more {
+                        return;
+                    }
+                    continue;
+                }
+            }
+
+            let reqs: Vec<ExecRequest> = entries.iter().map(|(r, _, _)| *r).collect();
             lane.lanes.acquire();
-            let result = ex.execute(service, &reqs);
+            // Frequency traffic re-queues on transient failure: the whole
+            // batch retries (one budget token per attempt) while every
+            // member's deadline still has room.
+            let mut prev_backoff_ms = 0.0;
+            let mut attempts: u32 = 0;
+            let result = loop {
+                match ex.execute(service, &reqs) {
+                    Ok(out) => break Ok(out),
+                    Err(e) => {
+                        attempts += 1;
+                        let Some(c) = ctx else { break Err(e) };
+                        if attempts > c.res.cfg().max_retries {
+                            break Err(e);
+                        }
+                        let now = Instant::now();
+                        let doomed = entries
+                            .iter()
+                            .any(|(_, dl, _)| dl.is_some_and(|d| now >= d));
+                        if doomed {
+                            break Err(e);
+                        }
+                        match c.res.try_retry(prev_backoff_ms) {
+                            Some(backoff_ms) => {
+                                std::thread::sleep(Duration::from_secs_f64(
+                                    backoff_ms / 1000.0,
+                                ));
+                                prev_backoff_ms = backoff_ms;
+                            }
+                            None => break Err(e),
+                        }
+                    }
+                }
+            };
             lane.lanes.release();
 
             let reply: BatchReply = match result {
@@ -331,9 +510,9 @@ impl Admission {
                     batch_latency_ms: out.batch_latency_ms,
                     batch_size: reqs.len(),
                 }),
-                Err(e) => Err(format!("batch execution failed: {e:#}")),
+                Err(e) => Err(BatchFail::Error(format!("batch execution failed: {e:#}"))),
             };
-            for (_, tx) in entries {
+            for (_, _, tx) in entries {
                 let _ = tx.send(reply.clone());
             }
             if !more {
@@ -471,5 +650,117 @@ mod tests {
     fn shed_reason_labels() {
         assert_eq!(ShedReason::QueueFull.as_str(), "queue_full");
         assert_eq!(ShedReason::SloBudget.as_str(), "slo_budget");
+    }
+
+    /// Fails the first `fail_first` executions, then succeeds.
+    struct FlakyExecutor {
+        expected: f64,
+        fail_first: u32,
+        calls: AtomicU32,
+    }
+
+    impl Executor for FlakyExecutor {
+        fn name(&self) -> &'static str {
+            "flaky-mock"
+        }
+
+        fn expected_ms(&self, _s: ServiceId, _bs: u32, _f: u32) -> f64 {
+            self.expected
+        }
+
+        fn execute(&self, _s: ServiceId, _batch: &[ExecRequest]) -> crate::Result<ExecOutcome> {
+            let n = self.calls.fetch_add(1, Ordering::SeqCst);
+            anyhow::ensure!(n >= self.fail_first, "injected exec fault");
+            Ok(ExecOutcome { batch_latency_ms: self.expected })
+        }
+    }
+
+    fn res_enabled() -> Resilience {
+        Resilience::new(resilience::ResilienceConfig {
+            enabled: true,
+            backoff_base_ms: 0.1,
+            backoff_cap_ms: 0.5,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn expired_deadline_drops_at_queue_stage_without_executing() {
+        let adm = Admission::new(AdmissionConfig::default());
+        let ex = MockExecutor::new(1.0);
+        let res = res_enabled();
+        let ctx = ResilienceCtx {
+            res: &res,
+            deadline: Instant::now() - Duration::from_millis(1),
+            latency: true,
+        };
+        let d = adm.submit_with(TaskCategory::LatencySingle, req(1), 1000.0, &ex, Some(&ctx));
+        assert!(matches!(d, Decision::Expired("queue")), "{d:?}");
+        assert_eq!(ex.calls.load(Ordering::SeqCst), 0, "doomed work must not execute");
+        assert_eq!(res.counters().expired[resilience::STAGE_QUEUE], 1);
+        assert_eq!(adm.depths(), [0, 0, 0, 0], "depth reservation rolled back");
+    }
+
+    #[test]
+    fn latency_transient_failure_gets_one_hedged_retry() {
+        let adm = Admission::new(AdmissionConfig::default());
+        let res = res_enabled();
+        let far = Instant::now() + Duration::from_secs(60);
+        // one transient fault: the hedge saves the request
+        let ex = FlakyExecutor { expected: 1.0, fail_first: 1, calls: AtomicU32::new(0) };
+        let ctx = ResilienceCtx { res: &res, deadline: far, latency: true };
+        let d = adm.submit_with(TaskCategory::LatencySingle, req(1), 1000.0, &ex, Some(&ctx));
+        assert!(matches!(d, Decision::Served(out) if out.batch_size == 1), "{d:?}");
+        assert_eq!(ex.calls.load(Ordering::SeqCst), 2);
+        assert_eq!(res.counters().retries, 1);
+        // two faults in a row exceed the single hedge: terminal failure
+        let ex2 = FlakyExecutor { expected: 1.0, fail_first: 2, calls: AtomicU32::new(0) };
+        let d2 = adm.submit_with(TaskCategory::LatencySingle, req(1), 1000.0, &ex2, Some(&ctx));
+        assert!(matches!(d2, Decision::Failed(_)), "{d2:?}");
+        assert_eq!(ex2.calls.load(Ordering::SeqCst), 2, "exactly one hedged attempt");
+    }
+
+    #[test]
+    fn frequency_batch_retries_under_the_budget() {
+        let adm = Admission::new(AdmissionConfig {
+            window_ms: 5,
+            ..AdmissionConfig::default()
+        });
+        let res = res_enabled();
+        let ctx = ResilienceCtx {
+            res: &res,
+            deadline: Instant::now() + Duration::from_secs(60),
+            latency: false,
+        };
+        // default max_retries = 2: two faults then success is survivable
+        let ex = FlakyExecutor { expected: 0.1, fail_first: 2, calls: AtomicU32::new(0) };
+        let d =
+            adm.submit_with(TaskCategory::FrequencySingle, req(104), 10_000.0, &ex, Some(&ctx));
+        assert!(matches!(d, Decision::Served(_)), "{d:?}");
+        assert_eq!(ex.calls.load(Ordering::SeqCst), 3);
+        assert_eq!(res.counters().retries, 2);
+    }
+
+    #[test]
+    fn parked_window_entry_expires_with_a_504_verdict() {
+        let adm = Admission::new(AdmissionConfig {
+            window_ms: 40,
+            ..AdmissionConfig::default()
+        });
+        let ex = MockExecutor::new(0.1);
+        let res = res_enabled();
+        // the deadline lands inside the 40 ms batching window, so the
+        // leader finds the entry expired at drain time
+        let ctx = ResilienceCtx {
+            res: &res,
+            deadline: Instant::now() + Duration::from_millis(5),
+            latency: false,
+        };
+        let d =
+            adm.submit_with(TaskCategory::FrequencySingle, req(104), 10_000.0, &ex, Some(&ctx));
+        assert!(matches!(d, Decision::Expired("window")), "{d:?}");
+        assert_eq!(ex.calls.load(Ordering::SeqCst), 0, "expired entries never execute");
+        assert_eq!(res.counters().expired[resilience::STAGE_WINDOW], 1);
+        assert_eq!(adm.depths(), [0, 0, 0, 0]);
     }
 }

@@ -164,6 +164,127 @@ impl Executor for DegradedExecutor {
     }
 }
 
+/// Seeded execution-fault injection for scenario/chaos runs: a sorted
+/// step schedule of injected error rates (wall-clock ms since arming →
+/// probability) plus an optional slowdown schedule, applied on top of
+/// any inner backend.
+///
+/// Three injection modes (ISSUE 8 error/slow/stall):
+/// * **error** — with the scheduled probability, `execute` fails with
+///   `"injected exec fault"` *before* touching the inner backend (a
+///   transient fault the resilience layer may retry);
+/// * **slow** — the slowdown schedule stretches the inner call exactly
+///   like [`DegradedExecutor`] (factors < 1 clamp to 1);
+/// * **stall** — `stall_ms > 0` makes every injected error a *slow*
+///   failure: the lane is held for that long before the error returns,
+///   modeling a device that answers late with garbage.
+///
+/// Draws come from one SplitMix64 stream seeded at construction, so a
+/// fixed seed yields the same fault pattern per execution sequence.
+pub struct FaultyExecutor {
+    inner: std::sync::Arc<dyn Executor>,
+    /// (wall ms since the armed instant, error probability) steps, sorted.
+    fault_steps: Vec<(f64, f64)>,
+    /// (wall ms since the armed instant, slowdown factor) steps, sorted.
+    slow_steps: Vec<(f64, f64)>,
+    /// Lane-hold before each injected error returns (the stall mode).
+    stall_ms: f64,
+    rng: std::sync::Mutex<crate::util::Rng>,
+    started: std::sync::Mutex<std::time::Instant>,
+}
+
+impl FaultyExecutor {
+    pub fn new(
+        inner: std::sync::Arc<dyn Executor>,
+        mut fault_steps: Vec<(f64, f64)>,
+        mut slow_steps: Vec<(f64, f64)>,
+        seed: u64,
+    ) -> Self {
+        fault_steps.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        slow_steps.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        FaultyExecutor {
+            inner,
+            fault_steps,
+            slow_steps,
+            stall_ms: 0.0,
+            rng: std::sync::Mutex::new(crate::util::Rng::new(seed)),
+            started: std::sync::Mutex::new(std::time::Instant::now()),
+        }
+    }
+
+    /// Make injected errors stall the lane for `ms` before returning.
+    pub fn with_stall_ms(mut self, ms: f64) -> Self {
+        self.stall_ms = ms.max(0.0);
+        self
+    }
+
+    /// Re-anchor the schedule clock to *now* (call right before load
+    /// starts, same contract as [`DegradedExecutor::arm`]).
+    pub fn arm(&self) {
+        *self.started.lock().unwrap_or_else(|e| e.into_inner()) =
+            std::time::Instant::now();
+    }
+
+    fn elapsed_ms(&self) -> f64 {
+        let started = *self.started.lock().unwrap_or_else(|e| e.into_inner());
+        started.elapsed().as_secs_f64() * 1000.0
+    }
+
+    fn step_at(steps: &[(f64, f64)], t: f64, default: f64) -> f64 {
+        steps
+            .iter()
+            .rev()
+            .find(|(at, _)| t >= *at)
+            .map(|(_, v)| *v)
+            .unwrap_or(default)
+    }
+
+    fn fault_rate_now(&self) -> f64 {
+        Self::step_at(&self.fault_steps, self.elapsed_ms(), 0.0).clamp(0.0, 1.0)
+    }
+
+    fn slow_factor_now(&self) -> f64 {
+        Self::step_at(&self.slow_steps, self.elapsed_ms(), 1.0).max(1.0)
+    }
+}
+
+impl Executor for FaultyExecutor {
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn expected_ms(&self, service: ServiceId, bs: u32, frames: u32) -> f64 {
+        self.inner.expected_ms(service, bs, frames) * self.slow_factor_now()
+    }
+
+    fn execute(&self, service: ServiceId, batch: &[ExecRequest]) -> crate::Result<ExecOutcome> {
+        let rate = self.fault_rate_now();
+        if rate > 0.0 {
+            let injected = self
+                .rng
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .chance(rate);
+            if injected {
+                if self.stall_ms > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        self.stall_ms / 1000.0,
+                    ));
+                }
+                anyhow::bail!("injected exec fault");
+            }
+        }
+        let f = self.slow_factor_now();
+        let out = self.inner.execute(service, batch)?;
+        if f > 1.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                out.batch_latency_ms * (f - 1.0) / 1000.0,
+            ));
+        }
+        Ok(ExecOutcome { batch_latency_ms: out.batch_latency_ms * f })
+    }
+}
+
 #[cfg(feature = "pjrt")]
 pub use pjrt_bridge::CoordinatorExecutor;
 
@@ -297,6 +418,71 @@ mod tests {
         let clean = DegradedExecutor::new(inner as Arc<dyn Executor>, Vec::new());
         assert!((clean.expected_ms(ids::RESNET50, 1, 1) - base).abs() < 1e-12);
         assert_eq!(clean.name(), "degraded");
+    }
+
+    #[test]
+    fn faulty_executor_injects_deterministically_by_schedule() {
+        use std::sync::Arc;
+        let inner = Arc::new(ProfileReplayExecutor::new(zoo::paper_zoo(), 1e6));
+        let batch = [ExecRequest { service: ids::RESNET50, frames: 1 }];
+        // rate 1.0 from t=0: every execution fails without touching the
+        // inner backend; expected_ms still reflects only the slow factor
+        let ex = FaultyExecutor::new(
+            Arc::clone(&inner) as Arc<dyn Executor>,
+            vec![(0.0, 1.0)],
+            vec![(0.0, 2.0)],
+            7,
+        );
+        ex.arm();
+        let err = ex.execute(ids::RESNET50, &batch).unwrap_err();
+        assert!(err.to_string().contains("injected exec fault"));
+        let base = inner.expected_ms(ids::RESNET50, 1, 1);
+        assert!((ex.expected_ms(ids::RESNET50, 1, 1) - base * 2.0).abs() < 1e-12);
+        // rate 0.0: transparent pass-through (and the rng is not drawn,
+        // so schedules that never fire cannot perturb the stream)
+        let clean = FaultyExecutor::new(
+            Arc::clone(&inner) as Arc<dyn Executor>,
+            Vec::new(),
+            Vec::new(),
+            7,
+        );
+        let out = clean.execute(ids::RESNET50, &batch).unwrap();
+        assert!((out.batch_latency_ms - base).abs() < 1e-12);
+        assert_eq!(clean.name(), "faulty");
+        // a fractional rate at a fixed seed yields a reproducible pattern
+        let pattern = |seed| {
+            let ex = FaultyExecutor::new(
+                Arc::clone(&inner) as Arc<dyn Executor>,
+                vec![(0.0, 0.5)],
+                Vec::new(),
+                seed,
+            );
+            (0..32)
+                .map(|_| ex.execute(ids::RESNET50, &batch).is_err())
+                .collect::<Vec<bool>>()
+        };
+        assert_eq!(pattern(42), pattern(42));
+        assert!(pattern(42).iter().any(|&b| b), "rate 0.5 must fault sometimes");
+        assert!(pattern(42).iter().any(|&b| !b), "rate 0.5 must pass sometimes");
+    }
+
+    #[test]
+    fn faulty_executor_stall_holds_the_lane_before_failing() {
+        use std::sync::Arc;
+        let inner = Arc::new(ProfileReplayExecutor::new(zoo::paper_zoo(), 1e6));
+        let ex = FaultyExecutor::new(
+            inner as Arc<dyn Executor>,
+            vec![(0.0, 1.0)],
+            Vec::new(),
+            3,
+        )
+        .with_stall_ms(20.0);
+        let t0 = std::time::Instant::now();
+        let err = ex
+            .execute(ids::RESNET50, &[ExecRequest { service: ids::RESNET50, frames: 1 }])
+            .unwrap_err();
+        assert!(err.to_string().contains("injected exec fault"));
+        assert!(t0.elapsed().as_secs_f64() >= 0.018, "stall must hold the lane");
     }
 
     #[test]

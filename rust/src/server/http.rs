@@ -352,6 +352,7 @@ pub fn reason(status: u16) -> &'static str {
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Unknown",
     }
 }
@@ -362,6 +363,10 @@ pub struct HttpResponse {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Extra response headers (e.g. `Retry-After`), written between
+    /// content-length and connection; empty for almost every response,
+    /// which keeps the default framing byte-identical.
+    pub headers: Vec<(&'static str, String)>,
 }
 
 impl HttpResponse {
@@ -370,6 +375,7 @@ impl HttpResponse {
             status,
             content_type: "application/json",
             body: body.into_bytes(),
+            headers: Vec::new(),
         }
     }
 
@@ -378,7 +384,14 @@ impl HttpResponse {
             status,
             content_type: "text/plain; charset=utf-8",
             body: body.into().into_bytes(),
+            headers: Vec::new(),
         }
+    }
+
+    /// Attach an extra header (builder style).
+    pub fn with_header(mut self, name: &'static str, value: String) -> Self {
+        self.headers.push((name, value));
+        self
     }
 
     /// Serialize head + body into `out` (cleared first).  Writing into a
@@ -391,11 +404,18 @@ impl HttpResponse {
         // infallible); the head is formatted directly into `out`.
         let _ = write!(
             out,
-            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n",
             self.status,
             reason(self.status),
             self.content_type,
             self.body.len(),
+        );
+        for (name, value) in &self.headers {
+            let _ = write!(out, "{name}: {value}\r\n");
+        }
+        let _ = write!(
+            out,
+            "connection: {}\r\n\r\n",
             if keep_alive { "keep-alive" } else { "close" },
         );
         out.extend_from_slice(&self.body);
@@ -426,6 +446,15 @@ impl HttpResponse {
 /// Client-side: read one response (status + Content-Length body) — the
 /// load generator's half of the protocol.
 pub fn read_response<R: BufRead>(r: &mut R) -> Result<(u16, Vec<u8>), HttpError> {
+    let (status, _headers, body) = read_response_headers(r)?;
+    Ok((status, body))
+}
+
+/// Client-side: read one response, keeping the header pairs (names
+/// lowercased) — the load generator uses this to honor `Retry-After`.
+pub fn read_response_headers<R: BufRead>(
+    r: &mut R,
+) -> Result<(u16, Vec<(String, String)>, Vec<u8>), HttpError> {
     let mut budget = MAX_HEAD_BYTES;
     let mut started = false;
     let line = read_line(r, &mut budget, &mut started)?;
@@ -436,6 +465,7 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<(u16, Vec<u8>), HttpError>
             .map_err(|_| HttpError::BadRequest("unparseable status code"))?,
         _ => return Err(HttpError::BadRequest("malformed status line")),
     };
+    let mut headers: Vec<(String, String)> = Vec::new();
     let mut len = 0usize;
     loop {
         let line = read_line(r, &mut budget, &mut started)?;
@@ -449,6 +479,7 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<(u16, Vec<u8>), HttpError>
                     .parse()
                     .map_err(|_| HttpError::BadRequest("unparseable content-length"))?;
             }
+            headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
         }
     }
     if len > MAX_BODY_BYTES {
@@ -465,7 +496,7 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<(u16, Vec<u8>), HttpError>
             Err(e) => return Err(HttpError::Io(e)),
         }
     }
-    Ok((status, body))
+    Ok((status, headers, body))
 }
 
 #[cfg(test)]
@@ -584,6 +615,38 @@ mod tests {
             parse_buffer(wire.as_bytes()),
             BufferParse::Error(HttpError::BodyTooLarge)
         ));
+    }
+
+    #[test]
+    fn extra_headers_serialize_and_read_back() {
+        let resp = HttpResponse::json(503, "{\"error\":\"breaker_open\"}".into())
+            .with_header("retry-after", "0.250".into());
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire, false).unwrap();
+        let text = String::from_utf8(wire.clone()).unwrap();
+        // extras sit between content-length and connection
+        let ra = text.find("retry-after: 0.250\r\n").expect("header on the wire");
+        assert!(ra > text.find("content-length:").unwrap());
+        assert!(ra < text.find("connection:").unwrap());
+        let (status, headers, body) =
+            read_response_headers(&mut BufReader::new(&wire[..])).unwrap();
+        assert_eq!(status, 503);
+        assert_eq!(body, resp.body);
+        let got = headers.iter().find(|(k, _)| k == "retry-after").unwrap();
+        assert_eq!(got.1, "0.250");
+        // 504 has a real reason phrase (deadline-expired responses)
+        assert_eq!(reason(504), "Gateway Timeout");
+    }
+
+    #[test]
+    fn no_extra_headers_keeps_framing_byte_identical() {
+        // hand-built expected wire: the pre-headers-field framing
+        let resp = HttpResponse::json(200, "{}".into());
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire, true).unwrap();
+        let expected = b"HTTP/1.1 200 OK\r\ncontent-type: application/json\r\n\
+                         content-length: 2\r\nconnection: keep-alive\r\n\r\n{}";
+        assert_eq!(wire, expected.as_slice());
     }
 
     #[test]

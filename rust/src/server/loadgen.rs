@@ -159,6 +159,9 @@ pub struct ShotOutcome {
     pub status: u16,
     pub credit: f64,
     pub latency_ms: f64,
+    /// Server back-off hint from a `Retry-After` header (seconds; the
+    /// gateway sends the fractional form), 0 when absent.
+    pub retry_after_s: f64,
 }
 
 /// Draw the shot plan from the workload generator.
@@ -212,8 +215,12 @@ impl Client {
         Ok(self.conn.as_mut().expect("connection just established"))
     }
 
-    /// POST one inference request; returns (status, latency_ms, body).
-    fn infer(&mut self, shot: &Shot) -> std::io::Result<(u16, f64, Vec<u8>)> {
+    /// POST one inference request; returns (status, latency_ms, body,
+    /// Retry-After seconds when the server sent the header).
+    fn infer(
+        &mut self,
+        shot: &Shot,
+    ) -> std::io::Result<(u16, f64, Vec<u8>, Option<f64>)> {
         use std::io::Write;
         let body = format!(
             "{{\"service\":{},\"frames\":{}}}",
@@ -241,9 +248,14 @@ impl Client {
         stream.write_all(&wire)?;
         stream.flush()?;
         let mut reader = BufReader::new(stream.try_clone()?);
-        match http::read_response(&mut reader) {
-            Ok((status, resp_body)) => {
-                Ok((status, t0.elapsed().as_secs_f64() * 1000.0, resp_body))
+        match http::read_response_headers(&mut reader) {
+            Ok((status, headers, resp_body)) => {
+                let retry_after = headers
+                    .iter()
+                    .find(|(name, _)| name == "retry-after")
+                    .and_then(|(_, v)| v.parse::<f64>().ok())
+                    .filter(|s| s.is_finite() && *s >= 0.0);
+                Ok((status, t0.elapsed().as_secs_f64() * 1000.0, resp_body, retry_after))
             }
             Err(e) => {
                 // drop the (possibly desynchronized) connection
@@ -267,22 +279,30 @@ fn parse_credit(body: &[u8]) -> f64 {
 fn fire(client: &mut Client, shot: &Shot, report: &mut LoadReport) -> ShotOutcome {
     report.sent += 1;
     match client.infer(shot) {
-        Ok((status, latency_ms, body)) if (200..300).contains(&status) => {
+        Ok((status, latency_ms, body, _)) if (200..300).contains(&status) => {
             report.ok += 1;
             report.latency_ms.add(latency_ms);
             report.by_category[shot.category].0 += 1;
             let credit = parse_credit(&body);
             report.credit += credit;
-            ShotOutcome { status, credit, latency_ms }
+            ShotOutcome { status, credit, latency_ms, retry_after_s: 0.0 }
         }
-        Ok((429, _, _)) => {
+        Ok((429, _, _, retry_after)) => {
             report.shed += 1;
             report.by_category[shot.category].1 += 1;
-            ShotOutcome { status: 429, ..Default::default() }
+            ShotOutcome {
+                status: 429,
+                retry_after_s: retry_after.unwrap_or(0.0),
+                ..Default::default()
+            }
         }
-        Ok((status, _, _)) => {
+        Ok((status, _, _, retry_after)) => {
             report.http_errors += 1;
-            ShotOutcome { status, ..Default::default() }
+            ShotOutcome {
+                status,
+                retry_after_s: retry_after.unwrap_or(0.0),
+                ..Default::default()
+            }
         }
         Err(_) => {
             client.conn = None;
@@ -291,6 +311,10 @@ fn fire(client: &mut Client, shot: &Shot, report: &mut LoadReport) -> ShotOutcom
         }
     }
 }
+
+/// Cap on how long a closed-loop worker honors one `Retry-After` hint —
+/// a misconfigured (or hostile) header must not park the run.
+const MAX_HONORED_RETRY_AFTER: Duration = Duration::from_secs(2);
 
 /// Run the load against a gateway; blocks until every shot resolved.
 pub fn run(cfg: &LoadgenConfig, table: &ProfileTable, gpu_vram_mb: f64) -> LoadReport {
@@ -387,7 +411,17 @@ fn run_closed(cfg: &LoadgenConfig, shots: Vec<Shot>) -> LoadReport {
                         if i >= shots.len() {
                             break;
                         }
-                        let _ = fire(&mut client, &shots[i], &mut local);
+                        let out = fire(&mut client, &shots[i], &mut local);
+                        // closed loop honors server back-off: a 429/503
+                        // with Retry-After holds this worker's slot idle
+                        // for the advertised window instead of hammering
+                        // a gateway that just said "not yet"
+                        if out.retry_after_s > 0.0 {
+                            thread::sleep(
+                                Duration::from_secs_f64(out.retry_after_s)
+                                    .min(MAX_HONORED_RETRY_AFTER),
+                            );
+                        }
                     }
                     merge(&merged, local);
                 })
@@ -484,7 +518,8 @@ mod tests {
                         1 => http::HttpResponse::json(200, "{\"credit\":0.25}".into()),
                         2 => http::HttpResponse::json(200, "malformed {{ body".into()),
                         3 => http::HttpResponse::json(200, "{\"latency_ms\":5.0}".into()),
-                        4 => http::HttpResponse::json(429, "{\"error\":\"shed\"}".into()),
+                        4 => http::HttpResponse::json(429, "{\"error\":\"shed\"}".into())
+                            .with_header("retry-after", "0.040".into()),
                         5 => http::HttpResponse::json(408, "{\"error\":\"timeout\"}".into()),
                         _ => http::HttpResponse::json(200, "{\"credit\":\"x\"}".into()),
                     };
@@ -533,6 +568,38 @@ mod tests {
         assert_eq!(outcomes[3].credit, 0.0, "429 earns nothing");
         assert_eq!(outcomes[4].credit, 0.0, "408 earns nothing");
         assert!(outcomes[0].latency_ms > 0.0);
+        // the 429's Retry-After hint is parsed; plain responses report 0
+        assert!((outcomes[3].retry_after_s - 0.040).abs() < 1e-12);
+        assert_eq!(outcomes[0].retry_after_s, 0.0);
+    }
+
+    #[test]
+    fn closed_loop_honors_retry_after_backoff() {
+        let addr = spawn_stub();
+        // three shed responses, each advertising a 40 ms back-off: one
+        // closed-loop worker must spend >= ~120 ms honoring them
+        let shots: Vec<Shot> = (0..3)
+            .map(|_| Shot {
+                arrival_ms: 0.0,
+                service: ServiceId(4),
+                frames: 1,
+                category: 0,
+            })
+            .collect();
+        let cfg = LoadgenConfig {
+            addr: addr.to_string(),
+            closed_loop: true,
+            concurrency: 1,
+            timeout_ms: 5_000,
+            ..Default::default()
+        };
+        let report = run_closed(&cfg, shots);
+        assert_eq!(report.shed, 3);
+        assert!(
+            report.wall_ms >= 100.0,
+            "Retry-After must pace the closed loop (wall {} ms)",
+            report.wall_ms
+        );
     }
 
     #[test]

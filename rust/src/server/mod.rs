@@ -20,6 +20,8 @@
 //! * [`pool`] — fixed worker thread pool (request execution);
 //! * [`admission`] — category queues, SLO-budget shedding, BS batching;
 //! * [`executor`] — backend trait + profile-replay / coordinator backends;
+//! * [`resilience`] — deadline budgets, retry token bucket, and
+//!   per-(service, shard) circuit breakers (off by default);
 //! * [`router`] — `/v1/infer`, `/metrics`, `/healthz` dispatch;
 //! * [`telemetry`] — Prometheus text exposition + §3.3 goodput credit;
 //! * [`loadgen`] — socket-driving load generator (open / closed loop);
@@ -55,12 +57,14 @@ pub mod loadgen;
 pub mod pool;
 #[cfg(target_os = "linux")]
 mod reactor;
+pub mod resilience;
 pub mod router;
 mod shard;
 pub mod telemetry;
 
 pub use admission::{Admission, AdmissionConfig};
-pub use executor::{DegradedExecutor, Executor, ProfileReplayExecutor};
+pub use executor::{DegradedExecutor, Executor, FaultyExecutor, ProfileReplayExecutor};
+pub use resilience::{Resilience, ResilienceConfig};
 pub use shard::ShardControl;
 pub use telemetry::Telemetry;
 
@@ -104,6 +108,11 @@ pub struct GatewayConfig {
     /// tracked and `/metrics` exposes no `epara_cache_*` series, keeping
     /// the exposition byte-identical to a cache-less build.
     pub cache_capacity_mb: f64,
+    /// Request-lifecycle resilience (deadline propagation, retry budget,
+    /// per-(service, shard) circuit breakers — DESIGN.md §Resilience).
+    /// Disabled by default: the request path and `/metrics` exposition
+    /// stay byte-identical to a resilience-less gateway.
+    pub resilience: resilience::ResilienceConfig,
 }
 
 impl Default for GatewayConfig {
@@ -119,6 +128,7 @@ impl Default for GatewayConfig {
             stall_timeout_ms: 1_000,
             shards: 1,
             cache_capacity_mb: 0.0,
+            resilience: resilience::ResilienceConfig::default(),
         }
     }
 }
@@ -142,6 +152,10 @@ pub(crate) struct Shared {
     pub cache: Option<Arc<GatewayCache>>,
     /// Which cache slot this shard admits into.
     pub cache_server: crate::core::ServerId,
+    /// Process-wide resilience state (global retry budget + per-(service,
+    /// shard) breakers); `None` keeps every request-path branch and the
+    /// `/metrics` exposition byte-identical to a resilience-less gateway.
+    pub resilience: Option<Arc<resilience::Resilience>>,
 }
 
 /// Process-wide gateway weight-cache view: the [`CacheFabric`] sized to
@@ -170,6 +184,17 @@ impl GatewayCache {
     ) -> crate::modelcache::CacheOutcome {
         let now_ms = self.started.elapsed().as_secs_f64() * 1000.0;
         self.fabric.lock().unwrap().admit(server, service, now_ms)
+    }
+
+    /// A fully-warm family sibling of `service` resident in shard-slot
+    /// `server`, if any — the degraded fallback target while `service`'s
+    /// breaker is open (read-only: recency is untouched).
+    pub(crate) fn warm_sibling(
+        &self,
+        server: crate::core::ServerId,
+        service: crate::core::ServiceId,
+    ) -> Option<crate::core::ServiceId> {
+        self.fabric.lock().unwrap().warm_sibling(server, service)
     }
 }
 
@@ -218,6 +243,9 @@ pub struct Gateway {
     /// The connection layer actually in force (init fallback included).
     layer: &'static str,
     fabric: Arc<shard::Fabric>,
+    /// Process-wide resilience state (None when the layer is off); kept
+    /// so callers can snapshot counters after a run.
+    resilience: Option<Arc<resilience::Resilience>>,
 }
 
 impl Gateway {
@@ -249,11 +277,17 @@ impl Gateway {
         // One cache slot per shard; capacity 0 → no fabric at all.
         let cache = (cfg.cache_capacity_mb > 0.0)
             .then(|| Arc::new(GatewayCache::new(&table, shards, cfg.cache_capacity_mb)));
+        // Process-wide resilience state: the retry budget is global by
+        // design; breakers key on (shard, service) internally.
+        let resil = cfg
+            .resilience
+            .enabled
+            .then(|| Arc::new(resilience::Resilience::new(cfg.resilience)));
 
         #[cfg(target_os = "linux")]
         if shards > 1 {
             return Gateway::spawn_sharded(
-                &cfg, table, executor, listener, addr, fabric, telemetry, stop, cache,
+                &cfg, table, executor, listener, addr, fabric, telemetry, stop, cache, resil,
             );
         }
 
@@ -266,6 +300,7 @@ impl Gateway {
             fabric: Arc::clone(&fabric),
             cache,
             cache_server: crate::core::ServerId(0),
+            resilience: resil.clone(),
         });
         let thread_stop = Arc::clone(&stop);
         let threads = cfg.threads;
@@ -327,7 +362,7 @@ impl Gateway {
             .name("epara-gateway".into())
             .spawn(move || accept_loop(listener, shared, thread_stop, threads, idle_polls))?;
 
-        Ok(Gateway { addr, stop, joins: vec![join], layer, fabric })
+        Ok(Gateway { addr, stop, joins: vec![join], layer, fabric, resilience: resil })
     }
 
     /// Multi-shard spawn: N sharded reactors (no listener of their own)
@@ -346,6 +381,7 @@ impl Gateway {
         telemetry: Arc<Telemetry>,
         stop: Arc<AtomicBool>,
         cache: Option<Arc<GatewayCache>>,
+        resil: Option<Arc<resilience::Resilience>>,
     ) -> crate::Result<Gateway> {
         let n = fabric.shard_count();
         // Each shard gets an equal slice of the process fd budget; the
@@ -363,6 +399,7 @@ impl Gateway {
                 fabric: Arc::clone(&fabric),
                 cache: cache.clone(),
                 cache_server: crate::core::ServerId(i as u32),
+                resilience: resil.clone(),
             });
             let rcfg = reactor::ReactorConfig {
                 threads: cfg.threads,
@@ -395,7 +432,14 @@ impl Gateway {
             .name("epara-gw-accept".into())
             .spawn(move || dispatch_loop(listener, d_fabric, intakes, d_stop))?;
         joins.insert(0, dispatcher);
-        Ok(Gateway { addr, stop, joins, layer: "epoll-reactor-shards", fabric })
+        Ok(Gateway {
+            addr,
+            stop,
+            joins,
+            layer: "epoll-reactor-shards",
+            fabric,
+            resilience: resil,
+        })
     }
 
     /// The bound address (resolves port 0).
@@ -434,6 +478,11 @@ impl Gateway {
     /// thread (scenario control loops) while the gateway serves.
     pub fn shard_control(&self) -> ShardControl {
         ShardControl { fabric: Arc::clone(&self.fabric) }
+    }
+
+    /// Snapshot of the resilience counters (None when the layer is off).
+    pub fn resilience_counters(&self) -> Option<resilience::ResilienceCounters> {
+        self.resilience.as_ref().map(|r| r.counters())
     }
 
     /// Signal shutdown and join every gateway thread, accept/dispatch

@@ -851,6 +851,28 @@ impl Reactor {
         self.do_write(idx, pool);
     }
 
+    /// Shutdown courtesy: a connection caught mid-request when the drain
+    /// begins gets `503 Connection: close` through the normal write path
+    /// (flushed by the grace loop) rather than a silent EOF.
+    fn respond_shutdown_503(&mut self, idx: usize, pool: &ThreadPool) {
+        let resp = http::HttpResponse::json(
+            503,
+            "{\"error\":\"shutting_down\",\"detail\":\"gateway is draining\"}".to_string(),
+        );
+        {
+            let Some(conn) = self.conns.slots[idx].as_mut() else { return };
+            let mut bytes = Vec::with_capacity(192);
+            resp.serialize_into(&mut bytes, false);
+            conn.wbuf = bytes;
+            conn.wpos = 0;
+            conn.close_after_write = true;
+            conn.state = ConnState::Writing;
+            conn.rbuf.clear();
+            conn.last_activity = Instant::now();
+        }
+        self.do_write(idx, pool);
+    }
+
     fn set_interest(&mut self, idx: usize, mask: u32) {
         let gen = self.conns.gens[idx];
         let Some(conn) = self.conns.slots[idx].as_mut() else { return };
@@ -953,11 +975,13 @@ impl Reactor {
 
     /// Graceful drain, in a fixed order that makes the latch race-free:
     /// (1) the listener closes first, so no connection can be born after
-    /// the decision to stop; (2) connections owed nothing (Reading, with
-    /// or without a partial request) close immediately — matching the
-    /// legacy loop, which also abandoned half-received requests on stop;
-    /// (3) connections owed a response (Executing/Writing) are drained
-    /// through the normal completion/write path under a grace deadline —
+    /// the decision to stop; (2) idle keep-alive connections (Reading,
+    /// empty `rbuf`) close immediately, while a connection caught with a
+    /// partial request buffered is answered `503 Connection: close` —
+    /// the peer learns the gateway is going away instead of seeing a
+    /// bare EOF mid-request; (3) connections owed a response
+    /// (Executing/Writing, now including the 503s) are drained through
+    /// the normal completion/write path under a grace deadline —
     /// `finish_response` sees `stopping` and closes instead of parsing
     /// pipelined follow-ups; (4) leftovers force-close, and the caller
     /// joins the pool (queued jobs still run; their completions land on
@@ -969,12 +993,14 @@ impl Reactor {
             drop(l);
         }
         for idx in 0..self.conns.slots.len() {
-            let reading = matches!(
-                self.conns.slots[idx].as_ref().map(|c| c.state),
-                Some(ConnState::Reading)
-            );
-            if reading {
-                self.close_conn(idx);
+            let verdict = match self.conns.slots[idx].as_ref() {
+                Some(c) if c.state == ConnState::Reading => Some(!c.rbuf.is_empty()),
+                _ => None,
+            };
+            match verdict {
+                Some(true) => self.respond_shutdown_503(idx, pool),
+                Some(false) => self.close_conn(idx),
+                None => {}
             }
         }
         let deadline = Instant::now() + SHUTDOWN_GRACE;

@@ -1,0 +1,613 @@
+//! Request-lifecycle resilience: deadline budgets, bounded retries paid
+//! from a global token-bucket retry budget, and per-service circuit
+//! breakers (ROADMAP robustness direction; DESIGN.md §Resilience).
+//!
+//! The state machines here are deliberately time-agnostic — every
+//! transition takes an explicit `now_ms` — so the simulator drives them
+//! on virtual time and the gateway on wall-clock ms since spawn, sharing
+//! one implementation (and one set of property tests):
+//!
+//! * [`RetryBudget`] — retries are paid for by tokens that accrue per
+//!   offered request (`retry_budget` tokens each, capped at
+//!   `retry_burst`), so a sick backend can never trigger a retry storm:
+//!   granted retries ≤ burst + ratio × offered, enforced globally.
+//! * [`Breaker`] — rolling error window driving the classic
+//!   Closed → Open → HalfOpen cycle.  Open short-circuits and reports the
+//!   remaining cooldown (the 503 `Retry-After` hint); HalfOpen admits
+//!   exactly `breaker_probes` probes; one probe failure re-opens; a full
+//!   probe quota of successes closes.  Open never jumps straight to
+//!   Closed.
+//! * [`decorrelated_jitter`] — backoff between retry attempts
+//!   (`min(cap, uniform(base, 3 × previous))`).
+//!
+//! Everything is off by default (`enabled: false`): a gateway or sim run
+//! without the flag takes none of these paths and reproduces
+//! pre-resilience behavior bit-for-bit.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::core::ServiceId;
+use crate::util::Rng;
+
+/// Deadline-propagation stages, in pipeline order: category queue entry,
+/// BS batching window, execution-lane wait, execution retries.
+pub const STAGE_QUEUE: usize = 0;
+pub const STAGE_WINDOW: usize = 1;
+pub const STAGE_LANE: usize = 2;
+pub const STAGE_EXEC: usize = 3;
+/// Prometheus/report labels, indexed by the `STAGE_*` constants.
+pub const STAGE_LABELS: [&str; 4] = ["queue", "window", "lane", "exec"];
+
+/// Deadline slack for frequency traffic: fractional §3.3 credit means a
+/// late stream is degraded, not worthless, so its doomed point sits past
+/// the SLO (credit would be < 1/4 ⇒ drop).  Latency traffic earns
+/// nothing past its SLO and is dropped exactly there.
+pub const FREQUENCY_DEADLINE_MULT: f64 = 4.0;
+
+/// SLO-derived deadline budget stamped on an admitted request (ms).
+pub fn deadline_budget_ms(latency_sensitive: bool, slo_ms: f64) -> f64 {
+    if latency_sensitive {
+        slo_ms
+    } else {
+        slo_ms * FREQUENCY_DEADLINE_MULT
+    }
+}
+
+/// Fraction of normal §3.3 credit earned by a request served by a warm
+/// *family sibling* while its own service's breaker is open: the client
+/// got a degraded family variant, not the model it asked for.
+pub const DEGRADED_CREDIT_FRAC: f64 = 0.5;
+
+/// Resilience knobs.  All time-valued fields share the caller's time
+/// base (virtual ms in the sim, wall ms in the gateway — the scenario
+/// gateway backend divides them by `time_scale`).
+#[derive(Clone, Copy, Debug)]
+pub struct ResilienceConfig {
+    /// Master switch; `false` (the default) takes none of these paths.
+    pub enabled: bool,
+    /// Max retry attempts per frequency request past the first try;
+    /// latency-critical requests get at most one hedged attempt.
+    pub max_retries: u32,
+    /// Retry tokens accrued per offered request (~0.10 ⇒ retries stay
+    /// under ~10% of offered load).
+    pub retry_budget: f64,
+    /// Token-bucket cap (also the initial allowance).
+    pub retry_burst: f64,
+    /// Decorrelated-jitter backoff base / cap (ms).
+    pub backoff_base_ms: f64,
+    pub backoff_cap_ms: f64,
+    /// Breaker rolling-window length (request outcomes).
+    pub breaker_window: usize,
+    /// Error rate over the window that trips the breaker.
+    pub breaker_error_rate: f64,
+    /// Minimum outcomes in the window before the breaker may trip.
+    pub breaker_min_samples: usize,
+    /// Open-state cooldown before HalfOpen probing (ms).
+    pub breaker_open_ms: f64,
+    /// Probes admitted while HalfOpen.
+    pub breaker_probes: u32,
+    /// Seed for the backoff jitter stream (gateway side).
+    pub seed: u64,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        ResilienceConfig {
+            enabled: false,
+            max_retries: 2,
+            retry_budget: 0.1,
+            retry_burst: 10.0,
+            backoff_base_ms: 1.0,
+            backoff_cap_ms: 50.0,
+            breaker_window: 32,
+            breaker_error_rate: 0.5,
+            breaker_min_samples: 8,
+            breaker_open_ms: 200.0,
+            breaker_probes: 2,
+            seed: 1,
+        }
+    }
+}
+
+/// Global retry token bucket.  Tokens accrue per *offered* request and
+/// every retry spends one, so retries are bounded by a fraction of the
+/// load actually arriving — not by wall time, which keeps the bucket
+/// deterministic under virtual time.
+#[derive(Clone, Debug)]
+pub struct RetryBudget {
+    ratio: f64,
+    burst: f64,
+    tokens: f64,
+}
+
+impl RetryBudget {
+    pub fn new(ratio: f64, burst: f64) -> RetryBudget {
+        let burst = burst.max(0.0);
+        RetryBudget { ratio: ratio.max(0.0), burst, tokens: burst }
+    }
+
+    /// One request arrived: accrue its retry share.
+    pub fn on_offered(&mut self) {
+        self.tokens = (self.tokens + self.ratio).min(self.burst);
+    }
+
+    /// Spend one token for a retry; false when the budget is exhausted.
+    pub fn try_take(&mut self) -> bool {
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn tokens(&self) -> f64 {
+        self.tokens
+    }
+}
+
+/// Decorrelated-jitter backoff: `min(cap, uniform(base, 3 × prev))`,
+/// never below `base`.  Spreads retry retries apart instead of
+/// synchronizing a thundering herd on a fixed schedule.
+pub fn decorrelated_jitter(rng: &mut Rng, prev_ms: f64, base_ms: f64, cap_ms: f64) -> f64 {
+    let hi = (prev_ms * 3.0).max(base_ms);
+    let hi = if hi > base_ms { hi } else { base_ms + 1e-9 };
+    rng.uniform(base_ms, hi).min(cap_ms.max(base_ms))
+}
+
+/// Circuit-breaker state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+/// Verdict for one admission attempt against a breaker.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Admit {
+    /// Closed: proceed normally.
+    Allow,
+    /// HalfOpen probe slot granted: proceed; the outcome decides state.
+    Probe,
+    /// Open (or HalfOpen with its probe quota spent): fail fast and tell
+    /// the client when to come back.
+    ShortCircuit { retry_after_ms: f64 },
+}
+
+/// Per-service circuit breaker over a rolling outcome window.
+///
+/// Invariants (property-tested in `tests/props.rs`):
+/// * `Open` never transitions directly to `Closed` — recovery always
+///   passes through `HalfOpen`;
+/// * `HalfOpen` grants exactly `breaker_probes` [`Admit::Probe`] slots,
+///   then short-circuits until the probes resolve;
+/// * any probe failure re-opens; a full quota of probe successes closes
+///   and resets the window.
+#[derive(Clone, Debug)]
+pub struct Breaker {
+    window_len: usize,
+    error_rate: f64,
+    min_samples: usize,
+    open_ms: f64,
+    probes: u32,
+    state: BreakerState,
+    /// Rolling outcome ring: `true` = error.
+    window: Vec<bool>,
+    at: usize,
+    errors: usize,
+    opened_at_ms: f64,
+    probes_granted: u32,
+    probes_ok: u32,
+    /// Transitions into `Open` over this breaker's lifetime.
+    trips: u64,
+}
+
+impl Breaker {
+    pub fn new(cfg: &ResilienceConfig) -> Breaker {
+        Breaker {
+            window_len: cfg.breaker_window.max(1),
+            error_rate: cfg.breaker_error_rate,
+            min_samples: cfg.breaker_min_samples.max(1),
+            open_ms: cfg.breaker_open_ms.max(0.0),
+            probes: cfg.breaker_probes.max(1),
+            state: BreakerState::Closed,
+            window: Vec::new(),
+            at: 0,
+            errors: 0,
+            opened_at_ms: 0.0,
+            probes_granted: 0,
+            probes_ok: 0,
+            trips: 0,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+
+    /// May one more request proceed at `now_ms`?
+    pub fn admit(&mut self, now_ms: f64) -> Admit {
+        match self.state {
+            BreakerState::Closed => Admit::Allow,
+            BreakerState::Open => {
+                let ready_at = self.opened_at_ms + self.open_ms;
+                if now_ms >= ready_at {
+                    self.state = BreakerState::HalfOpen;
+                    self.probes_granted = 1;
+                    self.probes_ok = 0;
+                    Admit::Probe
+                } else {
+                    Admit::ShortCircuit { retry_after_ms: ready_at - now_ms }
+                }
+            }
+            BreakerState::HalfOpen => {
+                if self.probes_granted < self.probes {
+                    self.probes_granted += 1;
+                    Admit::Probe
+                } else {
+                    // quota spent: wait for the in-flight probes
+                    Admit::ShortCircuit { retry_after_ms: self.open_ms }
+                }
+            }
+        }
+    }
+
+    /// Record one request outcome; returns true when this record tripped
+    /// the breaker into `Open`.
+    pub fn record(&mut self, now_ms: f64, ok: bool) -> bool {
+        match self.state {
+            BreakerState::Closed => {
+                if self.window.len() < self.window_len {
+                    self.window.push(!ok);
+                    if !ok {
+                        self.errors += 1;
+                    }
+                } else {
+                    let old = std::mem::replace(&mut self.window[self.at], !ok);
+                    self.at = (self.at + 1) % self.window_len;
+                    self.errors = self.errors + usize::from(!ok) - usize::from(old);
+                }
+                let n = self.window.len();
+                if n >= self.min_samples
+                    && self.errors as f64 >= self.error_rate * n as f64
+                {
+                    self.trip(now_ms);
+                    return true;
+                }
+                false
+            }
+            BreakerState::HalfOpen => {
+                if !ok {
+                    self.trip(now_ms);
+                    return true;
+                }
+                self.probes_ok += 1;
+                if self.probes_ok >= self.probes {
+                    // full probe quota succeeded: close with a clean window
+                    self.state = BreakerState::Closed;
+                    self.reset_window();
+                }
+                false
+            }
+            // a straggler admitted before the trip finishing after it:
+            // its outcome no longer carries information
+            BreakerState::Open => false,
+        }
+    }
+
+    fn trip(&mut self, now_ms: f64) {
+        self.state = BreakerState::Open;
+        self.opened_at_ms = now_ms;
+        self.trips += 1;
+        self.probes_granted = 0;
+        self.probes_ok = 0;
+        self.reset_window();
+    }
+
+    fn reset_window(&mut self) {
+        self.window.clear();
+        self.at = 0;
+        self.errors = 0;
+    }
+}
+
+/// Resilience counters surfaced at `/metrics` and in scenario reports.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResilienceCounters {
+    /// Retry attempts granted by the budget.
+    pub retries: u64,
+    /// Deadline expiries per stage (`STAGE_*` indices).
+    pub expired: [u64; 4],
+    /// Breaker transitions into `Open`.
+    pub breaker_trips: u64,
+    /// Requests short-circuited by an open breaker.
+    pub short_circuits: u64,
+    /// Requests served by a warm family sibling at fractional credit.
+    pub degraded_served: u64,
+}
+
+impl ResilienceCounters {
+    pub fn expired_total(&self) -> u64 {
+        self.expired.iter().sum()
+    }
+
+    /// Any activity at all?  Gates the `/metrics` section the same way
+    /// the cache series gate on admissions, so a resilience-off gateway
+    /// exposition stays byte-identical.
+    pub fn any(&self) -> bool {
+        self.retries + self.expired_total() + self.breaker_trips + self.short_circuits
+            + self.degraded_served
+            > 0
+    }
+}
+
+struct Inner {
+    budget: RetryBudget,
+    /// Breakers keyed per (shard, service) — one shard's sick lane must
+    /// not open its siblings' breakers.
+    breakers: HashMap<(usize, u32), Breaker>,
+    rng: Rng,
+    counters: ResilienceCounters,
+}
+
+/// Process-wide gateway resilience state: the global retry budget, the
+/// per-(service, shard) breakers, and the jitter stream, behind one
+/// mutex (every operation is O(1); the breaker window is a fixed ring).
+/// Timestamps are wall-clock ms since construction.
+pub struct Resilience {
+    cfg: ResilienceConfig,
+    started: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl Resilience {
+    pub fn new(cfg: ResilienceConfig) -> Resilience {
+        Resilience {
+            cfg,
+            started: Instant::now(),
+            inner: Mutex::new(Inner {
+                budget: RetryBudget::new(cfg.retry_budget, cfg.retry_burst),
+                breakers: HashMap::new(),
+                rng: Rng::new(cfg.seed),
+                counters: ResilienceCounters::default(),
+            }),
+        }
+    }
+
+    pub fn cfg(&self) -> &ResilienceConfig {
+        &self.cfg
+    }
+
+    fn now_ms(&self) -> f64 {
+        self.started.elapsed().as_secs_f64() * 1000.0
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// One request arrived (accrues the retry budget's share).
+    pub fn on_offered(&self) {
+        self.lock().budget.on_offered();
+    }
+
+    /// Breaker gate for `service` on `shard`.
+    pub fn admit(&self, shard: usize, service: ServiceId) -> Admit {
+        let now = self.now_ms();
+        let cfg = self.cfg;
+        let mut inner = self.lock();
+        let b = inner
+            .breakers
+            .entry((shard, service.0))
+            .or_insert_with(|| Breaker::new(&cfg));
+        let verdict = b.admit(now);
+        if matches!(verdict, Admit::ShortCircuit { .. }) {
+            inner.counters.short_circuits += 1;
+        }
+        verdict
+    }
+
+    /// Whether `service`'s breaker on `shard` would currently
+    /// short-circuit (read-only: no probe slot is consumed).
+    pub fn is_open(&self, shard: usize, service: ServiceId) -> bool {
+        let inner = self.lock();
+        inner
+            .breakers
+            .get(&(shard, service.0))
+            .is_some_and(|b| b.state() != BreakerState::Closed)
+    }
+
+    /// Record a terminal execution outcome into the breaker.
+    pub fn record(&self, shard: usize, service: ServiceId, ok: bool) {
+        let now = self.now_ms();
+        let cfg = self.cfg;
+        let mut inner = self.lock();
+        let b = inner
+            .breakers
+            .entry((shard, service.0))
+            .or_insert_with(|| Breaker::new(&cfg));
+        if b.record(now, ok) {
+            inner.counters.breaker_trips += 1;
+        }
+    }
+
+    /// Ask the budget for one retry; `Some(backoff_ms)` when granted.
+    pub fn try_retry(&self, prev_backoff_ms: f64) -> Option<f64> {
+        let mut inner = self.lock();
+        if !inner.budget.try_take() {
+            return None;
+        }
+        inner.counters.retries += 1;
+        let (base, cap) = (self.cfg.backoff_base_ms, self.cfg.backoff_cap_ms);
+        Some(decorrelated_jitter(&mut inner.rng, prev_backoff_ms, base, cap))
+    }
+
+    /// Count one deadline expiry at `stage` (`STAGE_*`).
+    pub fn note_expired(&self, stage: usize) {
+        self.lock().counters.expired[stage.min(3)] += 1;
+    }
+
+    /// Count one degraded-sibling serve.
+    pub fn note_degraded(&self) {
+        self.lock().counters.degraded_served += 1;
+    }
+
+    /// Snapshot of the counters (one lock, copy out).
+    pub fn counters(&self) -> ResilienceCounters {
+        self.lock().counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ResilienceConfig {
+        ResilienceConfig {
+            enabled: true,
+            breaker_window: 8,
+            breaker_min_samples: 4,
+            breaker_error_rate: 0.5,
+            breaker_open_ms: 100.0,
+            breaker_probes: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn budget_accrues_and_spends() {
+        let mut b = RetryBudget::new(0.1, 2.0);
+        // initial allowance = burst
+        assert!(b.try_take());
+        assert!(b.try_take());
+        assert!(!b.try_take(), "burst exhausted");
+        // 10 offered requests accrue exactly one more token
+        for _ in 0..10 {
+            b.on_offered();
+        }
+        assert!(b.try_take());
+        assert!(!b.try_take());
+        // accrual saturates at the burst cap
+        for _ in 0..1000 {
+            b.on_offered();
+        }
+        assert!((b.tokens() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breaker_trips_on_error_rate_and_recovers_via_probes() {
+        let mut b = Breaker::new(&cfg());
+        assert_eq!(b.state(), BreakerState::Closed);
+        // 4 straight errors: min_samples reached at 100% error rate
+        for i in 0..4 {
+            assert_eq!(b.admit(i as f64), Admit::Allow);
+            let tripped = b.record(i as f64, false);
+            assert_eq!(tripped, i == 3, "trip exactly on the threshold record");
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 1);
+        // cooling: short-circuit with the remaining cooldown
+        match b.admit(50.0) {
+            Admit::ShortCircuit { retry_after_ms } => {
+                assert!((retry_after_ms - 53.0).abs() < 1e-9, "{retry_after_ms}");
+            }
+            v => panic!("expected short-circuit, got {v:?}"),
+        }
+        // past the cooldown: exactly `probes` probe slots
+        assert_eq!(b.admit(103.0), Admit::Probe);
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert_eq!(b.admit(104.0), Admit::Probe);
+        assert!(matches!(b.admit(105.0), Admit::ShortCircuit { .. }));
+        // both probes succeed: closed with a clean window
+        assert!(!b.record(106.0, true));
+        assert!(!b.record(107.0, true));
+        assert_eq!(b.state(), BreakerState::Closed);
+        // the reset window needs min_samples fresh errors to trip again
+        assert!(!b.record(108.0, false));
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn halfopen_probe_failure_reopens() {
+        let mut b = Breaker::new(&cfg());
+        for i in 0..4 {
+            b.admit(i as f64);
+            b.record(i as f64, false);
+        }
+        assert_eq!(b.admit(200.0), Admit::Probe);
+        assert!(b.record(201.0, false), "probe failure re-trips");
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 2);
+        // the new cooldown anchors at the re-trip time
+        assert!(matches!(b.admit(250.0), Admit::ShortCircuit { .. }));
+        assert_eq!(b.admit(301.0), Admit::Probe);
+    }
+
+    #[test]
+    fn mixed_outcomes_below_threshold_stay_closed() {
+        let mut b = Breaker::new(&cfg());
+        // alternate ok/err far past the window: 50% error rate is the
+        // threshold, reached only when errors ≥ rate × n — alternating
+        // starting with ok keeps errors just under half of odd windows
+        let mut t = 0.0;
+        b.record(t, true);
+        for i in 0..100 {
+            t += 1.0;
+            if b.record(t, i % 2 == 0) {
+                // threshold is ≥, so exact 50% windows do trip — allowed
+                return;
+            }
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn jitter_stays_in_bounds() {
+        let mut rng = Rng::new(9);
+        let mut prev = 1.0;
+        for _ in 0..1000 {
+            let d = decorrelated_jitter(&mut rng, prev, 1.0, 50.0);
+            assert!((1.0..=50.0).contains(&d), "{d}");
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn deadline_budget_follows_sensitivity() {
+        assert_eq!(deadline_budget_ms(true, 100.0), 100.0);
+        assert_eq!(deadline_budget_ms(false, 100.0), 400.0);
+    }
+
+    #[test]
+    fn aggregate_counts_and_keys_per_shard() {
+        let r = Resilience::new(cfg());
+        let svc = ServiceId(7);
+        // trip shard 0's breaker for svc
+        for _ in 0..4 {
+            assert!(matches!(r.admit(0, svc), Admit::Allow));
+            r.record(0, svc, false);
+        }
+        assert!(r.is_open(0, svc));
+        assert!(!r.is_open(1, svc), "shard 1 has its own breaker");
+        assert!(matches!(r.admit(1, svc), Admit::Allow));
+        assert!(matches!(r.admit(0, svc), Admit::ShortCircuit { .. }));
+        r.note_expired(STAGE_WINDOW);
+        r.note_degraded();
+        assert!(r.try_retry(1.0).is_some());
+        let c = r.counters();
+        assert_eq!(c.breaker_trips, 1);
+        assert_eq!(c.short_circuits, 1);
+        assert_eq!(c.expired, [0, 1, 0, 0]);
+        assert_eq!(c.degraded_served, 1);
+        assert_eq!(c.retries, 1);
+        assert!(c.any());
+        assert!(!ResilienceCounters::default().any());
+    }
+}

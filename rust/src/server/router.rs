@@ -2,19 +2,25 @@
 //!
 //! * `POST /v1/infer` — body `{"service": "<name>" | <id>, "frames": N}`;
 //!   classified into a §2.1 task category and submitted through the
-//!   admission tier.  200 with execution stats, 429 when shed, 404 for
-//!   unknown services, 400 for malformed bodies, 500 on backend failure.
+//!   admission tier.  200 with execution stats, 429 when shed (with a
+//!   `Retry-After` back-off hint), 404 for unknown services, 400 for
+//!   malformed bodies, 500 on backend failure; with resilience enabled
+//!   also 504 when the deadline budget expires mid-pipeline and 503
+//!   (`Retry-After` = remaining breaker cooldown) when a service's
+//!   circuit breaker is open — unless a warm family sibling can serve a
+//!   degraded response at fractional credit.
 //! * `GET /metrics` — Prometheus text exposition.
 //! * `GET /healthz` — liveness probe.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::configjson::{self, Json};
-use crate::core::{ServiceId, TaskCategory};
+use crate::core::{Sensitivity, ServiceId, TaskCategory};
 
-use super::admission::Decision;
+use super::admission::{Decision, ResilienceCtx};
 use super::executor::ExecRequest;
 use super::http::{HttpRequest, HttpResponse};
+use super::resilience::{self, Admit};
 use super::Shared;
 
 fn err_json(status: u16, error: &str, detail: &str) -> HttpResponse {
@@ -23,6 +29,13 @@ fn err_json(status: u16, error: &str, detail: &str) -> HttpResponse {
         ("detail", Json::str(detail)),
     ]);
     HttpResponse::json(status, body.to_string())
+}
+
+/// `Retry-After` header value: fractional seconds (RFC 7231 allows only
+/// integer seconds, but our sub-second batching windows would all round
+/// to 0 — loadgen parses the fractional form).
+fn retry_after_secs(ms: f64) -> String {
+    format!("{:.3}", ms.max(0.0) / 1000.0)
 }
 
 /// Resolve `"service"` — by zoo name (`"resnet50"`) or numeric id.
@@ -79,17 +92,50 @@ fn handle_infer(shared: &Shared, req: &HttpRequest) -> HttpResponse {
     };
     let name = spec.name.clone();
     let exec_req = ExecRequest { service, frames };
+    let latency_critical = matches!(category.sensitivity(), Sensitivity::Latency);
 
     // End-to-end server-side latency: queue wait + batching window + lane
     // wait + execution.  SLO credit must see what the client sees, not
     // just the execute() call, or goodput inflates under load.
     let t0 = Instant::now();
-    match shared
-        .shard
-        .admission
-        .submit(category, exec_req, slo_ms, &*shared.executor)
-    {
+    let resil = shared.resilience.as_deref();
+    // This shard's slot index (breakers key per (service, shard)).
+    let shard_slot = shared.cache_server.0 as usize;
+
+    // Breaker gate: an open breaker answers before admission — fail
+    // fast, or degrade to a warm family sibling at fractional credit.
+    if let Some(r) = resil {
+        r.on_offered();
+        if let Admit::ShortCircuit { retry_after_ms } = r.admit(shard_slot, service) {
+            if let Some(resp) =
+                serve_degraded(shared, r, shard_slot, service, &name, frames, category, slo_ms)
+            {
+                return resp;
+            }
+            return err_json(503, "breaker_open", "service breaker is open; retry later")
+                .with_header("retry-after", retry_after_secs(retry_after_ms));
+        }
+    }
+
+    let ctx = resil.map(|r| ResilienceCtx {
+        res: r,
+        deadline: t0
+            + Duration::from_secs_f64(
+                resilience::deadline_budget_ms(latency_critical, slo_ms) / 1000.0,
+            ),
+        latency: latency_critical,
+    });
+    match shared.shard.admission.submit_with(
+        category,
+        exec_req,
+        slo_ms,
+        &*shared.executor,
+        ctx.as_ref(),
+    ) {
         Decision::Served(out) => {
+            if let Some(r) = resil {
+                r.record(shard_slot, service, true);
+            }
             // Weight-cache admission: record whether this service's
             // weights were resident on this shard's slot (hit /
             // family-partial / cold miss), feeding the `epara_cache_*`
@@ -113,12 +159,95 @@ fn handle_infer(shared: &Shared, req: &HttpRequest) -> HttpResponse {
         }
         Decision::Shed(reason) => {
             shared.telemetry.record_shed(category);
-            err_json(429, "shed", reason.as_str())
+            // One batching window is the natural client back-off unit:
+            // by then a fresh window (and its queue slot) has turned over.
+            err_json(429, "shed", reason.as_str()).with_header(
+                "retry-after",
+                retry_after_secs(shared.shard.admission.window_ms() as f64),
+            )
         }
+        Decision::Expired(stage) => err_json(504, "deadline_expired", stage),
         Decision::Failed(e) => {
+            if let Some(r) = resil {
+                r.record(shard_slot, service, false);
+            }
             shared.telemetry.record_failed(category);
             err_json(500, "execution_failed", &format!("{e:#}"))
         }
+    }
+}
+
+/// Degraded fallback while `service`'s breaker is open: serve a fully
+/// warm family sibling resident on this shard's cache slot, earning
+/// [`resilience::DEGRADED_CREDIT_FRAC`] of normal §3.3 credit (the
+/// client got a family variant, not the model it asked for).  `None`
+/// when no cache is configured, no warm sibling exists, the sibling's
+/// own breaker is open, or the sibling fails — the caller falls back to
+/// the plain 503 short-circuit.
+#[allow(clippy::too_many_arguments)] // internal: one call site
+fn serve_degraded(
+    shared: &Shared,
+    r: &resilience::Resilience,
+    shard_slot: usize,
+    service: ServiceId,
+    name: &str,
+    frames: u32,
+    category: TaskCategory,
+    slo_ms: f64,
+) -> Option<HttpResponse> {
+    let cache = shared.cache.as_deref()?;
+    let sib = cache.warm_sibling(shared.cache_server, service)?;
+    if sib == service || r.is_open(shard_slot, sib) {
+        return None;
+    }
+    let sib_name = shared.table.get_spec(sib)?.name.clone();
+    let latency_critical = matches!(category.sensitivity(), Sensitivity::Latency);
+    let t0 = Instant::now();
+    let ctx = ResilienceCtx {
+        res: r,
+        deadline: t0
+            + Duration::from_secs_f64(
+                resilience::deadline_budget_ms(latency_critical, slo_ms) / 1000.0,
+            ),
+        latency: latency_critical,
+    };
+    // The sibling runs under the ORIGINAL category's lane and telemetry
+    // bucket — the client's contract is what goodput accounts against.
+    let exec_req = ExecRequest { service: sib, frames };
+    match shared.shard.admission.submit_with(
+        category,
+        exec_req,
+        slo_ms,
+        &*shared.executor,
+        Some(&ctx),
+    ) {
+        Decision::Served(out) => {
+            r.record(shard_slot, sib, true);
+            r.note_degraded();
+            shared.telemetry.record_cache(cache.admit(shared.cache_server, sib));
+            let e2e_ms = t0.elapsed().as_secs_f64() * 1000.0;
+            let credit = shared.telemetry.record_ok_scaled(
+                category,
+                e2e_ms,
+                slo_ms,
+                resilience::DEGRADED_CREDIT_FRAC,
+            );
+            let body = Json::obj(vec![
+                ("service", Json::str(name)),
+                ("category", Json::str(super::telemetry::cat_label(category))),
+                ("batch_size", Json::num(out.batch_size as f64)),
+                ("latency_ms", Json::num(e2e_ms)),
+                ("exec_ms", Json::num(out.batch_latency_ms)),
+                ("credit", Json::num(credit)),
+                ("degraded_to", Json::str(sib_name)),
+            ]);
+            Some(HttpResponse::json(200, body.to_string()))
+        }
+        Decision::Failed(_) => {
+            r.record(shard_slot, sib, false);
+            None
+        }
+        _ => None,
     }
 }
 
@@ -135,6 +264,7 @@ pub(super) fn handle(shared: &Shared, req: &HttpRequest) -> HttpResponse {
                 shared.fabric.depths_sum(),
                 shared.executor.name(),
                 &shared.fabric.conn_stats(),
+                shared.resilience.as_deref().map(|r| r.counters()).as_ref(),
             ),
         ),
         ("GET", "/healthz") => HttpResponse::text(200, "ok\n"),

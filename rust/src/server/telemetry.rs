@@ -136,6 +136,25 @@ impl Telemetry {
         credit
     }
 
+    /// Record a 2xx completion whose credit is scaled by `frac` — the
+    /// degraded-sibling path: the request was served, but by a family
+    /// variant, so it earns only a fraction of normal §3.3 credit.
+    pub fn record_ok_scaled(
+        &self,
+        category: TaskCategory,
+        latency_ms: f64,
+        slo_ms: f64,
+        frac: f64,
+    ) -> f64 {
+        let credit = Self::credit(category, latency_ms, slo_ms) * frac.clamp(0.0, 1.0);
+        let mut inner = self.lock();
+        let cat = &mut inner.cats[cat_index(category)];
+        cat.ok += 1;
+        cat.credit += credit;
+        cat.push_latency(latency_ms);
+        credit
+    }
+
     /// Record a 429 shed.
     pub fn record_shed(&self, category: TaskCategory) {
         self.lock().cats[cat_index(category)].shed += 1;
@@ -174,11 +193,16 @@ impl Telemetry {
     /// `(open_connections, up)` entry per gateway shard: a single entry
     /// renders the classic single-reactor exposition byte-for-byte,
     /// more than one adds per-shard gauges next to the process totals.
+    /// `resilience` carries the process-wide resilience counters when
+    /// the subsystem is enabled; the `epara_resilience_*` series render
+    /// only once any counter is nonzero (same stance as the cache
+    /// series), so a resilience-off exposition stays byte-identical.
     pub fn render_prometheus(
         &self,
         queue_depths: [usize; 4],
         executor: &str,
         shards: &[(usize, bool)],
+        resilience: Option<&super::resilience::ResilienceCounters>,
     ) -> String {
         let mut out = String::with_capacity(2048);
         let inner = self.lock();
@@ -310,6 +334,44 @@ impl Telemetry {
             ));
         }
 
+        // Resilience series appear only once the subsystem has done
+        // something (a retry, an expiry, a breaker event): resilience-off
+        // gateways — and enabled-but-idle ones — keep the exposition
+        // byte-identical to the pre-resilience era.
+        if let Some(rc) = resilience.filter(|rc| rc.any()) {
+            out.push_str(
+                "# HELP epara_resilience_retries_total Executor attempts re-tried \
+                 under the retry budget.\n\
+                 # TYPE epara_resilience_retries_total counter\n",
+            );
+            out.push_str(&format!("epara_resilience_retries_total {}\n", rc.retries));
+            out.push_str(
+                "# HELP epara_resilience_expired_total Requests dropped with 504 by \
+                 deadline-budget checks, by pipeline stage.\n\
+                 # TYPE epara_resilience_expired_total counter\n",
+            );
+            for (i, label) in super::resilience::STAGE_LABELS.iter().enumerate() {
+                out.push_str(&format!(
+                    "epara_resilience_expired_total{{stage=\"{label}\"}} {}\n",
+                    rc.expired[i]
+                ));
+            }
+            out.push_str(
+                "# HELP epara_resilience_breaker_events_total Circuit-breaker events: \
+                 trips to Open, 503 short-circuits, degraded sibling serves.\n\
+                 # TYPE epara_resilience_breaker_events_total counter\n",
+            );
+            for (kind, n) in [
+                ("trip", rc.breaker_trips),
+                ("short_circuit", rc.short_circuits),
+                ("degraded", rc.degraded_served),
+            ] {
+                out.push_str(&format!(
+                    "epara_resilience_breaker_events_total{{kind=\"{kind}\"}} {n}\n"
+                ));
+            }
+        }
+
         let credit: f64 = inner.cats.iter().map(|c| c.credit).sum();
         drop(inner);
         let secs = self.started.elapsed().as_secs_f64().max(1e-9);
@@ -362,7 +424,7 @@ mod tests {
         t.record_shed(TaskCategory::FrequencyMulti);
         t.record_failed(TaskCategory::LatencyMulti);
         t.record_http_error();
-        let text = t.render_prometheus([1, 0, 0, 2], "profile-replay", &[(7, true)]);
+        let text = t.render_prometheus([1, 0, 0, 2], "profile-replay", &[(7, true)], None);
         assert!(text.contains(
             "epara_gateway_requests_total{category=\"latency_single\",outcome=\"ok\"} 2"
         ));
@@ -384,13 +446,15 @@ mod tests {
         assert!(!text.contains("epara_gateway_shards "));
         // and no cache series while the cache has seen no admission
         assert!(!text.contains("epara_cache_"));
+        // and no resilience series while the subsystem is off
+        assert!(!text.contains("epara_resilience_"));
     }
 
     #[test]
     fn cache_series_render_only_after_admissions() {
         use crate::modelcache::{CacheKind, CacheOutcome};
         let t = Telemetry::new();
-        let zero = t.render_prometheus([0; 4], "profile-replay", &[(0, true)]);
+        let zero = t.render_prometheus([0; 4], "profile-replay", &[(0, true)], None);
         assert!(!zero.contains("epara_cache_"), "cache-off must be silent");
         t.record_cache(CacheOutcome {
             kind: CacheKind::Miss,
@@ -410,7 +474,7 @@ mod tests {
             bytes_loaded_mb: 0.0,
             bytes_saved_mb: 640.0,
         });
-        let text = t.render_prometheus([0; 4], "profile-replay", &[(0, true)]);
+        let text = t.render_prometheus([0; 4], "profile-replay", &[(0, true)], None);
         assert!(text
             .contains("epara_cache_admissions_total{outcome=\"hit\"} 1"));
         assert!(text
@@ -426,7 +490,7 @@ mod tests {
         let t = Telemetry::new();
         t.record_ok(TaskCategory::LatencySingle, 10.0, 100.0);
         let shards = [(3, true), (0, false), (4, true)];
-        let text = t.render_prometheus([0, 0, 0, 0], "profile-replay", &shards);
+        let text = t.render_prometheus([0, 0, 0, 0], "profile-replay", &shards, None);
         assert!(text.contains("epara_gateway_open_connections{shard=\"0\"} 3"));
         assert!(text.contains("epara_gateway_open_connections{shard=\"1\"} 0"));
         assert!(text.contains("epara_gateway_open_connections{shard=\"2\"} 4"));
@@ -436,6 +500,33 @@ mod tests {
         assert!(text.contains("epara_gateway_shard_up{shard=\"1\"} 0"));
         assert!(text.contains("epara_gateway_shard_up{shard=\"2\"} 1"));
         assert!(text.contains("epara_gateway_shards 3"));
+    }
+
+    #[test]
+    fn resilience_series_render_only_after_activity() {
+        use crate::server::resilience::ResilienceCounters;
+        let t = Telemetry::new();
+        // enabled-but-idle counters render nothing — still byte-identical
+        let idle = ResilienceCounters::default();
+        let zero = t.render_prometheus([0; 4], "profile-replay", &[(0, true)], Some(&idle));
+        assert!(!zero.contains("epara_resilience_"), "idle resilience must be silent");
+        let active = ResilienceCounters {
+            retries: 3,
+            expired: [1, 0, 0, 2],
+            breaker_trips: 1,
+            short_circuits: 4,
+            degraded_served: 1,
+        };
+        let text = t.render_prometheus([0; 4], "profile-replay", &[(0, true)], Some(&active));
+        assert!(text.contains("epara_resilience_retries_total 3"));
+        assert!(text.contains("epara_resilience_expired_total{stage=\"queue\"} 1"));
+        assert!(text.contains("epara_resilience_expired_total{stage=\"window\"} 0"));
+        assert!(text.contains("epara_resilience_expired_total{stage=\"exec\"} 2"));
+        assert!(text.contains("epara_resilience_breaker_events_total{kind=\"trip\"} 1"));
+        assert!(text.contains(
+            "epara_resilience_breaker_events_total{kind=\"short_circuit\"} 4"
+        ));
+        assert!(text.contains("epara_resilience_breaker_events_total{kind=\"degraded\"} 1"));
     }
 
     #[test]

@@ -26,6 +26,7 @@ use crate::metrics::Metrics;
 use crate::modelcache::{CacheConfig, CacheFabric, CacheKind};
 use crate::placement::{sssp, FluidEval, PhiEval, PlacementItem, EPSILON_SERVER};
 use crate::profile::ProfileTable;
+use crate::server::resilience::{self, Breaker, ResilienceConfig, RetryBudget};
 use crate::sync::{SyncConfig, SyncNet};
 use crate::util::grid::{ServiceIndex, StateGrid};
 use crate::util::heap::{Keyed, MinTimeKey};
@@ -99,6 +100,13 @@ pub enum FaultAction {
     /// No state change: force a metrics sample at this instant (phase
     /// boundaries for trace-level events like surges).
     Checkpoint,
+    /// Executor fault injection: every execution start fails with this
+    /// probability (seeded, drawn from an independent fault stream).
+    /// `rate` 0 clears an earlier window.
+    ExecFaultRate { rate: f64 },
+    /// Multiply execution time of every request started from now on
+    /// (backend brown-out); `factor` 1 clears an earlier slowdown.
+    ExecSlowdown { factor: f64 },
 }
 
 /// Cumulative outcome counters sampled at a virtual instant.  Deltas
@@ -118,6 +126,11 @@ pub struct SimSample {
     pub cache_misses: u64,
     pub cache_bytes_loaded_mb: f64,
     pub cache_bytes_saved_mb: f64,
+    /// Cumulative resilience counters (all zero while resilience is off).
+    pub retries: u64,
+    pub deadline_expired: u64,
+    pub breaker_trips: u64,
+    pub breaker_short_circuits: u64,
 }
 
 /// What a failed server hosted, for offline-mode recovery re-install.
@@ -327,6 +340,11 @@ pub struct SimConfig {
     /// capacity of 0 disables it: deployment spawns pay the flat Fig. 3f
     /// `model_load_ms` exactly as before, bit-for-bit.
     pub cache: CacheConfig,
+    /// Request-lifecycle resilience (deadline budgets, bounded retries,
+    /// per-service circuit breakers) — same state machines the gateway
+    /// runs, driven by virtual time.  Disabled by default: the execution
+    /// path is reproduced bit-for-bit.
+    pub resilience: ResilienceConfig,
 }
 
 impl Default for SimConfig {
@@ -339,9 +357,26 @@ impl Default for SimConfig {
             duration_ms: 60_000.0,
             replacement_interval_ms: None,
             cache: CacheConfig::default(),
+            resilience: ResilienceConfig::default(),
         }
     }
 }
+
+/// Virtual-time resilience state: the gateway's retry-budget and breaker
+/// state machines (shared code, `now_ms` = virtual time).  Backoff
+/// jitter draws from the simulator's independent fault stream, so a
+/// resilience-off run never touches it.
+struct SimResil {
+    budget: RetryBudget,
+    /// Breakers keyed per (server, service) — the sim's analogue of the
+    /// gateway's per-(shard, service) keying.
+    breakers: HashMap<(u32, u32), Breaker>,
+}
+
+/// Salt for the independent fault/backoff RNG stream.  Constructed from
+/// the seed directly (NOT forked from the trace rng — forking advances
+/// the parent and would shift every downstream handler draw).
+const FAULT_RNG_SALT: u64 = 0xFA17_5EED_0BAD_C0DE;
 
 /// The simulator.
 ///
@@ -399,6 +434,17 @@ pub struct Simulator<'a> {
     /// Per-server weight caches; `None` when `cfg.cache` is disabled —
     /// the legacy flat-load path, untouched bit-for-bit.
     cache: Option<CacheFabric>,
+    /// Independent RNG stream for fault draws and retry backoff jitter.
+    /// Never advanced unless an `ExecFaultRate` window is active, so the
+    /// trace rng — and every fault-free run — is unaffected.
+    fault_rng: Rng,
+    /// Current executor fault probability (0 = off).
+    exec_fault_rate: f64,
+    /// Current execution-time multiplier (1 = off).
+    exec_slow_factor: f64,
+    /// Resilience state; `None` when `cfg.resilience` is disabled —
+    /// the legacy execution path, untouched bit-for-bit.
+    resil: Option<SimResil>,
 }
 
 impl<'a> Simulator<'a> {
@@ -525,11 +571,19 @@ impl<'a> Simulator<'a> {
                 .cache
                 .enabled()
                 .then(|| CacheFabric::new(table, n, cfg.cache.capacity_mb)),
+            fault_rng: Rng::new(cfg.seed ^ FAULT_RNG_SALT),
+            exec_fault_rate: 0.0,
+            exec_slow_factor: 1.0,
+            resil: cfg.resilience.enabled.then(|| SimResil {
+                budget: RetryBudget::new(cfg.resilience.retry_budget, cfg.resilience.retry_burst),
+                breakers: HashMap::new(),
+            }),
             allocs,
             placement: placement.clone(),
             cfg,
         };
         sim.metrics.cache_enabled = sim.cache.is_some();
+        sim.metrics.resilience_enabled = sim.cfg.resilience.enabled;
         sim.materialize_placement(&placement);
         sim.install_devices();
         sim.prime_snapshot();
@@ -837,9 +891,15 @@ impl<'a> Simulator<'a> {
 
     fn handle_arrival(&mut self, req_idx: u32, at: ServerId, now: f64) {
         let ri = req_idx as usize;
-        if self.slab[ri].offloads == 0 && self.cfg.replacement_interval_ms.is_some() {
-            // first-hop arrivals feed the next placement round's R^T
-            self.window_requests.push(req_idx);
+        if self.slab[ri].offloads == 0 {
+            if self.cfg.replacement_interval_ms.is_some() {
+                // first-hop arrivals feed the next placement round's R^T
+                self.window_requests.push(req_idx);
+            }
+            if let Some(res) = self.resil.as_mut() {
+                // each offered request refills the global retry budget
+                res.budget.on_offered();
+            }
         }
         let decision = match self.cfg.policy.offload {
             OffloadMode::Eq1 => {
@@ -1077,33 +1137,140 @@ impl<'a> Simulator<'a> {
             };
             let svc_ms = d.service_ms(frames);
             d.queued_ms = (d.queued_ms - svc_ms).max(0.0);
-            d.in_flight += 1;
 
             let spec = self.table.spec(service);
             // execution cannot begin before the model finished loading
             let start = now.max(d.available_at_ms);
-            let done_at = start + svc_ms;
-            let latency = done_at - arrival_ms;
-            let outcome = match spec.sensitivity {
-                Sensitivity::Latency => {
-                    if latency <= spec.slo.latency_ms {
-                        Outcome::Completed { latency_ms: latency }
+
+            // SLO base for the deadline budget: frequency streams amortize
+            // over the whole stream duration, mirroring the gateway
+            let latency_task = matches!(spec.sensitivity, Sensitivity::Latency);
+            let deadline = {
+                let slo_ms = match (latency_task, spec.slo.min_rate) {
+                    (false, Some(rate)) if rate > 0.0 => {
+                        spec.slo.latency_ms.max(frames as f64 * 1000.0 / rate)
+                    }
+                    _ => spec.slo.latency_ms,
+                };
+                arrival_ms + resilience::deadline_budget_ms(latency_task, slo_ms)
+            };
+            let bkey = (at.0, service.0);
+            if self.resil.is_some() {
+                // deadline pre-drop: doomed work is dropped before it
+                // occupies a concurrency slot (the gateway's fast 504)
+                if start > deadline {
+                    self.metrics.deadline_expired += 1;
+                    self.metrics.record(service, &Outcome::Timeout, offloads);
+                    continue;
+                }
+                // open breaker short-circuits without executing
+                let res = self.resil.as_mut().unwrap();
+                let b = res
+                    .breakers
+                    .entry(bkey)
+                    .or_insert_with(|| Breaker::new(&self.cfg.resilience));
+                if let resilience::Admit::ShortCircuit { .. } = b.admit(now) {
+                    self.metrics.breaker_short_circuits += 1;
+                    self.metrics
+                        .record(service, &Outcome::ResourceInsufficient, offloads);
+                    continue;
+                }
+            }
+            d.in_flight += 1;
+
+            // execution proper: possibly slowed, faulted, and retried.
+            // `exec_ms`/`attempts` reduce to `svc_ms`/1 bit-for-bit when
+            // no fault window is active, so fault-free runs reproduce the
+            // historical timing exactly.
+            let exec_ms = if self.exec_slow_factor != 1.0 {
+                svc_ms * self.exec_slow_factor
+            } else {
+                svc_ms
+            };
+            let mut attempts = 1.0f64;
+            let mut backoff_ms = 0.0;
+            let mut faulted = self.exec_fault_rate > 0.0
+                && self.fault_rng.chance(self.exec_fault_rate);
+            let mut expired_mid_retry = false;
+            if faulted {
+                if let Some(res) = self.resil.as_mut() {
+                    // bounded retries: latency-critical gets one hedged
+                    // attempt, frequency traffic up to max_retries
+                    let max_extra = if latency_task {
+                        1
                     } else {
-                        Outcome::Timeout
+                        self.cfg.resilience.max_retries
+                    };
+                    let mut prev = 0.0;
+                    let mut extra = 0u32;
+                    while faulted && extra < max_extra {
+                        if !res.budget.try_take() {
+                            break;
+                        }
+                        prev = resilience::decorrelated_jitter(
+                            &mut self.fault_rng,
+                            prev,
+                            self.cfg.resilience.backoff_base_ms,
+                            self.cfg.resilience.backoff_cap_ms,
+                        );
+                        if start + exec_ms * (attempts + 1.0) + backoff_ms + prev
+                            > deadline
+                        {
+                            expired_mid_retry = true;
+                            break;
+                        }
+                        backoff_ms += prev;
+                        attempts += 1.0;
+                        extra += 1;
+                        self.metrics.retries += 1;
+                        faulted = self.fault_rng.chance(self.exec_fault_rate);
                     }
                 }
-                Sensitivity::Frequency => {
-                    let target = spec.slo.min_rate.unwrap_or(30.0);
-                    // achieved rate across the whole request lifetime
-                    let achieved =
-                        frames as f64 / (latency / 1000.0).max(1e-9);
-                    if achieved >= target {
-                        Outcome::Completed { latency_ms: latency }
-                    } else {
-                        let frac = (achieved / target).min(1.0);
-                        Outcome::Partial {
-                            satisfied: frac * frames as f64,
-                            total: frames,
+            }
+
+            let done_at = start + exec_ms * attempts + backoff_ms;
+            let latency = done_at - arrival_ms;
+            let outcome = if faulted || expired_mid_retry {
+                if let Some(res) = self.resil.as_mut() {
+                    if let Some(b) = res.breakers.get_mut(&bkey) {
+                        if b.record(now, false) {
+                            self.metrics.breaker_trips += 1;
+                        }
+                    }
+                }
+                if expired_mid_retry {
+                    self.metrics.deadline_expired += 1;
+                    Outcome::Timeout
+                } else {
+                    Outcome::ResourceInsufficient
+                }
+            } else {
+                if let Some(res) = self.resil.as_mut() {
+                    if let Some(b) = res.breakers.get_mut(&bkey) {
+                        b.record(now, true);
+                    }
+                }
+                match spec.sensitivity {
+                    Sensitivity::Latency => {
+                        if latency <= spec.slo.latency_ms {
+                            Outcome::Completed { latency_ms: latency }
+                        } else {
+                            Outcome::Timeout
+                        }
+                    }
+                    Sensitivity::Frequency => {
+                        let target = spec.slo.min_rate.unwrap_or(30.0);
+                        // achieved rate across the whole request lifetime
+                        let achieved =
+                            frames as f64 / (latency / 1000.0).max(1e-9);
+                        if achieved >= target {
+                            Outcome::Completed { latency_ms: latency }
+                        } else {
+                            let frac = (achieved / target).min(1.0);
+                            Outcome::Partial {
+                                satisfied: frac * frames as f64,
+                                total: frames,
+                            }
                         }
                     }
                 }
@@ -1124,8 +1291,9 @@ impl<'a> Simulator<'a> {
                 };
                 let share = 1.0 / self.servers[at.0 as usize].deployments[dep]
                     .cap.max(1) as f64;
+                // retried attempts burn real GPU time (backoff does not)
                 self.metrics.gpu_busy_ms +=
-                    svc_ms * al.ops.gpus() as f64 * slice * share;
+                    exec_ms * attempts * al.ops.gpus() as f64 * slice * share;
             }
             self.push_event(
                 done_at,
@@ -1365,6 +1533,10 @@ impl<'a> Simulator<'a> {
             cache_misses: self.metrics.cache_misses,
             cache_bytes_loaded_mb: self.metrics.cache_bytes_loaded_mb,
             cache_bytes_saved_mb: self.metrics.cache_bytes_saved_mb,
+            retries: self.metrics.retries,
+            deadline_expired: self.metrics.deadline_expired,
+            breaker_trips: self.metrics.breaker_trips,
+            breaker_short_circuits: self.metrics.breaker_short_circuits,
         });
     }
 
@@ -1378,6 +1550,12 @@ impl<'a> Simulator<'a> {
                 self.skew_server(server, factor)
             }
             FaultAction::Checkpoint => {}
+            FaultAction::ExecFaultRate { rate } => {
+                self.exec_fault_rate = rate.clamp(0.0, 1.0);
+            }
+            FaultAction::ExecSlowdown { factor } => {
+                self.exec_slow_factor = if factor > 0.0 { factor } else { 1.0 };
+            }
         }
     }
 
@@ -1723,5 +1901,71 @@ mod tests {
         sim.schedule_fault(6_000.0, skew(0.5));
         sim.run(reqs);
         assert!(sim.metrics.satisfied > 0.0);
+    }
+
+    /// One run under a scripted executor-fault window; resilience on/off.
+    fn run_flaky(resilience_on: bool, rate: f64) -> Metrics {
+        let table = zoo::paper_zoo();
+        let cloud = EdgeCloud::testbed();
+        let spec = WorkloadSpec {
+            mix: Mix::Production(0),
+            rps: 30.0,
+            duration_ms: 12_000.0,
+            ..Default::default()
+        };
+        let reqs = generate(&spec, &table, &cloud);
+        let mut cfg = SimConfig { duration_ms: 12_000.0, ..Default::default() };
+        cfg.resilience.enabled = resilience_on;
+        let mut sim = Simulator::new(&table, cloud, &reqs, cfg);
+        sim.schedule_fault(2_000.0, FaultAction::ExecFaultRate { rate });
+        sim.schedule_fault(8_000.0, FaultAction::ExecFaultRate { rate: 0.0 });
+        sim.run(reqs);
+        sim.take_metrics()
+    }
+
+    #[test]
+    fn exec_fault_injection_is_deterministic_and_gated() {
+        let a = run_flaky(false, 0.3);
+        let b = run_flaky(false, 0.3);
+        // same seed, same script → bit-identical runs, faults included
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // the fault window fails real work...
+        let clean = run_mix(Mix::Production(0), 30.0, PolicyConfig::epara());
+        assert!(a.resource_insufficient > clean.resource_insufficient);
+        assert!(a.satisfied < clean.satisfied);
+        // ...but with resilience off, no retries happen and the
+        // fingerprint stays free of the gated resilience section
+        assert_eq!(a.retries, 0);
+        assert!(!a.fingerprint().contains("res["));
+    }
+
+    #[test]
+    fn resilience_recovers_goodput_under_exec_faults() {
+        let off = run_flaky(false, 0.3);
+        let on = run_flaky(true, 0.3);
+        assert_eq!(on.offered, off.offered, "equal offered load");
+        assert!(on.retries > 0, "retries {}", on.retries);
+        assert!(
+            on.satisfied > off.satisfied,
+            "resilience-on {} must beat off {}",
+            on.satisfied,
+            off.satisfied
+        );
+        assert!(on.fingerprint().contains("res["));
+    }
+
+    #[test]
+    fn total_fault_window_trips_breakers_and_short_circuits() {
+        let m = run_flaky(true, 1.0);
+        // a 6 s window of certain failure must open at least one breaker
+        // and fast-fail at least one request against it
+        assert!(m.breaker_trips >= 1, "trips {}", m.breaker_trips);
+        assert!(
+            m.breaker_short_circuits >= 1,
+            "short circuits {}",
+            m.breaker_short_circuits
+        );
+        // service recovers once the window clears
+        assert!(m.satisfied > 0.0);
     }
 }

@@ -119,6 +119,29 @@ impl RunConfig {
             warmth_weight: f(&c, "warmth_weight", cache_defaults.warmth_weight),
         };
 
+        // Resilience (deadline budgets / retries / breakers): absent
+        // object or `enabled: false` keeps the subsystem off — the
+        // legacy execution path, bit-for-bit.
+        let r = j.get("resilience").cloned().unwrap_or(Json::Obj(vec![]));
+        let rd = crate::server::resilience::ResilienceConfig::default();
+        let resilience = crate::server::resilience::ResilienceConfig {
+            enabled: r
+                .get("enabled")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(rd.enabled),
+            max_retries: u(&r, "max_retries", rd.max_retries as usize) as u32,
+            retry_budget: f(&r, "retry_budget", rd.retry_budget),
+            retry_burst: f(&r, "retry_burst", rd.retry_burst),
+            backoff_base_ms: f(&r, "backoff_base_ms", rd.backoff_base_ms),
+            backoff_cap_ms: f(&r, "backoff_cap_ms", rd.backoff_cap_ms),
+            breaker_window: u(&r, "breaker_window", rd.breaker_window),
+            breaker_error_rate: f(&r, "breaker_error_rate", rd.breaker_error_rate),
+            breaker_min_samples: u(&r, "breaker_min_samples", rd.breaker_min_samples),
+            breaker_open_ms: f(&r, "breaker_open_ms", rd.breaker_open_ms),
+            breaker_probes: u(&r, "breaker_probes", rd.breaker_probes as usize) as u32,
+            seed: f(&r, "seed", rd.seed as f64) as u64,
+        };
+
         let sim = SimConfig {
             seed: f(j, "seed", 7.0) as u64,
             handler,
@@ -129,6 +152,7 @@ impl RunConfig {
                 .get("replacement_interval_ms")
                 .and_then(|v| v.as_f64()),
             cache,
+            resilience,
         };
         Ok(RunConfig { cloud, workload, sim })
     }
@@ -164,6 +188,37 @@ mod tests {
         assert_eq!(rc.workload.mix, Mix::Production(0));
         assert!(rc.sim.replacement_interval_ms.is_none());
         assert!(!rc.sim.cache.enabled(), "cache must default off");
+        assert!(!rc.sim.resilience.enabled, "resilience must default off");
+    }
+
+    #[test]
+    fn resilience_object_parses() {
+        let rc = RunConfig::from_json(
+            &parse(
+                r#"{"resilience": {"enabled": true, "max_retries": 4,
+                     "retry_budget": 0.2, "breaker_error_rate": 0.6,
+                     "breaker_open_ms": 500.0}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let r = &rc.sim.resilience;
+        assert!(r.enabled);
+        assert_eq!(r.max_retries, 4);
+        assert_eq!(r.retry_budget, 0.2);
+        assert_eq!(r.breaker_error_rate, 0.6);
+        assert_eq!(r.breaker_open_ms, 500.0);
+        // partial object keeps per-field defaults
+        let d = crate::server::resilience::ResilienceConfig::default();
+        assert_eq!(r.retry_burst, d.retry_burst);
+        assert_eq!(r.breaker_probes, d.breaker_probes);
+        // an object without `enabled: true` stays off
+        let rc2 = RunConfig::from_json(
+            &parse(r#"{"resilience": {"max_retries": 9}}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(!rc2.sim.resilience.enabled);
+        assert_eq!(rc2.sim.resilience.max_retries, 9);
     }
 
     #[test]

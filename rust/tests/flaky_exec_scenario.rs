@@ -1,0 +1,90 @@
+//! ISSUE acceptance: on the committed `flaky_exec` scenario, the
+//! resilience layer must strictly beat a resilience-off run at a fixed
+//! seed and equal offered load — the retry budget converts transient
+//! executor faults back into completed work.  Also pins the qualitative
+//! behavior the spec was designed around: the near-total fault window
+//! MUST trip breakers and the slowdown window MUST expire doomed
+//! deadlines, and both must show up in the per-phase report.
+
+use std::path::PathBuf;
+
+use epara::scenario::{ScenarioBackend, ScenarioSpec, SimBackend};
+
+fn load_spec() -> ScenarioSpec {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("scenarios")
+        .join("flaky_exec.json");
+    ScenarioSpec::from_file(&p).expect("committed spec must parse")
+}
+
+#[test]
+fn resilience_on_beats_resilience_off_on_flaky_exec() {
+    let spec = load_spec();
+    assert!(
+        spec.base.sim.resilience.enabled,
+        "flaky_exec must ship with resilience on"
+    );
+
+    // resilience-on: the spec as committed
+    let on = SimBackend.run(&spec).unwrap();
+
+    // resilience-off: same seed, same trace, same fault schedule
+    let mut off_spec = spec.clone();
+    off_spec.base.sim.resilience.enabled = false;
+    let off = SimBackend.run(&off_spec).unwrap();
+
+    // identical offered traffic — the comparison is apples-to-apples
+    assert_eq!(on.offered, off.offered);
+
+    // the layer actually engaged: retries granted, breakers tripped on
+    // the near-total window, doomed work expired under the slowdown
+    assert!(on.retries > 0, "moderate fault window must grant retries");
+    assert!(
+        on.breaker_trips >= 1,
+        "near-total fault window must trip at least one breaker"
+    );
+    assert!(
+        on.deadline_expired >= 1,
+        "slowdown window must expire at least one deadline"
+    );
+    // the off run takes none of those paths
+    assert_eq!(off.retries, 0);
+    assert_eq!(off.breaker_trips, 0);
+    assert_eq!(off.deadline_expired, 0);
+    assert_eq!(off.breaker_short_circuits, 0);
+
+    // THE acceptance inequality: strictly better goodput at equal load
+    assert!(
+        on.goodput_rps > off.goodput_rps,
+        "resilience-on must strictly beat off: goodput {} vs {}",
+        on.goodput_rps,
+        off.goodput_rps
+    );
+
+    // per-phase attribution: some phase after the first fault onset
+    // carries the trips/expiries the totals report
+    let phase_trips: u64 = on.phases.iter().map(|p| p.breaker_trips).sum();
+    let phase_expired: u64 = on.phases.iter().map(|p| p.deadline_expired).sum();
+    assert_eq!(phase_trips, on.breaker_trips);
+    assert_eq!(phase_expired, on.deadline_expired);
+
+    // both runs hold the committed goodput floor
+    let floor = spec.goodput_floor_rps.expect("spec must carry a floor");
+    assert!(
+        on.goodput_rps >= floor,
+        "goodput {} below floor {floor}",
+        on.goodput_rps
+    );
+
+    // determinism: the resilience-on run is bit-exact across executions
+    let again = SimBackend.run(&spec).unwrap();
+    assert_eq!(on.fingerprint(), again.fingerprint());
+    assert!(
+        on.fingerprint().contains("restot="),
+        "active resilience must be covered by the scenario fingerprint"
+    );
+    assert!(
+        !off.fingerprint().contains("restot=") && !off.fingerprint().contains(" r0="),
+        "disabled resilience must not perturb the fingerprint"
+    );
+}

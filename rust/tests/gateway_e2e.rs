@@ -200,8 +200,31 @@ fn gateway_end_to_end_over_real_sockets() {
     );
     assert!(metrics.contains("epara_cache_bytes_mb{kind=\"loaded\"}"));
 
-    // -- (c) clean shutdown: listener closes, workers join, no leaks
+    // -- (c) clean shutdown: listener closes, workers join, no leaks.
+    // A connection caught with a queued, not-yet-executing request when
+    // the drain begins must get `503 Connection: close`, not silent EOF.
+    let mut draining = TcpStream::connect(&addr).expect("pre-shutdown connect");
+    draining.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    draining
+        .write_all(
+            b"POST /v1/infer HTTP/1.1\r\nhost: gw\r\ncontent-type: application/json\r\n\
+              content-length: 400\r\n\r\n{\"service\":",
+        )
+        .expect("partial request");
+    // give the reactor a beat to buffer the partial request
+    std::thread::sleep(Duration::from_millis(200));
     gw.shutdown();
+    {
+        let mut reader = BufReader::new(&draining);
+        let (status, headers, _body) =
+            http::read_response_headers(&mut reader).expect("drain must answer, not EOF");
+        assert_eq!(status, 503, "queued request at shutdown must get 503");
+        assert!(
+            headers.iter().any(|(n, v)| n == "connection" && v == "close"),
+            "drain 503 must close the connection: {headers:?}"
+        );
+    }
+    drop(draining);
     assert!(
         TcpStream::connect(&addr).is_err(),
         "listener must be closed after shutdown"

@@ -775,6 +775,165 @@ mod admission_props {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Resilience invariants (DESIGN.md §Resilience)
+// ---------------------------------------------------------------------------
+
+mod resilience_props {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Arc, Barrier};
+
+    use epara::server::resilience::{
+        Admit, Breaker, BreakerState, Resilience, ResilienceConfig,
+    };
+    use epara::util::minitest::forall;
+
+    /// Under arbitrary outcome sequences, the breaker never jumps from
+    /// `Open` straight to `Closed` — recovery always passes through
+    /// `HalfOpen` — and once HalfOpen it admits exactly `breaker_probes`
+    /// probe slots before short-circuiting the rest.
+    #[test]
+    fn prop_breaker_never_skips_halfopen_and_probes_exactly() {
+        forall(
+            115,
+            60,
+            |rng| {
+                let cfg = ResilienceConfig {
+                    enabled: true,
+                    breaker_window: 2 + rng.below(14) as usize,
+                    breaker_min_samples: 1 + rng.below(6) as usize,
+                    breaker_error_rate: 0.3 + rng.next_f64() * 0.4,
+                    breaker_open_ms: 10.0 + rng.next_f64() * 200.0,
+                    breaker_probes: 1 + rng.below(4) as u32,
+                    ..Default::default()
+                };
+                let n = 50 + rng.below(300) as usize;
+                let steps: Vec<(f64, bool)> = (0..n)
+                    .map(|_| (rng.uniform(0.1, 40.0), rng.chance(0.5)))
+                    .collect();
+                (cfg, steps)
+            },
+            |(cfg, steps)| {
+                let mut b = Breaker::new(cfg);
+                let mut now = 0.0;
+                let mut prev = b.state();
+                let check = |state: BreakerState, prev: &mut BreakerState| {
+                    if *prev == BreakerState::Open && state == BreakerState::Closed {
+                        return Err("Open jumped straight to Closed".to_string());
+                    }
+                    *prev = state;
+                    Ok(())
+                };
+                for &(dt, ok) in steps {
+                    now += dt;
+                    let verdict = b.admit(now);
+                    check(b.state(), &mut prev)?;
+                    if b.state() == BreakerState::HalfOpen
+                        && matches!(verdict, Admit::Probe)
+                    {
+                        // drain the remaining quota without recording:
+                        // exactly probes − 1 more Probe slots, then
+                        // short-circuits only
+                        let mut granted = 1u32;
+                        loop {
+                            match b.admit(now) {
+                                Admit::Probe => granted += 1,
+                                Admit::ShortCircuit { .. } => break,
+                                Admit::Allow => {
+                                    return Err("HalfOpen returned Allow".into());
+                                }
+                            }
+                            if granted > cfg.breaker_probes {
+                                break;
+                            }
+                        }
+                        if granted != cfg.breaker_probes {
+                            return Err(format!(
+                                "HalfOpen granted {granted} probes, want {}",
+                                cfg.breaker_probes
+                            ));
+                        }
+                        // resolve the probes so the walk continues
+                        for _ in 0..granted {
+                            b.record(now, ok);
+                            check(b.state(), &mut prev)?;
+                        }
+                        continue;
+                    }
+                    if !matches!(verdict, Admit::ShortCircuit { .. }) {
+                        b.record(now, ok);
+                        check(b.state(), &mut prev)?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Concurrent retry storms never exceed the token-bucket budget:
+    /// granted retries ≤ burst + ratio × offered, no matter how many
+    /// threads race `try_retry`.
+    #[test]
+    fn prop_retry_budget_bounds_concurrent_storms() {
+        forall(
+            116,
+            8,
+            |rng| {
+                let ratio = rng.next_f64() * 0.5;
+                let burst = 1.0 + rng.below(20) as f64;
+                let threads = 2 + rng.below(6) as usize;
+                let per_thread = 20 + rng.below(200) as usize;
+                let offered = rng.below(400) as usize;
+                (ratio, burst, threads, per_thread, offered)
+            },
+            |&(ratio, burst, threads, per_thread, offered)| {
+                let r = Arc::new(Resilience::new(ResilienceConfig {
+                    enabled: true,
+                    retry_budget: ratio,
+                    retry_burst: burst,
+                    ..Default::default()
+                }));
+                let granted = Arc::new(AtomicU64::new(0));
+                let barrier = Arc::new(Barrier::new(threads));
+                let handles: Vec<_> = (0..threads)
+                    .map(|i| {
+                        let (r, granted, barrier) =
+                            (Arc::clone(&r), Arc::clone(&granted), Arc::clone(&barrier));
+                        std::thread::spawn(move || {
+                            barrier.wait();
+                            for j in 0..per_thread {
+                                // thread 0 interleaves the offered accruals
+                                // into the middle of the storm
+                                if i == 0 && j < offered {
+                                    r.on_offered();
+                                }
+                                if r.try_retry(1.0).is_some() {
+                                    granted.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().expect("storm thread");
+                }
+                let got = granted.load(Ordering::Relaxed) as f64;
+                let bound = burst + ratio * offered.min(per_thread) as f64;
+                if got > bound + 1e-9 {
+                    return Err(format!(
+                        "granted {got} retries > budget bound {bound} \
+                         (ratio {ratio}, burst {burst}, offered {offered})"
+                    ));
+                }
+                if r.counters().retries != granted.load(Ordering::Relaxed) {
+                    return Err("counter drift vs granted".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
 #[test]
 fn prop_sync_delay_monotone_in_scale() {
     use epara::sync::SyncConfig;

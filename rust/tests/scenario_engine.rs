@@ -112,7 +112,7 @@ fn committed_scenarios_parse_run_and_hold_their_floors() {
         .collect();
     paths.sort();
     assert!(
-        paths.len() >= 6,
+        paths.len() >= 9,
         "expected the committed scenario matrix, found {}",
         paths.len()
     );

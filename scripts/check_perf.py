@@ -26,6 +26,7 @@ LOWER = [
     "spf_solve_ms_10k",
     "fluid_gain_ns",
     "cache_score_ns",
+    "resilience_decide_ns",
 ]
 THRESHOLD = 0.30
 # record bookkeeping, not metrics: never flagged as stray baseline keys

@@ -19,6 +19,7 @@ def record(**overrides):
         "spf_solve_ms_10k": 180.0,
         "fluid_gain_ns": 40.0,
         "cache_score_ns": 120.0,
+        "resilience_decide_ns": 90.0,
     }
     base.update(overrides)
     return base
@@ -84,6 +85,13 @@ class CompareTests(unittest.TestCase):
         cur = record(cache_score_ns=120.0 * 2.0)  # 2x slower cache scoring
         regressions, key_errors, _ = check_perf.compare(cur, record())
         self.assertIn("cache_score_ns", regressions)
+        self.assertEqual(key_errors, [])
+
+    def test_resilience_decide_is_gated_lower_is_better(self):
+        self.assertIn("resilience_decide_ns", check_perf.LOWER)
+        cur = record(resilience_decide_ns=90.0 * 2.0)  # 2x slower decisions
+        regressions, key_errors, _ = check_perf.compare(cur, record())
+        self.assertIn("resilience_decide_ns", regressions)
         self.assertEqual(key_errors, [])
 
 
