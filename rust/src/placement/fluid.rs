@@ -11,13 +11,16 @@
 //! parallelism: extra communication per step).
 //!
 //! Everything is maintained **incrementally**: `gain` and `push` are O(1),
-//! which is what lets the lazy greedy place services across 10k servers
-//! within Fig. 17c's 200 ms envelope.
+//! and the ε-server free-resource fold (the one O(n) piece, hit once per
+//! S3 feasibility probe) is cached and invalidated only by real-server
+//! pushes — which is what lets the lazy greedy place services across 10k
+//! servers within Fig. 17c's 200 ms envelope.
 //!
 //! The function is submodular in Θ: local_l is a sum of concave (min)
 //! terms in the per-server capacity, and the spill term is concave in
 //! total capacity — matching Appendix A's Theorem A.1.
 
+use std::cell::Cell;
 use std::collections::HashMap;
 
 use crate::allocator::Allocation;
@@ -70,6 +73,13 @@ pub struct FluidEval<'a> {
     /// ε-server (cross-server) resources consumed.
     eps_slots_used: f64,
     eps_vram_used: f64,
+    /// Cached Σ_n (cap − used)⁺ over the real servers (slots, vram).  The
+    /// fold is O(n) and Algorithm 1 S3 probes ε feasibility once per heap
+    /// pop, so at 10k servers it dominated the solve.  Only real-server
+    /// pushes write `slots_used`/`vram_used`, so only they invalidate;
+    /// a miss recomputes with the identical fold, keeping cached and
+    /// fresh values bit-equal (`Cell`: `feasible` takes `&self`).
+    eps_free_cache: Cell<Option<(f64, f64)>>,
     /// Dense index over every service that can appear in a query: the
     /// demanded (request) services ∪ the allocated services.
     svc_index: ServiceIndex,
@@ -177,6 +187,7 @@ impl<'a> FluidEval<'a> {
             vram_cap,
             eps_slots_used: 0.0,
             eps_vram_used: 0.0,
+            eps_free_cache: Cell::new(None),
             svc_index,
             svc,
             theta: Vec::new(),
@@ -222,20 +233,30 @@ impl<'a> FluidEval<'a> {
         st.local_overlap + self.offload_eff * unserved.min(idle)
     }
 
-    /// Total free ε resources (what no single server holds).
+    /// Total free ε resources (what no single server holds).  Amortized
+    /// O(1): the per-server folds come from `eps_free_cache`, and the ε
+    /// usage subtraction happens outside the cache so ε pushes never
+    /// invalidate it.
     fn eps_free(&self) -> (f64, f64) {
-        let slots: f64 = self
-            .slots_cap
-            .iter()
-            .zip(&self.slots_used)
-            .map(|(c, u)| (c - u).max(0.0))
-            .sum();
-        let vram: f64 = self
-            .vram_cap
-            .iter()
-            .zip(&self.vram_used)
-            .map(|(c, u)| (c - u).max(0.0))
-            .sum();
+        let (slots, vram) = match self.eps_free_cache.get() {
+            Some(sums) => sums,
+            None => {
+                let slots: f64 = self
+                    .slots_cap
+                    .iter()
+                    .zip(&self.slots_used)
+                    .map(|(c, u)| (c - u).max(0.0))
+                    .sum();
+                let vram: f64 = self
+                    .vram_cap
+                    .iter()
+                    .zip(&self.vram_used)
+                    .map(|(c, u)| (c - u).max(0.0))
+                    .sum();
+                self.eps_free_cache.set(Some((slots, vram)));
+                (slots, vram)
+            }
+        };
         (slots - self.eps_slots_used, vram - self.eps_vram_used)
     }
 
@@ -330,6 +351,7 @@ impl PhiEval for FluidEval<'_> {
                 let n = item.server.0 as usize;
                 self.slots_used[n] += s;
                 self.vram_used[n] += v;
+                self.eps_free_cache.set(None);
                 let d = st.demand[n];
                 let c = st.cap[n];
                 st.local_overlap += (c + r).min(d) - c.min(d);
@@ -524,6 +546,49 @@ mod tests {
         assert!(g > 0.0);
         e.push(eps);
         assert!(e.phi() > 0.0);
+    }
+
+    #[test]
+    fn eps_free_cache_tracks_real_pushes_bit_exactly() {
+        // Interleave real pushes (the only cache invalidators) with ε
+        // pushes and queries: the cached free-resource sums must stay
+        // bit-identical to a from-scratch fold at every step, or the ε
+        // feasibility decisions (and the golden fingerprints downstream)
+        // would drift.
+        let table = zoo::paper_zoo();
+        let cloud = EdgeCloud::uniform(6, 2, GpuSpec::P100, Link::SWITCH_10G);
+        let allocs = setup(&table, &[ids::RESNET50, ids::MOBILENET_V2]);
+        let mut reqs = requests_uniform(ids::RESNET50, 20, 6);
+        reqs.extend(requests_uniform(ids::MOBILENET_V2, 20, 6));
+        let mut e = FluidEval::from_requests(&table, &allocs, &cloud, &reqs, 1000.0);
+        let eps = PlacementItem { service: ids::RESNET50, server: EPSILON_SERVER };
+        for step in 0..8u32 {
+            let (cs, cv) = e.eps_free();
+            let fs: f64 = e
+                .slots_cap
+                .iter()
+                .zip(&e.slots_used)
+                .map(|(c, u)| (c - u).max(0.0))
+                .sum();
+            let fv: f64 = e
+                .vram_cap
+                .iter()
+                .zip(&e.vram_used)
+                .map(|(c, u)| (c - u).max(0.0))
+                .sum();
+            assert_eq!(cs.to_bits(), (fs - e.eps_slots_used).to_bits(), "step {step}");
+            assert_eq!(cv.to_bits(), (fv - e.eps_vram_used).to_bits(), "step {step}");
+            let real = PlacementItem {
+                service: ids::MOBILENET_V2,
+                server: ServerId(step % 6),
+            };
+            if e.feasible(real) {
+                e.push(real);
+            }
+            if e.feasible(eps) {
+                e.push(eps);
+            }
+        }
     }
 
     #[test]

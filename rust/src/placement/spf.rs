@@ -13,7 +13,7 @@
 //!   guarantee, and the reason Fig. 17c's placement latency stays sub-
 //!   200 ms at 10k servers.
 
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 
 use crate::util::heap::{Keyed, MaxScoreKey};
 
@@ -68,9 +68,13 @@ pub fn spf_greedy<E: PhiEval>(
     }
 }
 
-/// Lazy-greedy heap payload: the candidate plus the Θ size when its gain
-/// was computed (staleness marker).  Ordering (max-heap by gain) comes from
-/// the shared [`Keyed`]/[`MaxScoreKey`] helper in `util::heap`.
+/// Lazy-greedy heap payload: the candidate plus its **service's** push
+/// count when the gain was computed (staleness marker).  φ is separable
+/// per service (φ = Σ_l φ_l — true of the fluid evaluator and of the
+/// Theorem A.1 construction), so a stored gain goes stale only when its
+/// own service gets pushed; commits to other services leave it exact and
+/// the re-evaluation can be skipped.  Ordering (max-heap by gain) comes
+/// from the shared [`Keyed`]/[`MaxScoreKey`] helper in `util::heap`.
 #[derive(Clone, Copy)]
 struct LazyCand {
     item: PlacementItem,
@@ -91,21 +95,27 @@ pub fn spf_lazy<E: PhiEval>(candidates: &[PlacementItem], eval: &mut E) {
         if eval.feasible(item) {
             let gain = eval.gain(item);
             if gain > 1e-12 {
-                heap.push(Keyed::new(
-                    MaxScoreKey(gain),
-                    LazyCand { item, epoch: usize::MAX },
-                ));
+                heap.push(Keyed::new(MaxScoreKey(gain), LazyCand { item, epoch: 0 }));
             }
         }
     }
 
-    let mut epoch = 0usize;
+    // Per-service push counts: the staleness epochs.  Under per-service
+    // separability (see `LazyCand`) a stored gain is exact until its own
+    // service is committed, so a pop whose service was untouched reuses
+    // the stored value instead of re-running `gain` — the old global
+    // epoch invalidated the whole heap on every commit, which at 10k
+    // servers re-evaluated thousands of unchanged candidates per solve.
+    // Feasibility is always re-checked fresh (it *does* couple services
+    // through shared server resources).
+    let mut epochs: HashMap<u32, usize> = HashMap::new();
     while let Some(top) = heap.pop() {
         let item = top.value.item;
         if !eval.feasible(item) {
             continue; // resource-exhausted candidate: drop permanently
         }
-        let fresh = if top.value.epoch == epoch {
+        let svc_epoch = epochs.get(&item.service.0).copied().unwrap_or(0);
+        let fresh = if top.value.epoch == svc_epoch {
             top.key.0
         } else {
             eval.gain(item)
@@ -117,8 +127,13 @@ pub fn spf_lazy<E: PhiEval>(candidates: &[PlacementItem], eval: &mut E) {
             // *stale* positive entries whose fresh value is positive for a
             // different item.  Re-insert only if this entry was stale and
             // the heap still has entries promising more.
-            if top.value.epoch != epoch && heap.peek().is_some_and(|n| n.key.0 > 1e-12) {
-                heap.push(Keyed::new(MaxScoreKey(fresh), LazyCand { item, epoch }));
+            if top.value.epoch != svc_epoch
+                && heap.peek().is_some_and(|n| n.key.0 > 1e-12)
+            {
+                heap.push(Keyed::new(
+                    MaxScoreKey(fresh),
+                    LazyCand { item, epoch: svc_epoch },
+                ));
                 continue;
             }
             break;
@@ -126,17 +141,27 @@ pub fn spf_lazy<E: PhiEval>(candidates: &[PlacementItem], eval: &mut E) {
         // is the freshly-computed gain still the best available?
         if heap.peek().is_none_or(|next| fresh >= next.key.0) {
             eval.push(item);
-            epoch += 1;
+            let svc_epoch = {
+                let e = epochs.entry(item.service.0).or_insert(0);
+                *e += 1;
+                *e
+            };
             // set semantics: the item stays available — re-insert with its
             // post-push gain as the new upper bound
             if eval.feasible(item) {
                 let g = eval.gain(item);
                 if g > 1e-12 {
-                    heap.push(Keyed::new(MaxScoreKey(g), LazyCand { item, epoch }));
+                    heap.push(Keyed::new(
+                        MaxScoreKey(g),
+                        LazyCand { item, epoch: svc_epoch },
+                    ));
                 }
             }
         } else {
-            heap.push(Keyed::new(MaxScoreKey(fresh), LazyCand { item, epoch }));
+            heap.push(Keyed::new(
+                MaxScoreKey(fresh),
+                LazyCand { item, epoch: svc_epoch },
+            ));
         }
     }
 }
@@ -245,6 +270,72 @@ mod tests {
             .collect();
         spf_greedy(&Candidates::List(list), &mut e, false);
         assert_eq!(e.theta.len(), 2); // stops once gain hits 0
+    }
+
+    #[test]
+    fn lazy_placement_sequence_matches_greedy_when_gains_are_distinct() {
+        // With all service values distinct (5, 3, 1) every round has a
+        // unique argmax, so the two implementations must agree on the
+        // exact commit sequence — not just the final φ.  Guards the
+        // per-service staleness epochs against reordering regressions.
+        let mut a = toy();
+        spf_greedy(&Candidates::Set(pool()), &mut a, false);
+        let mut b = toy();
+        spf_lazy(&pool(), &mut b);
+        assert_eq!(a.theta, b.theta);
+    }
+
+    /// Gain-call counting wrapper for the staleness-epoch assertions.
+    struct Counting {
+        inner: Toy,
+        gain_calls: usize,
+    }
+
+    impl PhiEval for Counting {
+        fn phi(&self) -> f64 {
+            self.inner.phi()
+        }
+        fn gain(&mut self, item: PlacementItem) -> f64 {
+            self.gain_calls += 1;
+            self.inner.gain(item)
+        }
+        fn feasible(&self, item: PlacementItem) -> bool {
+            self.inner.feasible(item)
+        }
+        fn push(&mut self, item: PlacementItem) {
+            self.inner.push(item)
+        }
+        fn placement(&self) -> &[PlacementItem] {
+            self.inner.placement()
+        }
+    }
+
+    #[test]
+    fn per_service_staleness_skips_untouched_reevaluations() {
+        // svc0 commits twice before svc1's entry ever pops.  A global
+        // staleness epoch would mark svc1's stored gain stale after the
+        // first commit and recompute it (6 gain calls total); per-service
+        // epochs keep it exact and reuse it: 2 seed calls + svc0's two
+        // post-push re-inserts = exactly 4.
+        let mut e = Counting {
+            inner: Toy {
+                value: HashMap::from([(0, 5.0), (1, 3.0)]),
+                cap: HashMap::from([(0, 2), (1, 1)]),
+                theta: vec![],
+                budget: 3,
+            },
+            gain_calls: 0,
+        };
+        let pool: Vec<PlacementItem> = (0..2u32)
+            .map(|s| PlacementItem { service: ServiceId(s), server: ServerId(0) })
+            .collect();
+        spf_lazy(&pool, &mut e);
+        assert_eq!(e.inner.theta.len(), 3);
+        assert!((e.phi() - 13.0).abs() < 1e-9);
+        assert_eq!(
+            e.gain_calls, 4,
+            "stored gains of untouched services must be reused, not recomputed"
+        );
     }
 
     #[test]

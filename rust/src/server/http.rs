@@ -400,6 +400,16 @@ impl HttpResponse {
     /// a fresh `String` per request.
     pub fn serialize_into(&self, out: &mut Vec<u8>, keep_alive: bool) {
         out.clear();
+        self.serialize_append(out, keep_alive);
+    }
+
+    /// Serialize head + body onto the END of `out`, preserving whatever
+    /// is already there.  This is the multi-response form the reactor's
+    /// pipelined batch path builds its `writev` segments with: each
+    /// response of a burst appends to its own segment (or several
+    /// responses share one), and the framing stays byte-identical to a
+    /// sequence of [`HttpResponse::serialize_into`] calls.
+    pub fn serialize_append(&self, out: &mut Vec<u8>, keep_alive: bool) {
         // write! into a Vec<u8> cannot fail (io::Write for Vec is
         // infallible); the head is formatted directly into `out`.
         let _ = write!(
@@ -647,6 +657,26 @@ mod tests {
         let expected = b"HTTP/1.1 200 OK\r\ncontent-type: application/json\r\n\
                          content-length: 2\r\nconnection: keep-alive\r\n\r\n{}";
         assert_eq!(wire, expected.as_slice());
+    }
+
+    #[test]
+    fn serialize_append_concatenates_byte_identically() {
+        // The reactor's pipelined burst path appends several responses;
+        // the result must equal the per-response serializations laid
+        // end to end — same framing a client sees from sequential
+        // writes, just fewer syscalls.
+        let a = HttpResponse::json(200, "{\"n\":1}".into());
+        let b = HttpResponse::text(404, "nope");
+        let mut appended = Vec::new();
+        a.serialize_append(&mut appended, true);
+        b.serialize_append(&mut appended, false);
+        let mut expected = Vec::new();
+        let mut one = Vec::new();
+        a.serialize_into(&mut one, true);
+        expected.extend_from_slice(&one);
+        b.serialize_into(&mut one, false);
+        expected.extend_from_slice(&one);
+        assert_eq!(appended, expected);
     }
 
     #[test]

@@ -12,35 +12,44 @@
 //! ```text
 //!   accept ─→ Reading ──complete request──→ Executing ──completion──→ Writing
 //!                ↑                            (pool job)                 │
-//!                └────────────── keep-alive, wbuf drained ──────────────┘
+//!                └───────────── keep-alive, wqueue drained ─────────────┘
 //! ```
 //!
 //! * **Reading** — level-triggered `EPOLLIN`; bytes accumulate in `rbuf`
 //!   and are re-framed with [`http::parse_buffer`] (identical limits and
 //!   semantics to the blocking parser).  Protocol errors answer
 //!   400/413/431 and close; EOF mid-request answers 408.
-//! * **Executing** — epoll interest drops to 0 (the response must be
-//!   written before any pipelined follow-up is parsed, so socket
-//!   readiness is irrelevant); the parsed request runs on the worker
-//!   pool, which serializes the response and hands the bytes back
+//! * **Executing** — epoll interest drops to 0 (the responses must be
+//!   written before any further pipelined follow-up is parsed, so
+//!   socket readiness is irrelevant); a *burst* of complete pipelined
+//!   requests (up to [`PIPELINE_BURST`], ending at the first
+//!   `Connection: close`) runs as ONE worker-pool job, which serializes
+//!   each response into its own segment and hands the batch back
 //!   through the [`CompletionHub`] + wakeup pipe.
-//! * **Writing** — drain `wbuf` until done (`EPOLLOUT` only while the
-//!   socket pushes back).  Then: close (`Connection: close` / error),
-//!   or parse the next pipelined request straight out of `rbuf`, or
-//!   return to Reading.
+//! * **Writing** — drain the per-connection segment queue with
+//!   [`pump_writev`]: every queued response flushes in a single
+//!   `writev(2)` per readiness pass instead of one `write` per
+//!   response (`EPOLLOUT` only while the socket pushes back).  Then:
+//!   close (`Connection: close` / error), or batch-parse the next
+//!   pipelined requests straight out of `rbuf`, or return to Reading.
 //!
 //! Timers replace the old read-timeout polling: a connection stalled
 //! mid-request (or mid-response) longer than `stall_timeout` gets 408 /
 //! closed (slow-loris containment); an idle keep-alive connection past
 //! `idle_timeout` is evicted.  Executing connections are exempt — the
 //! admission tier and executor bound that phase.  Timer granularity is
-//! one reactor tick (`TICK_MS`).
+//! one reactor tick (`TICK_MS`).  Deadlines live in a hierarchical
+//! [`TimerWheel`] (util::wheel): arming is O(1), a tick costs
+//! O(expired) — not O(live connections) as the old per-tick slab scan
+//! did — and activity re-arms lazily (a fired entry whose connection
+//! progressed re-inserts at the fresh deadline instead of acting).
 //!
 //! The epoll/pipe shim binds the libc symbols directly (std already
 //! links libc on unix; the offline registry carries no libc crate).
 //! Constants cover the x86/x86_64/aarch64 Linux ABIs CI runs on.
 
-use std::io::{Read, Write};
+use std::collections::VecDeque;
+use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::raw::{c_int, c_void};
 use std::os::unix::io::AsRawFd;
@@ -51,6 +60,7 @@ use std::time::{Duration, Instant};
 use super::http::{self, BufferParse};
 use super::pool::ThreadPool;
 use super::{router, Shared};
+use crate::util::TimerWheel;
 
 /// Raw epoll / pipe shim over the libc the std runtime already links.
 mod sys {
@@ -97,6 +107,17 @@ mod sys {
 /// Reactor tick: epoll_wait timeout, i.e. timer granularity and the
 /// worst-case latency of noticing the shutdown flag.
 const TICK_MS: c_int = 50;
+
+/// Max complete pipelined requests framed into one worker-pool job (and
+/// thus one writev burst).  Bounds the latency a deep pipeline can add
+/// before the connection yields back to the reactor, while still
+/// amortizing the pool handoff and write syscalls across the burst.
+const PIPELINE_BURST: usize = 16;
+
+/// Max segments handed to one `writev` call (IOV_MAX is 1024 on Linux;
+/// staying far below it keeps the iovec on a small stack-ish allocation
+/// and each syscall's copy bounded).
+const MAX_IOV: usize = 64;
 
 /// Bounded wait for in-flight responses on shutdown before force-close.
 const SHUTDOWN_GRACE: Duration = Duration::from_secs(5);
@@ -254,11 +275,12 @@ impl Intake {
     }
 }
 
-/// A finished request on its way back to the reactor.
+/// A finished request burst on its way back to the reactor.
 struct Completion {
     token: u64,
-    /// Fully serialized response (head + body).
-    bytes: Vec<u8>,
+    /// Fully serialized responses (head + body), one segment per
+    /// request of the burst, in request order — ready for `writev`.
+    responses: Vec<Vec<u8>>,
     keep_alive: bool,
 }
 
@@ -288,11 +310,15 @@ impl CompletionHub {
 enum ConnState {
     /// Accumulating request bytes; epoll interest `EPOLLIN`.
     Reading,
-    /// Request handed to the pool; epoll interest 0.
+    /// Request burst handed to the pool; epoll interest 0.
     Executing,
-    /// Draining `wbuf`; `EPOLLOUT` only while the socket pushes back.
+    /// Draining `wqueue`; `EPOLLOUT` only while the socket pushes back.
     Writing,
 }
+
+/// No wheel entry armed at or before the connection's deadline (the
+/// sentinel `armed_next` value); any real tick compares smaller.
+const UNARMED: u64 = u64::MAX;
 
 struct Conn {
     stream: TcpStream,
@@ -305,14 +331,21 @@ struct Conn {
     /// parse instead of one full re-parse (with body allocation) per
     /// received segment.  0 = unknown, parse on every arrival.
     need: usize,
-    /// Serialized response being drained.
-    wbuf: Vec<u8>,
+    /// Serialized responses being drained, one segment per pipelined
+    /// request, flushed with `writev` ([`pump_writev`]).
+    wqueue: VecDeque<Vec<u8>>,
+    /// Offset into the front segment of `wqueue`.
     wpos: usize,
     close_after_write: bool,
     /// Current epoll mask (avoids redundant `EPOLL_CTL_MOD`s).
     interest: u32,
     /// Last byte of I/O progress (timer base).
     last_activity: Instant,
+    /// Earliest live timer-wheel entry for this connection (tick), or
+    /// [`UNARMED`].  Arming only inserts when the fresh deadline is
+    /// earlier, so each connection keeps O(1) live wheel entries
+    /// regardless of how often activity resets its clock.
+    armed_next: u64,
 }
 
 /// Index-stable connection table with generation-tagged slots.
@@ -349,7 +382,7 @@ impl Slab {
 /// How far one nonblocking write pass got.
 #[derive(Debug, PartialEq, Eq)]
 pub(crate) enum WriteStatus {
-    /// Everything up to `buf.len()` is on the wire.
+    /// Every queued segment is on the wire.
     Done,
     /// Socket pushed back (`EAGAIN`); re-arm `EPOLLOUT` and resume at
     /// the updated position.
@@ -358,18 +391,57 @@ pub(crate) enum WriteStatus {
     Closed,
 }
 
-/// Push `buf[*pos..]` into a nonblocking sink, advancing `*pos`.
-pub(crate) fn pump_write<W: Write>(w: &mut W, buf: &[u8], pos: &mut usize) -> WriteStatus {
-    while *pos < buf.len() {
-        match w.write(&buf[*pos..]) {
+/// Flush a queue of serialized responses into a nonblocking sink with
+/// vectored writes: up to [`MAX_IOV`] segments per syscall, so a burst
+/// of pipelined responses costs ONE `writev(2)` instead of one `write`
+/// each.  Drained segments pop off the front; `*pos` is the offset into
+/// the (new) front segment, so an `EAGAIN` mid-burst resumes exactly
+/// where the kernel stopped.  For a `&TcpStream` sink,
+/// `Write::write_vectored` is a real `writev`; mock sinks in tests fall
+/// back to `write` on the first segment, which exercises the same
+/// resume arithmetic.
+pub(crate) fn pump_writev<W: Write>(
+    w: &mut W,
+    queue: &mut VecDeque<Vec<u8>>,
+    pos: &mut usize,
+) -> WriteStatus {
+    loop {
+        while queue.front().is_some_and(|seg| *pos >= seg.len()) {
+            queue.pop_front();
+            *pos = 0;
+        }
+        if queue.is_empty() {
+            return WriteStatus::Done;
+        }
+        let mut iov: Vec<IoSlice<'_>> = Vec::with_capacity(queue.len().min(MAX_IOV));
+        for (i, seg) in queue.iter().take(MAX_IOV).enumerate() {
+            iov.push(IoSlice::new(if i == 0 { &seg[*pos..] } else { &seg[..] }));
+        }
+        match w.write_vectored(&iov) {
             Ok(0) => return WriteStatus::Closed,
-            Ok(n) => *pos += n,
+            Ok(mut n) => {
+                // credit `n` bytes across the front segments
+                while n > 0 {
+                    let front_left = queue.front().map_or(0, |seg| seg.len() - *pos);
+                    if n < front_left {
+                        *pos += n;
+                        break;
+                    }
+                    n -= front_left;
+                    queue.pop_front();
+                    *pos = 0;
+                }
+            }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return WriteStatus::Blocked,
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
             Err(_) => return WriteStatus::Closed,
         }
     }
-    WriteStatus::Done
+}
+
+/// Bytes still queued on a connection's write side.
+fn pending_bytes(queue: &VecDeque<Vec<u8>>, pos: usize) -> usize {
+    queue.iter().map(Vec::len).sum::<usize>() - pos
 }
 
 /// Reactor tuning handed down from [`super::GatewayConfig`].
@@ -407,6 +479,11 @@ pub(crate) struct Reactor {
     /// Shard mode: connections arrive here from the accept-dispatch
     /// thread instead of a listener.
     intake: Option<Arc<Intake>>,
+    /// Tick-0 reference for the timer wheel.
+    started: Instant,
+    /// Stall/idle deadlines, keyed by connection token; O(expired) per
+    /// tick (see module docs and util::wheel).
+    wheel: TimerWheel,
 }
 
 impl Reactor {
@@ -449,6 +526,8 @@ impl Reactor {
             accept_mute_until: None,
             stopping: false,
             intake: None,
+            started: Instant::now(),
+            wheel: TimerWheel::new(0),
         })
     }
 
@@ -479,6 +558,8 @@ impl Reactor {
             accept_mute_until: None,
             stopping: false,
             intake: Some(Arc::clone(&intake)),
+            started: Instant::now(),
+            wheel: TimerWheel::new(0),
         };
         Ok((reactor, intake))
     }
@@ -502,7 +583,7 @@ impl Reactor {
             }
             self.drain_intake();
             self.process_completions(&pool);
-            self.expire_timers(&pool);
+            self.service_timers(&pool);
             self.shard_tick(&pool);
             self.update_accept_gate(&pool);
         }
@@ -595,11 +676,12 @@ impl Reactor {
             state: ConnState::Reading,
             rbuf: Vec::new(),
             need: 0,
-            wbuf: Vec::new(),
+            wqueue: VecDeque::new(),
             wpos: 0,
             close_after_write: false,
             interest: sys::EPOLLIN,
             last_activity: Instant::now(),
+            armed_next: UNARMED,
         });
         let token = pack(idx, self.conns.gens[idx]);
         if self.epoll.ctl(sys::EPOLL_CTL_ADD, fd, sys::EPOLLIN, token).is_err() {
@@ -607,6 +689,7 @@ impl Reactor {
             return;
         }
         self.shared.shard.connections.fetch_add(1, Ordering::Relaxed);
+        self.arm_timer(idx);
     }
 
     fn conn_event(&mut self, token: u64, mask: u32, pool: &ThreadPool) {
@@ -669,54 +752,91 @@ impl Reactor {
         self.advance_read(idx, eof, pool);
     }
 
-    /// Re-frame `rbuf`; dispatch / wait / error out as the bytes demand.
+    /// Re-frame `rbuf`; dispatch a burst / wait / error out as the
+    /// bytes demand.  Complete pipelined requests collect into one
+    /// batch (up to [`PIPELINE_BURST`], ending at the first
+    /// `Connection: close`) so the pool handoff and the response writes
+    /// amortize across the burst.  Anything after the batch — a partial
+    /// follow-up, even a malformed one — is handled when the batch's
+    /// responses finish, exactly as if the requests were served one at
+    /// a time.
     fn advance_read(&mut self, idx: usize, eof: bool, pool: &ThreadPool) {
-        let verdict = {
-            let Some(conn) = self.conns.slots[idx].as_ref() else { return };
-            if !eof && conn.rbuf.len() < conn.need {
-                return; // known-incomplete body: skip the re-parse
-            }
-            http::parse_buffer(&conn.rbuf)
-        };
-        match verdict {
-            BufferParse::Complete { req, consumed } => {
-                if let Some(conn) = self.conns.slots[idx].as_mut() {
-                    conn.rbuf.drain(..consumed);
-                    conn.need = 0;
+        let mut batch: Vec<http::HttpRequest> = Vec::new();
+        loop {
+            let verdict = {
+                let Some(conn) = self.conns.slots[idx].as_ref() else { return };
+                if batch.is_empty() && !eof && conn.rbuf.len() < conn.need {
+                    return; // known-incomplete body: skip the re-parse
                 }
-                self.dispatch(idx, req, pool);
-            }
-            BufferParse::Partial => {
-                if eof {
-                    let empty =
-                        self.conns.slots[idx].as_ref().is_none_or(|c| c.rbuf.is_empty());
-                    if empty {
-                        // clean end of a keep-alive connection
-                        self.close_conn(idx);
-                    } else {
-                        // peer died mid-request: 408, mirroring the
-                        // blocking path's Truncated handling
-                        self.respond_error(idx, &http::HttpError::Truncated, pool);
+                http::parse_buffer(&conn.rbuf)
+            };
+            match verdict {
+                BufferParse::Complete { req, consumed } => {
+                    if let Some(conn) = self.conns.slots[idx].as_mut() {
+                        conn.rbuf.drain(..consumed);
+                        conn.need = 0;
+                    }
+                    let keep_alive = req.keep_alive();
+                    batch.push(req);
+                    if keep_alive && batch.len() < PIPELINE_BURST {
+                        continue;
                     }
                 }
-                // else: wait for more bytes (or the stall timer)
-            }
-            BufferParse::PartialBody { total } => {
-                if eof {
-                    // head arrived, body never will
-                    self.respond_error(idx, &http::HttpError::Truncated, pool);
-                } else if let Some(conn) = self.conns.slots[idx].as_mut() {
-                    conn.need = total;
+                BufferParse::Partial if batch.is_empty() => {
+                    if eof {
+                        let empty =
+                            self.conns.slots[idx].as_ref().is_none_or(|c| c.rbuf.is_empty());
+                        if empty {
+                            // clean end of a keep-alive connection
+                            self.close_conn(idx);
+                        } else {
+                            // peer died mid-request: 408, mirroring the
+                            // blocking path's Truncated handling
+                            self.respond_error(idx, &http::HttpError::Truncated, pool);
+                        }
+                        return;
+                    }
+                    // else: wait for more bytes (or the stall timer)
                 }
+                BufferParse::PartialBody { total } if batch.is_empty() => {
+                    if eof {
+                        // head arrived, body never will
+                        self.respond_error(idx, &http::HttpError::Truncated, pool);
+                        return;
+                    } else if let Some(conn) = self.conns.slots[idx].as_mut() {
+                        conn.need = total;
+                    }
+                }
+                BufferParse::Error(e) if batch.is_empty() => {
+                    self.respond_error(idx, &e, pool);
+                    return;
+                }
+                // Batch non-empty from here down: leave the leftover
+                // bytes (and any EOF) for the post-write pass / the
+                // next readiness event — level-triggered epoll
+                // re-reports both, so the outcome matches serving the
+                // requests one at a time.
+                BufferParse::PartialBody { total } => {
+                    if let Some(conn) = self.conns.slots[idx].as_mut() {
+                        conn.need = total;
+                    }
+                }
+                BufferParse::Partial | BufferParse::Error(_) => {}
             }
-            BufferParse::Error(e) => self.respond_error(idx, &e, pool),
+            break;
+        }
+        if batch.is_empty() {
+            // still waiting on bytes: (re-)arm the stall/idle deadline
+            self.arm_timer(idx);
+        } else {
+            self.dispatch(idx, batch, pool);
         }
     }
 
-    /// Hand one parsed request to the worker pool.
-    fn dispatch(&mut self, idx: usize, req: http::HttpRequest, pool: &ThreadPool) {
+    /// Hand a burst of parsed requests to the worker pool as one job.
+    fn dispatch(&mut self, idx: usize, batch: Vec<http::HttpRequest>, pool: &ThreadPool) {
+        debug_assert!(!batch.is_empty());
         let token = pack(idx, self.conns.gens[idx]);
-        let keep_alive = req.keep_alive();
         if let Some(conn) = self.conns.slots[idx].as_mut() {
             conn.state = ConnState::Executing;
             conn.last_activity = Instant::now();
@@ -730,26 +850,42 @@ impl Reactor {
             // The reactor exempts Executing connections from every
             // timer, so the job MUST hand back a completion on every
             // exit path — including an unwind out of the router or
-            // executor (the pool catches the panic).  The guard's
-            // fallback is an empty close-only completion, mirroring the
-            // legacy path, which dropped the socket without a response
-            // when a connection worker panicked.
+            // executor (the pool catches the panic).  Responses move
+            // into the guard as they finish, so a panic on request k
+            // still delivers responses 0..k and then closes — exactly
+            // what serving the burst one request at a time would do.
             struct Finish {
                 hub: Arc<CompletionHub>,
                 token: u64,
-                payload: Option<(Vec<u8>, bool)>,
+                responses: Vec<Vec<u8>>,
+                keep_alive: bool,
             }
             impl Drop for Finish {
                 fn drop(&mut self) {
-                    let (bytes, keep_alive) = self.payload.take().unwrap_or((Vec::new(), false));
-                    self.hub.push(Completion { token: self.token, bytes, keep_alive });
+                    self.hub.push(Completion {
+                        token: self.token,
+                        responses: std::mem::take(&mut self.responses),
+                        keep_alive: self.keep_alive,
+                    });
                 }
             }
-            let mut finish = Finish { hub, token, payload: None };
-            let resp = router::handle(&shared, &req);
-            let mut bytes = Vec::with_capacity(192 + resp.body.len());
-            resp.serialize_into(&mut bytes, keep_alive);
-            finish.payload = Some((bytes, keep_alive));
+            let mut finish = Finish {
+                hub,
+                token,
+                responses: Vec::with_capacity(batch.len()),
+                keep_alive: false,
+            };
+            let last = batch.len() - 1;
+            for (i, req) in batch.iter().enumerate() {
+                let keep_alive = req.keep_alive();
+                let resp = router::handle(&shared, req);
+                let mut bytes = Vec::with_capacity(192 + resp.body.len());
+                resp.serialize_append(&mut bytes, keep_alive);
+                finish.responses.push(bytes);
+                if i == last {
+                    finish.keep_alive = keep_alive;
+                }
+            }
         });
         if !accepted {
             // pool already shut down (only possible mid-drain)
@@ -757,15 +893,16 @@ impl Reactor {
         }
     }
 
-    /// Move finished responses from the hub onto their connections.
+    /// Move finished response bursts from the hub onto their
+    /// connections.
     fn process_completions(&mut self, pool: &ThreadPool) {
         for c in self.hub.drain() {
             let (idx, gen) = unpack(c.token);
             if self.conns.gens.get(idx).copied() != Some(gen) {
-                continue; // connection died while the request ran
+                continue; // connection died while the burst ran
             }
             let Some(conn) = self.conns.slots[idx].as_mut() else { continue };
-            conn.wbuf = c.bytes;
+            conn.wqueue = c.responses.into();
             conn.wpos = 0;
             conn.close_after_write = !c.keep_alive;
             conn.state = ConnState::Writing;
@@ -774,15 +911,16 @@ impl Reactor {
         }
     }
 
-    /// Drain `wbuf`; on completion route to close / next request.
+    /// Drain `wqueue` (vectored); on completion route to close / next
+    /// request.
     fn do_write(&mut self, idx: usize, pool: &ThreadPool) {
         let (status, progressed) = {
             let Some(conn) = self.conns.slots[idx].as_mut() else { return };
-            let before = conn.wpos;
-            let Conn { stream, wbuf, wpos, .. } = conn;
+            let before = pending_bytes(&conn.wqueue, conn.wpos);
+            let Conn { stream, wqueue, wpos, .. } = conn;
             let mut sink = &*stream;
-            let status = pump_write(&mut sink, wbuf, wpos);
-            (status, *wpos != before)
+            let status = pump_writev(&mut sink, wqueue, wpos);
+            (status, pending_bytes(wqueue, *wpos) != before)
         };
         if progressed {
             if let Some(conn) = self.conns.slots[idx].as_mut() {
@@ -791,17 +929,20 @@ impl Reactor {
         }
         match status {
             WriteStatus::Done => self.finish_response(idx, pool),
-            WriteStatus::Blocked => self.set_interest(idx, sys::EPOLLOUT),
+            WriteStatus::Blocked => {
+                self.set_interest(idx, sys::EPOLLOUT);
+                self.arm_timer(idx); // peer must drain within stall_timeout
+            }
             WriteStatus::Closed => self.close_conn(idx),
         }
     }
 
-    /// A response hit the wire: close, or serve the next pipelined
-    /// request, or go back to waiting for one.
+    /// A response burst hit the wire: close, or serve the next
+    /// pipelined requests, or go back to waiting for one.
     fn finish_response(&mut self, idx: usize, pool: &ThreadPool) {
         let close = {
             let Some(conn) = self.conns.slots[idx].as_mut() else { return };
-            conn.wbuf.clear();
+            conn.wqueue.clear();
             conn.wpos = 0;
             conn.close_after_write
         };
@@ -841,7 +982,8 @@ impl Reactor {
             let Some(conn) = self.conns.slots[idx].as_mut() else { return };
             let mut bytes = Vec::with_capacity(192);
             resp.serialize_into(&mut bytes, false);
-            conn.wbuf = bytes;
+            conn.wqueue.clear();
+            conn.wqueue.push_back(bytes);
             conn.wpos = 0;
             conn.close_after_write = true;
             conn.state = ConnState::Writing;
@@ -863,7 +1005,8 @@ impl Reactor {
             let Some(conn) = self.conns.slots[idx].as_mut() else { return };
             let mut bytes = Vec::with_capacity(192);
             resp.serialize_into(&mut bytes, false);
-            conn.wbuf = bytes;
+            conn.wqueue.clear();
+            conn.wqueue.push_back(bytes);
             conn.wpos = 0;
             conn.close_after_write = true;
             conn.state = ConnState::Writing;
@@ -893,54 +1036,97 @@ impl Reactor {
         }
     }
 
-    /// Slow-loris / idle eviction sweep (one pass per tick).
-    fn expire_timers(&mut self, pool: &ThreadPool) {
+    /// Which timeout governs a connection right now, or `None` for
+    /// Executing (bounded by admission + executor, not the peer).
+    fn active_timeout(&self, state: ConnState, rbuf_empty: bool) -> Option<Duration> {
+        match state {
+            ConnState::Executing => None,
+            // mid-request silence → 408; a peer still dripping bytes
+            // resets the clock (parity with the legacy per-read
+            // timeout) but its CPU cost is bounded by the `need` gate
+            ConnState::Reading if !rbuf_empty => Some(self.cfg.stall_timeout),
+            ConnState::Reading => Some(self.cfg.idle_timeout),
+            ConnState::Writing => Some(self.cfg.stall_timeout),
+        }
+    }
+
+    /// The wheel tick at which a deadline instant has definitely
+    /// passed: strictly after the enclosing tick, so a fired entry is
+    /// never early at wall clock.
+    fn deadline_tick(&self, at: Instant) -> u64 {
+        at.saturating_duration_since(self.started).as_millis() as u64 / TICK_MS as u64 + 1
+    }
+
+    /// Arm (or lazily re-arm) the connection's stall/idle deadline.
+    /// Inserts only when the fresh deadline is earlier than the
+    /// earliest live entry — later deadlines are reached by chained
+    /// re-arms when that entry fires, so activity never grows the
+    /// wheel.
+    fn arm_timer(&mut self, idx: usize) {
+        let Some((state, rbuf_empty, last)) = self.conns.slots[idx]
+            .as_ref()
+            .map(|c| (c.state, c.rbuf.is_empty(), c.last_activity))
+        else {
+            return;
+        };
+        let Some(timeout) = self.active_timeout(state, rbuf_empty) else { return };
+        let deadline = self.deadline_tick(last + timeout);
+        let gen = self.conns.gens[idx];
+        let Some(conn) = self.conns.slots[idx].as_mut() else { return };
+        if deadline < conn.armed_next {
+            conn.armed_next = deadline;
+            self.wheel.insert(pack(idx, gen), deadline);
+        }
+    }
+
+    /// Slow-loris / idle eviction, driven by the timer wheel: each tick
+    /// costs O(entries that expired), not O(live connections).  A fired
+    /// entry is a *check hint* — the connection's true deadline is
+    /// recomputed from its current state and `last_activity`, so
+    /// activity since arming re-arms instead of acting, and semantics
+    /// match the old full-table sweep exactly (at the same one-tick
+    /// granularity).
+    fn service_timers(&mut self, pool: &ThreadPool) {
+        let now_tick =
+            self.started.elapsed().as_millis() as u64 / TICK_MS as u64;
+        if now_tick <= self.wheel.now() {
+            return;
+        }
+        let mut fired: Vec<(u64, u64)> = Vec::new();
+        self.wheel.advance(now_tick, |token, expires| fired.push((token, expires)));
+        if fired.is_empty() {
+            return;
+        }
         enum Due {
             Nothing,
             Stall,
             Evict,
         }
         let now = Instant::now();
-        for idx in 0..self.conns.slots.len() {
-            let due = match self.conns.slots[idx].as_ref() {
-                None => continue,
-                Some(c) => {
-                    let quiet = now.duration_since(c.last_activity);
-                    match c.state {
-                        // bounded by admission + executor, not the peer
-                        ConnState::Executing => Due::Nothing,
-                        ConnState::Reading if !c.rbuf.is_empty() => {
-                            // mid-request silence → 408; a peer still
-                            // dripping bytes resets the clock (parity
-                            // with the legacy per-read timeout) but its
-                            // CPU cost is bounded by the `need` gate
-                            if quiet >= self.cfg.stall_timeout {
-                                Due::Stall
-                            } else {
-                                Due::Nothing
-                            }
-                        }
-                        ConnState::Reading => {
-                            if quiet >= self.cfg.idle_timeout {
-                                Due::Evict // parked keep-alive peer
-                            } else {
-                                Due::Nothing
-                            }
-                        }
-                        ConnState::Writing => {
-                            if quiet >= self.cfg.stall_timeout {
-                                Due::Evict // peer refuses to read
-                            } else {
-                                Due::Nothing
-                            }
-                        }
-                    }
+        for (token, expires) in fired {
+            let (idx, gen) = unpack(token);
+            if self.conns.gens.get(idx).copied() != Some(gen) {
+                continue; // entry outlived its connection
+            }
+            let (state, rbuf_empty, quiet) = {
+                let Some(c) = self.conns.slots[idx].as_mut() else { continue };
+                if expires == c.armed_next {
+                    // the tracked earliest entry just fired; the
+                    // re-arm below (or the next activity) replaces it
+                    c.armed_next = UNARMED;
                 }
+                (c.state, c.rbuf.is_empty(), now.duration_since(c.last_activity))
+            };
+            let due = match self.active_timeout(state, rbuf_empty) {
+                None => Due::Nothing,
+                Some(timeout) if quiet < timeout => Due::Nothing,
+                Some(_) if state == ConnState::Reading && !rbuf_empty => Due::Stall,
+                Some(_) => Due::Evict,
             };
             match due {
                 Due::Stall => self.respond_error(idx, &http::HttpError::Truncated, pool),
                 Due::Evict => self.close_conn(idx),
-                Due::Nothing => {}
+                Due::Nothing => self.arm_timer(idx),
             }
         }
     }
@@ -1053,9 +1239,15 @@ mod tests {
         assert!(!should_pause_accepts(0, 8, 0, 32));
     }
 
+    fn queue_of(segs: &[&[u8]]) -> VecDeque<Vec<u8>> {
+        segs.iter().map(|s| s.to_vec()).collect()
+    }
+
     #[test]
-    fn pump_write_survives_eagain_and_reports_dead_peers() {
-        /// Accepts up to `budget` bytes per refill, then EAGAINs.
+    fn pump_writev_survives_eagain_and_reports_dead_peers() {
+        /// Accepts up to `budget` bytes per refill, then EAGAINs.  Uses
+        /// the default `write_vectored` (one segment per call), which
+        /// exercises pump_writev's cross-segment resume arithmetic.
         struct Throttle {
             accepted: Vec<u8>,
             budget: usize,
@@ -1075,18 +1267,19 @@ mod tests {
             }
         }
 
-        let data = b"0123456789";
+        let mut queue = queue_of(&[b"01234".as_slice(), b"56789".as_slice()]);
         let mut pos = 0usize;
         let mut w = Throttle { accepted: Vec::new(), budget: 4 };
-        assert_eq!(pump_write(&mut w, data, &mut pos), WriteStatus::Blocked);
+        assert_eq!(pump_writev(&mut w, &mut queue, &mut pos), WriteStatus::Blocked);
         assert_eq!(pos, 4, "partial progress before EAGAIN must persist");
-        w.budget = 3;
-        assert_eq!(pump_write(&mut w, data, &mut pos), WriteStatus::Blocked);
-        assert_eq!(pos, 7);
+        w.budget = 3; // crosses the segment boundary: 5 - 4 = 1, then 2 more
+        assert_eq!(pump_writev(&mut w, &mut queue, &mut pos), WriteStatus::Blocked);
+        assert_eq!(queue.len(), 1, "drained front segment must pop");
+        assert_eq!(pos, 2);
         w.budget = usize::MAX;
-        assert_eq!(pump_write(&mut w, data, &mut pos), WriteStatus::Done);
-        assert_eq!(pos, data.len());
-        assert_eq!(w.accepted, data, "resumed writes must not duplicate or drop bytes");
+        assert_eq!(pump_writev(&mut w, &mut queue, &mut pos), WriteStatus::Done);
+        assert!(queue.is_empty());
+        assert_eq!(w.accepted, b"0123456789", "resumed writes must not duplicate or drop bytes");
 
         struct Dead;
         impl Write for Dead {
@@ -1097,8 +1290,99 @@ mod tests {
                 Ok(())
             }
         }
+        let mut queue = queue_of(&[b"0123456789".as_slice()]);
         let mut pos = 0usize;
-        assert_eq!(pump_write(&mut Dead, data, &mut pos), WriteStatus::Closed);
+        assert_eq!(pump_writev(&mut Dead, &mut queue, &mut pos), WriteStatus::Closed);
+    }
+
+    /// Records every write-family syscall it receives; vectored calls
+    /// swallow all segments at once like a real kernel would.
+    struct CountingSink {
+        calls: usize,
+        bytes: Vec<u8>,
+    }
+    impl Write for CountingSink {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.calls += 1;
+            self.bytes.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn write_vectored(&mut self, bufs: &[IoSlice<'_>]) -> std::io::Result<usize> {
+            self.calls += 1;
+            let mut n = 0;
+            for b in bufs {
+                self.bytes.extend_from_slice(b);
+                n += b.len();
+            }
+            Ok(n)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn pipelined_burst_flushes_in_one_vectored_syscall() {
+        // Before: N pipelined responses = N+ write() calls.  After: one
+        // writev per readiness pass.  This is the measurable half of
+        // the writev claim (BENCH_SUMMARY §Vectored writes).
+        let resp = http::HttpResponse::json(200, "{\"ok\":true}".to_string());
+        let mut queue = VecDeque::new();
+        for _ in 0..8 {
+            let mut bytes = Vec::new();
+            resp.serialize_into(&mut bytes, true);
+            queue.push_back(bytes);
+        }
+        let expected: Vec<u8> = queue.iter().flat_map(|s| s.iter().copied()).collect();
+        let mut sink = CountingSink { calls: 0, bytes: Vec::new() };
+        let mut pos = 0usize;
+        assert_eq!(pump_writev(&mut sink, &mut queue, &mut pos), WriteStatus::Done);
+        assert_eq!(sink.calls, 1, "8 responses must flush in ONE vectored syscall");
+        assert_eq!(sink.bytes, expected, "framing must be byte-identical to per-response writes");
+    }
+
+    #[test]
+    fn pump_writev_resumes_mid_burst_after_eagain() {
+        /// Vectored sink that takes `budget` bytes per call, then EAGAINs.
+        struct VecThrottle {
+            accepted: Vec<u8>,
+            budget: usize,
+        }
+        impl Write for VecThrottle {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.write_vectored(&[IoSlice::new(buf)])
+            }
+            fn write_vectored(&mut self, bufs: &[IoSlice<'_>]) -> std::io::Result<usize> {
+                if self.budget == 0 {
+                    return Err(std::io::ErrorKind::WouldBlock.into());
+                }
+                let mut n = 0;
+                for b in bufs {
+                    let take = b.len().min(self.budget - n);
+                    self.accepted.extend_from_slice(&b[..take]);
+                    n += take;
+                    if n == self.budget {
+                        break;
+                    }
+                }
+                self.budget = 0;
+                Ok(n)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+
+        let mut queue = queue_of(&[b"aaaa".as_slice(), b"bbbb".as_slice(), b"cccc".as_slice()]);
+        let mut pos = 0usize;
+        // first pass swallows 1.5 segments, then EAGAINs
+        let mut w = VecThrottle { accepted: Vec::new(), budget: 6 };
+        assert_eq!(pump_writev(&mut w, &mut queue, &mut pos), WriteStatus::Blocked);
+        assert_eq!(queue.len(), 2);
+        assert_eq!(pos, 2, "resume offset must point into the partially-sent segment");
+        w.budget = usize::MAX;
+        assert_eq!(pump_writev(&mut w, &mut queue, &mut pos), WriteStatus::Done);
+        assert_eq!(w.accepted, b"aaaabbbbcccc");
     }
 
     #[test]
@@ -1116,6 +1400,33 @@ mod tests {
             assert_eq!(status, 200, "response {i}");
             assert_eq!(body, b"ok\n");
         }
+        gw.shutdown();
+    }
+
+    #[test]
+    fn reactor_serves_a_deep_pipelined_burst_in_order() {
+        // Exercises the batch path end-to-end: one segment carrying 8
+        // keep-alive requests plus a closing 9th must yield 9 responses
+        // in request order, with the connection closed after the last.
+        let mut gw = spawn_gateway(ephemeral(GatewayConfig::default()));
+        let stream = TcpStream::connect(gw.local_addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut wire = String::new();
+        for _ in 0..8 {
+            wire.push_str("GET /healthz HTTP/1.1\r\nhost: x\r\n\r\n");
+        }
+        wire.push_str("GET /healthz HTTP/1.1\r\nhost: x\r\nconnection: close\r\n\r\n");
+        (&stream).write_all(wire.as_bytes()).unwrap();
+        let mut reader = BufReader::new(stream);
+        for i in 0..9 {
+            let (status, body) = http::read_response(&mut reader).expect("burst response");
+            assert_eq!(status, 200, "response {i}");
+            assert_eq!(body, b"ok\n");
+        }
+        assert!(
+            matches!(http::read_response(&mut reader), Err(http::HttpError::ConnectionClosed)),
+            "connection must close after the final Connection: close response"
+        );
         gw.shutdown();
     }
 

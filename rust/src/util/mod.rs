@@ -7,11 +7,13 @@ pub mod heap;
 pub mod minitest;
 pub mod rng;
 pub mod stats;
+pub mod wheel;
 
 pub use grid::{ServiceIndex, StateGrid};
 pub use heap::{Keyed, MaxScoreKey, MinTimeKey};
 pub use rng::Rng;
 pub use stats::Summary;
+pub use wheel::TimerWheel;
 
 /// Simple leveled stderr logger gated by `EPARA_LOG` (error|warn|info|debug).
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]

@@ -1,0 +1,291 @@
+//! Hierarchical timer wheel: O(1) insert, O(expired + cascade) advance.
+//!
+//! Replaces the reactor's per-tick O(live-connections) slab scan for
+//! stall/idle deadlines (DESIGN.md §Reactor timers).  Three levels of 64
+//! slots at one-tick granularity cover spans of 64, 4 096, and 262 144
+//! ticks (≈3.6 h at the reactor's 50 ms tick); longer deadlines clamp
+//! into the outermost level and re-cascade.  Entries are *check hints*,
+//! not authoritative state: the wheel never cancels — a consumer whose
+//! deadline moved (activity re-arm) or whose object died (generation
+//! bump) simply re-inserts or drops the entry when it fires.  That keeps
+//! insert allocation-free in steady state and makes re-arm O(1): arming
+//! is pushing a token, disarming is ignoring it later.
+//!
+//! Determinism: firing order within a tick is insertion order (due list
+//! first, then the level-0 slot), and `advance` walks ticks one by one —
+//! no randomized hashing, no time reads.  The wheel counts every entry
+//! it moves or fires (`work()`), so tests can assert the O(expired)
+//! claim instead of taking it on faith.
+
+/// Slots per level (power of two: slot math is shifts and masks).
+const SLOT_BITS: u32 = 6;
+const SLOTS: usize = 1 << SLOT_BITS; // 64
+/// Wheel levels; level `l` spans `64^(l+1)` ticks.
+const LEVELS: usize = 3;
+/// Ticks covered before far deadlines clamp into the last level.
+const MAX_SPAN: u64 = 1 << (SLOT_BITS * LEVELS as u32); // 262_144
+
+/// One armed deadline: an opaque token owed a callback at `expires`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Entry {
+    token: u64,
+    expires: u64,
+}
+
+/// The wheel.  Ticks are an abstract monotonically increasing `u64`;
+/// the consumer defines their wall-clock width.
+pub struct TimerWheel {
+    /// `levels[l][slot]` holds entries expiring in that slot's span.
+    levels: Vec<Vec<Vec<Entry>>>,
+    /// Entries already due when inserted: fired on the next advance.
+    due: Vec<Entry>,
+    /// Current tick (everything at or before it has been processed).
+    now: u64,
+    /// Live entries (inserted, not yet fired).
+    len: usize,
+    /// Cumulative entries moved (cascade) or fired — the measurable
+    /// "maintenance work" advance() has performed.
+    work: u64,
+}
+
+impl TimerWheel {
+    /// An empty wheel positioned at `now`.
+    pub fn new(now: u64) -> TimerWheel {
+        TimerWheel {
+            levels: (0..LEVELS).map(|_| vec![Vec::new(); SLOTS]).collect(),
+            due: Vec::new(),
+            now,
+            len: 0,
+            work: 0,
+        }
+    }
+
+    /// Live (armed, unfired) entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Current tick.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Total entries cascaded or fired since construction: the wheel's
+    /// maintenance cost, exposed so tests can assert O(expired) per tick
+    /// (an idle advance over thousands of armed far-future entries must
+    /// not grow this).
+    pub fn work(&self) -> u64 {
+        self.work
+    }
+
+    /// Arm `token` to fire at absolute tick `expires`.  A deadline at or
+    /// before the current tick fires on the next `advance` (one tick
+    /// late at worst — the wheel never fires early).  Duplicates are
+    /// allowed by design: consumers re-arm instead of cancelling.
+    pub fn insert(&mut self, token: u64, expires: u64) {
+        self.len += 1;
+        let e = Entry { token, expires };
+        if expires <= self.now {
+            self.due.push(e);
+            return;
+        }
+        let (level, slot) = Self::place(self.now, expires);
+        self.levels[level][slot].push(e);
+    }
+
+    /// (level, slot) for a strictly-future expiry seen from `now`.
+    fn place(now: u64, expires: u64) -> (usize, usize) {
+        debug_assert!(expires > now);
+        let delta = expires - now;
+        for level in 0..LEVELS {
+            let span = 1u64 << (SLOT_BITS * (level as u32 + 1));
+            if delta < span {
+                let slot = (expires >> (SLOT_BITS * level as u32)) as usize & (SLOTS - 1);
+                return (level, slot);
+            }
+        }
+        // Beyond the wheel's span: clamp to the farthest outer slot; the
+        // entry re-cascades with a smaller delta when that slot comes up.
+        let clamped = now + MAX_SPAN - 1;
+        let slot = (clamped >> (SLOT_BITS * (LEVELS as u32 - 1))) as usize & (SLOTS - 1);
+        (LEVELS - 1, slot)
+    }
+
+    /// Advance to `to` (inclusive), invoking `fire(token, expires)` for
+    /// every entry that came due.  Walks tick by tick: per tick the cost
+    /// is O(1) bookkeeping plus the entries actually expiring or
+    /// crossing a cascade boundary — never a scan of armed entries.
+    pub fn advance(&mut self, to: u64, mut fire: impl FnMut(u64, u64)) {
+        while self.now < to {
+            self.now += 1;
+            let tick = self.now;
+            // Cascade outer levels first so entries expiring exactly at
+            // a boundary land in level 0 (or `due`) and fire this tick.
+            for level in 1..LEVELS {
+                let bits = SLOT_BITS * level as u32;
+                if tick & ((1 << bits) - 1) != 0 {
+                    break; // inner boundary not crossed ⇒ outer ones aren't either
+                }
+                let slot = (tick >> bits) as usize & (SLOTS - 1);
+                let moved = std::mem::take(&mut self.levels[level][slot]);
+                for e in moved {
+                    self.work += 1;
+                    self.len -= 1; // re-inserted (or fired) below
+                    self.insert(e.token, e.expires);
+                }
+            }
+            // Fire everything due this tick: the pre-due backlog, then
+            // the level-0 slot (whose entries all expire exactly now).
+            let slot = tick as usize & (SLOTS - 1);
+            for e in std::mem::take(&mut self.due).into_iter().chain(
+                std::mem::take(&mut self.levels[0][slot]),
+            ) {
+                debug_assert!(e.expires <= tick);
+                self.work += 1;
+                self.len -= 1;
+                fire(e.token, e.expires);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Advance one tick at a time, recording (fire_tick, token).
+    fn run(wheel: &mut TimerWheel, to: u64) -> Vec<(u64, u64)> {
+        let mut fired = Vec::new();
+        while wheel.now() < to {
+            let t = wheel.now() + 1;
+            wheel.advance(t, |token, _expires| fired.push((t, token)));
+        }
+        fired
+    }
+
+    #[test]
+    fn fires_exactly_at_expiry_across_all_levels() {
+        // Spot-check every level plus both clamp edges: a future
+        // deadline must fire at its exact tick — never early, never
+        // late — including entries that cascade from level 1 and 2.
+        let base = 1_000u64;
+        let mut w = TimerWheel::new(base);
+        let delays =
+            [1u64, 5, 63, 64, 100, 4_095, 4_096, 10_000, MAX_SPAN - 1, MAX_SPAN + 7];
+        for (i, d) in delays.iter().enumerate() {
+            w.insert(i as u64, base + d);
+        }
+        assert_eq!(w.len(), delays.len());
+        let fired = run(&mut w, base + MAX_SPAN + 16);
+        assert_eq!(w.len(), 0);
+        assert_eq!(fired.len(), delays.len());
+        for (tick, token) in fired {
+            assert_eq!(
+                tick,
+                base + delays[token as usize],
+                "token {token} fired off its deadline"
+            );
+        }
+    }
+
+    #[test]
+    fn cascade_does_not_fire_early() {
+        // A level-1 entry sits in a slot that spans 64 ticks; the
+        // cascade at the slot boundary must re-file it, not fire it.
+        let mut w = TimerWheel::new(0);
+        w.insert(7, 70); // level 1 (delta 70), fires at 70
+        let fired = run(&mut w, 69);
+        assert!(fired.is_empty(), "fired {fired:?} before the deadline");
+        let fired = run(&mut w, 70);
+        assert_eq!(fired, vec![(70, 7)]);
+        // and a level-2 entry across two cascades
+        let mut w = TimerWheel::new(0);
+        w.insert(9, 5_000); // level 2 (delta 5000)
+        assert!(run(&mut w, 4_999).is_empty());
+        assert_eq!(run(&mut w, 5_000), vec![(5_000, 9)]);
+    }
+
+    #[test]
+    fn overdue_insert_fires_on_the_next_tick() {
+        // Coarse-granularity parity bound: a deadline already in the
+        // past when armed fires on the very next advance — at most one
+        // tick late vs. an eager slab scan, and never silently dropped.
+        let mut w = TimerWheel::new(100);
+        w.insert(1, 100); // due exactly now
+        w.insert(2, 40); // long past
+        assert_eq!(w.len(), 2);
+        let fired = run(&mut w, 101);
+        assert_eq!(fired, vec![(101, 1), (101, 2)]);
+    }
+
+    #[test]
+    fn rearm_on_activity_moves_the_deadline() {
+        // The consumer's lazy re-arm pattern: the original entry fires
+        // at the stale deadline, the consumer notices activity pushed
+        // the real deadline out and re-inserts instead of acting.
+        let mut w = TimerWheel::new(0);
+        let stale = 50u64;
+        let real = 120u64; // activity at tick 70 would move 50 → 120
+        w.insert(3, stale);
+        let mut acted = Vec::new();
+        while w.now() < 200 {
+            let t = w.now() + 1;
+            let mut rearm = Vec::new();
+            w.advance(t, |token, _| {
+                if t < real {
+                    rearm.push((token, real)); // deadline moved: re-arm
+                } else {
+                    acted.push((t, token)); // genuinely expired: act
+                }
+            });
+            for (token, at) in rearm {
+                w.insert(token, at);
+            }
+        }
+        assert_eq!(acted, vec![(real, 3)], "must act exactly once, at the moved deadline");
+    }
+
+    #[test]
+    fn advance_cost_is_o_expired_not_o_armed() {
+        // 10k armed far-future connections must cost an idle tick
+        // nothing: the slab scan this wheel replaces would have touched
+        // all 10k every tick.
+        let mut w = TimerWheel::new(0);
+        for i in 0..10_000u64 {
+            w.insert(i, 100_000 + i);
+        }
+        assert_eq!(w.work(), 0);
+        w.advance(60, |_, _| panic!("nothing expires this early"));
+        assert_eq!(w.work(), 0, "idle ticks must not touch armed entries");
+        // Crossing cascade boundaries is bounded too: by tick 4096 the
+        // wheel has crossed 64 level-1 boundaries and one level-2
+        // boundary, and these 10k entries sit far beyond both.
+        w.advance(4_096, |_, _| panic!("still nothing expires"));
+        assert_eq!(w.work(), 0);
+        // Draining everything costs each entry O(levels) moves + 1 fire.
+        let mut fired = 0u64;
+        w.advance(200_000, |_, _| fired += 1);
+        assert_eq!(fired, 10_000);
+        assert_eq!(w.len(), 0);
+        assert!(
+            w.work() <= 10_000 * (LEVELS as u64 + 1),
+            "total work {} exceeds O(entries × levels)",
+            w.work()
+        );
+    }
+
+    #[test]
+    fn duplicate_tokens_fire_once_per_insert() {
+        // Re-arm without cancel means duplicates exist by design; each
+        // fires independently and the consumer dedups by deadline check.
+        let mut w = TimerWheel::new(0);
+        w.insert(5, 10);
+        w.insert(5, 20);
+        let fired = run(&mut w, 32);
+        assert_eq!(fired, vec![(10, 5), (20, 5)]);
+    }
+}

@@ -2,11 +2,21 @@
 """CI perf gate: compare a fresh perf_hotpath JSON against the checked-in
 baseline and fail on >30% regression on any gated metric.
 
-Usage: check_perf.py CURRENT.json BASELINE.json
+Usage:
+  check_perf.py CURRENT.json BASELINE.json           # gate (CI entry point)
+  check_perf.py gate CURRENT.json BASELINE.json      # same, explicit
+  check_perf.py update-baseline BENCH.json [BASELINE.json]
+                                                     # rewrite the baseline
+                                                     # from a bench output
+                                                     # (default BENCH_perf.json)
 
-Baselines marked "provisional": true (no measured numbers committed yet)
-pass with a notice — refresh with `make bench-perf` on a runner-class
-machine and commit the resulting BENCH_perf.json to arm the gate.
+A baseline marked "provisional": true is an all-zero placeholder, not a
+measurement.  The gate FAILS against it as soon as the current run
+reports any nonzero gated value: real numbers exist at that point, so a
+decorative gate would silently wave every regression through.  Arm it in
+one command — `make bench-perf` on the runner, or
+`check_perf.py update-baseline BENCH_perf.current.json` against a CI
+artifact — and commit the refreshed BENCH_perf.json.
 
 A gated metric key present in only one of the two files is a hard error
 (exit 1) with an explicit message, never a KeyError/traceback: a key that
@@ -27,6 +37,7 @@ LOWER = [
     "fluid_gain_ns",
     "cache_score_ns",
     "resilience_decide_ns",
+    "timer_wheel_ns",
 ]
 THRESHOLD = 0.30
 # record bookkeeping, not metrics: never flagged as stray baseline keys
@@ -84,11 +95,80 @@ def compare(cur, base):
     return regressions, key_errors, lines
 
 
+def measured_keys(record):
+    """Gated keys carrying a real (nonzero or non-numeric) measurement."""
+    out = []
+    for key in HIGHER + LOWER:
+        try:
+            value = float(record.get(key, 0))
+        except (TypeError, ValueError):
+            out.append(key)  # non-numeric: definitely not a placeholder zero
+            continue
+        if value > 0:
+            out.append(key)
+    return out
+
+
+def merge_baseline(bench, old):
+    """The refreshed baseline record: metrics and bookkeeping come from the
+    fresh bench output; metadata keys only the old baseline carries (e.g. a
+    hand-written `note`) are preserved; `provisional` is always cleared —
+    the whole point of refreshing is to arm the gate."""
+    merged = {k: old[k] for k in METADATA_KEYS if k in old}
+    merged.update(bench)
+    merged["provisional"] = False
+    return merged
+
+
+def update_baseline(bench_path, baseline_path):
+    """Rewrite `baseline_path` from the bench output at `bench_path`.
+
+    Returns (exit_code, output_lines).  Refuses to arm the gate from a
+    bench record with no measured values (that would re-commit zeros and
+    then hard-fail every compare on non-positive baselines).
+    """
+    with open(bench_path) as f:
+        bench = json.load(f)
+    measured = measured_keys(bench)
+    if not measured:
+        return 1, [
+            f"update-baseline REFUSED: {bench_path} has no nonzero gated "
+            f"metric - run `make bench-perf` first, then retry"
+        ]
+    try:
+        with open(baseline_path) as f:
+            old = json.load(f)
+    except FileNotFoundError:
+        old = {}
+    merged = merge_baseline(bench, old)
+    with open(baseline_path, "w") as f:
+        json.dump(merged, f, indent=2)
+        f.write("\n")
+    return 0, [
+        f"baseline {baseline_path} refreshed from {bench_path} "
+        f"({len(measured)} measured metrics, provisional cleared)",
+        f"commit it to arm the gate:  git add {baseline_path}",
+    ]
+
+
 def gate(cur, base):
     """Full gate on two parsed records: returns (exit_code, output_lines)."""
     if base.get("provisional"):
+        measured = measured_keys(cur)
+        if measured:
+            return 1, [
+                "perf gate FAILED: the baseline is still provisional (all-zero "
+                "placeholder) but the current run measured real values for: "
+                + ", ".join(measured),
+                "real numbers exist, so a decorative gate would wave every "
+                "regression through - commit a measured baseline:",
+                "  make bench-perf && git add BENCH_perf.json",
+                "  (or: python3 scripts/check_perf.py update-baseline "
+                "BENCH_perf.current.json)",
+            ]
         return 0, [
-            "perf baseline is provisional (no measured numbers committed yet): gate skipped",
+            "perf baseline is provisional and the current run measured "
+            "nothing: gate skipped",
             "arm it with:  make bench-perf  && git add BENCH_perf.json",
         ]
     out = []
@@ -125,12 +205,23 @@ def gate(cur, base):
 
 
 def main() -> int:
-    if len(sys.argv) != 3:
+    argv = sys.argv[1:]
+    if argv and argv[0] == "update-baseline":
+        if len(argv) not in (2, 3):
+            print(__doc__)
+            return 2
+        baseline = argv[2] if len(argv) == 3 else "BENCH_perf.json"
+        code, lines = update_baseline(argv[1], baseline)
+        print("\n".join(lines))
+        return code
+    if argv and argv[0] == "gate":
+        argv = argv[1:]
+    if len(argv) != 2:
         print(__doc__)
         return 2
-    with open(sys.argv[1]) as f:
+    with open(argv[0]) as f:
         cur = json.load(f)
-    with open(sys.argv[2]) as f:
+    with open(argv[1]) as f:
         base = json.load(f)
     code, lines = gate(cur, base)
     print("\n".join(lines))

@@ -5,6 +5,9 @@ Run from the repository root:  python3 -m unittest discover -s scripts
 directly).
 """
 
+import json
+import os
+import tempfile
 import unittest
 
 import check_perf
@@ -20,9 +23,14 @@ def record(**overrides):
         "fluid_gain_ns": 40.0,
         "cache_score_ns": 120.0,
         "resilience_decide_ns": 90.0,
+        "timer_wheel_ns": 60.0,
     }
     base.update(overrides)
     return base
+
+
+def zero_record():
+    return {k: 0.0 for k in check_perf.HIGHER + check_perf.LOWER}
 
 
 class CompareTests(unittest.TestCase):
@@ -96,9 +104,21 @@ class CompareTests(unittest.TestCase):
 
 
 class GateTests(unittest.TestCase):
-    def test_provisional_baseline_skips_the_gate(self):
+    def test_provisional_baseline_with_measured_current_fails(self):
+        # Real numbers exist: a provisional baseline must FAIL the gate
+        # (not pass with a notice), forcing a measured baseline commit.
         code, lines = check_perf.gate(record(), {"provisional": True})
-        self.assertEqual(code, 0)
+        self.assertEqual(code, 1, "\n".join(lines))
+        joined = "\n".join(lines)
+        self.assertIn("perf gate FAILED", joined)
+        self.assertIn("provisional", joined)
+        self.assertIn("update-baseline", joined)
+
+    def test_provisional_baseline_with_unmeasured_current_skips(self):
+        # Nothing measured on either side (e.g. two placeholder records):
+        # there is no signal to gate on, so skip with a notice.
+        code, lines = check_perf.gate(zero_record(), {"provisional": True})
+        self.assertEqual(code, 0, "\n".join(lines))
         self.assertTrue(any("provisional" in line for line in lines))
 
     def test_clean_comparison_passes(self):
@@ -140,6 +160,61 @@ class GateTests(unittest.TestCase):
         code, lines = check_perf.gate(record(), base)
         self.assertEqual(code, 0)
         self.assertFalse(any("stale baseline" in line for line in lines))
+
+
+class UpdateBaselineTests(unittest.TestCase):
+    def test_merge_takes_metrics_from_bench_and_note_from_old(self):
+        old = record(
+            schema=1,
+            provisional=True,
+            note="hand-written context",
+            events_per_sec=1.0,
+        )
+        bench = record(schema=1, quick=True, events_per_sec=123_456.0)
+        merged = check_perf.merge_baseline(bench, old)
+        self.assertEqual(merged["events_per_sec"], 123_456.0)
+        self.assertEqual(merged["note"], "hand-written context")
+        self.assertEqual(merged["quick"], True)
+        self.assertFalse(merged["provisional"], "refresh must arm the gate")
+
+    def test_merge_without_an_old_baseline(self):
+        merged = check_perf.merge_baseline(record(schema=1), {})
+        self.assertFalse(merged["provisional"])
+        self.assertEqual(merged["spf_solve_ms_10k"], 180.0)
+
+    def test_update_baseline_roundtrip_arms_the_gate(self):
+        with tempfile.TemporaryDirectory() as d:
+            bench_path = os.path.join(d, "bench.json")
+            base_path = os.path.join(d, "baseline.json")
+            with open(bench_path, "w") as f:
+                json.dump(record(schema=1, quick=True), f)
+            with open(base_path, "w") as f:
+                json.dump({"provisional": True, "note": "keep me"}, f)
+            code, lines = check_perf.update_baseline(bench_path, base_path)
+            self.assertEqual(code, 0, "\n".join(lines))
+            with open(base_path) as f:
+                refreshed = json.load(f)
+            self.assertFalse(refreshed["provisional"])
+            self.assertEqual(refreshed["note"], "keep me")
+            # the refreshed baseline is a live gate: a synthetic regression
+            # against it must fail
+            ok_code, _ = check_perf.gate(record(quick=True), refreshed)
+            self.assertEqual(ok_code, 0)
+            bad = record(quick=True, spf_solve_ms_10k=180.0 * 2.0)
+            bad_code, bad_lines = check_perf.gate(bad, refreshed)
+            self.assertEqual(bad_code, 1)
+            self.assertTrue(any("perf gate FAILED" in s for s in bad_lines))
+
+    def test_update_baseline_refuses_an_all_zero_bench_record(self):
+        with tempfile.TemporaryDirectory() as d:
+            bench_path = os.path.join(d, "bench.json")
+            base_path = os.path.join(d, "baseline.json")
+            with open(bench_path, "w") as f:
+                json.dump(zero_record(), f)
+            code, lines = check_perf.update_baseline(bench_path, base_path)
+            self.assertEqual(code, 1)
+            self.assertIn("REFUSED", "\n".join(lines))
+            self.assertFalse(os.path.exists(base_path), "must not write zeros")
 
 
 if __name__ == "__main__":
