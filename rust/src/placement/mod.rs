@@ -43,6 +43,19 @@ pub struct PlacementItem {
 /// current placement Θ, `phi` returns φ(Θ), and `gain` returns
 /// φ(Θ+δ) − φ(Θ) without copying Θ.  Submodularity of φ in the pushed
 /// set is what SSSP's guarantee rests on (Appendix A).
+///
+/// **Per-service separability contract (lazy path).**  [`spf_lazy`]
+/// additionally assumes φ = Σ_l φ_l with each φ_l reading only service
+/// l's own state: a committed `push` for service A must not change
+/// `gain` for any service B ≠ A (gains may couple *within* a service,
+/// and `feasible` may couple freely — it is always re-checked fresh).
+/// The fluid evaluator satisfies this (its gain reads only the pushed
+/// service's entry plus static parameters).  An evaluator whose gains
+/// couple services — e.g. through shared free capacity or a dynamic
+/// cross-service warmth term — would silently reuse stale gains under
+/// `spf_lazy` and place wrongly with no assertion tripping: such
+/// evaluators must use [`spf_greedy`], which re-evaluates every
+/// candidate each round.
 pub trait PhiEval {
     /// φ of the current placement.
     fn phi(&self) -> f64;

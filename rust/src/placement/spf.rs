@@ -84,6 +84,14 @@ struct LazyCand {
 type LazyEntry = Keyed<MaxScoreKey, LazyCand>;
 
 /// Accelerated lazy greedy over a *set* candidate pool (repeatable items).
+///
+/// **Contract**: the evaluator's gains must be per-service separable
+/// (see the [`PhiEval`] trait docs) — a `push` for one service must not
+/// change any other service's gains, because the staleness epochs below
+/// only invalidate the pushed service's stored gains.
+/// [`FluidEval`](super::FluidEval) satisfies this; an evaluator whose
+/// gains couple services must use
+/// [`spf_greedy`] instead.
 pub fn spf_lazy<E: PhiEval>(candidates: &[PlacementItem], eval: &mut E) {
     // §Perf: seed the heap only with positive-gain candidates — at 10k
     // servers most (service, server) pairs have zero demand and zero

@@ -761,13 +761,25 @@ impl Reactor {
     /// responses finish, exactly as if the requests were served one at
     /// a time.
     fn advance_read(&mut self, idx: usize, eof: bool, pool: &ThreadPool) {
+        // Known-incomplete body (head parsed, Content-Length bytes still
+        // outstanding): skip the re-parse.  Re-arm the stall deadline
+        // before waiting, though — the connection's only wheel entry may
+        // have been consumed while it was Executing (`active_timeout`
+        // returns None there, so `service_timers` clears `armed_next`
+        // without re-inserting), and returning with nothing armed would
+        // let a peer that pipelined a request plus a partial body and
+        // then went silent hold the slot forever instead of drawing the
+        // 408 the slab-scan semantics promise.
+        let incomplete_body =
+            self.conns.slots[idx].as_ref().is_some_and(|c| !eof && c.rbuf.len() < c.need);
+        if incomplete_body {
+            self.arm_timer(idx);
+            return;
+        }
         let mut batch: Vec<http::HttpRequest> = Vec::new();
         loop {
             let verdict = {
                 let Some(conn) = self.conns.slots[idx].as_ref() else { return };
-                if batch.is_empty() && !eof && conn.rbuf.len() < conn.need {
-                    return; // known-incomplete body: skip the re-parse
-                }
                 http::parse_buffer(&conn.rbuf)
             };
             match verdict {
@@ -1445,6 +1457,55 @@ mod tests {
         let (status, _) = http::read_response(&mut reader).expect("stall must be answered");
         assert_eq!(status, 408);
         // and the connection is closed afterwards
+        assert!(matches!(
+            http::read_response(&mut reader),
+            Err(http::HttpError::ConnectionClosed)
+        ));
+        gw.shutdown();
+    }
+
+    #[test]
+    fn reactor_rearms_stall_timer_for_partial_pipelined_body() {
+        // Regression test for the advance_read need-gate: a peer
+        // pipelines a long-running infer plus the head and a partial
+        // body of a second request, then goes silent.  The connection's
+        // only wheel entry fires while it is Executing (active_timeout
+        // returns None, which consumes the entry without re-inserting),
+        // so the post-response advance_read hits the known-incomplete-
+        // body gate with nothing armed — it must re-arm, or the stalled
+        // body never draws its 408 and the slot leaks forever.
+        let table = zoo::paper_zoo();
+        // paper-scale latencies: ~6 ms/frame × 300 frames holds the
+        // connection in Executing for ~1.8 s (still inside tiny_llm's
+        // 2 s SLO, so admission serves it), far past the 400 ms idle
+        // deadline armed at accept — that wheel entry reliably fires
+        // mid-execution even on a slow CI box
+        let executor = Arc::new(ProfileReplayExecutor::new(table.clone(), 1.0));
+        let cfg = ephemeral(GatewayConfig {
+            idle_timeout_ms: 400,
+            stall_timeout_ms: 150,
+            ..Default::default()
+        });
+        let mut gw = Gateway::spawn(cfg, table, executor).expect("gateway spawn");
+        let stream = TcpStream::connect(gw.local_addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let body = "{\"service\":\"tiny_llm\",\"frames\":300}";
+        let mut wire = format!(
+            "POST /v1/infer HTTP/1.1\r\nhost: x\r\ncontent-type: application/json\r\n\
+             content-length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        // second request: complete head, 4 of 11 promised body bytes,
+        // then silence — exactly the known-incomplete-body path
+        wire.push_str("POST /v1/infer HTTP/1.1\r\nhost: x\r\ncontent-length: 11\r\n\r\n{\"se");
+        (&stream).write_all(wire.as_bytes()).unwrap();
+        let mut reader = BufReader::new(stream);
+        let (status, _) = http::read_response(&mut reader).expect("infer response");
+        assert_eq!(status, 200, "the long infer must be served first");
+        let (status, _) =
+            http::read_response(&mut reader).expect("stalled second request must be answered");
+        assert_eq!(status, 408, "silent partial body must draw a 408, not leak the slot");
         assert!(matches!(
             http::read_response(&mut reader),
             Err(http::HttpError::ConnectionClosed)

@@ -5,18 +5,28 @@ baseline and fail on >30% regression on any gated metric.
 Usage:
   check_perf.py CURRENT.json BASELINE.json           # gate (CI entry point)
   check_perf.py gate CURRENT.json BASELINE.json      # same, explicit
+  check_perf.py gate --strict-provisional CURRENT.json BASELINE.json
+                                                     # unarmed baseline is a
+                                                     # hard failure
+  check_perf.py assert-armed [BASELINE.json]         # fail while the baseline
+                                                     # is still provisional
+                                                     # (nightly entry point)
   check_perf.py update-baseline BENCH.json [BASELINE.json]
                                                      # rewrite the baseline
                                                      # from a bench output
                                                      # (default BENCH_perf.json)
 
 A baseline marked "provisional": true is an all-zero placeholder, not a
-measurement.  The gate FAILS against it as soon as the current run
-reports any nonzero gated value: real numbers exist at that point, so a
-decorative gate would silently wave every regression through.  Arm it in
-one command — `make bench-perf` on the runner, or
-`check_perf.py update-baseline BENCH_perf.current.json` against a CI
-artifact — and commit the refreshed BENCH_perf.json.
+measurement.  When the current run reports nonzero gated values against
+it, real numbers exist and the gate is decorative — but failing every PR
+on that would block unrelated work on an external refresh step.  So the
+split is: the PR gate prints a LOUD unarmed warning and passes
+(`--strict-provisional` restores the hard failure), while the scheduled
+nightly lane runs `assert-armed`, which FAILS until a measured baseline
+is committed — the same nightly run uploads the refreshed-baseline
+artifact, so arming is a download + commit:
+`check_perf.py update-baseline BENCH_perf.current.json` (or
+`make bench-perf` on a runner-class machine).
 
 A gated metric key present in only one of the two files is a hard error
 (exit 1) with an explicit message, never a KeyError/traceback: a key that
@@ -151,20 +161,59 @@ def update_baseline(bench_path, baseline_path):
     ]
 
 
-def gate(cur, base):
-    """Full gate on two parsed records: returns (exit_code, output_lines)."""
+def assert_armed(base):
+    """Nightly blocking check: (exit_code, lines), failing while the
+    committed baseline is still the provisional placeholder.  Runs on the
+    scheduled lane (which uploads the refreshed-baseline artifact in the
+    same run), so the failure lands where arming it is a download +
+    commit — not on every unrelated PR."""
+    if base.get("provisional"):
+        return 1, [
+            "perf baseline NOT ARMED: BENCH_perf.json is still the "
+            "provisional all-zero placeholder, so the PR perf gate cannot "
+            "catch regressions",
+            "arm it from this run's bench artifact:",
+            "  python3 scripts/check_perf.py update-baseline "
+            "BENCH_perf.current.json",
+            "  git add BENCH_perf.json  # and commit",
+        ]
+    measured = measured_keys(base)
+    return 0, [
+        f"perf baseline is armed ({len(measured)} measured gated metrics)"
+    ]
+
+
+def gate(cur, base, strict_provisional=False):
+    """Full gate on two parsed records: returns (exit_code, output_lines).
+
+    `strict_provisional` turns an unarmed (provisional) baseline facing a
+    measured current run into a hard failure; the default is a loud
+    warning + pass, so PRs are not blocked on the external
+    refresh-and-commit step.  The nightly `assert-armed` step owns the
+    blocking failure until a measured baseline lands.
+    """
     if base.get("provisional"):
         measured = measured_keys(cur)
         if measured:
-            return 1, [
-                "perf gate FAILED: the baseline is still provisional (all-zero "
-                "placeholder) but the current run measured real values for: "
+            lines = [
+                "the baseline is still provisional (all-zero placeholder) "
+                "but the current run measured real values for: "
                 + ", ".join(measured),
-                "real numbers exist, so a decorative gate would wave every "
-                "regression through - commit a measured baseline:",
+                "real numbers exist, so this gate is decorative until a "
+                "measured baseline is committed:",
                 "  make bench-perf && git add BENCH_perf.json",
                 "  (or: python3 scripts/check_perf.py update-baseline "
-                "BENCH_perf.current.json)",
+                "BENCH_perf.current.json",
+                "   from the nightly workflow's bench artifact)",
+            ]
+            if strict_provisional:
+                return 1, ["perf gate FAILED: " + lines[0]] + lines[1:]
+            return 0, [
+                "#" * 72,
+                "## perf gate UNARMED: " + lines[0],
+            ] + ["## " + l for l in lines[1:]] + [
+                "## the nightly workflow FAILS (assert-armed) until then",
+                "#" * 72,
             ]
         return 0, [
             "perf baseline is provisional and the current run measured "
@@ -214,8 +263,20 @@ def main() -> int:
         code, lines = update_baseline(argv[1], baseline)
         print("\n".join(lines))
         return code
+    if argv and argv[0] == "assert-armed":
+        if len(argv) > 2:
+            print(__doc__)
+            return 2
+        baseline = argv[1] if len(argv) == 2 else "BENCH_perf.json"
+        with open(baseline) as f:
+            base = json.load(f)
+        code, lines = assert_armed(base)
+        print("\n".join(lines))
+        return code
     if argv and argv[0] == "gate":
         argv = argv[1:]
+    strict = "--strict-provisional" in argv
+    argv = [a for a in argv if a != "--strict-provisional"]
     if len(argv) != 2:
         print(__doc__)
         return 2
@@ -223,7 +284,7 @@ def main() -> int:
         cur = json.load(f)
     with open(argv[1]) as f:
         base = json.load(f)
-    code, lines = gate(cur, base)
+    code, lines = gate(cur, base, strict_provisional=strict)
     print("\n".join(lines))
     return code
 
