@@ -7,6 +7,7 @@
 //!  * fluid gain query   — O(1), tens of ns;
 //!  * cache score        — weight-cache admit/warm_frac, sub-µs;
 //!  * resilience decide  — breaker admit/record + retry budget, sub-µs;
+//!  * predict update     — latency-model observe + forecaster fold, sub-µs;
 //!  * timer wheel        — reactor deadline bookkeeping, O(expired)/tick.
 //!
 //! Usage:
@@ -26,6 +27,7 @@ use epara::cluster::{EdgeCloud, GpuSpec};
 use epara::core::{Request, RequestId, ServerId, ServiceId};
 use epara::handler::{decide_with, HandlerConfig, LocalCapacity, OffloadScratch, StateView};
 use epara::placement::{sssp, FluidEval, PhiEval, PlacementItem};
+use epara::predict::{LatencyModel, PredictConfig, RateForecaster};
 use epara::profile::zoo;
 use epara::server::resilience::{Admit, Breaker, ResilienceConfig, RetryBudget};
 use epara::sim::{simulate, PolicyConfig, SimConfig};
@@ -91,6 +93,7 @@ struct PerfRecord {
     fluid_gain_ns: f64,
     cache_score_ns: f64,
     resilience_decide_ns: f64,
+    predict_update_ns: f64,
     timer_wheel_ns: f64,
     sim_requests_per_sec: f64,
     events_per_sec: f64,
@@ -104,6 +107,7 @@ impl PerfRecord {
              \"spf_solve_ms_10k\": {:.3},\n  \"fluid_gain_ns\": {:.1},\n  \
              \"cache_score_ns\": {:.1},\n  \
              \"resilience_decide_ns\": {:.1},\n  \
+             \"predict_update_ns\": {:.1},\n  \
              \"timer_wheel_ns\": {:.1},\n  \
              \"sim_requests_per_sec\": {:.1},\n  \"events_per_sec\": {:.1}\n}}\n",
             self.quick,
@@ -113,6 +117,7 @@ impl PerfRecord {
             self.fluid_gain_ns,
             self.cache_score_ns,
             self.resilience_decide_ns,
+            self.predict_update_ns,
             self.timer_wheel_ns,
             self.sim_requests_per_sec,
             self.events_per_sec,
@@ -256,6 +261,29 @@ fn main() {
     let resil_ns = t0.elapsed().as_secs_f64() * 1e9 / resil_reps as f64;
     println!("  admit/record/budget mix: {resil_ns:.0} ns/op (acc {acc})");
     rec.resilience_decide_ns = resil_ns;
+
+    println!("\npredict model update (DESIGN.md §Prediction):");
+    // The per-request prediction hot path: one latency-model observe +
+    // predict pair plus one forecaster arrival fold.  The sample stream
+    // cycles a few latency regimes so the EWMA/quantile updates take
+    // their real branches; virtual time is the loop counter, so bucket
+    // closes (and the Holt update) happen at the configured cadence.
+    let pcfg = PredictConfig { enabled: true, ..Default::default() };
+    let mut lm = LatencyModel::new(&pcfg);
+    let mut rf = RateForecaster::new(&pcfg);
+    let pred_reps = if quick { 200_000 } else { 1_000_000 };
+    let mut acc = 0.0;
+    let t0 = Instant::now();
+    for i in 0..pred_reps {
+        lm.observe(5.0 + (i % 7) as f64);
+        rf.observe(i as f64);
+        if let Some(p) = lm.predict() {
+            acc += p;
+        }
+    }
+    let predict_ns = t0.elapsed().as_secs_f64() * 1e9 / pred_reps as f64;
+    println!("  observe/forecast mix: {predict_ns:.0} ns/op (acc {acc:.1})");
+    rec.predict_update_ns = predict_ns;
 
     println!("\ntimer wheel maintenance (DESIGN.md §Reactor timers):");
     // The reactor's steady-state deadline pattern: 4k connections arm

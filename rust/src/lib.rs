@@ -13,6 +13,10 @@
 //!   idle-goodput offloading (§3.2, Eq. 1).
 //! * [`placement`] — state-aware submodular service placement
 //!   (§3.3, Algorithms 1–2, the 1/(1+P) bound of Eq. 3 / Appendix A).
+//! * [`predict`] — online latency models (EWMA + Robbins–Monro quantile)
+//!   and a Holt arrival-rate forecaster feeding predictive admission on
+//!   the gateway and proactive placement rounds in the sim (off by
+//!   default; disabled it reproduces the prior engine bit-for-bit).
 //! * [`sync`] — ring-reduce information synchronization (§3.4).
 //! * [`modelcache`] — per-server weight caches with family-aware partial
 //!   loads: deterministic LRU over backbone/delta byte footprints, so
@@ -62,6 +66,7 @@ pub mod handler;
 pub mod metrics;
 pub mod modelcache;
 pub mod placement;
+pub mod predict;
 pub mod profile;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

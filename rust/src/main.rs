@@ -22,6 +22,7 @@
 //!                   [--idle-timeout-ms MS] [--stall-timeout-ms MS]
 //!                   [--legacy-threads] [--cache-capacity-mb MB]
 //!                   [--retry-budget RATIO] [--breaker ERROR_RATE]
+//!                   [--predictive-admission] [--predict-min-samples N]
 //!       Network serving gateway: POST /v1/infer, GET /metrics,
 //!       GET /healthz; category-aware admission + BS batching; epoll
 //!       reactor connection layer on Linux (idle connections cost a
@@ -33,7 +34,11 @@
 //!       (`epara_cache_*` series on /metrics); `--retry-budget R` /
 //!       `--breaker E` switch on the request-lifecycle resilience layer
 //!       (deadline budgets, bounded retries, per-service circuit
-//!       breakers; see DESIGN.md §Resilience); graceful shutdown on
+//!       breakers; see DESIGN.md §Resilience);
+//!       `--predictive-admission` sheds on predicted end-to-end latency
+//!       from online per-(category, service) models once they pass
+//!       `--predict-min-samples` observations (`epara_pred*` series on
+//!       /metrics; see DESIGN.md §Prediction); graceful shutdown on
 //!       ctrl-c.
 //!   epara loadgen   [--addr HOST:PORT] [--requests N] [--rps R]
 //!                   [--mix mixed|latency|frequency|prodK] [--closed-loop]
@@ -282,6 +287,16 @@ fn cmd_gateway(args: &Args) -> anyhow::Result<()> {
                 r.breaker_error_rate = args.get("breaker", r.breaker_error_rate);
             }
             r
+        },
+        predict: {
+            // `--predictive-admission` sheds on predicted end-to-end
+            // latency from the online models once they warm up
+            let mut p = epara::predict::PredictConfig::default();
+            p.enabled = args.flag("predictive-admission");
+            if args.has("predict-min-samples") {
+                p.min_samples = args.get("predict-min-samples", p.min_samples);
+            }
+            p
         },
         ..Default::default()
     };

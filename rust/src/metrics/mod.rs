@@ -66,6 +66,12 @@ pub struct Metrics {
     pub breaker_trips: u64,
     /// Requests short-circuited (fast-failed) by an open breaker.
     pub breaker_short_circuits: u64,
+    /// Whether the online prediction layer was enabled (and could run —
+    /// the sim also requires periodic re-placement).  Gates the predict
+    /// fingerprint section exactly like the cache/resilience switches.
+    pub predict_enabled: bool,
+    /// Forecast-triggered early placement rounds.
+    pub pred_early_rounds: u64,
 }
 
 impl Metrics {
@@ -190,6 +196,11 @@ impl Metrics {
                 self.breaker_short_circuits,
             );
         }
+        // Predict section, same stance: disabled runs reproduce the
+        // pre-prediction fingerprint byte-for-byte.
+        if self.predict_enabled {
+            let _ = write!(out, " pred[er={}]", self.pred_early_rounds);
+        }
         out
     }
 
@@ -296,6 +307,27 @@ mod tests {
         let cache_at = both.find("cache[").expect("cache section");
         let res_at = both.find("res[").expect("res section");
         assert!(cache_at < res_at);
+    }
+
+    #[test]
+    fn predict_section_only_fingerprints_when_enabled() {
+        let mut m = Metrics::new();
+        m.record(ServiceId(0), &Outcome::Completed { latency_ms: 1.0 }, 0);
+        m.pred_early_rounds = 2;
+        let disabled = m.fingerprint();
+        assert!(!disabled.contains("pred["), "{disabled}");
+        m.predict_enabled = true;
+        let enabled = m.fingerprint();
+        assert!(enabled.contains("pred[er=2]"), "{enabled}");
+        assert!(enabled.starts_with(&disabled));
+        // fixed composition order: cache, then resilience, then predict
+        m.cache_enabled = true;
+        m.resilience_enabled = true;
+        let all = m.fingerprint();
+        let cache_at = all.find("cache[").expect("cache section");
+        let res_at = all.find("res[").expect("res section");
+        let pred_at = all.find("pred[").expect("pred section");
+        assert!(cache_at < res_at && res_at < pred_at);
     }
 
     #[test]

@@ -1,0 +1,348 @@
+//! Online prediction layer (DESIGN.md §Prediction).
+//!
+//! Two small incremental estimators shared by the wall-clock gateway and
+//! the virtual-time simulator:
+//!
+//! * [`LatencyModel`] — per-(category, service) execution-latency model:
+//!   an EWMA mean, an EWMA absolute deviation, and a Robbins–Monro
+//!   online quantile estimate.  [`LatencyModel::predict`] returns `None`
+//!   until `min_samples` observations have arrived, so consumers fall
+//!   back to the static SLO-budget path while the model is cold.
+//! * [`RateForecaster`] — short-horizon arrival-rate forecaster: Holt's
+//!   double-exponential smoothing (level + trend) over fixed
+//!   `bucket_ms` time buckets.  The sim uses it to project a category's
+//!   demand at the *next scheduled placement round* and pull the round
+//!   forward when the projection crosses provisioned capacity.
+//!
+//! Everything here is pure `f64` arithmetic on caller-supplied time: no
+//! clocks, no RNG, no allocation after construction — so the simulator's
+//! bit-exact determinism discipline carries through unchanged, and with
+//! `enabled: false` (the default) nothing is even constructed.
+
+/// Knobs for both estimators plus the trigger policy built on them.
+#[derive(Clone, Copy, Debug)]
+pub struct PredictConfig {
+    /// Master switch.  Off (the default) reproduces the pre-prediction
+    /// engine bit-for-bit: no model is built, no trigger fires, no
+    /// fingerprint token appears.
+    pub enabled: bool,
+    /// EWMA gain for the latency mean/deviation and the Holt level.
+    pub alpha: f64,
+    /// Cold-start threshold: `LatencyModel::predict` is `None` (and
+    /// admission stays on the static path) below this many samples.
+    pub min_samples: u64,
+    /// Latency quantile the Robbins–Monro estimator tracks (0, 1).
+    pub quantile: f64,
+    /// Arrival-rate bucket width for the forecaster (virtual ms in the
+    /// sim, wall ms on the gateway).
+    pub bucket_ms: f64,
+    /// Proactive-round margin: an early placement round fires when the
+    /// forecast rate exceeds `provisioned * (1 + margin)`.
+    pub margin: f64,
+    /// Minimum gap between proactive rounds (ms), so a sustained surge
+    /// triggers one early round, not one per arrival.
+    pub cooldown_ms: f64,
+}
+
+impl Default for PredictConfig {
+    fn default() -> Self {
+        PredictConfig {
+            enabled: false,
+            alpha: 0.3,
+            min_samples: 64,
+            quantile: 0.9,
+            bucket_ms: 250.0,
+            margin: 0.25,
+            cooldown_ms: 1500.0,
+        }
+    }
+}
+
+/// Incremental latency model: EWMA mean + EWMA absolute deviation +
+/// Robbins–Monro quantile.  O(1) state, O(1) update.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyModel {
+    alpha: f64,
+    q: f64,
+    min_samples: u64,
+    n: u64,
+    mean: f64,
+    dev: f64,
+    quant: f64,
+}
+
+impl LatencyModel {
+    pub fn new(cfg: &PredictConfig) -> LatencyModel {
+        LatencyModel {
+            alpha: cfg.alpha,
+            q: cfg.quantile,
+            min_samples: cfg.min_samples,
+            n: 0,
+            mean: 0.0,
+            dev: 0.0,
+            quant: 0.0,
+        }
+    }
+
+    /// Fold one latency observation (ms) into the model.
+    pub fn observe(&mut self, x: f64) {
+        if !x.is_finite() || x < 0.0 {
+            return;
+        }
+        self.n += 1;
+        if self.n == 1 {
+            self.mean = x;
+            self.quant = x;
+            self.dev = 0.0;
+            return;
+        }
+        self.mean += self.alpha * (x - self.mean);
+        self.dev += self.alpha * ((x - self.mean).abs() - self.dev);
+        // Robbins–Monro quantile step, scaled by the deviation estimate
+        // so the estimator tracks regime shifts at any latency scale.
+        let step = self.dev.max(self.mean.abs() * 1e-3).max(1e-6) * self.alpha;
+        if x > self.quant {
+            self.quant += step * self.q;
+        } else {
+            self.quant -= step * (1.0 - self.q);
+        }
+    }
+
+    /// Predicted per-request execution latency (ms): the tracked
+    /// quantile, floored by the mean so a lagging quantile estimate
+    /// never undercuts the central tendency.  `None` while cold.
+    pub fn predict(&self) -> Option<f64> {
+        if self.n < self.min_samples {
+            return None;
+        }
+        Some(self.quant.max(self.mean))
+    }
+
+    /// Observations folded so far.
+    pub fn samples(&self) -> u64 {
+        self.n
+    }
+
+    /// Whether `predict` would return a value.
+    pub fn warm(&self) -> bool {
+        self.n >= self.min_samples
+    }
+}
+
+/// Minimum closed buckets before the forecaster reports a projection.
+const MIN_FORECAST_BUCKETS: u64 = 4;
+/// Holt trend gain (level gain comes from `PredictConfig::alpha`).
+const TREND_BETA: f64 = 0.2;
+
+/// Short-horizon arrival-rate forecaster: Holt's double-exponential
+/// smoothing over fixed time buckets.
+#[derive(Clone, Copy, Debug)]
+pub struct RateForecaster {
+    bucket_ms: f64,
+    alpha: f64,
+    /// Smoothed arrivals per bucket.
+    level: f64,
+    /// Smoothed per-bucket trend.
+    trend: f64,
+    /// Arrivals in the currently open bucket.
+    count: f64,
+    /// End time of the open bucket.
+    bucket_end_ms: f64,
+    /// Closed buckets folded into level/trend.
+    closed: u64,
+}
+
+impl RateForecaster {
+    pub fn new(cfg: &PredictConfig) -> RateForecaster {
+        RateForecaster {
+            bucket_ms: cfg.bucket_ms.max(1.0),
+            alpha: cfg.alpha,
+            level: 0.0,
+            trend: 0.0,
+            count: 0.0,
+            bucket_end_ms: cfg.bucket_ms.max(1.0),
+            closed: 0,
+        }
+    }
+
+    /// Close every bucket that ended at or before `now_ms` (empty
+    /// buckets count as zero arrivals — gaps pull the level down).
+    pub fn advance(&mut self, now_ms: f64) {
+        while now_ms >= self.bucket_end_ms {
+            let x = self.count;
+            self.count = 0.0;
+            self.bucket_end_ms += self.bucket_ms;
+            self.closed += 1;
+            if self.closed == 1 {
+                self.level = x;
+                self.trend = 0.0;
+            } else {
+                let prev = self.level;
+                self.level = self.alpha * x + (1.0 - self.alpha) * (self.level + self.trend);
+                self.trend = TREND_BETA * (self.level - prev) + (1.0 - TREND_BETA) * self.trend;
+            }
+        }
+    }
+
+    /// Record one arrival at `now_ms` (also advances the bucket clock).
+    pub fn observe(&mut self, now_ms: f64) {
+        self.advance(now_ms);
+        self.count += 1.0;
+    }
+
+    /// Whether enough buckets closed for the projection to mean anything.
+    pub fn ready(&self) -> bool {
+        self.closed >= MIN_FORECAST_BUCKETS
+    }
+
+    /// Projected arrival rate (requests/s) `horizon_ms` from the current
+    /// bucket, clamped at zero.  `None` while not [`ready`].
+    pub fn forecast_rps(&self, horizon_ms: f64) -> Option<f64> {
+        if !self.ready() {
+            return None;
+        }
+        let buckets_ahead = (horizon_ms.max(0.0)) / self.bucket_ms;
+        let per_bucket = self.level + self.trend * buckets_ahead;
+        Some((per_bucket * 1000.0 / self.bucket_ms).max(0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PredictConfig {
+        PredictConfig { enabled: true, min_samples: 8, ..Default::default() }
+    }
+
+    #[test]
+    fn latency_model_is_cold_below_min_samples_then_warm() {
+        let c = cfg();
+        let mut m = LatencyModel::new(&c);
+        for i in 0..c.min_samples - 1 {
+            m.observe(10.0 + (i % 3) as f64);
+            assert_eq!(m.predict(), None, "cold below min_samples");
+        }
+        m.observe(10.0);
+        assert!(m.warm());
+        let p = m.predict().expect("warm model must predict");
+        assert!(p > 0.0 && p < 100.0, "prediction in the sample range: {p}");
+    }
+
+    #[test]
+    fn latency_model_tracks_a_regime_shift() {
+        let c = cfg();
+        let mut m = LatencyModel::new(&c);
+        for _ in 0..64 {
+            m.observe(10.0);
+        }
+        let before = m.predict().unwrap();
+        assert!((before - 10.0).abs() < 1.0, "steady stream pins ~10: {before}");
+        for _ in 0..256 {
+            m.observe(100.0);
+        }
+        let after = m.predict().unwrap();
+        assert!(after > 60.0, "model must follow the 10→100 shift: {after}");
+    }
+
+    #[test]
+    fn latency_model_quantile_sits_above_the_mean_on_skewed_input() {
+        let c = cfg();
+        let mut m = LatencyModel::new(&c);
+        // 90% fast, 10% slow: p90 tracking must exceed the plain mean of
+        // the fast mass
+        for i in 0..2000 {
+            m.observe(if i % 10 == 9 { 80.0 } else { 8.0 });
+        }
+        let p = m.predict().unwrap();
+        assert!(p > 9.0, "skew-aware prediction above the fast mass: {p}");
+    }
+
+    #[test]
+    fn latency_model_ignores_garbage_samples() {
+        let c = cfg();
+        let mut m = LatencyModel::new(&c);
+        for _ in 0..16 {
+            m.observe(10.0);
+        }
+        let n = m.samples();
+        m.observe(f64::NAN);
+        m.observe(f64::INFINITY);
+        m.observe(-5.0);
+        assert_eq!(m.samples(), n, "non-finite / negative samples dropped");
+        assert!(m.predict().unwrap().is_finite());
+    }
+
+    #[test]
+    fn forecaster_not_ready_until_min_buckets() {
+        let c = cfg();
+        let mut f = RateForecaster::new(&c);
+        f.observe(10.0);
+        assert!(!f.ready());
+        assert_eq!(f.forecast_rps(500.0), None);
+        // walk past MIN_FORECAST_BUCKETS bucket ends
+        f.advance(c.bucket_ms * (MIN_FORECAST_BUCKETS as f64 + 0.5));
+        assert!(f.ready());
+        assert!(f.forecast_rps(500.0).is_some());
+    }
+
+    #[test]
+    fn forecaster_tracks_a_steady_rate() {
+        let c = cfg();
+        let mut f = RateForecaster::new(&c);
+        // 40 req/s = 10 per 250 ms bucket, for 5 s
+        for i in 0..200 {
+            f.observe(i as f64 * 25.0);
+        }
+        let rps = f.forecast_rps(0.0).unwrap();
+        assert!((rps - 40.0).abs() < 8.0, "steady 40 req/s, got {rps}");
+    }
+
+    #[test]
+    fn forecaster_projects_a_surge_upward() {
+        let c = cfg();
+        let mut f = RateForecaster::new(&c);
+        // 2 s at 40 req/s, then 1 s at 120 req/s
+        for i in 0..80 {
+            f.observe(i as f64 * 25.0);
+        }
+        let calm = f.forecast_rps(1000.0).unwrap();
+        for i in 0..120 {
+            f.observe(2000.0 + i as f64 * (1000.0 / 120.0));
+        }
+        let hot = f.forecast_rps(1000.0).unwrap();
+        assert!(
+            hot > calm * 1.5,
+            "surge must lift the projection: calm {calm} hot {hot}"
+        );
+    }
+
+    #[test]
+    fn forecaster_decays_through_empty_buckets() {
+        let c = cfg();
+        let mut f = RateForecaster::new(&c);
+        for i in 0..80 {
+            f.observe(i as f64 * 25.0);
+        }
+        let busy = f.forecast_rps(0.0).unwrap();
+        // 5 s of silence: closing empty buckets pulls the level down
+        f.advance(7000.0);
+        let idle = f.forecast_rps(0.0).unwrap();
+        assert!(idle < busy * 0.25, "silence must decay the rate: {busy} → {idle}");
+    }
+
+    #[test]
+    fn estimators_are_deterministic() {
+        let c = cfg();
+        let run = || {
+            let mut m = LatencyModel::new(&c);
+            let mut f = RateForecaster::new(&c);
+            for i in 0..500 {
+                m.observe(5.0 + (i % 7) as f64);
+                f.observe(i as f64 * 13.0);
+            }
+            (m.predict().unwrap().to_bits(), f.forecast_rps(750.0).unwrap().to_bits())
+        };
+        assert_eq!(run(), run(), "pure-f64 estimators must be bit-stable");
+    }
+}

@@ -44,6 +44,9 @@ pub struct PhaseReport {
     pub deadline_expired: u64,
     pub breaker_trips: u64,
     pub breaker_short_circuits: u64,
+    /// Forecast-triggered early placement rounds inside the phase (zero
+    /// when prediction is off or no trigger fired).
+    pub pred_early_rounds: u64,
 }
 
 /// Recovery estimate for one `server_fail` (or, in
@@ -98,6 +101,9 @@ pub struct ScenarioReport {
     pub deadline_expired: u64,
     pub breaker_trips: u64,
     pub breaker_short_circuits: u64,
+    /// Whole-run forecast-triggered early placement rounds (predict
+    /// subsystem).
+    pub pred_early_rounds: u64,
 }
 
 /// Cumulative counters at a virtual instant (backend-provided rows; one
@@ -119,6 +125,8 @@ pub(crate) struct CumRow {
     pub deadline_expired: u64,
     pub breaker_trips: u64,
     pub breaker_short_circuits: u64,
+    /// Cumulative forecast-triggered early rounds (zero when off).
+    pub pred_early_rounds: u64,
 }
 
 /// Whole-run totals a backend hands to [`assemble`].
@@ -140,6 +148,7 @@ pub(crate) struct Totals {
     pub deadline_expired: u64,
     pub breaker_trips: u64,
     pub breaker_short_circuits: u64,
+    pub pred_early_rounds: u64,
 }
 
 /// Build the report from boundary-aligned cumulative rows.
@@ -206,6 +215,9 @@ pub(crate) fn assemble(
             breaker_short_circuits: rb
                 .breaker_short_circuits
                 .saturating_sub(ra.breaker_short_circuits),
+            pred_early_rounds: rb
+                .pred_early_rounds
+                .saturating_sub(ra.pred_early_rounds),
         });
     }
 
@@ -304,6 +316,7 @@ pub(crate) fn assemble(
         deadline_expired: totals.deadline_expired,
         breaker_trips: totals.breaker_trips,
         breaker_short_circuits: totals.breaker_short_circuits,
+        pred_early_rounds: totals.pred_early_rounds,
     }
 }
 
@@ -324,6 +337,13 @@ impl ScenarioReport {
             + self.breaker_trips
             + self.breaker_short_circuits
             > 0
+    }
+
+    /// Whether the run recorded any prediction activity (forecast-
+    /// triggered early placement rounds).  Gates the `pred*` tokens so
+    /// prediction-off runs keep their historical fingerprints.
+    pub fn pred_active(&self) -> bool {
+        self.pred_early_rounds > 0
     }
 
     /// Bit-exact run fingerprint for golden pinning (every f64 as raw
@@ -412,6 +432,14 @@ impl ScenarioReport {
                 self.breaker_short_circuits,
             );
         }
+        // Predict tokens, same stance: only when a forecast actually
+        // pulled a round forward.
+        if self.pred_active() {
+            for (i, p) in self.phases.iter().enumerate() {
+                let _ = write!(out, " pe{i}={}", p.pred_early_rounds);
+            }
+            let _ = write!(out, " predtot={}", self.pred_early_rounds);
+        }
         if let Some(fp) = &self.metrics_fingerprint {
             let _ = write!(out, " metrics[{fp}]");
         }
@@ -448,6 +476,7 @@ impl ScenarioReport {
                         "breaker_short_circuits",
                         Json::num(p.breaker_short_circuits as f64),
                     ),
+                    ("pred_early_rounds", Json::num(p.pred_early_rounds as f64)),
                 ])
             })
             .collect();
@@ -515,6 +544,13 @@ impl ScenarioReport {
                 ]),
             ),
             (
+                "predict",
+                Json::obj(vec![(
+                    "early_rounds",
+                    Json::num(self.pred_early_rounds as f64),
+                )]),
+            ),
+            (
                 "metrics_fingerprint",
                 self.metrics_fingerprint
                     .clone()
@@ -575,6 +611,13 @@ impl ScenarioReport {
                 self.deadline_expired,
                 self.breaker_trips,
                 self.breaker_short_circuits,
+            );
+        }
+        if self.pred_active() {
+            let _ = writeln!(
+                out,
+                "  predict: early-rounds={}",
+                self.pred_early_rounds,
             );
         }
         let rows = self
@@ -811,6 +854,37 @@ mod tests {
             3.0
         );
         assert!(on.human().contains("resilience: retries=7"));
+    }
+
+    #[test]
+    fn predict_tokens_fingerprint_only_when_active() {
+        // no prediction activity: historical fingerprint, byte-for-byte
+        let off = assemble(&spec(), "sim", &rows(), totals());
+        assert!(!off.pred_active());
+        assert!(!off.fingerprint().contains(" pe0="), "{}", off.fingerprint());
+        assert!(!off.fingerprint().contains("predtot="));
+        assert!(!off.human().contains("predict:"));
+        // with activity: per-phase tokens + totals appear, sliced by phase
+        let mut pred_rows = rows();
+        for r in pred_rows.iter_mut() {
+            if r.at_ms > 4000.0 {
+                r.pred_early_rounds = 2;
+            }
+        }
+        let mut t = totals();
+        t.pred_early_rounds = 2;
+        let on = assemble(&spec(), "sim", &pred_rows, t);
+        assert!(on.pred_active());
+        let fp = on.fingerprint();
+        assert!(fp.contains(" pe0=0"), "{fp}");
+        assert!(fp.contains(" pe1=2"), "fault phase holds the rounds: {fp}");
+        assert!(fp.contains(" predtot=2"), "{fp}");
+        assert_eq!(on.phases[1].pred_early_rounds, 2);
+        // JSON carries the predict object
+        let j = parse(&on.to_json().to_string()).unwrap();
+        let p = j.get("predict").unwrap();
+        assert_eq!(p.get("early_rounds").unwrap().as_f64().unwrap(), 2.0);
+        assert!(on.human().contains("predict: early-rounds=2"));
     }
 
     #[test]

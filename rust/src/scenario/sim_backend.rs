@@ -53,6 +53,7 @@ impl ScenarioBackend for SimBackend {
                 deadline_expired: s.deadline_expired,
                 breaker_trips: s.breaker_trips,
                 breaker_short_circuits: s.breaker_short_circuits,
+                pred_early_rounds: s.pred_early_rounds,
             })
             .collect();
         let m = sim.take_metrics();
@@ -77,6 +78,7 @@ impl ScenarioBackend for SimBackend {
             deadline_expired: m.deadline_expired,
             breaker_trips: m.breaker_trips,
             breaker_short_circuits: m.breaker_short_circuits,
+            pred_early_rounds: m.pred_early_rounds,
         };
         Ok(report::assemble(spec, "sim", &rows, totals))
     }

@@ -64,6 +64,10 @@ pub enum ShedReason {
     QueueFull,
     /// Estimated queue delay exceeds the request's SLO budget.
     SloBudget,
+    /// Predicted end-to-end latency (queue + window + predicted exec
+    /// from the online model) exceeds the SLO budget — predictive
+    /// admission mode only (DESIGN.md §Prediction).
+    Predicted,
 }
 
 impl ShedReason {
@@ -71,6 +75,7 @@ impl ShedReason {
         match self {
             ShedReason::QueueFull => "queue_full",
             ShedReason::SloBudget => "slo_budget",
+            ShedReason::Predicted => "predicted_latency",
         }
     }
 }
@@ -260,6 +265,25 @@ impl Admission {
         executor: &dyn Executor,
         ctx: Option<&ResilienceCtx<'_>>,
     ) -> Decision {
+        self.submit_predictive(category, req, slo_ms, executor, ctx, None)
+    }
+
+    /// [`Admission::submit_with`] plus an optional *predicted* per-request
+    /// execution latency from the online model (predictive admission,
+    /// DESIGN.md §Prediction).  With `Some(p)` the SLO check sheds on
+    /// predicted end-to-end latency — queue depth × `p`, plus the
+    /// batching-window wait frequency traffic pays — instead of the
+    /// static profile estimate.  `None` (mode off, or the model still
+    /// below its sample threshold) takes the static path unchanged.
+    pub fn submit_predictive(
+        &self,
+        category: TaskCategory,
+        req: ExecRequest,
+        slo_ms: f64,
+        executor: &dyn Executor,
+        ctx: Option<&ResilienceCtx<'_>>,
+        pred_exec_ms: Option<f64>,
+    ) -> Decision {
         let lane = &self.cats[cat_index(category)];
 
         // Optimistic depth reservation, rolled back on shed.
@@ -268,21 +292,42 @@ impl Admission {
             lane.depth.fetch_sub(1, Ordering::SeqCst);
             return Decision::Shed(ShedReason::QueueFull);
         }
-        // SLO budget: everyone ahead in the category is assumed to cost
-        // one execution of this request's shape.  Latency traffic runs at
-        // BS=1 (its actual path); frequency traffic rides BS windows, so
-        // it is charged the amortized share of a full batch — a serial
-        // BS=1 bound would shed every long session even on an idle lane.
-        let est_exec = match category.sensitivity() {
-            Sensitivity::Latency => executor.expected_ms(req.service, 1, req.frames),
-            Sensitivity::Frequency => {
-                let bs = self.cfg.max_batch.max(1) as u32;
-                executor.expected_ms(req.service, bs, req.frames) / bs as f64
+        match pred_exec_ms {
+            Some(p) if p.is_finite() && p > 0.0 => {
+                // Predictive budget: everyone ahead costs one *observed*
+                // execution (the model's quantile), and frequency traffic
+                // additionally waits out its batching window.
+                let window_ms = match category.sensitivity() {
+                    Sensitivity::Latency => 0.0,
+                    Sensitivity::Frequency => self.cfg.window_ms as f64,
+                };
+                let pred_e2e = window_ms + (ahead as f64 + 1.0) * p;
+                if pred_e2e > slo_ms * self.cfg.slo_headroom {
+                    lane.depth.fetch_sub(1, Ordering::SeqCst);
+                    return Decision::Shed(ShedReason::Predicted);
+                }
             }
-        };
-        if (ahead as f64 + 1.0) * est_exec > slo_ms * self.cfg.slo_headroom {
-            lane.depth.fetch_sub(1, Ordering::SeqCst);
-            return Decision::Shed(ShedReason::SloBudget);
+            _ => {
+                // SLO budget: everyone ahead in the category is assumed
+                // to cost one execution of this request's shape.  Latency
+                // traffic runs at BS=1 (its actual path); frequency
+                // traffic rides BS windows, so it is charged the
+                // amortized share of a full batch — a serial BS=1 bound
+                // would shed every long session even on an idle lane.
+                let est_exec = match category.sensitivity() {
+                    Sensitivity::Latency => {
+                        executor.expected_ms(req.service, 1, req.frames)
+                    }
+                    Sensitivity::Frequency => {
+                        let bs = self.cfg.max_batch.max(1) as u32;
+                        executor.expected_ms(req.service, bs, req.frames) / bs as f64
+                    }
+                };
+                if (ahead as f64 + 1.0) * est_exec > slo_ms * self.cfg.slo_headroom {
+                    lane.depth.fetch_sub(1, Ordering::SeqCst);
+                    return Decision::Shed(ShedReason::SloBudget);
+                }
+            }
         }
         // Queue-stage deadline: the budget can already be gone by the
         // time admission control runs (a saturated worker pool delays
@@ -650,6 +695,67 @@ mod tests {
     fn shed_reason_labels() {
         assert_eq!(ShedReason::QueueFull.as_str(), "queue_full");
         assert_eq!(ShedReason::SloBudget.as_str(), "slo_budget");
+        assert_eq!(ShedReason::Predicted.as_str(), "predicted_latency");
+    }
+
+    #[test]
+    fn predicted_latency_sheds_what_the_static_estimate_admits() {
+        let adm = Admission::new(AdmissionConfig::default());
+        // static profile says 1 ms (admits easily against a 100 ms SLO),
+        // but the online model has observed ~500 ms executions
+        let ex = MockExecutor::new(1.0);
+        let d = adm.submit_predictive(
+            TaskCategory::LatencySingle, req(1), 100.0, &ex, None, Some(500.0));
+        assert!(matches!(d, Decision::Shed(ShedReason::Predicted)), "{d:?}");
+        assert_eq!(ex.calls.load(Ordering::SeqCst), 0);
+        assert_eq!(adm.depths(), [0, 0, 0, 0], "depth reservation rolled back");
+    }
+
+    #[test]
+    fn predicted_latency_admits_what_the_static_estimate_sheds() {
+        let adm = Admission::new(AdmissionConfig::default());
+        // stale profile says 500 ms (static path would shed), but the
+        // model has watched this service actually run in ~1 ms
+        let ex = MockExecutor::new(500.0);
+        let stat = adm.submit_predictive(
+            TaskCategory::LatencyMulti, req(1), 100.0, &ex, None, None);
+        assert!(matches!(stat, Decision::Shed(ShedReason::SloBudget)), "{stat:?}");
+        let pred = adm.submit_predictive(
+            TaskCategory::LatencyMulti, req(1), 100.0, &ex, None, Some(1.0));
+        assert!(matches!(pred, Decision::Served(_)), "{pred:?}");
+    }
+
+    #[test]
+    fn cold_model_falls_back_to_the_static_path() {
+        // `None` (model below min_samples) must behave exactly like
+        // `submit_with`: same decision on both admit and shed shapes
+        let adm = Admission::new(AdmissionConfig::default());
+        let cheap = MockExecutor::new(1.0);
+        let d = adm.submit_predictive(
+            TaskCategory::LatencySingle, req(1), 1000.0, &cheap, None, None);
+        assert!(matches!(d, Decision::Served(out) if out.batch_size == 1));
+        let costly = MockExecutor::new(500.0);
+        let d2 = adm.submit_predictive(
+            TaskCategory::LatencySingle, req(1), 100.0, &costly, None, None);
+        assert!(matches!(d2, Decision::Shed(ShedReason::SloBudget)));
+    }
+
+    #[test]
+    fn predicted_window_wait_counts_against_frequency_budgets() {
+        // 50 ms window + 1×60 ms predicted exec > 100 ms SLO: the window
+        // share alone must not be ignored for frequency traffic
+        let adm = Admission::new(AdmissionConfig {
+            window_ms: 50,
+            ..AdmissionConfig::default()
+        });
+        let ex = MockExecutor::new(0.1);
+        let d = adm.submit_predictive(
+            TaskCategory::FrequencySingle, req(104), 100.0, &ex, None, Some(60.0));
+        assert!(matches!(d, Decision::Shed(ShedReason::Predicted)), "{d:?}");
+        // same prediction with room to spare admits and batches normally
+        let d2 = adm.submit_predictive(
+            TaskCategory::FrequencySingle, req(104), 10_000.0, &ex, None, Some(60.0));
+        assert!(matches!(d2, Decision::Served(_)), "{d2:?}");
     }
 
     /// Fails the first `fail_first` executions, then succeeds.

@@ -87,6 +87,11 @@ pub struct LoadReport {
     /// Open-loop shots fired > 50 ms behind their trace arrival time
     /// (offered load fell below the target — raise concurrency).
     pub late: usize,
+    /// Closed-loop `Retry-After` waits cut short by the
+    /// [`MAX_HONORED_RETRY_AFTER`] cap — a nonzero count means the
+    /// server's advertised back-off exceeded what the client honors,
+    /// so the re-offered load arrives sooner than the gateway asked.
+    pub clamped_backoffs: usize,
     /// Client-side end-to-end latency of 2xx responses (ms).
     pub latency_ms: Summary,
     /// (ok, shed) per task category, indexed like `TaskCategory::ALL`.
@@ -103,6 +108,7 @@ impl LoadReport {
         self.http_errors += other.http_errors;
         self.transport_errors += other.transport_errors;
         self.late += other.late;
+        self.clamped_backoffs += other.clamped_backoffs;
         self.latency_ms.merge(&other.latency_ms);
         for (mine, theirs) in self.by_category.iter_mut().zip(other.by_category.iter()) {
             mine.0 += theirs.0;
@@ -124,13 +130,14 @@ impl LoadReport {
         let (p50, p95, p99) = self.latency_ms.p50_p95_p99();
         format!(
             "{label}: sent={} ok={} shed={} http_err={} transport_err={} late={} \
-             rate={:.1} req/s p50={:.1}ms p95={:.1}ms p99={:.1}ms",
+             clamped_backoff={} rate={:.1} req/s p50={:.1}ms p95={:.1}ms p99={:.1}ms",
             self.sent,
             self.ok,
             self.shed,
             self.http_errors,
             self.transport_errors,
             self.late,
+            self.clamped_backoffs,
             self.achieved_rps(),
             p50,
             p95,
@@ -316,6 +323,19 @@ fn fire(client: &mut Client, shot: &Shot, report: &mut LoadReport) -> ShotOutcom
 /// a misconfigured (or hostile) header must not park the run.
 const MAX_HONORED_RETRY_AFTER: Duration = Duration::from_secs(2);
 
+/// Bound a server back-off hint (seconds) by [`MAX_HONORED_RETRY_AFTER`];
+/// the flag reports whether the hint was cut short, so clamped waits can
+/// be counted in [`LoadReport::clamped_backoffs`] instead of silently
+/// re-offering load earlier than the server asked.
+fn clamp_backoff(retry_after_s: f64) -> (Duration, bool) {
+    let wanted = Duration::from_secs_f64(retry_after_s.max(0.0));
+    if wanted > MAX_HONORED_RETRY_AFTER {
+        (MAX_HONORED_RETRY_AFTER, true)
+    } else {
+        (wanted, false)
+    }
+}
+
 /// Run the load against a gateway; blocks until every shot resolved.
 pub fn run(cfg: &LoadgenConfig, table: &ProfileTable, gpu_vram_mb: f64) -> LoadReport {
     let shots = plan_shots(cfg, table, gpu_vram_mb);
@@ -417,10 +437,11 @@ fn run_closed(cfg: &LoadgenConfig, shots: Vec<Shot>) -> LoadReport {
                         // for the advertised window instead of hammering
                         // a gateway that just said "not yet"
                         if out.retry_after_s > 0.0 {
-                            thread::sleep(
-                                Duration::from_secs_f64(out.retry_after_s)
-                                    .min(MAX_HONORED_RETRY_AFTER),
-                            );
+                            let (wait, clamped) = clamp_backoff(out.retry_after_s);
+                            if clamped {
+                                local.clamped_backoffs += 1;
+                            }
+                            thread::sleep(wait);
                         }
                     }
                     merge(&merged, local);
@@ -521,6 +542,8 @@ mod tests {
                         4 => http::HttpResponse::json(429, "{\"error\":\"shed\"}".into())
                             .with_header("retry-after", "0.040".into()),
                         5 => http::HttpResponse::json(408, "{\"error\":\"timeout\"}".into()),
+                        7 => http::HttpResponse::json(429, "{\"error\":\"shed\"}".into())
+                            .with_header("retry-after", "600".into()),
                         _ => http::HttpResponse::json(200, "{\"credit\":\"x\"}".into()),
                     };
                     if resp.write_to(&mut writer, true).is_err() {
@@ -600,18 +623,79 @@ mod tests {
             "Retry-After must pace the closed loop (wall {} ms)",
             report.wall_ms
         );
+        assert_eq!(report.clamped_backoffs, 0, "40 ms hints are under the cap");
+    }
+
+    #[test]
+    fn backoff_clamp_bounds_the_wait_and_flags_it() {
+        // under the cap: honored verbatim, not flagged
+        let (wait, clamped) = clamp_backoff(0.040);
+        assert_eq!(wait, Duration::from_millis(40));
+        assert!(!clamped);
+        let (wait, clamped) = clamp_backoff(2.0);
+        assert_eq!(wait, MAX_HONORED_RETRY_AFTER, "exactly the cap is not clamped");
+        assert!(!clamped);
+        // over the cap: bounded and flagged
+        let (wait, clamped) = clamp_backoff(600.0);
+        assert_eq!(wait, MAX_HONORED_RETRY_AFTER);
+        assert!(clamped);
+        // garbage (negative) hints never produce a wait
+        let (wait, clamped) = clamp_backoff(-3.0);
+        assert_eq!(wait, Duration::ZERO);
+        assert!(!clamped);
+    }
+
+    #[test]
+    fn closed_loop_counts_clamped_backoffs() {
+        let addr = spawn_stub();
+        // one shed advertising a 600 s back-off: the worker must wait
+        // only MAX_HONORED_RETRY_AFTER and count the clamp
+        let shots = vec![Shot {
+            arrival_ms: 0.0,
+            service: ServiceId(7),
+            frames: 1,
+            category: 0,
+        }];
+        let cfg = LoadgenConfig {
+            addr: addr.to_string(),
+            closed_loop: true,
+            concurrency: 1,
+            timeout_ms: 5_000,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let report = run_closed(&cfg, shots);
+        assert_eq!(report.shed, 1);
+        assert_eq!(report.clamped_backoffs, 1, "the 600 s hint must be counted as clamped");
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "the clamp must bound the wait far below the advertised 600 s"
+        );
     }
 
     #[test]
     fn report_merges() {
-        let mut a = LoadReport { sent: 2, ok: 1, shed: 1, ..Default::default() };
+        let mut a = LoadReport {
+            sent: 2,
+            ok: 1,
+            shed: 1,
+            clamped_backoffs: 2,
+            ..Default::default()
+        };
         a.latency_ms.add(5.0);
-        let mut b = LoadReport { sent: 1, transport_errors: 1, ..Default::default() };
+        let mut b = LoadReport {
+            sent: 1,
+            transport_errors: 1,
+            clamped_backoffs: 1,
+            ..Default::default()
+        };
         b.absorb(a);
         assert_eq!(b.sent, 3);
         assert_eq!(b.ok, 1);
         assert_eq!(b.shed, 1);
         assert_eq!(b.transport_errors, 1);
+        assert_eq!(b.clamped_backoffs, 3);
         assert_eq!(b.latency_ms.count(), 1);
+        assert!(b.report("t").contains("clamped_backoff=3"));
     }
 }

@@ -22,6 +22,8 @@
 //! * [`executor`] — backend trait + profile-replay / coordinator backends;
 //! * [`resilience`] — deadline budgets, retry token bucket, and
 //!   per-(service, shard) circuit breakers (off by default);
+//! * [`predictor`] — online per-(category, service) latency models
+//!   backing predictive admission (off by default);
 //! * [`router`] — `/v1/infer`, `/metrics`, `/healthz` dispatch;
 //! * [`telemetry`] — Prometheus text exposition + §3.3 goodput credit;
 //! * [`loadgen`] — socket-driving load generator (open / closed loop);
@@ -55,6 +57,7 @@ pub mod executor;
 pub mod http;
 pub mod loadgen;
 pub mod pool;
+pub mod predictor;
 #[cfg(target_os = "linux")]
 mod reactor;
 pub mod resilience;
@@ -113,6 +116,12 @@ pub struct GatewayConfig {
     /// Disabled by default: the request path and `/metrics` exposition
     /// stay byte-identical to a resilience-less gateway.
     pub resilience: resilience::ResilienceConfig,
+    /// Predictive admission (DESIGN.md §Prediction): online
+    /// per-(category, service) latency models replace the static SLO
+    /// budget once warm.  Disabled by default: no model is fitted, no
+    /// `epara_pred*` series is exposed, and the request path stays
+    /// byte-identical to a prediction-less gateway.
+    pub predict: crate::predict::PredictConfig,
 }
 
 impl Default for GatewayConfig {
@@ -129,6 +138,7 @@ impl Default for GatewayConfig {
             shards: 1,
             cache_capacity_mb: 0.0,
             resilience: resilience::ResilienceConfig::default(),
+            predict: crate::predict::PredictConfig::default(),
         }
     }
 }
@@ -156,6 +166,11 @@ pub(crate) struct Shared {
     /// shard) breakers); `None` keeps every request-path branch and the
     /// `/metrics` exposition byte-identical to a resilience-less gateway.
     pub resilience: Option<Arc<resilience::Resilience>>,
+    /// Process-wide online latency models (predictive admission);
+    /// `None` keeps admission on the static SLO-budget path and the
+    /// `/metrics` exposition byte-identical to a prediction-less
+    /// gateway.
+    pub predictor: Option<Arc<predictor::Predictor>>,
 }
 
 /// Process-wide gateway weight-cache view: the [`CacheFabric`] sized to
@@ -283,11 +298,18 @@ impl Gateway {
             .resilience
             .enabled
             .then(|| Arc::new(resilience::Resilience::new(cfg.resilience)));
+        // Process-wide latency models: observations aggregate across
+        // shards so every shard's admission sees the same estimates.
+        let pred = cfg
+            .predict
+            .enabled
+            .then(|| Arc::new(predictor::Predictor::new(cfg.predict)));
 
         #[cfg(target_os = "linux")]
         if shards > 1 {
             return Gateway::spawn_sharded(
                 &cfg, table, executor, listener, addr, fabric, telemetry, stop, cache, resil,
+                pred,
             );
         }
 
@@ -301,6 +323,7 @@ impl Gateway {
             cache,
             cache_server: crate::core::ServerId(0),
             resilience: resil.clone(),
+            predictor: pred,
         });
         let thread_stop = Arc::clone(&stop);
         let threads = cfg.threads;
@@ -382,6 +405,7 @@ impl Gateway {
         stop: Arc<AtomicBool>,
         cache: Option<Arc<GatewayCache>>,
         resil: Option<Arc<resilience::Resilience>>,
+        pred: Option<Arc<predictor::Predictor>>,
     ) -> crate::Result<Gateway> {
         let n = fabric.shard_count();
         // Each shard gets an equal slice of the process fd budget; the
@@ -400,6 +424,7 @@ impl Gateway {
                 cache: cache.clone(),
                 cache_server: crate::core::ServerId(i as u32),
                 resilience: resil.clone(),
+                predictor: pred.clone(),
             });
             let rcfg = reactor::ReactorConfig {
                 threads: cfg.threads,

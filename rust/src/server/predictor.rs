@@ -1,0 +1,163 @@
+//! Online latency predictor for the gateway (DESIGN.md §Prediction).
+//!
+//! Wraps the pure estimators of [`crate::predict`] in the gateway's
+//! concurrency model: one process-wide [`Predictor`] holds a
+//! per-(category, service) [`LatencyModel`] fitted from observed
+//! execution latencies, plus a per-category rollup model that serves
+//! two jobs — the admission fallback for services the gateway has not
+//! yet seen enough of, and the `epara_predicted_latency_ms` gauge on
+//! `/metrics`.
+//!
+//! The router feeds [`Predictor::observe`] with each served request's
+//! per-request execution share (batch latency for latency traffic, the
+//! amortized batch share for frequency traffic) and consults
+//! [`Predictor::predicted_ms`] before admission.  While a model is
+//! below `min_samples`, `predicted_ms` returns `None` and admission
+//! takes the static SLO-budget path — byte-for-byte what a
+//! prediction-less gateway does, which is also the global default:
+//! with `PredictConfig::enabled == false` no `Predictor` is ever
+//! constructed.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::core::{ServiceId, TaskCategory};
+use crate::predict::{LatencyModel, PredictConfig};
+
+use super::admission::cat_index;
+
+/// Model store behind the predictor's mutex.
+struct Models {
+    /// Per-(category index, service id) models — the admission source.
+    per_service: HashMap<(usize, u32), LatencyModel>,
+    /// Per-category rollups — the fallback and the `/metrics` gauges.
+    per_cat: [LatencyModel; 4],
+}
+
+/// Point-in-time view for `/metrics` exposition.
+#[derive(Clone, Copy, Debug)]
+pub struct PredSnapshot {
+    /// Predicted per-request execution latency per category (`None`
+    /// while that category's rollup model is cold).
+    pub predicted_ms: [Option<f64>; 4],
+    /// Requests shed on predicted latency (`ShedReason::Predicted`).
+    pub sheds: u64,
+}
+
+/// Process-wide online latency model registry.
+pub struct Predictor {
+    cfg: PredictConfig,
+    models: Mutex<Models>,
+    sheds: AtomicU64,
+}
+
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl Predictor {
+    pub fn new(cfg: PredictConfig) -> Predictor {
+        Predictor {
+            cfg,
+            models: Mutex::new(Models {
+                per_service: HashMap::new(),
+                per_cat: [LatencyModel::new(&cfg); 4],
+            }),
+            sheds: AtomicU64::new(0),
+        }
+    }
+
+    /// Fold one observed per-request execution latency (ms) into the
+    /// (category, service) model and the category rollup.
+    pub fn observe(&self, category: TaskCategory, service: ServiceId, exec_ms: f64) {
+        let ci = cat_index(category);
+        let mut m = lock_unpoisoned(&self.models);
+        m.per_service
+            .entry((ci, service.0))
+            .or_insert_with(|| LatencyModel::new(&self.cfg))
+            .observe(exec_ms);
+        m.per_cat[ci].observe(exec_ms);
+    }
+
+    /// Predicted per-request execution latency for admission: the
+    /// (category, service) model when warm, else the category rollup
+    /// when warm, else `None` — admission then takes the static path.
+    pub fn predicted_ms(&self, category: TaskCategory, service: ServiceId) -> Option<f64> {
+        let ci = cat_index(category);
+        let m = lock_unpoisoned(&self.models);
+        m.per_service
+            .get(&(ci, service.0))
+            .and_then(|lm| lm.predict())
+            .or_else(|| m.per_cat[ci].predict())
+    }
+
+    /// Count one `ShedReason::Predicted` shed (the
+    /// `epara_pred_sheds_total` counter).
+    pub fn note_shed(&self) {
+        self.sheds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot for `/metrics` exposition.
+    pub fn snapshot(&self) -> PredSnapshot {
+        let m = lock_unpoisoned(&self.models);
+        PredSnapshot {
+            predicted_ms: [0, 1, 2, 3].map(|i| m.per_cat[i].predict()),
+            sheds: self.sheds.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PredictConfig {
+        PredictConfig { enabled: true, min_samples: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn cold_then_warm_per_service() {
+        let p = Predictor::new(cfg());
+        let cat = TaskCategory::LatencySingle;
+        let svc = ServiceId(7);
+        for _ in 0..3 {
+            p.observe(cat, svc, 12.0);
+            assert_eq!(p.predicted_ms(cat, svc), None, "cold below min_samples");
+        }
+        p.observe(cat, svc, 12.0);
+        let pred = p.predicted_ms(cat, svc).expect("warm model predicts");
+        assert!((pred - 12.0).abs() < 2.0, "{pred}");
+    }
+
+    #[test]
+    fn category_rollup_covers_unseen_services() {
+        let p = Predictor::new(cfg());
+        let cat = TaskCategory::FrequencySingle;
+        for _ in 0..8 {
+            p.observe(cat, ServiceId(104), 30.0);
+        }
+        // a sibling service with no samples of its own still gets the
+        // category estimate; a different category stays cold
+        let pred = p.predicted_ms(cat, ServiceId(105)).expect("rollup fallback");
+        assert!((pred - 30.0).abs() < 5.0, "{pred}");
+        assert_eq!(p.predicted_ms(TaskCategory::LatencyMulti, ServiceId(105)), None);
+    }
+
+    #[test]
+    fn snapshot_reports_warm_categories_and_sheds() {
+        let p = Predictor::new(cfg());
+        let snap = p.snapshot();
+        assert!(snap.predicted_ms.iter().all(|v| v.is_none()));
+        assert_eq!(snap.sheds, 0);
+        for _ in 0..8 {
+            p.observe(TaskCategory::LatencySingle, ServiceId(1), 5.0);
+        }
+        p.note_shed();
+        p.note_shed();
+        let snap = p.snapshot();
+        assert!(snap.predicted_ms[0].is_some());
+        assert!(snap.predicted_ms[1].is_none());
+        assert_eq!(snap.sheds, 2);
+    }
+}

@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 use crate::configjson::{self, Json};
 use crate::core::{Sensitivity, ServiceId, TaskCategory};
 
-use super::admission::{Decision, ResilienceCtx};
+use super::admission::{Decision, ResilienceCtx, ShedReason};
 use super::executor::ExecRequest;
 use super::http::{HttpRequest, HttpResponse};
 use super::resilience::{self, Admit};
@@ -125,16 +125,35 @@ fn handle_infer(shared: &Shared, req: &HttpRequest) -> HttpResponse {
             ),
         latency: latency_critical,
     });
-    match shared.shard.admission.submit_with(
+    // Predictive admission: once the online model for this (category,
+    // service) is warm, the predicted per-request execution latency
+    // replaces the static SLO-budget estimate.  Cold models (and a
+    // disabled predictor) yield `None`, and admission takes the static
+    // path unchanged.
+    let pred = shared.predictor.as_deref();
+    let pred_ms = pred.and_then(|p| p.predicted_ms(category, service));
+    match shared.shard.admission.submit_predictive(
         category,
         exec_req,
         slo_ms,
         &*shared.executor,
         ctx.as_ref(),
+        pred_ms,
     ) {
         Decision::Served(out) => {
             if let Some(r) = resil {
                 r.record(shard_slot, service, true);
+            }
+            // Fit the model on the observed per-request execution
+            // share: the whole batch call for latency traffic, the
+            // amortized per-request share for frequency batches.
+            if let Some(p) = pred {
+                let share = if latency_critical {
+                    out.batch_latency_ms
+                } else {
+                    out.batch_latency_ms / out.batch_size.max(1) as f64
+                };
+                p.observe(category, service, share);
             }
             // Weight-cache admission: record whether this service's
             // weights were resident on this shard's slot (hit /
@@ -158,6 +177,9 @@ fn handle_infer(shared: &Shared, req: &HttpRequest) -> HttpResponse {
             HttpResponse::json(200, body.to_string())
         }
         Decision::Shed(reason) => {
+            if let (Some(p), ShedReason::Predicted) = (pred, reason) {
+                p.note_shed();
+            }
             shared.telemetry.record_shed(category);
             // One batching window is the natural client back-off unit:
             // by then a fresh window (and its queue slot) has turned over.
@@ -265,6 +287,7 @@ pub(super) fn handle(shared: &Shared, req: &HttpRequest) -> HttpResponse {
                 shared.executor.name(),
                 &shared.fabric.conn_stats(),
                 shared.resilience.as_deref().map(|r| r.counters()).as_ref(),
+                shared.predictor.as_deref().map(|p| p.snapshot()).as_ref(),
             ),
         ),
         ("GET", "/healthz") => HttpResponse::text(200, "ok\n"),

@@ -35,7 +35,7 @@ pub fn cat_label(c: TaskCategory) -> &'static str {
 /// exact over the full lifetime.
 const RETAINED_SAMPLES: usize = 8192;
 
-#[derive(Default)]
+#[derive(Clone, Default)]
 struct CatStats {
     ok: u64,
     shed: u64,
@@ -58,6 +58,7 @@ impl CatStats {
     }
 }
 
+#[derive(Clone)]
 struct Inner {
     cats: [CatStats; 4],
     /// Requests rejected before classification (400/404/405/413/431).
@@ -197,15 +198,23 @@ impl Telemetry {
     /// the subsystem is enabled; the `epara_resilience_*` series render
     /// only once any counter is nonzero (same stance as the cache
     /// series), so a resilience-off exposition stays byte-identical.
+    /// `predict` carries the online-model snapshot under predictive
+    /// admission; the `epara_pred*` series render only once a model is
+    /// warm or a predicted-latency shed happened.
     pub fn render_prometheus(
         &self,
         queue_depths: [usize; 4],
         executor: &str,
         shards: &[(usize, bool)],
         resilience: Option<&super::resilience::ResilienceCounters>,
+        predict: Option<&super::predictor::PredSnapshot>,
     ) -> String {
         let mut out = String::with_capacity(2048);
-        let inner = self.lock();
+        // Snapshot the registry and render OUTSIDE the lock: the
+        // percentile pass below sorts each category's retained-sample
+        // ring (up to 4 × 8192 floats), and doing that under the mutex
+        // stalls every concurrent `record_ok` for the whole scrape.
+        let inner = self.lock().clone();
 
         out.push_str(
             "# HELP epara_gateway_requests_total Requests by category and outcome.\n\
@@ -372,8 +381,35 @@ impl Telemetry {
             }
         }
 
+        // Prediction series appear only once the online models have done
+        // something (a warm category estimate or a predicted-latency
+        // shed): prediction-off gateways — and enabled-but-cold ones —
+        // keep the exposition byte-identical to the pre-prediction era.
+        if let Some(ps) =
+            predict.filter(|ps| ps.sheds > 0 || ps.predicted_ms.iter().any(|v| v.is_some()))
+        {
+            out.push_str(
+                "# HELP epara_predicted_latency_ms Online-model predicted per-request \
+                 execution latency per category (warm models only).\n\
+                 # TYPE epara_predicted_latency_ms gauge\n",
+            );
+            for c in TaskCategory::ALL {
+                if let Some(v) = ps.predicted_ms[cat_index(c)] {
+                    out.push_str(&format!(
+                        "epara_predicted_latency_ms{{category=\"{}\"}} {v:.3}\n",
+                        cat_label(c)
+                    ));
+                }
+            }
+            out.push_str(
+                "# HELP epara_pred_sheds_total Requests shed because predicted \
+                 end-to-end latency exceeded the SLO budget.\n\
+                 # TYPE epara_pred_sheds_total counter\n",
+            );
+            out.push_str(&format!("epara_pred_sheds_total {}\n", ps.sheds));
+        }
+
         let credit: f64 = inner.cats.iter().map(|c| c.credit).sum();
-        drop(inner);
         let secs = self.started.elapsed().as_secs_f64().max(1e-9);
         out.push_str(
             "# HELP epara_gateway_goodput_rps Satisfied-request credit per second (§3.3).\n\
@@ -424,7 +460,7 @@ mod tests {
         t.record_shed(TaskCategory::FrequencyMulti);
         t.record_failed(TaskCategory::LatencyMulti);
         t.record_http_error();
-        let text = t.render_prometheus([1, 0, 0, 2], "profile-replay", &[(7, true)], None);
+        let text = t.render_prometheus([1, 0, 0, 2], "profile-replay", &[(7, true)], None, None);
         assert!(text.contains(
             "epara_gateway_requests_total{category=\"latency_single\",outcome=\"ok\"} 2"
         ));
@@ -454,7 +490,7 @@ mod tests {
     fn cache_series_render_only_after_admissions() {
         use crate::modelcache::{CacheKind, CacheOutcome};
         let t = Telemetry::new();
-        let zero = t.render_prometheus([0; 4], "profile-replay", &[(0, true)], None);
+        let zero = t.render_prometheus([0; 4], "profile-replay", &[(0, true)], None, None);
         assert!(!zero.contains("epara_cache_"), "cache-off must be silent");
         t.record_cache(CacheOutcome {
             kind: CacheKind::Miss,
@@ -474,7 +510,7 @@ mod tests {
             bytes_loaded_mb: 0.0,
             bytes_saved_mb: 640.0,
         });
-        let text = t.render_prometheus([0; 4], "profile-replay", &[(0, true)], None);
+        let text = t.render_prometheus([0; 4], "profile-replay", &[(0, true)], None, None);
         assert!(text
             .contains("epara_cache_admissions_total{outcome=\"hit\"} 1"));
         assert!(text
@@ -490,7 +526,7 @@ mod tests {
         let t = Telemetry::new();
         t.record_ok(TaskCategory::LatencySingle, 10.0, 100.0);
         let shards = [(3, true), (0, false), (4, true)];
-        let text = t.render_prometheus([0, 0, 0, 0], "profile-replay", &shards, None);
+        let text = t.render_prometheus([0, 0, 0, 0], "profile-replay", &shards, None, None);
         assert!(text.contains("epara_gateway_open_connections{shard=\"0\"} 3"));
         assert!(text.contains("epara_gateway_open_connections{shard=\"1\"} 0"));
         assert!(text.contains("epara_gateway_open_connections{shard=\"2\"} 4"));
@@ -508,7 +544,7 @@ mod tests {
         let t = Telemetry::new();
         // enabled-but-idle counters render nothing — still byte-identical
         let idle = ResilienceCounters::default();
-        let zero = t.render_prometheus([0; 4], "profile-replay", &[(0, true)], Some(&idle));
+        let zero = t.render_prometheus([0; 4], "profile-replay", &[(0, true)], Some(&idle), None);
         assert!(!zero.contains("epara_resilience_"), "idle resilience must be silent");
         let active = ResilienceCounters {
             retries: 3,
@@ -517,7 +553,8 @@ mod tests {
             short_circuits: 4,
             degraded_served: 1,
         };
-        let text = t.render_prometheus([0; 4], "profile-replay", &[(0, true)], Some(&active));
+        let text =
+            t.render_prometheus([0; 4], "profile-replay", &[(0, true)], Some(&active), None);
         assert!(text.contains("epara_resilience_retries_total 3"));
         assert!(text.contains("epara_resilience_expired_total{stage=\"queue\"} 1"));
         assert!(text.contains("epara_resilience_expired_total{stage=\"window\"} 0"));
@@ -527,6 +564,122 @@ mod tests {
             "epara_resilience_breaker_events_total{kind=\"short_circuit\"} 4"
         ));
         assert!(text.contains("epara_resilience_breaker_events_total{kind=\"degraded\"} 1"));
+    }
+
+    #[test]
+    fn pred_series_render_only_after_activity() {
+        use crate::server::predictor::PredSnapshot;
+        let t = Telemetry::new();
+        // predictor enabled but every model still cold and no sheds:
+        // the exposition stays byte-identical to a prediction-less one
+        let cold = PredSnapshot { predicted_ms: [None; 4], sheds: 0 };
+        let zero = t.render_prometheus([0; 4], "profile-replay", &[(0, true)], None, Some(&cold));
+        assert!(!zero.contains("epara_pred"), "cold predictor must be silent");
+        let warm = PredSnapshot {
+            predicted_ms: [Some(12.5), None, Some(30.0), None],
+            sheds: 7,
+        };
+        let text = t.render_prometheus([0; 4], "profile-replay", &[(0, true)], None, Some(&warm));
+        assert!(text.contains("epara_predicted_latency_ms{category=\"latency_single\"} 12.500"));
+        assert!(text.contains("epara_predicted_latency_ms{category=\"frequency_single\"} 30.000"));
+        // cold categories render no gauge at all
+        assert!(!text.contains("category=\"latency_multi\"} 0"));
+        assert!(text.contains("epara_pred_sheds_total 7"));
+        // sheds alone (all models cold) are activity too
+        let shed_only = PredSnapshot { predicted_ms: [None; 4], sheds: 1 };
+        let text =
+            t.render_prometheus([0; 4], "profile-replay", &[(0, true)], None, Some(&shed_only));
+        assert!(text.contains("epara_pred_sheds_total 1"));
+        assert!(!text.contains("epara_predicted_latency_ms{"));
+    }
+
+    #[test]
+    fn scrape_concurrent_with_recording_serializes_neither() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        // Regression for the render-under-lock stall: render used to
+        // sort every category's retained ring while holding the registry
+        // mutex, stalling concurrent record_ok calls for the whole
+        // scrape.  Fill all four rings, then record from four threads
+        // while the main thread scrapes in a loop; the run must finish
+        // with every recorded completion counted.
+        let t = Arc::new(Telemetry::new());
+        for c in TaskCategory::ALL {
+            for i in 0..RETAINED_SAMPLES {
+                t.record_ok(c, i as f64 % 97.0, 100.0);
+            }
+        }
+        const PER_THREAD: u64 = 2000;
+        let done = Arc::new(AtomicBool::new(false));
+        let recorders: Vec<_> = TaskCategory::ALL
+            .into_iter()
+            .map(|c| {
+                let t = Arc::clone(&t);
+                std::thread::spawn(move || {
+                    for i in 0..PER_THREAD {
+                        t.record_ok(c, i as f64 % 89.0, 100.0);
+                    }
+                })
+            })
+            .collect();
+        let scraper = {
+            let t = Arc::clone(&t);
+            let done = Arc::clone(&done);
+            std::thread::spawn(move || {
+                let mut scrapes = 0u64;
+                while !done.load(Ordering::Relaxed) {
+                    let text =
+                        t.render_prometheus([0; 4], "profile-replay", &[(0, true)], None, None);
+                    assert!(text.contains("quantile=\"0.99\""));
+                    scrapes += 1;
+                }
+                scrapes
+            })
+        };
+        for r in recorders {
+            r.join().unwrap();
+        }
+        done.store(true, Ordering::Relaxed);
+        let scrapes = scraper.join().unwrap();
+        assert!(scrapes > 0, "scraper never completed a render");
+        let text = t.render_prometheus([0; 4], "profile-replay", &[(0, true)], None, None);
+        let expect = RETAINED_SAMPLES as u64 + PER_THREAD;
+        for c in TaskCategory::ALL {
+            assert!(
+                text.contains(&format!(
+                    "epara_gateway_requests_total{{category=\"{}\",outcome=\"ok\"}} {expect}",
+                    cat_label(c)
+                )),
+                "lost completions in {}", cat_label(c)
+            );
+        }
+    }
+
+    #[test]
+    fn percentiles_reflect_only_the_retained_window() {
+        // Overflow one category's ring: old sentinel samples far above
+        // the SLO must fall out of the window, so the rendered
+        // p50/p95/p99 reflect only the newest RETAINED_SAMPLES values.
+        let t = Telemetry::new();
+        let cat = TaskCategory::FrequencySingle;
+        for _ in 0..2000 {
+            t.record_ok(cat, 1_000_000.0, 100.0);
+        }
+        for _ in 0..RETAINED_SAMPLES {
+            t.record_ok(cat, 5.0, 100.0);
+        }
+        let text = t.render_prometheus([0; 4], "profile-replay", &[(0, true)], None, None);
+        for q in ["0.5", "0.95", "0.99"] {
+            let line = format!(
+                "epara_gateway_latency_ms{{category=\"frequency_single\",quantile=\"{q}\"}} 5.000"
+            );
+            assert!(text.contains(&line), "missing `{line}` in:\n{text}");
+        }
+        // counters still cover the full lifetime, only quantiles window
+        assert!(text.contains(&format!(
+            "epara_gateway_requests_total{{category=\"frequency_single\",outcome=\"ok\"}} {}",
+            2000 + RETAINED_SAMPLES
+        )));
     }
 
     #[test]

@@ -17,7 +17,7 @@ use std::collections::{BinaryHeap, HashMap, VecDeque};
 use crate::allocator::{Allocation, Allocator, Overrides};
 use crate::cluster::{EdgeCloud, GpuSpec};
 use crate::core::{
-    DeviceId, Outcome, Request, Sensitivity, ServerId, ServiceId,
+    DeviceId, Outcome, Request, Sensitivity, ServerId, ServiceId, TaskCategory,
 };
 use crate::handler::{
     decide_with, Decision, HandlerConfig, LocalCapacity, OffloadScratch, StateView,
@@ -25,6 +25,7 @@ use crate::handler::{
 use crate::metrics::Metrics;
 use crate::modelcache::{CacheConfig, CacheFabric, CacheKind};
 use crate::placement::{sssp, FluidEval, PhiEval, PlacementItem, EPSILON_SERVER};
+use crate::predict::{PredictConfig, RateForecaster};
 use crate::profile::ProfileTable;
 use crate::server::resilience::{self, Breaker, ResilienceConfig, RetryBudget};
 use crate::sync::{SyncConfig, SyncNet};
@@ -131,6 +132,9 @@ pub struct SimSample {
     pub deadline_expired: u64,
     pub breaker_trips: u64,
     pub breaker_short_circuits: u64,
+    /// Cumulative forecast-triggered early placement rounds (zero while
+    /// prediction is off).
+    pub pred_early_rounds: u64,
 }
 
 /// What a failed server hosted, for offline-mode recovery re-install.
@@ -345,6 +349,12 @@ pub struct SimConfig {
     /// runs, driven by virtual time.  Disabled by default: the execution
     /// path is reproduced bit-for-bit.
     pub resilience: ResilienceConfig,
+    /// Online prediction (DESIGN.md §Prediction): per-category Holt
+    /// arrival forecasters that pull a placement round forward when a
+    /// category's projected demand crosses provisioned capacity before
+    /// the next scheduled round.  Requires `replacement_interval_ms`.
+    /// Disabled by default: the event stream is reproduced bit-for-bit.
+    pub predict: PredictConfig,
 }
 
 impl Default for SimConfig {
@@ -358,6 +368,7 @@ impl Default for SimConfig {
             replacement_interval_ms: None,
             cache: CacheConfig::default(),
             resilience: ResilienceConfig::default(),
+            predict: PredictConfig::default(),
         }
     }
 }
@@ -377,6 +388,36 @@ struct SimResil {
 /// the seed directly (NOT forked from the trace rng — forking advances
 /// the parent and would shift every downstream handler draw).
 const FAULT_RNG_SALT: u64 = 0xFA17_5EED_0BAD_C0DE;
+
+/// Virtual-time prediction state (DESIGN.md §Prediction): per-category
+/// Holt arrival forecasters plus the demand the current placement was
+/// sized for, driving forecast-triggered early placement rounds.
+struct SimPredict {
+    cfg: PredictConfig,
+    /// One forecaster per task category (index = `sim_cat_index`).
+    forecasters: [RateForecaster; 4],
+    /// Arrival rate (req/s) per category over the window the last
+    /// placement round consumed — what the current placement is
+    /// provisioned for.  0 = no baseline yet (never triggers).
+    provisioned: [f64; 4],
+    /// Earliest virtual time the next proactive round may fire.
+    next_allowed_ms: f64,
+    /// When the next *scheduled* round fires — the forecast horizon.
+    next_sched_round_ms: f64,
+    /// Category index per service grid column (aligned with svc_index).
+    svc_cat: Vec<u8>,
+}
+
+/// Category → forecaster slot under the reference P100 VRAM (the same
+/// classification the gateway's admission lanes use).
+fn sim_cat_index(cat: TaskCategory) -> usize {
+    match cat {
+        TaskCategory::LatencySingle => 0,
+        TaskCategory::LatencyMulti => 1,
+        TaskCategory::FrequencySingle => 2,
+        TaskCategory::FrequencyMulti => 3,
+    }
+}
 
 /// The simulator.
 ///
@@ -445,6 +486,10 @@ pub struct Simulator<'a> {
     /// Resilience state; `None` when `cfg.resilience` is disabled —
     /// the legacy execution path, untouched bit-for-bit.
     resil: Option<SimResil>,
+    /// Prediction state; `None` when `cfg.predict` is disabled (or no
+    /// periodic re-placement runs) — the legacy round cadence, untouched
+    /// bit-for-bit.
+    predict: Option<SimPredict>,
 }
 
 impl<'a> Simulator<'a> {
@@ -578,12 +623,40 @@ impl<'a> Simulator<'a> {
                 budget: RetryBudget::new(cfg.resilience.retry_budget, cfg.resilience.retry_burst),
                 breakers: HashMap::new(),
             }),
+            predict: None,
             allocs,
             placement: placement.clone(),
             cfg,
         };
+        // Prediction only matters when periodic re-placement runs (the
+        // trigger pulls a *scheduled* round forward); built after the
+        // literal because the service→category map needs svc_index.
+        if sim.cfg.predict.enabled {
+            if let Some(interval) = sim.cfg.replacement_interval_ms {
+                let pcfg = sim.cfg.predict;
+                let svc_cat: Vec<u8> = (0..sim.svc_index.len())
+                    .map(|col| {
+                        let id = sim.svc_index.id_at(col);
+                        let cat = sim
+                            .table
+                            .spec(id)
+                            .category(crate::profile::zoo::P100_VRAM_MB);
+                        sim_cat_index(cat) as u8
+                    })
+                    .collect();
+                sim.predict = Some(SimPredict {
+                    cfg: pcfg,
+                    forecasters: [RateForecaster::new(&pcfg); 4],
+                    provisioned: [0.0; 4],
+                    next_allowed_ms: 0.0,
+                    next_sched_round_ms: interval,
+                    svc_cat,
+                });
+            }
+        }
         sim.metrics.cache_enabled = sim.cache.is_some();
         sim.metrics.resilience_enabled = sim.cfg.resilience.enabled;
+        sim.metrics.predict_enabled = sim.predict.is_some();
         sim.materialize_placement(&placement);
         sim.install_devices();
         sim.prime_snapshot();
@@ -852,6 +925,13 @@ impl<'a> Simulator<'a> {
                     if let Some(p) = self.cfg.replacement_interval_ms {
                         if now < self.cfg.duration_ms {
                             self.push_event(now + p, EventKind::PlacementRound);
+                            if let Some(sp) = self.predict.as_mut() {
+                                sp.next_sched_round_ms = now + p;
+                            }
+                        } else if let Some(sp) = self.predict.as_mut() {
+                            // no further scheduled round: nothing to pull
+                            // forward, so the trigger goes quiet
+                            sp.next_sched_round_ms = f64::INFINITY;
                         }
                     }
                 }
@@ -889,6 +969,46 @@ impl<'a> Simulator<'a> {
         std::mem::take(&mut self.metrics)
     }
 
+    /// Fold a first-hop arrival into its category's forecaster and pull
+    /// the next placement round forward when any category's projected
+    /// demand at that round crosses provisioned capacity (§3.4, proactive
+    /// variant — DESIGN.md §Prediction).  Only called with `predict` set.
+    fn observe_arrival_forecast(&mut self, ri: usize, now: f64) {
+        let service = self.slab[ri].service;
+        let col = match self.svc_index.get(service) {
+            Some(c) => c,
+            None => return,
+        };
+        let mut trigger = false;
+        if let Some(p) = self.predict.as_mut() {
+            let cat = p.svc_cat[col] as usize;
+            p.forecasters[cat].observe(now);
+            if now >= p.next_allowed_ms && now < self.cfg.duration_ms {
+                let horizon = p.next_sched_round_ms - now;
+                if horizon > 0.0 && horizon.is_finite() {
+                    for k in 0..4 {
+                        if p.provisioned[k] <= 0.0 {
+                            continue; // no baseline for this category yet
+                        }
+                        if let Some(rps) = p.forecasters[k].forecast_rps(horizon) {
+                            if rps > p.provisioned[k] * (1.0 + p.cfg.margin) {
+                                trigger = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+                if trigger {
+                    p.next_allowed_ms = now + p.cfg.cooldown_ms;
+                }
+            }
+        }
+        if trigger {
+            self.metrics.pred_early_rounds += 1;
+            self.run_placement_round(now);
+        }
+    }
+
     fn handle_arrival(&mut self, req_idx: u32, at: ServerId, now: f64) {
         let ri = req_idx as usize;
         if self.slab[ri].offloads == 0 {
@@ -899,6 +1019,9 @@ impl<'a> Simulator<'a> {
             if let Some(res) = self.resil.as_mut() {
                 // each offered request refills the global retry budget
                 res.budget.on_offered();
+            }
+            if self.predict.is_some() {
+                self.observe_arrival_forecast(ri, now);
             }
         }
         let decision = match self.cfg.policy.offload {
@@ -1323,6 +1446,19 @@ impl<'a> Simulator<'a> {
         let span = (now - self.last_round_ms).max(1.0);
         self.last_round_ms = now;
         let window = std::mem::take(&mut self.window_requests);
+        if let Some(p) = self.predict.as_mut() {
+            // re-baseline: what this round provisions for, per category —
+            // the proactive trigger compares forecasts against these
+            let mut counts = [0.0f64; 4];
+            for &i in &window {
+                if let Some(col) = self.svc_index.get(self.slab[i as usize].service) {
+                    counts[p.svc_cat[col] as usize] += 1.0;
+                }
+            }
+            for (k, &c) in counts.iter().enumerate() {
+                p.provisioned[k] = c * 1000.0 / span;
+            }
+        }
         let services: Vec<ServiceId> = {
             let mut s: Vec<ServiceId> = window
                 .iter()
@@ -1537,6 +1673,7 @@ impl<'a> Simulator<'a> {
             deadline_expired: self.metrics.deadline_expired,
             breaker_trips: self.metrics.breaker_trips,
             breaker_short_circuits: self.metrics.breaker_short_circuits,
+            pred_early_rounds: self.metrics.pred_early_rounds,
         });
     }
 
@@ -1952,6 +2089,83 @@ mod tests {
             off.satisfied
         );
         assert!(on.fingerprint().contains("res["));
+    }
+
+    /// A two-phase trace (calm, then 4× surge at 10 s) under periodic
+    /// re-placement, with the prediction layer on or off.
+    fn run_surge(predict_on: bool) -> Metrics {
+        let table = zoo::paper_zoo();
+        let cloud = EdgeCloud::testbed();
+        let calm = WorkloadSpec {
+            mix: Mix::Production(0),
+            rps: 20.0,
+            duration_ms: 10_000.0,
+            ..Default::default()
+        };
+        let hot = WorkloadSpec {
+            mix: Mix::Production(0),
+            rps: 80.0,
+            duration_ms: 10_000.0,
+            seed: 2,
+            ..Default::default()
+        };
+        let mut reqs = generate(&calm, &table, &cloud);
+        let mut surge = generate(&hot, &table, &cloud);
+        for r in surge.iter_mut() {
+            r.arrival_ms += 10_000.0;
+        }
+        reqs.append(&mut surge);
+        let mut cfg = SimConfig {
+            duration_ms: 20_000.0,
+            replacement_interval_ms: Some(5_000.0),
+            ..Default::default()
+        };
+        cfg.predict.enabled = predict_on;
+        simulate(&table, cloud, reqs, cfg)
+    }
+
+    #[test]
+    fn prediction_without_replacement_rounds_stays_inert() {
+        // enabled but no periodic re-placement: there is no scheduled
+        // round to pull forward, so the layer never constructs and the
+        // fingerprint matches a predict-off run byte-for-byte
+        let table = zoo::paper_zoo();
+        let cloud = EdgeCloud::testbed();
+        let spec = WorkloadSpec {
+            mix: Mix::Production(0),
+            rps: 30.0,
+            duration_ms: 10_000.0,
+            ..Default::default()
+        };
+        let reqs = generate(&spec, &table, &cloud);
+        let mut cfg = SimConfig { duration_ms: 10_000.0, ..Default::default() };
+        cfg.predict.enabled = true;
+        let on = simulate(&table, cloud.clone(), reqs.clone(), cfg);
+        let off = simulate(&table, cloud, reqs, SimConfig {
+            duration_ms: 10_000.0,
+            ..Default::default()
+        });
+        assert_eq!(on.pred_early_rounds, 0);
+        assert!(!on.fingerprint().contains("pred["));
+        assert_eq!(on.fingerprint(), off.fingerprint());
+    }
+
+    #[test]
+    fn forecast_triggers_early_rounds_deterministically() {
+        let off = run_surge(false);
+        assert_eq!(off.pred_early_rounds, 0);
+        assert!(!off.fingerprint().contains("pred["));
+        let on = run_surge(true);
+        assert_eq!(on.offered, off.offered, "equal offered load");
+        assert!(
+            on.pred_early_rounds >= 1,
+            "the 4× surge must pull a round forward: {}",
+            on.pred_early_rounds
+        );
+        assert!(on.fingerprint().contains("pred[er="));
+        // same seed, same trace → bit-identical, triggers included
+        let again = run_surge(true);
+        assert_eq!(on.fingerprint(), again.fingerprint());
     }
 
     #[test]

@@ -142,6 +142,24 @@ impl RunConfig {
             seed: f(&r, "seed", rd.seed as f64) as u64,
         };
 
+        // Online prediction (predict subsystem): absent object or
+        // `enabled: false` keeps the layer off — the legacy round
+        // cadence and admission path, bit-for-bit.
+        let p = j.get("predict").cloned().unwrap_or(Json::Obj(vec![]));
+        let pd = crate::predict::PredictConfig::default();
+        let predict = crate::predict::PredictConfig {
+            enabled: p
+                .get("enabled")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(pd.enabled),
+            alpha: f(&p, "alpha", pd.alpha),
+            min_samples: f(&p, "min_samples", pd.min_samples as f64) as u64,
+            quantile: f(&p, "quantile", pd.quantile),
+            bucket_ms: f(&p, "bucket_ms", pd.bucket_ms),
+            margin: f(&p, "margin", pd.margin),
+            cooldown_ms: f(&p, "cooldown_ms", pd.cooldown_ms),
+        };
+
         let sim = SimConfig {
             seed: f(j, "seed", 7.0) as u64,
             handler,
@@ -153,6 +171,7 @@ impl RunConfig {
                 .and_then(|v| v.as_f64()),
             cache,
             resilience,
+            predict,
         };
         Ok(RunConfig { cloud, workload, sim })
     }
@@ -189,6 +208,7 @@ mod tests {
         assert!(rc.sim.replacement_interval_ms.is_none());
         assert!(!rc.sim.cache.enabled(), "cache must default off");
         assert!(!rc.sim.resilience.enabled, "resilience must default off");
+        assert!(!rc.sim.predict.enabled, "predict must default off");
     }
 
     #[test]
@@ -219,6 +239,34 @@ mod tests {
         .unwrap();
         assert!(!rc2.sim.resilience.enabled);
         assert_eq!(rc2.sim.resilience.max_retries, 9);
+    }
+
+    #[test]
+    fn predict_object_parses() {
+        let rc = RunConfig::from_json(
+            &parse(
+                r#"{"predict": {"enabled": true, "min_samples": 16,
+                     "bucket_ms": 500.0, "margin": 0.4}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let p = &rc.sim.predict;
+        assert!(p.enabled);
+        assert_eq!(p.min_samples, 16);
+        assert_eq!(p.bucket_ms, 500.0);
+        assert_eq!(p.margin, 0.4);
+        // partial object keeps per-field defaults
+        let d = crate::predict::PredictConfig::default();
+        assert_eq!(p.alpha, d.alpha);
+        assert_eq!(p.cooldown_ms, d.cooldown_ms);
+        // an object without `enabled: true` stays off
+        let rc2 = RunConfig::from_json(
+            &parse(r#"{"predict": {"margin": 0.9}}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(!rc2.sim.predict.enabled);
+        assert_eq!(rc2.sim.predict.margin, 0.9);
     }
 
     #[test]

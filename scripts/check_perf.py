@@ -47,6 +47,7 @@ LOWER = [
     "fluid_gain_ns",
     "cache_score_ns",
     "resilience_decide_ns",
+    "predict_update_ns",
     "timer_wheel_ns",
 ]
 THRESHOLD = 0.30

@@ -23,6 +23,7 @@ def record(**overrides):
         "fluid_gain_ns": 40.0,
         "cache_score_ns": 120.0,
         "resilience_decide_ns": 90.0,
+        "predict_update_ns": 50.0,
         "timer_wheel_ns": 60.0,
     }
     base.update(overrides)
@@ -100,6 +101,13 @@ class CompareTests(unittest.TestCase):
         cur = record(resilience_decide_ns=90.0 * 2.0)  # 2x slower decisions
         regressions, key_errors, _ = check_perf.compare(cur, record())
         self.assertIn("resilience_decide_ns", regressions)
+        self.assertEqual(key_errors, [])
+
+    def test_predict_update_is_gated_lower_is_better(self):
+        self.assertIn("predict_update_ns", check_perf.LOWER)
+        cur = record(predict_update_ns=50.0 * 2.0)  # 2x slower model updates
+        regressions, key_errors, _ = check_perf.compare(cur, record())
+        self.assertIn("predict_update_ns", regressions)
         self.assertEqual(key_errors, [])
 
 
